@@ -1,0 +1,45 @@
+//! Aaren-Hawkes-Process on event forecasting (paper §4.2): simulate a
+//! marked Hawkes event stream (the Reddit preset), train both the
+//! Transformer-Hawkes-Process baseline and its Aaren variant with a
+//! log-normal mixture head, and report NLL / RMSE / mark accuracy.
+//!
+//!     cargo run --release --example event_forecasting -- artifacts 300
+
+use aaren::coordinator::experiments::{run_ef, Kind};
+use aaren::data::events::EfDataset;
+use aaren::runtime::exec::Engine;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let artifacts = std::path::PathBuf::from(argv.next().unwrap_or_else(|| "artifacts".into()));
+    let steps: usize = argv.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let mut engine = Engine::new(&artifacts)?;
+    for ds in [EfDataset::Reddit, EfDataset::Sin] {
+        println!("\ndataset {} ({} marks)…", ds.name(), ds.n_marks());
+        for kind in [Kind::Tf, Kind::Aaren] {
+            let r = run_ef(&mut engine, kind, ds, steps, 11)?;
+            match r.acc {
+                Some(acc) => println!(
+                    "  {:<12} NLL {:>6.3}  RMSE {:>6.3}  mark-acc {:>5.1}%",
+                    kind.display(),
+                    r.nll,
+                    r.rmse,
+                    acc
+                ),
+                None => println!(
+                    "  {:<12} NLL {:>6.3}  RMSE {:>6.3}  (unmarked dataset)",
+                    kind.display(),
+                    r.nll,
+                    r.rmse
+                ),
+            }
+        }
+    }
+    println!(
+        "\nEvents arrive as an irregular stream — exactly the setting where\n\
+         Aaren's O(1) updates beat recomputing attention per event (paper §4.2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load the Aaren streaming model, feed it a short token
+//! stream, and verify the paper's core equivalence live — running the
+//! O(1)-state recurrent step token-by-token produces exactly the same
+//! outputs as the parallel (prefix-scan) forward pass over the whole
+//! sequence.
+//!
+//!     make artifacts && cargo run --example quickstart
+//!
+//! This is DESIGN.md contract 5 as a demo; rust/tests/integration.rs
+//! enforces it as a test.
+
+use aaren::runtime::exec::{literal_to_f32, Engine, HostTensor};
+use aaren::serve::session::{Session, StreamModel};
+use aaren::util::rng::Rng;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let mut engine = Engine::new(&artifacts)?;
+
+    // 1. parallel forward over the whole sequence (training-style path)
+    let fwd = engine.load("stream_aaren_fwd")?;
+    let channels = fwd.manifest.meta_usize("channels", 8);
+    let seq = fwd.manifest.meta_usize("seq", 64);
+    let mut rng = Rng::new(42);
+    let mut xs = vec![0.0f32; seq * channels];
+    rng.fill_gaussian(&mut xs, 1.0);
+
+    let mut args = Vec::new();
+    let store = aaren::runtime::params::ParamStore::load(&fwd.manifest)?;
+    let mut pi = 0;
+    for arg in &fwd.manifest.args {
+        match arg.role {
+            aaren::runtime::manifest::Role::Param => {
+                args.push(HostTensor::F32(arg.shape.clone(), store.params[pi].clone()).to_literal()?);
+                pi += 1;
+            }
+            _ => args.push(HostTensor::F32(vec![1, seq, channels], xs.clone()).to_literal()?),
+        }
+    }
+    let parallel_out = literal_to_f32(&fwd.execute(&args)?[0])?; // (1, seq, C)
+    println!("parallel forward: {} outputs of {} channels", seq, channels);
+
+    // 2. the same sequence, streamed token-by-token in O(1) memory
+    let model = StreamModel::load_aaren(&mut engine)?;
+    let mut session = Session::new_aaren(&model)?;
+    let mut max_err = 0.0f32;
+    for t in 0..seq {
+        let y = session.step(&model, &xs[t * channels..(t + 1) * channels])?;
+        for (a, b) in y.iter().zip(&parallel_out[t * channels..(t + 1) * channels]) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    println!(
+        "streamed {} tokens with constant state = {} bytes; \
+         max |streamed - parallel| = {max_err:.2e}",
+        seq,
+        session.state_bytes()
+    );
+    assert!(max_err < 1e-4, "streaming != parallel");
+    println!("OK: attention as an RNN — streaming == parallel (paper §3.2/§3.3)");
+    Ok(())
+}

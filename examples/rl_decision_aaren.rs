@@ -1,0 +1,44 @@
+//! Decision-Aaren on offline RL (paper §4.1): generate a Medium-Expert
+//! dataset on the simulated Hopper environment, train the Aaren variant of
+//! the Decision Transformer, and roll it out online conditioned on an
+//! expert return-to-go — printing the D4RL-style normalised score.
+//!
+//!     cargo run --release --example rl_decision_aaren -- artifacts 300
+
+use aaren::coordinator::experiments::{run_rl, Kind};
+use aaren::data::rl::{EnvId, Tier};
+use aaren::runtime::exec::Engine;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let artifacts = std::path::PathBuf::from(argv.next().unwrap_or_else(|| "artifacts".into()));
+    let steps: usize = argv.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let mut engine = Engine::new(&artifacts)?;
+    println!("training Decision-Aaren on Hopper Medium-Expert ({steps} steps)…");
+    for kind in [Kind::Tf, Kind::Aaren] {
+        let r = run_rl(
+            &mut engine,
+            kind,
+            EnvId::Hopper,
+            Tier::MediumExpert,
+            steps,
+            60, // offline episodes
+            5,  // eval rollouts
+            7,
+        )?;
+        println!(
+            "{:<12} normalised score {:>6.1}  (raw return {:.2}, final train loss {:.4})",
+            kind.display(),
+            r.normalised_score,
+            r.raw_return,
+            r.final_train_loss
+        );
+    }
+    println!(
+        "\nBoth models see identical data and hyperparameters (paper Appendix E);\n\
+         Aaren additionally supports O(1) online updates per environment step."
+    );
+    Ok(())
+}

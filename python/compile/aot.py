@@ -1,0 +1,454 @@
+# AOT exporter: lowers every model variant ONCE to HLO *text* plus a JSON
+# manifest and an initial-parameter binary, then never runs again (the
+# Makefile short-circuits when inputs are unchanged). Python is never on
+# the request path.
+#
+# Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+# >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+# 0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+# (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+# cleanly. See /opt/xla-example/README.md.
+#
+# Per artifact we write:
+#   artifacts/<name>.hlo.txt       — the lowered module
+#   artifacts/<name>.manifest.json — ordered argument/output specs (role,
+#                                    shape, dtype) so the rust runtime is
+#                                    fully generic over model variants
+#   artifacts/<params_key>.params.bin
+#                                  — f32 little-endian initial parameters,
+#                                    concatenated in flatten order; shared
+#                                    between the train/eval/fwd/step
+#                                    artifacts of one model
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import infer, model
+from .layers import ModelCfg, count_params
+from .train import make_train_step
+
+# ---------------------------------------------------------------------------
+# shared dimension presets (mirrored in rust via manifest meta)
+
+STREAM = dict(channels=8, seq=64, batch=8, lr=1e-3)
+STREAM_CFG = dict(d_model=64, n_heads=4, n_layers=2, d_mlp=128)
+FIG5_BUCKETS = [32, 64, 128, 256, 512]
+
+TSF = dict(channels=7, lookback=96, batch=16, lr=1e-3)
+TSF_HORIZONS = [96, 192, 336, 720]
+SMALL_CFG = dict(d_model=32, n_heads=2, n_layers=2, d_mlp=64)
+
+TSC = dict(channels=8, seq=96, classes=16, batch=16, lr=1e-3)
+EF = dict(seq=64, marks=16, mix=3, batch=16, lr=5e-4)
+RL = dict(ctx=20, state_dim=12, act_dim=6, max_t=512, batch=16, lr=3e-4)
+RL_CFG = dict(d_model=64, n_heads=4, n_layers=2, d_mlp=128)
+
+# paper-scale config for the §4.5 parameter-count analysis (manifest only)
+PARAMCOUNT_CFG = dict(d_model=512, n_heads=4, n_layers=4, d_mlp=2048)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}[np.dtype(dt)]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _param_entries(params, role: str):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [
+        {
+            "name": f"{role}:{_path_str(path)}",
+            "role": role,
+            "shape": list(leaf.shape),
+            "dtype": _dtype_str(leaf.dtype),
+        }
+        for path, leaf in flat
+    ]
+
+
+def _spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+class Exporter:
+    def __init__(self, outdir: str, only: str | None):
+        self.outdir = outdir
+        self.only = only
+        self.written_params: set[str] = set()
+        os.makedirs(outdir, exist_ok=True)
+
+    def _skip(self, name: str) -> bool:
+        return self.only is not None and self.only not in name
+
+    def write_params(self, params_key: str, params) -> None:
+        if params_key in self.written_params:
+            return
+        self.written_params.add(params_key)
+        leaves = jax.tree_util.tree_leaves(params)
+        path = os.path.join(self.outdir, f"{params_key}.params.bin")
+        with open(path, "wb") as f:
+            for leaf in leaves:
+                arr = np.asarray(leaf)
+                assert arr.dtype == np.float32, "all params are f32"
+                f.write(arr.astype("<f4").tobytes())
+        print(f"  params {params_key}: {count_params(params)} parameters")
+
+    def export(
+        self,
+        name: str,
+        kind: str,
+        params_key: str,
+        params,
+        flat_fn,
+        extra_args: list[tuple[str, str, jax.ShapeDtypeStruct]],
+        output_roles,
+        meta: dict,
+        n_param_copies: int = 1,
+    ) -> None:
+        """Lower flat_fn(*(param leaves × n_param_copies), *extras) and write
+        all three files. `output_roles` is a list of role strings matching
+        flat_fn's flat outputs; param-shaped output blocks are expanded."""
+        if self._skip(name):
+            return
+        leaves = jax.tree_util.tree_leaves(params)
+        param_specs = [_spec_of(l) for l in leaves]
+        arg_entries = []
+        roles_in = ["param", "opt_m", "opt_v"]
+        for i in range(n_param_copies):
+            arg_entries += _param_entries(params, roles_in[i])
+        for aname, role, spec in extra_args:
+            arg_entries.append(
+                {
+                    "name": f"{role}:{aname}",
+                    "role": role,
+                    "shape": list(spec.shape),
+                    "dtype": _dtype_str(spec.dtype),
+                }
+            )
+        all_specs = param_specs * n_param_copies + [s for _, _, s in extra_args]
+
+        lowered = jax.jit(flat_fn).lower(*all_specs)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(self.outdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+
+        out_entries = []
+        out_specs = jax.eval_shape(flat_fn, *all_specs)
+        flat_roles = []
+        for role in output_roles:
+            if role in ("param", "opt_m", "opt_v"):
+                flat_roles += [role] * len(leaves)
+            else:
+                flat_roles.append(role)
+        assert len(flat_roles) == len(out_specs), (
+            f"{name}: {len(flat_roles)} roles vs {len(out_specs)} outputs"
+        )
+        for role, spec in zip(flat_roles, out_specs):
+            out_entries.append(
+                {
+                    "role": role,
+                    "shape": list(spec.shape),
+                    "dtype": _dtype_str(spec.dtype),
+                }
+            )
+        manifest = {
+            "name": name,
+            "kind": kind,
+            "hlo": f"{name}.hlo.txt",
+            "params_key": params_key,
+            "params_bin": f"{params_key}.params.bin",
+            "args": arg_entries,
+            "outputs": out_entries,
+            "meta": meta,
+        }
+        with open(os.path.join(self.outdir, f"{name}.manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        self.write_params(params_key, params)
+        print(f"  wrote {name} ({len(hlo)} chars, {len(arg_entries)} args)")
+
+    # -- generic builders ---------------------------------------------------
+
+    def train_artifact(self, name, params_key, params, loss_fn, inputs, lr, meta):
+        """inputs: list of (name, ShapeDtypeStruct)."""
+        if self._skip(name):
+            return
+        _, tree = jax.tree_util.tree_flatten(params)
+        n = len(jax.tree_util.tree_leaves(params))
+        step_fn = make_train_step(loss_fn, lr=lr)
+
+        def flat_fn(*args):
+            p = jax.tree_util.tree_unflatten(tree, args[:n])
+            m = jax.tree_util.tree_unflatten(tree, args[n : 2 * n])
+            v = jax.tree_util.tree_unflatten(tree, args[2 * n : 3 * n])
+            step = args[3 * n]
+            batch = args[3 * n + 1 :]
+            p2, m2, v2, s2, loss = step_fn(p, m, v, step, *batch)
+            return (
+                tuple(jax.tree_util.tree_leaves(p2))
+                + tuple(jax.tree_util.tree_leaves(m2))
+                + tuple(jax.tree_util.tree_leaves(v2))
+                + (s2, loss)
+            )
+
+        extra = [("opt_step", "opt_step", jax.ShapeDtypeStruct((), jnp.float32))]
+        extra += [(nm, "input", sp) for nm, sp in inputs]
+        self.export(
+            name,
+            "train",
+            params_key,
+            params,
+            flat_fn,
+            extra,
+            ["param", "opt_m", "opt_v", "opt_step", "aux"],
+            dict(meta, lr=lr),
+            n_param_copies=3,
+        )
+
+    def fwd_artifact(self, name, kind, params_key, params, fn, inputs, n_outputs, meta):
+        if self._skip(name):
+            return
+        _, tree = jax.tree_util.tree_flatten(params)
+        n = len(jax.tree_util.tree_leaves(params))
+
+        def flat_fn(*args):
+            p = jax.tree_util.tree_unflatten(tree, args[:n])
+            out = fn(p, *args[n:])
+            return out if isinstance(out, tuple) else (out,)
+
+        extra = [(nm, role, sp) for nm, role, sp in inputs]
+        self.export(
+            name, kind, params_key, params, flat_fn, extra,
+            ["aux"] * n_outputs, meta,
+        )
+
+    def step_artifact(self, name, params_key, params, fn, states, inputs, meta):
+        """Streaming step: fn(params, *states, *inputs) ->
+        (*states', y). `states` is a list of (name, ShapeDtypeStruct) whose
+        outputs are fed back in order by the rust session manager."""
+        if self._skip(name):
+            return
+        _, tree = jax.tree_util.tree_flatten(params)
+        n = len(jax.tree_util.tree_leaves(params))
+
+        def flat_fn(*args):
+            p = jax.tree_util.tree_unflatten(tree, args[:n])
+            return fn(p, *args[n:])
+
+        extra = [(nm, "state", sp) for nm, sp in states]
+        extra += [(nm, "input", sp) for nm, sp in inputs]
+        roles = ["state"] * len(states) + ["aux"]
+        self.export(name, "step", params_key, params, flat_fn, extra, roles, meta)
+
+
+# ---------------------------------------------------------------------------
+# artifact definitions
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_stream(ex: Exporter) -> None:
+    c, n, b = STREAM["channels"], STREAM["seq"], STREAM["batch"]
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **STREAM_CFG)
+        params = model.init_stream(jax.random.PRNGKey(0), cfg, c)
+        key = f"stream_{kind}"
+        meta = dict(STREAM, **STREAM_CFG, kind=kind)
+        ex.train_artifact(
+            f"stream_{kind}_train", key, params,
+            lambda p, x, cfg=cfg: model.stream_loss(p, cfg, x),
+            [("x", f32(b, n, c))], STREAM["lr"], meta,
+        )
+        ex.fwd_artifact(
+            f"stream_{kind}_fwd", "fwd", key, params,
+            lambda p, x, cfg=cfg: model.stream_forward(p, cfg, x),
+            [("x", "input", f32(1, n, c))], 1, meta,
+        )
+        if kind == "aaren":
+            L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+            ex.step_artifact(
+                f"stream_{kind}_step", key, params,
+                lambda p, a, cc, m, t, x, cfg=cfg: infer.stream_aaren_step(
+                    p, cfg, a, cc, m, t, x
+                ),
+                [("a", f32(L, H, dh)), ("c", f32(L, H)), ("m", f32(L, H))],
+                [("t", i32()), ("x", f32(c))],
+                meta,
+            )
+        else:
+            for ctx in FIG5_BUCKETS:
+                L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+                ex.step_artifact(
+                    f"stream_tf_step_c{ctx}", key, params,
+                    lambda p, kc, vc, t, x, cfg=cfg, ctx=ctx: infer.stream_tf_step(
+                        p, cfg, kc, vc, t, x, ctx
+                    ),
+                    [("k_cache", f32(L, H, ctx, dh)), ("v_cache", f32(L, H, ctx, dh))],
+                    [("t", i32()), ("x", f32(c))],
+                    dict(meta, ctx=ctx),
+                )
+
+
+def export_tsf(ex: Exporter) -> None:
+    c, lb, b = TSF["channels"], TSF["lookback"], TSF["batch"]
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **SMALL_CFG)
+        for T in TSF_HORIZONS:
+            params = model.init_tsf(jax.random.PRNGKey(1), cfg, c, T)
+            key = f"tsf_{kind}_T{T}"
+            meta = dict(TSF, **SMALL_CFG, kind=kind, horizon=T)
+            ex.train_artifact(
+                f"tsf_{kind}_train_T{T}", key, params,
+                lambda p, x, y, cfg=cfg, T=T: model.tsf_loss(p, cfg, T, x, y),
+                [("x", f32(b, lb, c)), ("y", f32(b, T, c))], TSF["lr"], meta,
+            )
+            ex.fwd_artifact(
+                f"tsf_{kind}_eval_T{T}", "eval", key, params,
+                lambda p, x, y, cfg=cfg, T=T: model.tsf_eval(p, cfg, T, x, y),
+                [("x", "input", f32(b, lb, c)), ("y", "input", f32(b, T, c))],
+                2, meta,
+            )
+
+
+def export_tsc(ex: Exporter) -> None:
+    c, n, ncls, b = TSC["channels"], TSC["seq"], TSC["classes"], TSC["batch"]
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **SMALL_CFG)
+        params = model.init_tsc(jax.random.PRNGKey(2), cfg, c, ncls)
+        key = f"tsc_{kind}"
+        meta = dict(TSC, **SMALL_CFG, kind=kind)
+        ex.train_artifact(
+            f"tsc_{kind}_train", key, params,
+            lambda p, x, lab, cfg=cfg: model.tsc_loss(p, cfg, x, lab),
+            [("x", f32(b, n, c)), ("labels", i32(b))], TSC["lr"], meta,
+        )
+        ex.fwd_artifact(
+            f"tsc_{kind}_eval", "eval", key, params,
+            lambda p, x, lab, cfg=cfg: model.tsc_eval(p, cfg, x, lab),
+            [("x", "input", f32(b, n, c)), ("labels", "input", i32(b))], 2, meta,
+        )
+
+
+def export_ef(ex: Exporter) -> None:
+    n, marks, mix, b = EF["seq"], EF["marks"], EF["mix"], EF["batch"]
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **SMALL_CFG)
+        params = model.init_ef(jax.random.PRNGKey(3), cfg, marks, mix)
+        key = f"ef_{kind}"
+        meta = dict(EF, **SMALL_CFG, kind=kind)
+        ex.train_artifact(
+            f"ef_{kind}_train", key, params,
+            lambda p, t, mk, cfg=cfg: model.ef_loss(p, cfg, mix, t, mk),
+            [("times", f32(b, n)), ("marks", i32(b, n))], EF["lr"], meta,
+        )
+        ex.fwd_artifact(
+            f"ef_{kind}_eval", "eval", key, params,
+            lambda p, t, mk, cfg=cfg: model.ef_eval(p, cfg, mix, t, mk),
+            [("times", "input", f32(b, n)), ("marks", "input", i32(b, n))], 4, meta,
+        )
+
+
+def export_rl(ex: Exporter) -> None:
+    t, s, a, b = RL["ctx"], RL["state_dim"], RL["act_dim"], RL["batch"]
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **RL_CFG)
+        params = model.init_rl(jax.random.PRNGKey(4), cfg, s, a, RL["max_t"])
+        key = f"rl_{kind}"
+        meta = dict(RL, **RL_CFG, kind=kind)
+        batch_specs = [
+            ("rtg", f32(b, t, 1)), ("states", f32(b, t, s)),
+            ("actions", f32(b, t, a)), ("timesteps", i32(b, t)),
+            ("mask", f32(b, t)),
+        ]
+        ex.train_artifact(
+            f"rl_{kind}_train", key, params,
+            lambda p, *bt, cfg=cfg: model.rl_loss(p, cfg, *bt),
+            batch_specs, RL["lr"], meta,
+        )
+        ex.fwd_artifact(
+            f"rl_{kind}_eval", "eval", key, params,
+            lambda p, *bt, cfg=cfg: model.rl_eval(p, cfg, *bt),
+            [(nm, "input", sp) for nm, sp in batch_specs], 2, meta,
+        )
+        # online rollout: batch=1, right-aligned context
+        act_specs = [
+            ("rtg", "input", f32(1, t, 1)), ("states", "input", f32(1, t, s)),
+            ("actions", "input", f32(1, t, a)), ("timesteps", "input", i32(1, t)),
+            ("mask", "input", f32(1, t)),
+        ]
+        ex.fwd_artifact(
+            f"rl_{kind}_act", "fwd", key, params,
+            lambda p, *bt, cfg=cfg: model.rl_act(p, cfg, *bt),
+            act_specs, 1, meta,
+        )
+
+
+def export_paramcount(ex: Exporter) -> None:
+    """Paper-scale models for the §4.5 parameter-count comparison.
+    Manifest-only (no HLO): we only need the counts."""
+    counts = {}
+    for kind in ("aaren", "tf"):
+        cfg = ModelCfg(kind=kind, **PARAMCOUNT_CFG)
+        params = model.init_stream(jax.random.PRNGKey(5), cfg, STREAM["channels"])
+        counts[kind] = count_params(params)
+    path = os.path.join(ex.outdir, "paramcount.json")
+    with open(path, "w") as f:
+        json.dump(dict(counts, **PARAMCOUNT_CFG), f, indent=1)
+    print(f"  paramcount: tf={counts['tf']} aaren={counts['aaren']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--stamp", default=None, help="touch this file on success")
+    args = ap.parse_args()
+    ex = Exporter(os.path.abspath(args.outdir), args.only)
+    for group, fn in [
+        ("stream", export_stream),
+        ("tsf", export_tsf),
+        ("tsc", export_tsc),
+        ("ef", export_ef),
+        ("rl", export_rl),
+    ]:
+        print(f"[aot] exporting {group} artifacts")
+        fn(ex)
+    export_paramcount(ex)
+    if args.stamp:
+        with open(args.stamp, "w") as f:
+            f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

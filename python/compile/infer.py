@@ -1,0 +1,118 @@
+# L2 streaming inference steps — the paper's headline efficiency claim
+# made executable (§3.3, Figure 5).
+#
+#   Aaren step      — O(1) memory and compute per new token: the only
+#                     state is (a, c, m) per (layer, head), i.e.
+#                     L·H·(d_head + 2) floats, independent of sequence
+#                     length.
+#   Transformer step — KV-cache baseline: state is (K, V) caches of shape
+#                     (L, H, ctx, d_head) plus a position counter. Memory
+#                     grows linearly with context; per-token compute grows
+#                     with the bucket size, so cumulative time is
+#                     quadratic — the Figure-5 comparison.
+#
+# Both steps are lowered to standalone HLO modules; the rust session
+# manager owns the state buffers and feeds each step's state outputs back
+# into the next step's state inputs.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import MASK_FILL
+from .layers import ModelCfg, layer_norm, linear, mlp_apply, sinusoidal_at
+
+
+# ---------------------------------------------------------------------------
+# Aaren: constant-memory recurrent update (paper §3.1 cell, stacked §3.3)
+
+
+def aaren_state_init(cfg: ModelCfg):
+    """Zero state: a=(L,H,dh) zeros, c=(L,H) zeros, m=(L,H) MASK_FILL."""
+    sl = (cfg.n_layers, cfg.n_heads, cfg.d_head)
+    return (
+        jnp.zeros(sl, jnp.float32),
+        jnp.zeros(sl[:2], jnp.float32),
+        jnp.full(sl[:2], MASK_FILL, jnp.float32),
+    )
+
+
+def aaren_block_step(blk: dict, cfg: ModelCfg, a, c, m, x):
+    """One layer's recurrent update for one token. x: (d,). Returns
+    (a', c', m', y) with y the block output for this token."""
+    h = layer_norm(blk["ln1"], x)
+    k = linear(blk["wk"], h).reshape(cfg.n_heads, cfg.d_head)
+    v = linear(blk["wv"], h).reshape(cfg.n_heads, cfg.d_head)
+    q = linear(blk["wq"], blk["q"]).reshape(cfg.n_heads, cfg.d_head)
+    s = jnp.sum(q * k, axis=-1) / jnp.sqrt(
+        jnp.asarray(cfg.d_head, jnp.float32)
+    )  # (H,)
+    m_new = jnp.maximum(m, s)
+    ea = jnp.exp(m - m_new)
+    eb = jnp.exp(s - m_new)
+    a_new = a * ea[:, None] + v * eb[:, None]
+    c_new = c * ea + eb
+    o = (a_new / c_new[:, None]).reshape(cfg.d_model)
+    x = x + linear(blk["wo"], o)
+    x = x + mlp_apply(blk["mlp"], layer_norm(blk["ln2"], x))
+    return a_new, c_new, m_new, x
+
+
+def stream_aaren_step(params, cfg: ModelCfg, a, c, m, t, x_t):
+    """Full-model O(1) update. x_t: (C,), t: i32 scalar position.
+    Returns (a', c', m', y) with y: (C,) the next-value prediction."""
+    h = linear(params["embed"], x_t) + sinusoidal_at(t, cfg.d_model)
+    a_out, c_out, m_out = [], [], []
+    for i, blk in enumerate(params["backbone"]["blocks"]):
+        a_i, c_i, m_i, h = aaren_block_step(blk, cfg, a[i], c[i], m[i], h)
+        a_out.append(a_i)
+        c_out.append(c_i)
+        m_out.append(m_i)
+    h = layer_norm(params["backbone"]["ln_f"], h)
+    y = linear(params["head"], h)
+    return jnp.stack(a_out), jnp.stack(c_out), jnp.stack(m_out), y
+
+
+# ---------------------------------------------------------------------------
+# Transformer: KV-cache update (the paper's comparison baseline, §4.5)
+
+
+def kv_state_init(cfg: ModelCfg, ctx: int):
+    shape = (cfg.n_layers, cfg.n_heads, ctx, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def tf_block_step(blk: dict, cfg: ModelCfg, k_cache, v_cache, t, x, ctx: int):
+    """One layer's KV-cache update. k_cache/v_cache: (H, ctx, dh);
+    t: i32 current position (< ctx). Returns (k', v', y)."""
+    h = layer_norm(blk["ln1"], x)
+    q = linear(blk["wq"], h).reshape(cfg.n_heads, cfg.d_head)
+    k = linear(blk["wk"], h).reshape(cfg.n_heads, cfg.d_head)
+    v = linear(blk["wv"], h).reshape(cfg.n_heads, cfg.d_head)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k[:, None, :], (0, t, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v[:, None, :], (0, t, 0))
+    s = jnp.einsum("hd,hnd->hn", q, k_cache) / jnp.sqrt(
+        jnp.asarray(cfg.d_head, jnp.float32)
+    )
+    live = jnp.arange(ctx)[None, :] <= t  # (1, ctx)
+    s = jnp.where(live, s, MASK_FILL)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s) * live
+    o = jnp.einsum("hn,hnd->hd", w, v_cache) / jnp.sum(w, axis=-1, keepdims=True)
+    x = x + linear(blk["wo"], o.reshape(cfg.d_model))
+    x = x + mlp_apply(blk["mlp"], layer_norm(blk["ln2"], x))
+    return k_cache, v_cache, x
+
+
+def stream_tf_step(params, cfg: ModelCfg, k_cache, v_cache, t, x_t, ctx: int):
+    """KV-cache full-model step for a fixed context bucket `ctx`.
+    k_cache/v_cache: (L, H, ctx, dh). Returns (k', v', y)."""
+    h = linear(params["embed"], x_t) + sinusoidal_at(t, cfg.d_model)
+    k_out, v_out = [], []
+    for i, blk in enumerate(params["backbone"]["blocks"]):
+        k_i, v_i, h = tf_block_step(blk, cfg, k_cache[i], v_cache[i], t, h, ctx)
+        k_out.append(k_i)
+        v_out.append(v_i)
+    h = layer_norm(params["backbone"]["ln_f"], h)
+    y = linear(params["head"], h)
+    return jnp.stack(k_out), jnp.stack(v_out), y

@@ -1,0 +1,96 @@
+# L1 Pallas kernel: standard causal self-attention — the Transformer
+# baseline the paper compares Aaren against (Vaswani et al., 2017).
+#
+# One program per (batch, head); the (N, N) score tile lives in VMEM.
+# Numerically-stable masked softmax (row max subtraction) matches the
+# paper's formulation Attention(Q, K, V) = softmax(QK^T)V with a causal
+# mask and the usual 1/sqrt(d) scale.
+#
+# VMEM per program: (3·N·d + N²) f32 — quadratic in N, which is exactly
+# the cost profile the paper attributes to Transformers; contrast with
+# scan_attention.py's linear (3·N·d + 3·N).
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK_FILL
+
+
+def _causal_attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, seq_len: int):
+    q = q_ref[0, :, :]  # (N, d)
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    mask = mask_ref[0, :]  # (N,) over keys
+
+    d = q.shape[-1]
+    s = jnp.dot(q, k.T) * (1.0 / math.sqrt(d))  # (N, N) -> MXU
+    rows = jax.lax.broadcasted_iota(jnp.int32, (seq_len, seq_len), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (seq_len, seq_len), 1)
+    live = jnp.logical_and(cols <= rows, mask[None, :] > 0)
+    # Keep the diagonal live even for masked tokens: guarantees a nonzero
+    # softmax denominator on fully-masked prefixes (see kernels/ref.py).
+    live = jnp.logical_or(live, rows == cols)
+    s = jnp.where(live, s, jnp.asarray(MASK_FILL, dtype=s.dtype))
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s) * live
+    o_ref[0, :, :] = jnp.dot(w, v) / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def _causal_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array
+) -> jax.Array:
+    bh, n, d = q.shape
+    kernel = functools.partial(_causal_attention_kernel, seq_len=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Causal self-attention for a batch of heads.
+
+    q, k, v: (BH, N, d); mask: (BH, N) over keys. Returns (BH, N, d).
+    Forward is the Pallas kernel; backward is the VJP of the identical
+    jnp reference (interpret-mode Pallas has no reverse-mode AD).
+    """
+    return _causal_attention_pallas(q, k, v, mask)
+
+
+def _causal_attention_ref(q, k, v, mask):
+    from . import ref
+
+    return ref.multihead_causal_self_attention(q, k, v, mask)
+
+
+def _causal_attention_fwd(q, k, v, mask):
+    return _causal_attention_pallas(q, k, v, mask), (q, k, v, mask)
+
+
+def _causal_attention_bwd(res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _causal_attention_ref(q_, k_, v_, mask), q, k, v
+    )
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, jnp.zeros_like(mask)
+
+
+causal_attention.defvjp(_causal_attention_fwd, _causal_attention_bwd)

@@ -1,0 +1,171 @@
+# Pure-jnp correctness oracles for the Aaren attention kernels.
+#
+# Three independent formulations of the paper's many-to-many attention
+#   { o_k = Attention(q, x_{1:k}) }_{k=1..N}
+# are implemented here:
+#
+#   1. `naive_prefix_attention`   — the textbook O(N^2) masked softmax
+#      (conventional attention with a causal mask over a broadcast query).
+#   2. `recurrent_prefix_attention` — the paper's Section 3.1 RNN cell,
+#      iterating the numerically-stable (a_k, c_k, m_k) recurrence with
+#      `lax.scan`.
+#   3. `assoc_scan_prefix_attention` — the paper's Section 3.2 parallel
+#      prefix scan with the associative operator ⊕ on (m, u, w) tuples,
+#      via `lax.associative_scan` (Blelloch-style, O(N) work).
+#
+# All three must agree to tight tolerance; the Pallas kernel
+# (`scan_attention.py`) is validated against them in python/tests/.
+#
+# Conventions: q is a single query vector per (batch, head); k, v carry the
+# full sequence. `mask` is 1.0 for live tokens and 0.0 for padding; masked
+# scores are filled with MASK_FILL (finite, so no NaNs propagate — see
+# DESIGN.md §6).
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Finite "minus infinity": exp(MASK_FILL - m) underflows to exactly 0.0 in
+# f32 while keeping every intermediate finite (a true -inf would produce
+# NaN via `-inf - -inf` inside the scan combine on fully-masked prefixes).
+MASK_FILL = -1e9
+
+
+def scores(q: jax.Array, k: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """s_i = <q, k_i> / sqrt(d), masked positions filled with MASK_FILL.
+
+    q: (d,), k: (N, d), mask: (N,) in {0,1} -> returns (N,).
+    """
+    d = q.shape[-1]
+    s = k @ q / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    if mask is not None:
+        s = jnp.where(mask > 0, s, jnp.asarray(MASK_FILL, dtype=s.dtype))
+    return s
+
+
+def naive_prefix_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """O(N^2) oracle: o_k = softmax(s_{1:k}) @ v_{1:k} for every prefix k.
+
+    q: (d,), k: (N, d), v: (N, dv), mask: (N,) -> (N, dv).
+    """
+    n = k.shape[0]
+    s = scores(q, k, mask)  # (N,)
+    # causal[i, j] = 1 if j <= i (query position i sees context 1..i)
+    causal = jnp.tril(jnp.ones((n, n), dtype=bool))
+    smat = jnp.where(causal, s[None, :], MASK_FILL)  # (N, N)
+    smat = smat - jnp.max(smat, axis=-1, keepdims=True)
+    # Zero non-causal weights explicitly: on a fully-masked prefix the row
+    # max equals MASK_FILL and exp(0)=1 would otherwise leak weight to
+    # future positions. With the explicit causal product this oracle matches
+    # the scan/recurrent semantics exactly (mean over the masked prefix).
+    w = jnp.exp(smat) * causal
+    return (w @ v) / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def recurrent_prefix_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Section 3.1 RNN cell, iterated with lax.scan — O(1) state per step.
+
+    State (a, c, m):
+        m_k = max(m_{k-1}, s_k)
+        a_k = a_{k-1} exp(m_{k-1} - m_k) + v_k exp(s_k - m_k)
+        c_k = c_{k-1} exp(m_{k-1} - m_k) +     exp(s_k - m_k)
+        o_k = a_k / c_k
+    """
+    s = scores(q, k, mask)
+    dv = v.shape[-1]
+
+    def cell(carry, inp):
+        a, c, m = carry
+        s_k, v_k = inp
+        m_new = jnp.maximum(m, s_k)
+        ea = jnp.exp(m - m_new)
+        eb = jnp.exp(s_k - m_new)
+        a_new = a * ea + v_k * eb
+        c_new = c * ea + eb
+        return (a_new, c_new, m_new), a_new / c_new
+
+    init = (
+        jnp.zeros((dv,), dtype=v.dtype),
+        jnp.zeros((), dtype=v.dtype),
+        jnp.asarray(MASK_FILL, dtype=v.dtype),
+    )
+    _, outs = lax.scan(cell, init, (s, v))
+    return outs
+
+
+def combine(ta, tb):
+    """The paper's associative operator ⊕ on (m, u, w) tuples (Appendix B).
+
+    (m_A, u_A, w_A) ⊕ (m_B, u_B, w_B) = (m_AB, u_AB, w_AB) with
+        m_AB = max(m_A, m_B)
+        u_AB = u_A exp(m_A - m_AB) + u_B exp(m_B - m_AB)
+        w_AB = w_A exp(m_A - m_AB) + w_B exp(m_B - m_AB)
+    Identity element: (MASK_FILL, 0, 0).
+    """
+    m_a, u_a, w_a = ta
+    m_b, u_b, w_b = tb
+    m = jnp.maximum(m_a, m_b)
+    ea = jnp.exp(m_a - m)
+    eb = jnp.exp(m_b - m)
+    u = u_a * ea + u_b * eb
+    w = w_a * ea[..., None] + w_b * eb[..., None]
+    return m, u, w
+
+
+def assoc_scan_prefix_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Section 3.2: many-to-many attention via lax.associative_scan over ⊕."""
+    s = scores(q, k, mask)
+    leaves = (s, jnp.ones_like(s), v)  # (m_{i}, u_{i}, w_{i}) = (s_i, 1, v_i)
+    m, u, w = lax.associative_scan(combine, leaves)
+    return w / u[..., None]
+
+
+def multihead_prefix_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Batched/multi-head wrapper over the naive oracle.
+
+    q: (BH, d), k/v: (BH, N, d), mask: (BH, N) -> (BH, N, d).
+    """
+    if mask is None:
+        mask = jnp.ones(k.shape[:2], dtype=k.dtype)
+    return jax.vmap(naive_prefix_attention)(q, k, v, mask)
+
+
+def naive_causal_self_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Baseline oracle: standard causal self-attention for one head.
+
+    q/k/v: (N, d); mask: (N,) over *keys* -> (N, d).
+    """
+    n, d = q.shape
+    s = q @ k.T / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))  # (N, N)
+    live = jnp.tril(jnp.ones((n, n), dtype=bool))
+    if mask is not None:
+        live = jnp.logical_and(live, mask[None, :] > 0)
+    # Keep the diagonal live even when the token itself is masked so every
+    # row has at least one weight (masked rows are dropped by the loss; a
+    # zero denominator would instead propagate NaNs into live rows'
+    # gradients). The Pallas kernel implements the identical rule.
+    live = jnp.logical_or(live, jnp.eye(n, dtype=bool))
+    s = jnp.where(live, s, MASK_FILL)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    w = jnp.exp(s) * live
+    return (w @ v) / jnp.sum(w, axis=-1, keepdims=True)
+
+
+def multihead_causal_self_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Batched baseline oracle. q/k/v: (BH, N, d), mask: (BH, N)."""
+    if mask is None:
+        mask = jnp.ones(k.shape[:2], dtype=k.dtype)
+    return jax.vmap(naive_causal_self_attention)(q, k, v, mask)

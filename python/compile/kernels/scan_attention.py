@@ -1,0 +1,195 @@
+# L1 Pallas kernel: attention as a many-to-many RNN (paper §3.2).
+#
+# Computes all prefix outputs { o_k = Attention(q, x_{1:k}) }_{k=1..N} in a
+# single kernel via a Hillis–Steele parallel prefix scan (Algorithm 1 in
+# the paper) over the associative operator ⊕ acting on (m, u, w) tuples.
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation):
+#   * grid = (B·H,): one program per (batch, head); each program's k/v/o
+#     block is an (N, d) VMEM tile selected by BlockSpec.
+#   * scores s = k @ q is a single (N,d)×(d,1) contraction → MXU.
+#   * the scan is ceil(log2 N) full-width shift-and-combine sweeps over
+#     VMEM-resident (N,) / (N,d) arrays → VPU vector ops, not a sequential
+#     per-token loop. This is the TPU analogue of the paper's GPU scan.
+#   * VMEM budget per program: (3·N·d + 3·N) f32 ≈ 0.79 MiB at N=1024,
+#     d=64 — comfortably under the ~16 MiB/core budget (see DESIGN.md
+#     §Perf for the full table).
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls, so the kernel is lowered to plain HLO ops; correctness is
+# validated against kernels/ref.py, and TPU performance is estimated
+# analytically from the BlockSpec schedule.
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK_FILL
+
+
+def _shift_down(x: jax.Array, off: int, fill: float) -> jax.Array:
+    """y[j] = x[j - off] for j >= off else `fill` (static offset).
+
+    Implemented as lax.pad(front=off, back=-off) rather than
+    concatenate([full, slice]): the concatenate formulation is miscompiled
+    by the xla_extension 0.5.1 CPU backend for N >= 16 (wrong prefix
+    outputs; bisected in EXPERIMENTS.md §Gotchas). lax.pad round-trips
+    correctly and is also the more natural windowing op on TPU.
+    """
+    cfg = [(off, -off, 0)] + [(0, 0, 0)] * (x.ndim - 1)
+    return jax.lax.pad(x, jnp.asarray(fill, x.dtype), cfg)
+
+
+def _scan_attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, seq_len: int):
+    """One (batch, head) program: prefix-scan attention over an (N, d) tile."""
+    q = q_ref[0, :]  # (d,)
+    k = k_ref[0, :, :]  # (N, d)
+    v = v_ref[0, :, :]  # (N, d)
+    mask = mask_ref[0, :]  # (N,)
+
+    d = q.shape[-1]
+    # s_i = <q, k_i>/sqrt(d): one (N,d)x(d,) contraction -> MXU on TPU.
+    s = jnp.dot(k, q) * (1.0 / math.sqrt(d))
+    s = jnp.where(mask > 0, s, jnp.asarray(MASK_FILL, dtype=s.dtype))
+
+    # Leaf tuples (m, u, w) = (s_i, 1, v_i); identity = (MASK_FILL, 0, 0).
+    m = s
+    u = jnp.ones_like(s)
+    w = v
+
+    # Hillis–Steele: ceil(log2 N) full-width sweeps. Each sweep combines
+    # element j with element j - 2^i via the paper's ⊕ (Appendix B).
+    n_sweeps = max(1, math.ceil(math.log2(seq_len))) if seq_len > 1 else 0
+    for i in range(n_sweeps):
+        off = 1 << i
+        if off >= seq_len:
+            break
+        m_p = _shift_down(m, off, MASK_FILL)
+        u_p = _shift_down(u, off, 0.0)
+        w_p = _shift_down(w, off, 0.0)
+        m_new = jnp.maximum(m, m_p)
+        ea = jnp.exp(m_p - m_new)  # weight of the earlier (A) segment
+        eb = jnp.exp(m - m_new)  # weight of the current (B) segment
+        u = u_p * ea + u * eb
+        w = w_p * ea[:, None] + w * eb[:, None]
+        m = m_new
+
+    o_ref[0, :, :] = w / u[:, None]
+
+
+def _scan_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array
+) -> jax.Array:
+    bh, n, d = k.shape
+    kernel = functools.partial(_scan_attention_kernel, seq_len=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d), k.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def scan_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Many-to-many attention for a batch of heads (paper §3.2).
+
+    q: (BH, d) — one learned query per (batch, head);
+    k, v: (BH, N, d); mask: (BH, N) in {0,1}.
+    Returns o: (BH, N, d) with o[:, t] = Attention(q, x_{1:t}).
+
+    Forward is the Pallas prefix-scan kernel; backward is the VJP of the
+    mathematically identical `lax.associative_scan` reference (Pallas
+    interpret-mode calls do not support reverse-mode AD). Both paths are
+    cross-checked in python/tests/.
+    """
+    return _scan_attention_pallas(q, k, v, mask)
+
+
+def _scan_attention_ref(q, k, v, mask):
+    from . import ref  # local import to avoid a cycle at module load
+
+    return jax.vmap(ref.assoc_scan_prefix_attention)(q, k, v, mask)
+
+
+def _scan_attention_fwd(q, k, v, mask):
+    return _scan_attention_pallas(q, k, v, mask), (q, k, v, mask)
+
+
+def _scan_attention_bwd(res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _scan_attention_ref(q_, k_, v_, mask), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, jnp.zeros_like(mask)
+
+
+scan_attention.defvjp(_scan_attention_fwd, _scan_attention_bwd)
+
+
+def _recurrent_step_kernel(q_ref, k_ref, v_ref, a_ref, c_ref, m_ref, o_ref):
+    """Single-token RNN cell (paper §3.1, Figure 2) as a Pallas kernel.
+
+    In/out aliasing is handled by the caller; this kernel computes the
+    (a, c, m) update for one new token and emits o = a'/c'. Used by the
+    streaming infer path's unit tests; the AOT streaming step lowers the
+    same math from model-level JAX (infer.py).
+    """
+    q = q_ref[0, :]
+    k = k_ref[0, :]
+    v = v_ref[0, :]
+    a = a_ref[0, :]
+    c = c_ref[0, 0]
+    m = m_ref[0, 0]
+    d = q.shape[-1]
+    s = jnp.dot(k, q) * (1.0 / math.sqrt(d))
+    m_new = jnp.maximum(m, s)
+    ea = jnp.exp(m - m_new)
+    eb = jnp.exp(s - m_new)
+    a_new = a * ea + v * eb
+    c_new = c * ea + eb
+    o_ref[0, : d] = a_new
+    o_ref[0, d] = c_new
+    o_ref[0, d + 1] = m_new
+
+
+def recurrent_step(
+    q: jax.Array, k: jax.Array, v: jax.Array, a: jax.Array, c: jax.Array, m: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """O(1)-memory attention update for a batch of heads.
+
+    q/k/v/a: (BH, d); c/m: (BH, 1). Returns (a', c', m', o) where
+    o = a'/c' is the refreshed attention output after absorbing token k/v.
+    """
+    bh, d = q.shape
+    packed = pl.pallas_call(
+        _recurrent_step_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d + 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, d + 2), q.dtype),
+        interpret=True,
+    )(q, k, v, a, c, m)
+    a_new = packed[:, :d]
+    c_new = packed[:, d : d + 1]
+    m_new = packed[:, d + 1 :]
+    return a_new, c_new, m_new, a_new / c_new

@@ -1,0 +1,175 @@
+# L2 building blocks: layer norm, MLP, positional encodings, and the two
+# attention blocks the paper compares — the Aaren block (learned query +
+# prefix-scan attention, §3.3) and the causal Transformer block (Vaswani
+# et al., 2017). Both share every hyperparameter; the only differences are
+# (a) where the query comes from and (b) which L1 kernel runs — exactly
+# the paper's controlled comparison.
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.causal_attention import causal_attention
+from .kernels.scan_attention import scan_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Shared architecture hyperparameters (paper Appendix E)."""
+
+    kind: str  # "aaren" | "tf"
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_mlp: int = 128
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# primitives
+
+
+def init_linear(key, d_in: int, d_out: int) -> dict:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def init_layer_norm(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    return linear(p["fc2"], jax.nn.gelu(linear(p["fc1"], x)))
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Standard fixed sinusoidal position table, (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def sinusoidal_at(t: jax.Array, d: int) -> jax.Array:
+    """Positional row for a single (traced) integer position t — O(1),
+    used by the streaming infer step."""
+    tf = t.astype(jnp.float32)
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = tf / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def temporal_encoding(times: jax.Array, d: int) -> jax.Array:
+    """THP-style encoding of continuous event times (Zuo et al., 2020).
+
+    times: (..., L) absolute event times -> (..., L, d).
+    """
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = times[..., None] / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention blocks
+
+
+def init_block(key, cfg: ModelCfg) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {
+        "ln1": init_layer_norm(d),
+        "wk": init_linear(ks[0], d, d),
+        "wv": init_linear(ks[1], d, d),
+        "wo": init_linear(ks[2], d, d),
+        "ln2": init_layer_norm(d),
+        "mlp": {
+            "fc1": init_linear(ks[3], d, cfg.d_mlp),
+            "fc2": init_linear(ks[4], cfg.d_mlp, d),
+        },
+    }
+    # Both variants own a query projection Wq; Aaren additionally learns
+    # the query *token* q (paper §3.3: "Aaren's query token q is learned
+    # during training via backpropagation"), which is projected through Wq
+    # like any input token. This gives Aaren exactly +d_model parameters
+    # per block — the paper's ~0.016% overhead (§4.5).
+    p["wq"] = init_linear(ks[5], d, d)
+    if cfg.kind == "aaren":
+        p["q"] = jax.random.normal(ks[6], (d,)) * 0.02
+    elif cfg.kind != "tf":
+        raise ValueError(f"unknown block kind {cfg.kind!r}")
+    return p
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    """(B, N, d) -> (B*h, N, d/h)."""
+    b, n, d = x.shape
+    return x.reshape(b, n, h, d // h).transpose(0, 2, 1, 3).reshape(b * h, n, d // h)
+
+
+def _merge_heads(x: jax.Array, b: int) -> jax.Array:
+    """(B*h, N, dh) -> (B, N, d)."""
+    bh, n, dh = x.shape
+    h = bh // b
+    return x.reshape(b, h, n, dh).transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def block_apply(p: dict, cfg: ModelCfg, x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Pre-norm residual block. x: (B, N, d); mask: (B, N) in {0,1}.
+
+    Both variants map N inputs to N outputs where output i aggregates
+    inputs 1..i (the shared interface of §3.3).
+    """
+    b, n, _ = x.shape
+    h_in = layer_norm(p["ln1"], x)
+    k = _split_heads(linear(p["wk"], h_in), cfg.n_heads)
+    v = _split_heads(linear(p["wv"], h_in), cfg.n_heads)
+    mask_bh = jnp.repeat(mask, cfg.n_heads, axis=0)  # (B*h, N)
+
+    if cfg.kind == "aaren":
+        # project the learned query token, split into heads, tile per batch
+        q_heads = linear(p["wq"], p["q"]).reshape(cfg.n_heads, cfg.d_head)
+        q = jnp.tile(q_heads, (b, 1))  # (B*h, dh): input-independent
+        o = scan_attention(q, k, v, mask_bh)
+    else:
+        q = _split_heads(linear(p["wq"], h_in), cfg.n_heads)
+        o = causal_attention(q, k, v, mask_bh)
+
+    x = x + linear(p["wo"], _merge_heads(o, b))
+    x = x + mlp_apply(p["mlp"], layer_norm(p["ln2"], x))
+    return x
+
+
+def init_backbone(key, cfg: ModelCfg) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    return {
+        "blocks": [init_block(ks[i], cfg) for i in range(cfg.n_layers)],
+        "ln_f": init_layer_norm(cfg.d_model),
+    }
+
+
+def backbone_apply(p: dict, cfg: ModelCfg, x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Stacked blocks + final norm (Figure 4's stacking)."""
+    for blk in p["blocks"]:
+        x = block_apply(blk, cfg, x, mask)
+    return layer_norm(p["ln_f"], x)
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,299 @@
+# L2: the paper's models per evaluation domain, each in two flavours
+# (kind="aaren" | kind="tf") sharing every hyperparameter — the paper's
+# controlled comparison (§4, Appendix E).
+#
+#   stream — generic next-value sequence model: quickstart, serving demo,
+#            Figure-5 analysis, and the streaming==parallel contract.
+#   tsf    — time-series forecasting with instance (non-stationary) input
+#            normalisation, following Liu et al. (2022) (§4.3, Tables 3/5).
+#   tsc    — time-series classification: mean-pool + linear head (§4.4,
+#            Table 4).
+#   ef     — Transformer Hawkes Process-style event forecasting with a
+#            log-normal mixture head (Zuo et al. 2020; Bae et al. 2023)
+#            (§4.2, Table 2).
+#   rl     — Decision Transformer (Chen et al., 2021): return-conditioned
+#            action prediction over (rtg, state, action) token triples
+#            (§4.1, Table 1).
+#
+# Every model exposes  init_*(key, ...) -> params,
+#                      *_loss(params, batch...) -> scalar,
+# and a forward/eval function the AOT exporter lowers for the rust side.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    ModelCfg,
+    backbone_apply,
+    init_backbone,
+    init_linear,
+    linear,
+    sinusoidal_positions,
+    temporal_encoding,
+)
+
+# ---------------------------------------------------------------------------
+# stream: generic next-step prediction over continuous multichannel tokens
+
+
+def init_stream(key, cfg: ModelCfg, n_channels: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": init_linear(ks[0], n_channels, cfg.d_model),
+        "backbone": init_backbone(ks[1], cfg),
+        "head": init_linear(ks[2], cfg.d_model, n_channels),
+    }
+
+
+def stream_forward(params: dict, cfg: ModelCfg, x: jax.Array) -> jax.Array:
+    """x: (B, N, C) -> per-token next-value predictions (B, N, C)."""
+    b, n, _ = x.shape
+    h = linear(params["embed"], x) + sinusoidal_positions(n, cfg.d_model)[None]
+    mask = jnp.ones((b, n), jnp.float32)
+    h = backbone_apply(params["backbone"], cfg, h, mask)
+    return linear(params["head"], h)
+
+
+def stream_loss(params: dict, cfg: ModelCfg, x: jax.Array) -> jax.Array:
+    """Next-step MSE: prediction at t is scored against x_{t+1}."""
+    pred = stream_forward(params, cfg, x)
+    return jnp.mean((pred[:, :-1] - x[:, 1:]) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# tsf: forecasting with instance normalisation (Liu et al., 2022)
+
+
+def init_tsf(key, cfg: ModelCfg, n_channels: int, horizon: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": init_linear(ks[0], n_channels, cfg.d_model),
+        "backbone": init_backbone(ks[1], cfg),
+        "head": init_linear(ks[2], cfg.d_model, horizon * n_channels),
+    }
+
+
+def _instance_norm(x: jax.Array, eps: float = 1e-5):
+    """Per-instance, per-channel normalisation over the time axis."""
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    sigma = jnp.sqrt(jnp.var(x, axis=1, keepdims=True) + eps)
+    return (x - mu) / sigma, mu, sigma
+
+
+def tsf_forward(params: dict, cfg: ModelCfg, horizon: int, x: jax.Array) -> jax.Array:
+    """x: (B, L, C) history -> (B, T, C) forecast (de-normalised)."""
+    b, n, c = x.shape
+    xn, mu, sigma = _instance_norm(x)
+    h = linear(params["embed"], xn) + sinusoidal_positions(n, cfg.d_model)[None]
+    mask = jnp.ones((b, n), jnp.float32)
+    h = backbone_apply(params["backbone"], cfg, h, mask)
+    yn = linear(params["head"], h[:, -1]).reshape(b, horizon, c)
+    return yn * sigma + mu
+
+
+def tsf_loss(
+    params: dict, cfg: ModelCfg, horizon: int, x: jax.Array, y: jax.Array
+) -> jax.Array:
+    """MSE on the *normalised* scale (standard for instance-norm models)."""
+    _, mu, sigma = _instance_norm(x)
+    pred = tsf_forward(params, cfg, horizon, x)
+    return jnp.mean(((pred - mu) / sigma - (y - mu) / sigma) ** 2)
+
+
+def tsf_eval(
+    params: dict, cfg: ModelCfg, horizon: int, x: jax.Array, y: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (sum squared error, sum abs error) on the original scale;
+    the rust harness divides by element count to report MSE/MAE as the
+    paper does (datasets are pre-standardised by the generators)."""
+    pred = tsf_forward(params, cfg, horizon, x)
+    err = pred - y
+    return jnp.sum(err**2), jnp.sum(jnp.abs(err))
+
+
+# ---------------------------------------------------------------------------
+# tsc: sequence classification (mean pooling, Wu et al. 2023 style)
+
+
+def init_tsc(key, cfg: ModelCfg, n_channels: int, n_classes: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": init_linear(ks[0], n_channels, cfg.d_model),
+        "backbone": init_backbone(ks[1], cfg),
+        "head": init_linear(ks[2], cfg.d_model, n_classes),
+    }
+
+
+def tsc_logits(params: dict, cfg: ModelCfg, x: jax.Array) -> jax.Array:
+    b, n, _ = x.shape
+    h = linear(params["embed"], x) + sinusoidal_positions(n, cfg.d_model)[None]
+    mask = jnp.ones((b, n), jnp.float32)
+    h = backbone_apply(params["backbone"], cfg, h, mask)
+    return linear(params["head"], jnp.mean(h, axis=1))
+
+
+def tsc_loss(params: dict, cfg: ModelCfg, x: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = tsc_logits(params, cfg, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def tsc_eval(
+    params: dict, cfg: ModelCfg, x: jax.Array, labels: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (correct count, summed NLL)."""
+    logits = tsc_logits(params, cfg, x)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    return correct, nll
+
+
+# ---------------------------------------------------------------------------
+# ef: Transformer Hawkes Process with a log-normal mixture head
+
+
+LOG_SIG_MIN, LOG_SIG_MAX = -3.0, 1.5
+
+
+def init_ef(key, cfg: ModelCfg, n_marks: int, n_mix: int) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "mark_embed": jax.random.normal(ks[0], (n_marks, cfg.d_model)) * 0.02,
+        "backbone": init_backbone(ks[1], cfg),
+        # per-event distribution head: mixture weights, means, log-sigmas
+        "time_head": init_linear(ks[2], cfg.d_model, 3 * n_mix),
+        "mark_head": init_linear(ks[3], cfg.d_model, n_marks),
+    }
+
+
+def _ef_hidden(params: dict, cfg: ModelCfg, times: jax.Array, marks: jax.Array):
+    """times: (B, L) absolute event times; marks: (B, L) int32 -> (B, L, d)."""
+    b, n = times.shape
+    h = params["mark_embed"][marks] + temporal_encoding(times, cfg.d_model)
+    mask = jnp.ones((b, n), jnp.float32)
+    return backbone_apply(params["backbone"], cfg, h, mask)
+
+
+def _lognormal_mixture_nll(head_out: jax.Array, dt: jax.Array, n_mix: int):
+    """NLL of inter-event gaps dt>0 under a log-normal mixture.
+
+    head_out: (..., 3K) -> weights/mu/log-sigma; dt: (...,).
+    Returns (nll, expected_dt) where expected_dt is the mixture mean used
+    for the paper's RMSE metric.
+    """
+    w_logit, mu, log_sig = jnp.split(head_out, 3, axis=-1)
+    log_w = jax.nn.log_softmax(w_logit, axis=-1)
+    log_sig = jnp.clip(log_sig, LOG_SIG_MIN, LOG_SIG_MAX)
+    sig = jnp.exp(log_sig)
+    logdt = jnp.log(jnp.maximum(dt, 1e-8))[..., None]
+    # log N(log dt; mu, sig) - log dt   (log-normal density)
+    comp = (
+        -0.5 * ((logdt - mu) / sig) ** 2
+        - log_sig
+        - 0.5 * jnp.log(2.0 * jnp.pi)
+        - logdt
+    )
+    nll = -jax.nn.logsumexp(log_w + comp, axis=-1)
+    # Point prediction for the RMSE metric: mixture of component *medians*
+    # exp(mu_k). The mixture mean exp(mu + sigma^2/2) is heavy-tailed and
+    # explodes for untrained/high-variance components; the median is the
+    # standard robust reporting choice for log-normal TPP heads.
+    expected = jnp.sum(jnp.exp(log_w) * jnp.exp(mu), axis=-1)
+    return nll, expected
+
+
+def ef_loss(
+    params: dict, cfg: ModelCfg, n_mix: int, times: jax.Array, marks: jax.Array
+) -> jax.Array:
+    """Mean NLL of (next gap, next mark) over positions 1..L-1."""
+    h = _ef_hidden(params, cfg, times, marks)[:, :-1]  # h_t predicts event t+1
+    dt = times[:, 1:] - times[:, :-1]
+    time_nll, _ = _lognormal_mixture_nll(linear(params["time_head"], h), dt, n_mix)
+    logits = jax.nn.log_softmax(linear(params["mark_head"], h), axis=-1)
+    mark_nll = -jnp.take_along_axis(logits, marks[:, 1:, None], axis=-1)[..., 0]
+    return jnp.mean(time_nll + mark_nll)
+
+
+def ef_eval(
+    params: dict, cfg: ModelCfg, n_mix: int, times: jax.Array, marks: jax.Array
+):
+    """Returns (nll_sum, sq_err_sum, correct_marks, n_events) — the paper's
+    Table-2 metrics (NLL / RMSE / Acc) before aggregation."""
+    h = _ef_hidden(params, cfg, times, marks)[:, :-1]
+    dt = times[:, 1:] - times[:, :-1]
+    time_nll, dt_pred = _lognormal_mixture_nll(linear(params["time_head"], h), dt, n_mix)
+    logits = linear(params["mark_head"], h)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mark_nll = -jnp.take_along_axis(logp, marks[:, 1:, None], axis=-1)[..., 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == marks[:, 1:]).astype(jnp.float32))
+    n = jnp.asarray(dt.size, jnp.float32)
+    return (
+        jnp.sum(time_nll + mark_nll),
+        jnp.sum((dt_pred - dt) ** 2),
+        correct,
+        n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rl: Decision Transformer (return-to-go conditioning)
+
+
+def init_rl(
+    key, cfg: ModelCfg, state_dim: int, act_dim: int, max_timesteps: int
+) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed_rtg": init_linear(ks[0], 1, cfg.d_model),
+        "embed_state": init_linear(ks[1], state_dim, cfg.d_model),
+        "embed_action": init_linear(ks[2], act_dim, cfg.d_model),
+        "embed_t": jax.random.normal(ks[3], (max_timesteps, cfg.d_model)) * 0.02,
+        "backbone": init_backbone(ks[4], cfg),
+        "head": init_linear(jax.random.split(ks[4])[0], cfg.d_model, act_dim),
+    }
+
+
+def rl_forward(
+    params: dict,
+    cfg: ModelCfg,
+    rtg: jax.Array,  # (B, T, 1)
+    states: jax.Array,  # (B, T, S)
+    actions: jax.Array,  # (B, T, A)
+    timesteps: jax.Array,  # (B, T) int32
+    mask: jax.Array,  # (B, T) in {0,1}
+) -> jax.Array:
+    """Predict actions from state-token positions. Returns (B, T, A)."""
+    b, t, _ = states.shape
+    te = params["embed_t"][timesteps]  # (B, T, d)
+    e_r = linear(params["embed_rtg"], rtg) + te
+    e_s = linear(params["embed_state"], states) + te
+    e_a = linear(params["embed_action"], actions) + te
+    # interleave (r_1, s_1, a_1, r_2, s_2, a_2, ...) -> (B, 3T, d)
+    tokens = jnp.stack([e_r, e_s, e_a], axis=2).reshape(b, 3 * t, cfg.d_model)
+    mask3 = jnp.repeat(mask, 3, axis=-1)
+    h = backbone_apply(params["backbone"], cfg, tokens, mask3)
+    h_state = h.reshape(b, t, 3, cfg.d_model)[:, :, 1]  # hidden at state tokens
+    return jnp.tanh(linear(params["head"], h_state))
+
+
+def rl_loss(params, cfg, rtg, states, actions, timesteps, mask) -> jax.Array:
+    pred = rl_forward(params, cfg, rtg, states, actions, timesteps, mask)
+    se = jnp.sum((pred - actions) ** 2, axis=-1) * mask
+    return jnp.sum(se) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def rl_eval(params, cfg, rtg, states, actions, timesteps, mask):
+    """Returns (masked squared-error sum, mask sum) for held-out action MSE."""
+    pred = rl_forward(params, cfg, rtg, states, actions, timesteps, mask)
+    se = jnp.sum((pred - actions) ** 2, axis=-1) * mask
+    return jnp.sum(se), jnp.sum(mask)
+
+
+def rl_act(params, cfg, rtg, states, actions, timesteps, mask) -> jax.Array:
+    """Action for the *last* context slot — the online rollout step. The
+    rust coordinator right-aligns the live episode into the fixed context
+    window and sets mask accordingly. Returns (B, A)."""
+    pred = rl_forward(params, cfg, rtg, states, actions, timesteps, mask)
+    return pred[:, -1]

@@ -1,0 +1,56 @@
+# In-graph Adam: the entire optimisation step — forward, backward, global
+# gradient-norm clipping, and the Adam update — is one HLO module. The rust
+# coordinator holds the (params, m, v, step) buffers and simply feeds each
+# call's outputs back into the next call's inputs; no optimiser logic ever
+# runs outside XLA.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(
+    loss_fn,
+    lr: float = 1e-3,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    clip_norm: float = 1.0,
+):
+    """loss_fn(params, *batch) -> scalar. Returns
+    train_step(params, m, v, step, *batch) -> (params', m', v', step', loss).
+    `step` is a float32 scalar (simplifies marshalling; exactly counts
+    steps for the bias correction)."""
+
+    def train_step(params, m, v, step, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g**2) for g in jax.tree_util.tree_leaves(grads))
+        )
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        step_new = step + 1.0
+        bc1 = 1.0 - beta1**step_new
+        bc2 = 1.0 - beta2**step_new
+
+        def upd(p, g, m_i, v_i):
+            m_n = beta1 * m_i + (1.0 - beta1) * g
+            v_n = beta2 * v_i + (1.0 - beta2) * g * g
+            p_n = p - lr * (m_n / bc1) / (jnp.sqrt(v_n / bc2) + eps)
+            return p_n, m_n, v_n
+
+        out = jax.tree_util.tree_map(upd, params, grads, m, v)
+        params_new = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        m_new = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        v_new = jax.tree_util.tree_map(
+            lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        return params_new, m_new, v_new, step_new, loss
+
+    return train_step

@@ -1,0 +1,265 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal
+# for Layer 1 (DESIGN.md §6, contracts 1 and 2).
+#
+# hypothesis sweeps shapes and value regimes; fixed-seed tests pin the
+# exact configurations the AOT artifacts use.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.causal_attention import causal_attention
+from compile.kernels.scan_attention import recurrent_step, scan_attention
+
+ATOL = 2e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _mask(key, bh, n, p_live=0.8):
+    u = jax.random.uniform(jax.random.PRNGKey(key), (bh, n))
+    return (u < p_live).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# contract 1: pallas scan kernel == naive oracle
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 8, 33, 64, 100, 128])
+def test_scan_kernel_matches_naive_all_lengths(n):
+    bh, d = 3, 16
+    q, k, v = _rand(0, bh, d), _rand(1, bh, n, d), _rand(2, bh, n, d)
+    mask = jnp.ones((bh, n), jnp.float32)
+    out = scan_attention(q, k, v, mask)
+    want = ref.multihead_prefix_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, want, atol=ATOL)
+
+
+@pytest.mark.parametrize("d", [1, 2, 8, 16, 32, 64])
+def test_scan_kernel_matches_naive_all_widths(d):
+    bh, n = 2, 24
+    q, k, v = _rand(3, bh, d), _rand(4, bh, n, d), _rand(5, bh, n, d)
+    mask = jnp.ones((bh, n), jnp.float32)
+    np.testing.assert_allclose(
+        scan_attention(q, k, v, mask),
+        ref.multihead_prefix_attention(q, k, v, mask),
+        atol=ATOL,
+    )
+
+
+def test_scan_kernel_with_random_mask():
+    bh, n, d = 4, 40, 8
+    q, k, v = _rand(6, bh, d), _rand(7, bh, n, d), _rand(8, bh, n, d)
+    mask = _mask(9, bh, n, p_live=0.6)
+    np.testing.assert_allclose(
+        scan_attention(q, k, v, mask),
+        ref.multihead_prefix_attention(q, k, v, mask),
+        atol=ATOL,
+    )
+
+
+def test_scan_kernel_fully_masked_prefix_is_finite():
+    """Left-padded sequences (RL rollouts) start with masked tokens; the
+    kernel must stay finite there (DESIGN.md: MASK_FILL, not -inf)."""
+    bh, n, d = 2, 16, 8
+    q, k, v = _rand(10, bh, d), _rand(11, bh, n, d), _rand(12, bh, n, d)
+    mask = jnp.concatenate(
+        [jnp.zeros((bh, 8)), jnp.ones((bh, 8))], axis=1
+    ).astype(jnp.float32)
+    out = scan_attention(q, k, v, mask)
+    assert np.all(np.isfinite(np.array(out)))
+    np.testing.assert_allclose(
+        out, ref.multihead_prefix_attention(q, k, v, mask), atol=ATOL
+    )
+
+
+def test_scan_kernel_extreme_scores_stable():
+    """The cumulative-max trick (§3.1 footnote 2): scores of magnitude ~80
+    would overflow exp() without it."""
+    bh, n, d = 2, 32, 4
+    q = 10.0 * _rand(13, bh, d)
+    k = 10.0 * _rand(14, bh, n, d)
+    v = _rand(15, bh, n, d)
+    mask = jnp.ones((bh, n), jnp.float32)
+    out = scan_attention(q, k, v, mask)
+    assert np.all(np.isfinite(np.array(out)))
+    np.testing.assert_allclose(
+        out, ref.multihead_prefix_attention(q, k, v, mask), atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 96),
+    d=st.sampled_from([4, 8, 16]),
+    bh=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_scan_kernel_hypothesis(n, d, bh, seed, scale):
+    q = scale * _rand(seed, bh, d)
+    k = scale * _rand(seed + 1, bh, n, d)
+    v = _rand(seed + 2, bh, n, d)
+    mask = _mask(seed + 3, bh, n)
+    np.testing.assert_allclose(
+        scan_attention(q, k, v, mask),
+        ref.multihead_prefix_attention(q, k, v, mask),
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# contract 2: the three reference formulations agree (paper §3.1/§3.2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_recurrent_equals_naive(n, seed):
+    d = 8
+    q, k, v = _rand(seed, d), _rand(seed + 1, n, d), _rand(seed + 2, n, d)
+    np.testing.assert_allclose(
+        ref.recurrent_prefix_attention(q, k, v),
+        ref.naive_prefix_attention(q, k, v),
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_assoc_scan_equals_naive(n, seed):
+    d = 8
+    q, k, v = _rand(seed, d), _rand(seed + 1, n, d), _rand(seed + 2, n, d)
+    np.testing.assert_allclose(
+        ref.assoc_scan_prefix_attention(q, k, v),
+        ref.naive_prefix_attention(q, k, v),
+        atol=ATOL,
+    )
+
+
+def test_combine_operator_associative():
+    """Appendix B: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) including extreme m values."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        tup = []
+        for _i in range(3):
+            m = jnp.asarray(rng.uniform(-85, 85), jnp.float32)
+            u = jnp.asarray(rng.uniform(0.1, 3.0), jnp.float32)
+            w = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+            tup.append((m, u, w))
+        a, b, c = tup
+        left = ref.combine(ref.combine(a, b), c)
+        right = ref.combine(a, ref.combine(b, c))
+        for lx, rx in zip(left, right):
+            np.testing.assert_allclose(lx, rx, rtol=1e-5, atol=1e-5)
+
+
+def test_combine_identity_element():
+    ident = (
+        jnp.asarray(ref.MASK_FILL, jnp.float32),
+        jnp.asarray(0.0, jnp.float32),
+        jnp.zeros((4,), jnp.float32),
+    )
+    x = (
+        jnp.asarray(1.3, jnp.float32),
+        jnp.asarray(2.0, jnp.float32),
+        jnp.arange(4.0, dtype=jnp.float32),
+    )
+    for got, want in zip(ref.combine(ident, x), x):
+        np.testing.assert_allclose(got, want, atol=1e-6)
+    for got, want in zip(ref.combine(x, ident), x):
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the O(1) recurrent-step kernel streams to the same answer
+
+
+@pytest.mark.parametrize("n", [1, 5, 32])
+def test_recurrent_step_kernel_streams_to_naive(n):
+    bh, d = 3, 8
+    q, k, v = _rand(20, bh, d), _rand(21, bh, n, d), _rand(22, bh, n, d)
+    a = jnp.zeros((bh, d))
+    c = jnp.zeros((bh, 1))
+    m = jnp.full((bh, 1), ref.MASK_FILL)
+    outs = []
+    for t in range(n):
+        a, c, m, o = recurrent_step(q, k[:, t], v[:, t], a, c, m)
+        outs.append(o)
+    got = jnp.stack(outs, axis=1)  # (bh, n, d)
+    want = ref.multihead_prefix_attention(
+        q, k, v, jnp.ones((bh, n), jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# baseline kernel == baseline oracle
+
+
+@pytest.mark.parametrize("n", [1, 2, 17, 64])
+def test_causal_kernel_matches_ref(n):
+    bh, d = 3, 16
+    q, k, v = _rand(30, bh, n, d), _rand(31, bh, n, d), _rand(32, bh, n, d)
+    mask = _mask(33, bh, n)
+    np.testing.assert_allclose(
+        causal_attention(q, k, v, mask),
+        ref.multihead_causal_self_attention(q, k, v, mask),
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_causal_kernel_hypothesis(n, seed):
+    bh, d = 2, 8
+    q, k, v = _rand(seed, bh, n, d), _rand(seed + 1, bh, n, d), _rand(seed + 2, bh, n, d)
+    mask = _mask(seed + 3, bh, n)
+    np.testing.assert_allclose(
+        causal_attention(q, k, v, mask),
+        ref.multihead_causal_self_attention(q, k, v, mask),
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# gradients: custom_vjp backward equals the reference's autodiff
+
+
+def test_scan_attention_gradients_match_reference():
+    bh, n, d = 2, 16, 8
+    q, k, v = _rand(40, bh, d), _rand(41, bh, n, d), _rand(42, bh, n, d)
+    mask = jnp.ones((bh, n), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(scan_attention(q, k, v, mask) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.multihead_prefix_attention(q, k, v, mask) ** 2)
+
+    g_kernel = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(gk, gr, atol=1e-4)
+
+
+def test_causal_attention_gradients_match_reference():
+    bh, n, d = 2, 12, 8
+    q, k, v = _rand(43, bh, n, d), _rand(44, bh, n, d), _rand(45, bh, n, d)
+    mask = jnp.ones((bh, n), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(causal_attention(q, k, v, mask) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.multihead_causal_self_attention(q, k, v, mask) ** 2)
+
+    g_kernel = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(gk, gr, atol=1e-4)

@@ -1,0 +1,256 @@
+# pytest: L2 model contracts — shapes, the streaming==parallel equivalence
+# (DESIGN.md contract 5/6, at the JAX level), and loss-decreases sanity for
+# every domain's train step.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import infer, model
+from compile.layers import ModelCfg, block_apply, count_params, init_block
+from compile.train import make_train_step
+
+CFG_A = ModelCfg(kind="aaren", d_model=16, n_heads=2, n_layers=2, d_mlp=32)
+CFG_T = ModelCfg(kind="tf", d_model=16, n_heads=2, n_layers=2, d_mlp=32)
+
+
+def _key(i):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# block-level
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_block_shapes(cfg):
+    p = init_block(_key(0), cfg)
+    x = jax.random.normal(_key(1), (3, 10, cfg.d_model))
+    mask = jnp.ones((3, 10))
+    y = block_apply(p, cfg, x, mask)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.array(y)))
+
+
+def test_aaren_block_param_overhead_is_d_model():
+    """§4.5: Aaren = Transformer + exactly d_model params per block."""
+    pa = init_block(_key(0), CFG_A)
+    pt = init_block(_key(0), CFG_T)
+    assert count_params(pa) - count_params(pt) == CFG_A.d_model
+
+
+def test_block_causality():
+    """Output at position t must not depend on tokens after t."""
+    for cfg in (CFG_A, CFG_T):
+        p = init_block(_key(2), cfg)
+        x = jax.random.normal(_key(3), (1, 12, cfg.d_model))
+        mask = jnp.ones((1, 12))
+        y1 = block_apply(p, cfg, x, mask)
+        x2 = x.at[:, 7:].set(jax.random.normal(_key(4), (1, 5, cfg.d_model)))
+        y2 = block_apply(p, cfg, x2, mask)
+        np.testing.assert_allclose(y1[:, :7], y2[:, :7], atol=1e-5)
+        assert not np.allclose(np.array(y1[:, 7:]), np.array(y2[:, 7:]), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# streaming == parallel (the paper's central claim, contracts 5/6)
+
+
+def test_aaren_streaming_equals_parallel():
+    c, n = 4, 24
+    params = model.init_stream(_key(5), CFG_A, c)
+    x = jax.random.normal(_key(6), (1, n, c))
+    full = model.stream_forward(params, CFG_A, x)[0]  # (n, c)
+
+    a, cc, m = infer.aaren_state_init(CFG_A)
+    outs = []
+    for t in range(n):
+        a, cc, m, y = infer.stream_aaren_step(
+            params, CFG_A, a, cc, m, jnp.asarray(t, jnp.int32), x[0, t]
+        )
+        outs.append(y)
+    np.testing.assert_allclose(jnp.stack(outs), full, atol=1e-4)
+
+
+def test_aaren_state_is_constant_size():
+    """The O(1)-memory claim: state size is independent of #tokens."""
+    a, c, m = infer.aaren_state_init(CFG_A)
+    n_floats = a.size + c.size + m.size
+    assert n_floats == CFG_A.n_layers * CFG_A.n_heads * (CFG_A.d_head + 2)
+
+
+def test_tf_kv_streaming_equals_parallel():
+    c, n, ctx = 4, 24, 32
+    params = model.init_stream(_key(7), CFG_T, c)
+    x = jax.random.normal(_key(8), (1, n, c))
+    full = model.stream_forward(params, CFG_T, x)[0]
+
+    kc, vc = infer.kv_state_init(CFG_T, ctx)
+    outs = []
+    for t in range(n):
+        kc, vc, y = infer.stream_tf_step(
+            params, CFG_T, kc, vc, jnp.asarray(t, jnp.int32), x[0, t], ctx
+        )
+        outs.append(y)
+    np.testing.assert_allclose(jnp.stack(outs), full, atol=1e-4)
+
+
+def test_kv_bucket_migration_preserves_outputs():
+    """Copying a full small cache into the prefix of a larger bucket must
+    not change subsequent outputs (the rust session manager's migration)."""
+    c, n1, ctx1, ctx2 = 4, 16, 16, 32
+    params = model.init_stream(_key(9), CFG_T, c)
+    x = jax.random.normal(_key(10), (1, 24, c))
+
+    kc, vc = infer.kv_state_init(CFG_T, ctx1)
+    for t in range(n1):
+        kc, vc, y_small = infer.stream_tf_step(
+            params, CFG_T, kc, vc, jnp.asarray(t, jnp.int32), x[0, t], ctx1
+        )
+    kc2, vc2 = infer.kv_state_init(CFG_T, ctx2)
+    kc2 = kc2.at[:, :, :ctx1].set(kc)
+    vc2 = vc2.at[:, :, :ctx1].set(vc)
+    outs = []
+    for t in range(n1, 24):
+        kc2, vc2, y = infer.stream_tf_step(
+            params, CFG_T, kc2, vc2, jnp.asarray(t, jnp.int32), x[0, t], ctx2
+        )
+        outs.append(y)
+    full = model.stream_forward(params, CFG_T, x)[0]
+    np.testing.assert_allclose(jnp.stack(outs), full[n1:], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-domain heads: shapes + train-step-decreases-loss
+
+
+def _run_steps(loss_fn, params, batch, n_steps=8, lr=1e-2):
+    step_fn = make_train_step(loss_fn, lr=lr)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    step = jnp.asarray(0.0)
+    losses = []
+    for _ in range(n_steps):
+        params, m, v, step, loss = step_fn(params, m, v, step, *batch)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_stream_train_decreases_loss(cfg):
+    params = model.init_stream(_key(11), cfg, 4)
+    x = jax.random.normal(_key(12), (4, 16, 4))
+    losses = _run_steps(lambda p, x: model.stream_loss(p, cfg, x), params, (x,))
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_tsf_shapes_and_training(cfg):
+    T = 8
+    params = model.init_tsf(_key(13), cfg, 3, T)
+    x = jax.random.normal(_key(14), (4, 12, 3))
+    y = jax.random.normal(_key(15), (4, T, 3))
+    pred = model.tsf_forward(params, cfg, T, x)
+    assert pred.shape == (4, T, 3)
+    sse, sae = model.tsf_eval(params, cfg, T, x, y)
+    assert sse.shape == () and sae.shape == ()
+    losses = _run_steps(
+        lambda p, x, y: model.tsf_loss(p, cfg, T, x, y), params, (x, y)
+    )
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_tsc_shapes_and_training(cfg):
+    ncls = 5
+    params = model.init_tsc(_key(16), cfg, 3, ncls)
+    x = jax.random.normal(_key(17), (6, 10, 3))
+    labels = jnp.asarray([0, 1, 2, 3, 4, 0], jnp.int32)
+    logits = model.tsc_logits(params, cfg, x)
+    assert logits.shape == (6, ncls)
+    correct, nll = model.tsc_eval(params, cfg, x, labels)
+    assert 0 <= float(correct) <= 6
+    losses = _run_steps(
+        lambda p, x, l: model.tsc_loss(p, cfg, x, l), params, (x, labels)
+    )
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_ef_shapes_and_training(cfg):
+    marks, mix = 4, 3
+    params = model.init_ef(_key(18), cfg, marks, mix)
+    dt = jax.random.uniform(_key(19), (4, 12), minval=0.05, maxval=1.0)
+    times = jnp.cumsum(dt, axis=1)
+    mk = jax.random.randint(_key(20), (4, 12), 0, marks)
+    nll_sum, sq_sum, correct, n = model.ef_eval(params, cfg, mix, times, mk)
+    assert float(n) == 4 * 11
+    assert np.isfinite(float(nll_sum)) and float(sq_sum) >= 0
+    losses = _run_steps(
+        lambda p, t, m: model.ef_loss(p, cfg, mix, t, m), params, (times, mk),
+        lr=3e-3,
+    )
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("cfg", [CFG_A, CFG_T], ids=["aaren", "tf"])
+def test_rl_shapes_and_training(cfg):
+    T, S, A = 6, 5, 3
+    params = model.init_rl(_key(21), cfg, S, A, 64)
+    rtg = jax.random.normal(_key(22), (4, T, 1))
+    states = jax.random.normal(_key(23), (4, T, S))
+    actions = jnp.tanh(jax.random.normal(_key(24), (4, T, A)))
+    ts = jnp.tile(jnp.arange(T, dtype=jnp.int32), (4, 1))
+    mask = jnp.ones((4, T))
+    pred = model.rl_forward(params, cfg, rtg, states, actions, ts, mask)
+    assert pred.shape == (4, T, A)
+    assert np.all(np.abs(np.array(pred)) <= 1.0)
+    act = model.rl_act(params, cfg, rtg[:1], states[:1], actions[:1], ts[:1], mask[:1])
+    assert act.shape == (1, A)
+    losses = _run_steps(
+        lambda p, *b: model.rl_loss(p, cfg, *b),
+        params, (rtg, states, actions, ts, mask),
+    )
+    assert losses[-1] < losses[0]
+
+
+def test_rl_masked_positions_do_not_affect_live_predictions():
+    """Left-padding contract for online rollouts: junk in masked slots must
+    not change the action predicted at live slots."""
+    cfg = CFG_A
+    T, S, A = 8, 5, 3
+    params = model.init_rl(_key(25), cfg, S, A, 64)
+    rtg = jax.random.normal(_key(26), (1, T, 1))
+    states = jax.random.normal(_key(27), (1, T, S))
+    actions = jnp.tanh(jax.random.normal(_key(28), (1, T, A)))
+    ts = jnp.tile(jnp.arange(T, dtype=jnp.int32), (1, 1))
+    mask = jnp.concatenate([jnp.zeros((1, 3)), jnp.ones((1, 5))], axis=1)
+    a1 = model.rl_act(params, cfg, rtg, states, actions, ts, mask)
+    # scramble the masked (padding) slots
+    rtg2 = rtg.at[:, :3].set(99.0)
+    states2 = states.at[:, :3].set(-7.0)
+    actions2 = actions.at[:, :3].set(0.5)
+    a2 = model.rl_act(params, cfg, rtg2, states2, actions2, ts, mask)
+    np.testing.assert_allclose(a1, a2, atol=1e-5)
+
+
+def test_lognormal_mixture_nll_matches_closed_form():
+    """Single-component mixture == closed-form log-normal NLL."""
+    from compile.model import _lognormal_mixture_nll
+
+    head = jnp.asarray([0.0, 0.3, -0.2])  # w_logit, mu, log_sig (K=1)
+    dt = jnp.asarray(0.7)
+    nll, exp_dt = _lognormal_mixture_nll(head, dt, 1)
+    mu, sig = 0.3, np.exp(-0.2)
+    want = -(
+        -0.5 * ((np.log(0.7) - mu) / sig) ** 2
+        - np.log(sig)
+        - 0.5 * np.log(2 * np.pi)
+        - np.log(0.7)
+    )
+    np.testing.assert_allclose(float(nll), want, rtol=1e-5)
+    # point prediction is the mixture of component medians exp(mu)
+    # (robust reporting choice — see model.py::_lognormal_mixture_nll)
+    np.testing.assert_allclose(float(exp_dt), np.exp(mu), rtol=1e-5)

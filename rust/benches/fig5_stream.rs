@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 5: memory + cumulative time of streaming
+//! inference, Aaren (O(1) state) vs Transformer (KV cache buckets).
+//! AAREN_TOKENS sets the stream length (default 512).
+fn main() {
+    let tokens = std::env::var("AAREN_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512);
+    aaren::bench_harness::run_fig5(std::path::Path::new("artifacts"), tokens)
+        .expect("fig5 failed");
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's §4.5 parameter-count comparison.
+fn main() {
+    aaren::bench_harness::run_params(std::path::Path::new("artifacts"))
+        .expect("params bench failed");
+}

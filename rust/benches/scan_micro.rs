@@ -1,0 +1,57 @@
+//! Microbenchmarks for the paper's algorithmic core (ablation for
+//! DESIGN.md: Hillis–Steele O(N log N) vs Blelloch O(N) work, vs the
+//! sequential fold, plus the O(1) streaming update vs naive recompute —
+//! the §3.1 "methods for computing attention" comparison, rust-native).
+use aaren::attention;
+use aaren::scan::{self, Muw};
+use aaren::util::bench::{bench, print_result};
+use aaren::util::rng::Rng;
+
+fn leaves(rng: &mut Rng, n: usize, d: usize) -> Vec<Muw> {
+    (0..n)
+        .map(|_| Muw {
+            m: rng.range(-5.0, 5.0) as f32,
+            u: 1.0,
+            w: (0..d).map(|_| rng.gaussian() as f32).collect(),
+        })
+        .collect()
+}
+
+fn main() {
+    let d = 16;
+    println!("prefix scan over (m,u,w) tuples, d={d}:");
+    for n in [64usize, 256, 1024, 4096] {
+        let mut rng = Rng::new(n as u64);
+        let ls = leaves(&mut rng, n, d);
+        for (name, algo) in [
+            ("sequential", scan::sequential as fn(&[Muw]) -> Vec<Muw>),
+            ("hillis_steele", scan::hillis_steele),
+            ("blelloch", scan::blelloch),
+        ] {
+            let r = bench(&format!("{name:<14} n={n}"), 2, 12, || {
+                std::hint::black_box(algo(&ls));
+            });
+            print_result(&r);
+        }
+    }
+
+    println!("\nstreaming one new token at context n (the paper's O(1) vs O(n)):");
+    for n in [64usize, 256, 1024, 4096] {
+        let mut rng = Rng::new(7);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        // O(1): fold one token into the carried (a,c,m) state
+        let mut acc = Muw::identity(d);
+        let r = bench(&format!("{:<14} n={n}", "rnn_fold O(1)"), 8, 64, || {
+            scan::fold_token(&mut acc, 0.3, &v[..d]);
+            std::hint::black_box(&acc);
+        });
+        print_result(&r);
+        // O(n): recompute attention over the full prefix (transformer view)
+        let r = bench(&format!("{:<14} n={n}", "recompute O(n)"), 2, 16, || {
+            std::hint::black_box(attention::many_to_one(&q, &k, &v, None));
+        });
+        print_result(&r);
+    }
+}

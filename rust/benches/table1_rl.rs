@@ -1,0 +1,17 @@
+//! Regenerates paper Table 1 (RL, 12 datasets × 2 models). Scaled-down
+//! defaults; env vars widen: AAREN_SEEDS, AAREN_STEPS, AAREN_LIMIT.
+use aaren::bench_harness::{run_table1, BenchOpts};
+
+fn opts() -> BenchOpts {
+    let get = |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    BenchOpts {
+        seeds: get("AAREN_SEEDS", 2) as u64,
+        train_steps: get("AAREN_STEPS", 150),
+        limit: get("AAREN_LIMIT", 2), // 2 envs × 3 tiers by default
+        artifacts: std::path::PathBuf::from("artifacts"),
+    }
+}
+
+fn main() {
+    run_table1(&opts()).expect("table1 failed");
+}

@@ -1,0 +1,16 @@
+//! Regenerates paper Table 2 (event forecasting, 8 datasets × 2 models).
+use aaren::bench_harness::{run_table2, BenchOpts};
+
+fn opts() -> BenchOpts {
+    let get = |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    BenchOpts {
+        seeds: get("AAREN_SEEDS", 2) as u64,
+        train_steps: get("AAREN_STEPS", 150),
+        limit: get("AAREN_LIMIT", 3),
+        artifacts: std::path::PathBuf::from("artifacts"),
+    }
+}
+
+fn main() {
+    run_table2(&opts()).expect("table2 failed");
+}

@@ -1,0 +1,22 @@
+//! Regenerates paper Tables 3+5 (TSF, 8 datasets × 4 horizons × 2 models).
+//! AAREN_HORIZONS (comma-separated) picks horizons; default 96,192.
+use aaren::bench_harness::{run_table3, BenchOpts};
+
+fn opts() -> BenchOpts {
+    let get = |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    BenchOpts {
+        seeds: get("AAREN_SEEDS", 2) as u64,
+        train_steps: get("AAREN_STEPS", 150),
+        limit: get("AAREN_LIMIT", 3),
+        artifacts: std::path::PathBuf::from("artifacts"),
+    }
+}
+
+fn main() {
+    let horizons: Vec<usize> = std::env::var("AAREN_HORIZONS")
+        .unwrap_or_else(|_| "96,192".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    run_table3(&opts(), &horizons).expect("table3 failed");
+}

@@ -1,0 +1,16 @@
+//! Regenerates paper Table 4 (TSC, 10 datasets × 2 models).
+use aaren::bench_harness::{run_table4, BenchOpts};
+
+fn opts() -> BenchOpts {
+    let get = |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    BenchOpts {
+        seeds: get("AAREN_SEEDS", 2) as u64,
+        train_steps: get("AAREN_STEPS", 150),
+        limit: get("AAREN_LIMIT", 4),
+        artifacts: std::path::PathBuf::from("artifacts"),
+    }
+}
+
+fn main() {
+    run_table4(&opts()).expect("table4 failed");
+}

@@ -1,0 +1,270 @@
+//! Attention oracles in pure Rust — the paper's §3.1 formulations plus the
+//! Appendix-A block-by-block variant. These mirror python's kernels/ref.py
+//! and serve three roles:
+//!   1. executable specification for the scan module's property tests,
+//!   2. the rust-native fallback path for the streaming session manager,
+//!   3. microbench baselines for fig5 (many-to-one recompute vs O(1) fold).
+//!
+//! Layout convention: `k`/`v` are row-major (n, d) flat slices.
+
+use crate::scan::{fold_token, Muw, MASK_FILL};
+
+/// s_i = <q, k_i>/sqrt(d) with optional {0,1} mask (masked -> MASK_FILL).
+pub fn scores(q: &[f32], k: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
+    let d = q.len();
+    let n = k.len() / d;
+    let scale = 1.0 / (d as f32).sqrt();
+    (0..n)
+        .map(|i| {
+            if let Some(m) = mask {
+                if m[i] <= 0.0 {
+                    return MASK_FILL;
+                }
+            }
+            let row = &k[i * d..(i + 1) * d];
+            row.iter().zip(q.iter()).map(|(a, b)| a * b).sum::<f32>() * scale
+        })
+        .collect()
+}
+
+/// Conventional many-to-one attention: softmax(s) @ v over the whole
+/// context — O(N) memory, one output (paper Figure 1a).
+pub fn many_to_one(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
+    let d = q.len();
+    let n = k.len() / d;
+    let dv = v.len() / n;
+    let s = scores(q, k, mask);
+    let mx = s.iter().cloned().fold(f32::MIN, f32::max);
+    let exps: Vec<f32> = s.iter().map(|x| (x - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let mut out = vec![0.0f32; dv];
+    for i in 0..n {
+        let w = exps[i] / z;
+        for (o, x) in out.iter_mut().zip(v[i * dv..(i + 1) * dv].iter()) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Many-to-many prefix attention via the recurrent O(1)-state fold
+/// (§3.1's RNN cell applied token-by-token). Returns (n, dv) flat.
+pub fn prefix_recurrent(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: Option<&[f32]>,
+) -> Vec<f32> {
+    let d = q.len();
+    let n = k.len() / d;
+    let dv = v.len() / n;
+    let s = scores(q, k, mask);
+    let mut acc = Muw::identity(dv);
+    let mut out = Vec::with_capacity(n * dv);
+    for i in 0..n {
+        fold_token(&mut acc, s[i], &v[i * dv..(i + 1) * dv]);
+        out.extend(acc.output());
+    }
+    out
+}
+
+/// Many-to-many prefix attention the naive way: one full softmax per
+/// prefix — O(N^2) work, the "recompute from scratch" strategy the paper
+/// ascribes to Transformers handling streams.
+pub fn prefix_naive(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
+    let d = q.len();
+    let n = k.len() / d;
+    let dv = v.len() / n;
+    let mut out = Vec::with_capacity(n * dv);
+    for i in 0..n {
+        let kk = &k[..(i + 1) * d];
+        let vv = &v[..(i + 1) * dv];
+        let mm = mask.map(|m| &m[..(i + 1)]);
+        out.extend(many_to_one(q, kk, vv, mm));
+    }
+    out
+}
+
+/// Appendix A: block-by-block attention with O(b) memory. Processes the
+/// context in blocks of size `b`, carrying (a, c, m) between blocks, and
+/// emits the final many-to-one output. With b == 1 this degenerates to
+/// the token-by-token RNN; with b == n it is the conventional method.
+pub fn many_to_one_blocked(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: Option<&[f32]>,
+    b: usize,
+) -> Vec<f32> {
+    assert!(b >= 1, "block size must be >= 1");
+    let d = q.len();
+    let n = k.len() / d;
+    let dv = v.len() / n;
+    let s = scores(q, k, mask);
+
+    let mut a = vec![0.0f32; dv];
+    let mut c = 0.0f32;
+    let mut m = MASK_FILL;
+    let mut i = 0usize;
+    while i < n {
+        let hi = (i + b).min(n);
+        // m_{i+b} = max(m_i, s_{i+1..i+b})
+        let m_blk = s[i..hi].iter().cloned().fold(m, f32::max);
+        let carry = (m - m_blk).exp();
+        for x in a.iter_mut() {
+            *x *= carry;
+        }
+        c *= carry;
+        for j in i..hi {
+            let e = (s[j] - m_blk).exp();
+            c += e;
+            for (x, vv) in a.iter_mut().zip(v[j * dv..(j + 1) * dv].iter()) {
+                *x += e * vv;
+            }
+        }
+        m = m_blk;
+        i = hi;
+    }
+    a.iter().map(|x| x / c).collect()
+}
+
+/// Standard causal self-attention with explicit dims (n tokens, d model)
+/// — the Transformer baseline. q/k are (n, d) flat; returns (n, dv).
+pub fn causal_self_attention_nd(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let dv = v.len() / n;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Vec::with_capacity(n * dv);
+    for i in 0..n {
+        let qi = &q[i * d..(i + 1) * d];
+        let mut s: Vec<f32> = (0..=i)
+            .map(|j| {
+                qi.iter()
+                    .zip(k[j * d..(j + 1) * d].iter())
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+                    * scale
+            })
+            .collect();
+        let mx = s.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for x in s.iter_mut() {
+            *x = (*x - mx).exp();
+            z += *x;
+        }
+        let mut o = vec![0.0f32; dv];
+        for (j, w) in s.iter().enumerate() {
+            for (od, vd) in o.iter_mut().zip(v[j * dv..(j + 1) * dv].iter()) {
+                *od += w / z * vd;
+            }
+        }
+        out.extend(o);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn recurrent_prefix_matches_naive() {
+        prop::check("prefix_recurrent == prefix_naive", 64, |rng| {
+            let (n, d) = (1 + rng.below(48), 1 + rng.below(8));
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            prop::assert_close(
+                &prefix_recurrent(&q, &k, &v, None),
+                &prefix_naive(&q, &k, &v, None),
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn recurrent_prefix_matches_naive_with_mask() {
+        prop::check("masked prefix", 64, |rng| {
+            let (n, d) = (2 + rng.below(32), 4);
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let mask: Vec<f32> = (0..n)
+                .map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 })
+                .collect();
+            prop::assert_close(
+                &prefix_recurrent(&q, &k, &v, Some(&mask)),
+                &prefix_naive(&q, &k, &v, Some(&mask)),
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn blocked_matches_full_for_every_block_size() {
+        // Appendix A: any block size gives the same many-to-one output.
+        prop::check("block-by-block == full", 48, |rng| {
+            let (n, d) = (1 + rng.below(40), 4);
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let want = many_to_one(&q, &k, &v, None);
+            for b in [1usize, 2, 3, 5, 8, n.max(1)] {
+                let got = many_to_one_blocked(&q, &k, &v, None, b);
+                prop::assert_close(&got, &want, 1e-4)
+                    .map_err(|e| format!("b={b}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn last_prefix_output_equals_many_to_one() {
+        prop::check("prefix[-1] == many_to_one", 48, |rng| {
+            let (n, d) = (1 + rng.below(32), 6);
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let pre = prefix_recurrent(&q, &k, &v, None);
+            let one = many_to_one(&q, &k, &v, None);
+            prop::assert_close(&pre[(n - 1) * d..], &one, 1e-4)
+        });
+    }
+
+    #[test]
+    fn extreme_scores_stay_finite() {
+        let mut rng = Rng::new(99);
+        let (n, d) = (32, 4);
+        let q: Vec<f32> = (0..d).map(|_| rng.range(-20.0, 20.0) as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.range(-20.0, 20.0) as f32).collect();
+        let v = randv(&mut rng, n * d);
+        for x in prefix_recurrent(&q, &k, &v, None) {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn causal_self_attention_first_row_is_v0() {
+        let mut rng = Rng::new(4);
+        let (n, d) = (5, 3);
+        let q = randv(&mut rng, n * d);
+        let k = randv(&mut rng, n * d);
+        let v = randv(&mut rng, n * d);
+        let out = causal_self_attention_nd(&q, &k, &v, n, d);
+        prop::assert_close(&out[..d], &v[..d], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn softmax_weights_uniform_when_scores_equal() {
+        let q = vec![0.0, 0.0];
+        let k = vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.5]; // scores all 0 with q=0
+        let v = vec![1.0, 0.0, 3.0, 0.0, 5.0, 0.0];
+        let out = many_to_one(&q, &k, &v, None);
+        assert!((out[0] - 3.0).abs() < 1e-5);
+    }
+}

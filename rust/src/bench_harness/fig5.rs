@@ -1,0 +1,121 @@
+//! Figure 5: memory usage (left) and cumulative time (right) of Aaren vs
+//! Transformer+KV-cache when processing a token stream.
+//!
+//! Memory is measured from the live session state literals (exact bytes
+//! held per session); time is wall-clock over the compiled HLO steps. The
+//! paper's claim is about *shape*: constant vs linear memory, linear vs
+//! quadratic cumulative time — both reproduce on CPU PJRT.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::serve::session::{Session, StreamModel};
+use crate::runtime::exec::Engine;
+use crate::util::bench::print_table;
+use crate::util::rng::Rng;
+
+pub struct Fig5Point {
+    pub tokens: usize,
+    pub aaren_bytes: usize,
+    pub tf_bytes: usize,
+    pub aaren_cum_ms: f64,
+    pub tf_cum_ms: f64,
+}
+
+/// Stream `n_tokens` through both session kinds, sampling at `checkpoints`.
+pub fn measure(
+    engine: &mut Engine,
+    n_tokens: usize,
+    checkpoints: &[usize],
+) -> Result<Vec<Fig5Point>> {
+    let aaren_model = StreamModel::load_aaren(engine)?;
+    let tf_model = StreamModel::load_tf(engine)?;
+    let channels = aaren_model.channels;
+    let mut rng = Rng::new(5);
+    let tokens: Vec<Vec<f32>> = (0..n_tokens)
+        .map(|_| (0..channels).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+
+    let mut aaren = Session::new_aaren(&aaren_model)?;
+    let mut tf = Session::new_tf(&tf_model)?;
+
+    let mut points = Vec::new();
+    let mut aaren_cum = 0.0f64;
+    let mut tf_cum = 0.0f64;
+    for (i, tok) in tokens.iter().enumerate() {
+        let t0 = Instant::now();
+        aaren.step(&aaren_model, tok)?;
+        aaren_cum += t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = Instant::now();
+        tf.step(&tf_model, tok)?;
+        tf_cum += t0.elapsed().as_secs_f64() * 1e3;
+
+        if checkpoints.contains(&(i + 1)) {
+            points.push(Fig5Point {
+                tokens: i + 1,
+                aaren_bytes: aaren.state_bytes(),
+                tf_bytes: tf.state_bytes(),
+                aaren_cum_ms: aaren_cum,
+                tf_cum_ms: tf_cum,
+            });
+        }
+    }
+    Ok(points)
+}
+
+pub fn run_fig5(artifacts: &std::path::Path, n_tokens: usize) -> Result<Vec<Fig5Point>> {
+    let mut engine = Engine::new(artifacts)?;
+    let checkpoints: Vec<usize> = [1, 2, 4, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512]
+        .into_iter()
+        .filter(|&c| c <= n_tokens)
+        .collect();
+    let points = measure(&mut engine, n_tokens, &checkpoints)?;
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.tokens.to_string(),
+                p.aaren_bytes.to_string(),
+                p.tf_bytes.to_string(),
+                format!("{:.2}", p.aaren_cum_ms),
+                format!("{:.2}", p.tf_cum_ms),
+            ]
+        })
+        .collect();
+    print_table(
+        "Figure 5: streaming memory (bytes of session state) and cumulative time (ms)",
+        &["tokens", "Aaren bytes", "TF(KV) bytes", "Aaren cum ms", "TF(KV) cum ms"],
+        &rows,
+    );
+    // shape summary
+    if points.len() >= 3 {
+        let first = &points[0];
+        let last = &points[points.len() - 1];
+        let ratio_tokens = last.tokens as f64 / first.tokens as f64;
+        println!(
+            "\nshape check over {}x tokens: Aaren memory x{:.2} (paper: constant), \
+             TF memory x{:.2} (paper: linear)",
+            ratio_tokens,
+            last.aaren_bytes as f64 / first.aaren_bytes as f64,
+            last.tf_bytes as f64 / first.tf_bytes as f64,
+        );
+        // cumulative-time curvature: fit t_cum ~ n^p via log-log endpoints
+        let mid = &points[points.len() / 2];
+        let slope = |a: (f64, f64), b: (f64, f64)| (b.1.ln() - a.1.ln()) / (b.0.ln() - a.0.ln());
+        let aaren_p = slope(
+            (mid.tokens as f64, mid.aaren_cum_ms),
+            (last.tokens as f64, last.aaren_cum_ms),
+        );
+        let tf_p = slope(
+            (mid.tokens as f64, mid.tf_cum_ms),
+            (last.tokens as f64, last.tf_cum_ms),
+        );
+        println!(
+            "cumulative-time exponent (log-log slope, upper half): Aaren {aaren_p:.2} \
+             (paper: ~1 linear), TF {tf_p:.2} (paper: ~2 quadratic)"
+        );
+    }
+    Ok(points)
+}

@@ -1,0 +1,10 @@
+//! Paper-table regeneration harnesses. Each `run_*` sweeps the matching
+//! experiment driver over datasets × {Transformer, Aaren} × seeds and
+//! prints a table in the paper's layout (mean ± std). Shared by the
+//! `aaren bench …` CLI and the `cargo bench` targets.
+
+pub mod fig5;
+pub mod tables;
+
+pub use fig5::run_fig5;
+pub use tables::{run_params, run_table1, run_table2, run_table3, run_table4, BenchOpts};

@@ -1,0 +1,267 @@
+//! Tables 1–4 (+5) of the paper, regenerated on the synthetic substrates.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{self, Kind, BOTH};
+use crate::data::{events, rl, tsc, tsf};
+use crate::runtime::exec::Engine;
+use crate::util::bench::{fmt_pm, mean_std, print_table};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub seeds: u64,
+    pub train_steps: usize,
+    /// restrict to the first k datasets (quick smoke runs); 0 = all
+    pub limit: usize,
+    pub artifacts: std::path::PathBuf,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            seeds: 2,
+            train_steps: 150,
+            limit: 0,
+            artifacts: std::path::PathBuf::from("artifacts"),
+        }
+    }
+}
+
+fn limited<T: Copy>(all: &[T], limit: usize) -> Vec<T> {
+    if limit == 0 || limit >= all.len() {
+        all.to_vec()
+    } else {
+        all[..limit].to_vec()
+    }
+}
+
+/// Table 1: RL normalised scores over 4 envs × 3 tiers.
+pub fn run_table1(opts: &BenchOpts) -> Result<()> {
+    let mut engine = Engine::new(&opts.artifacts)?;
+    let envs = limited(&rl::ALL_ENVS, opts.limit);
+    let mut rows = Vec::new();
+    for env in &envs {
+        for tier in rl::ALL_TIERS {
+            let mut cells = vec![format!("{} {}", env.name(), tier.name())];
+            for kind in BOTH {
+                let mut scores = Vec::new();
+                for seed in 0..opts.seeds {
+                    let r = experiments::run_rl(
+                        &mut engine,
+                        kind,
+                        *env,
+                        tier,
+                        opts.train_steps,
+                        40,
+                        3,
+                        1000 + seed,
+                    )?;
+                    scores.push(r.normalised_score);
+                }
+                let (m, s) = mean_std(&scores);
+                cells.push(fmt_pm(m, s, 2));
+            }
+            println!(
+                "  [table1] {} {} done",
+                env.name(),
+                tier.name()
+            );
+            rows.push(cells);
+        }
+    }
+    print_table(
+        "Table 1: Reinforcement Learning (D4RL-style normalised score, higher is better)",
+        &["Dataset", "Transformer", "Aaren"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 2: event forecasting NLL / RMSE / Acc over 8 datasets.
+pub fn run_table2(opts: &BenchOpts) -> Result<()> {
+    let mut engine = Engine::new(&opts.artifacts)?;
+    let datasets = limited(&events::ALL, opts.limit);
+    let mut rows = Vec::new();
+    for ds in &datasets {
+        for kind in BOTH {
+            let mut nll = Vec::new();
+            let mut rmse = Vec::new();
+            let mut acc = Vec::new();
+            for seed in 0..opts.seeds {
+                let r = experiments::run_ef(&mut engine, kind, *ds, opts.train_steps, 2000 + seed)?;
+                nll.push(r.nll);
+                rmse.push(r.rmse);
+                if let Some(a) = r.acc {
+                    acc.push(a);
+                }
+            }
+            let (nm, ns) = mean_std(&nll);
+            let (rm, rs) = mean_std(&rmse);
+            let acc_cell = if acc.is_empty() {
+                "—".to_string()
+            } else {
+                let (am, asd) = mean_std(&acc);
+                fmt_pm(am, asd, 2)
+            };
+            rows.push(vec![
+                ds.name().to_string(),
+                kind.display().to_string(),
+                fmt_pm(nm, ns, 2),
+                fmt_pm(rm, rs, 2),
+                acc_cell,
+            ]);
+        }
+        println!("  [table2] {} done", ds.name());
+    }
+    print_table(
+        "Table 2: Event Forecasting (NLL ↓ / RMSE ↓ / Acc ↑)",
+        &["Dataset", "Model", "NLL", "RMSE", "Acc %"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Tables 3+5: TSF MSE/MAE over 8 datasets × horizons.
+pub fn run_table3(opts: &BenchOpts, horizons: &[usize]) -> Result<()> {
+    let mut engine = Engine::new(&opts.artifacts)?;
+    let datasets = limited(&tsf::ALL, opts.limit);
+    let mut rows = Vec::new();
+    for ds in &datasets {
+        for &horizon in horizons {
+            for kind in BOTH {
+                let mut mse = Vec::new();
+                let mut mae = Vec::new();
+                for seed in 0..opts.seeds {
+                    let r = experiments::run_tsf(
+                        &mut engine,
+                        kind,
+                        *ds,
+                        horizon,
+                        opts.train_steps,
+                        3000 + seed,
+                    )?;
+                    mse.push(r.mse);
+                    mae.push(r.mae);
+                }
+                let (mm, ms) = mean_std(&mse);
+                let (am, asd) = mean_std(&mae);
+                rows.push(vec![
+                    ds.name().to_string(),
+                    horizon.to_string(),
+                    kind.display().to_string(),
+                    fmt_pm(mm, ms, 2),
+                    fmt_pm(am, asd, 2),
+                ]);
+            }
+            println!("  [table3] {} T={horizon} done", ds.name());
+        }
+    }
+    print_table(
+        "Tables 3/5: Time Series Forecasting (MSE ↓ / MAE ↓)",
+        &["Dataset", "T", "Model", "MSE", "MAE"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 4: TSC accuracy over 10 datasets.
+pub fn run_table4(opts: &BenchOpts) -> Result<()> {
+    let mut engine = Engine::new(&opts.artifacts)?;
+    let datasets = limited(&tsc::ALL, opts.limit);
+    let mut rows = Vec::new();
+    for ds in &datasets {
+        let mut cells = vec![ds.name().to_string()];
+        for kind in BOTH {
+            let mut accs = Vec::new();
+            for seed in 0..opts.seeds {
+                let r =
+                    experiments::run_tsc(&mut engine, kind, *ds, opts.train_steps, 4000 + seed)?;
+                accs.push(r.acc);
+            }
+            let (m, s) = mean_std(&accs);
+            cells.push(fmt_pm(m, s, 2));
+        }
+        println!("  [table4] {} done", ds.name());
+        rows.push(cells);
+    }
+    print_table(
+        "Table 4: Time Series Classification (Acc ↑, %)",
+        &["Dataset", "Transformer", "Aaren"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// §4.5 parameter counts: paper-scale (from aot paramcount.json) plus the
+/// live artifact manifests.
+pub fn run_params(artifacts: &Path) -> Result<()> {
+    let pc_path = artifacts.join("paramcount.json");
+    let text = std::fs::read_to_string(&pc_path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let tf = j.usize_field("tf")?;
+    let aaren = j.usize_field("aaren")?;
+    let delta = aaren as f64 - tf as f64;
+    let pct = 100.0 * delta / tf as f64;
+    let mut rows = vec![
+        vec![
+            "paper-scale stream model".to_string(),
+            format!("{tf}"),
+            format!("{aaren}"),
+            format!("+{delta:.0} ({pct:.3}%)"),
+        ],
+        vec![
+            "paper (reported)".to_string(),
+            "3,152,384".to_string(),
+            "3,152,896".to_string(),
+            "+512 (~0.016%)".to_string(),
+        ],
+    ];
+    // also report the live small artifacts
+    let mut engine = Engine::new(artifacts)?;
+    for (name_tf, name_aa, label) in [
+        ("stream_tf_train", "stream_aaren_train", "stream (live artifacts)"),
+        ("tsc_tf_train", "tsc_aaren_train", "tsc (live artifacts)"),
+    ] {
+        let mt = engine.load(name_tf)?.manifest.param_elements();
+        let ma = engine.load(name_aa)?.manifest.param_elements();
+        rows.push(vec![
+            label.to_string(),
+            mt.to_string(),
+            ma.to_string(),
+            format!("+{} ({:.3}%)", ma - mt, 100.0 * (ma - mt) as f64 / mt as f64),
+        ]);
+    }
+    print_table(
+        "§4.5 Parameter counts (Aaren = Transformer + one learned query token per block)",
+        &["Model pair", "Transformer", "Aaren", "delta"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Run one quick cell of each table (CI smoke — exercises every artifact
+/// family end to end).
+pub fn run_smoke(opts: &BenchOpts) -> Result<()> {
+    let mut engine = Engine::new(&opts.artifacts)?;
+    let r = experiments::run_tsf(&mut engine, Kind::Aaren, tsf::TsfDataset::Etth1, 96, 30, 1)?;
+    println!("smoke tsf: mse {:.3} mae {:.3}", r.mse, r.mae);
+    let r = experiments::run_tsc(&mut engine, Kind::Tf, tsc::TscDataset::ArabicDigits, 30, 1)?;
+    println!("smoke tsc: acc {:.1}%", r.acc);
+    let r = experiments::run_ef(&mut engine, Kind::Aaren, events::EfDataset::Sin, 30, 1)?;
+    println!("smoke ef: nll {:.3} rmse {:.3}", r.nll, r.rmse);
+    let r = experiments::run_rl(
+        &mut engine,
+        Kind::Tf,
+        rl::EnvId::Hopper,
+        rl::Tier::Medium,
+        30,
+        10,
+        1,
+        1,
+    )?;
+    println!("smoke rl: norm score {:.1}", r.normalised_score);
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Evaluation coordinator: runs `eval`/`fwd` artifacts with trained
+//! parameters and collects their auxiliary outputs (metric sums or
+//! predictions). Shares the ParamStore layout with the trainer via the
+//! common params_key.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::exec::{literal_to_f32, HostTensor, Module};
+use crate::runtime::manifest::Role;
+use crate::runtime::params::ParamStore;
+
+pub struct Evaluator {
+    pub module: Rc<Module>,
+    pub store: ParamStore,
+}
+
+impl Evaluator {
+    /// Evaluate with freshly-initialised params (baseline sanity runs).
+    pub fn new(module: Rc<Module>) -> Result<Evaluator> {
+        let store = ParamStore::load(&module.manifest)?;
+        Ok(Evaluator { module, store })
+    }
+
+    /// Evaluate with trained parameters from a Trainer's store. The two
+    /// modules must share a params_key (same model) — asserted here.
+    pub fn with_trained(
+        module: Rc<Module>,
+        trained_key: &str,
+        trained: &ParamStore,
+    ) -> Result<Evaluator> {
+        if module.manifest.params_key != trained_key {
+            bail!(
+                "params_key mismatch: eval {} vs trained {}",
+                module.manifest.params_key,
+                trained_key
+            );
+        }
+        let mut store = ParamStore::load(&module.manifest)?;
+        store.copy_params_from(trained);
+        Ok(Evaluator { module, store })
+    }
+
+    /// Run once; returns every aux output flattened to f32 vectors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let manifest = &self.module.manifest;
+        let input_idx = manifest.input_indices();
+        if inputs.len() != input_idx.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                manifest.name,
+                input_idx.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(manifest.args.len());
+        let mut pi = 0usize;
+        let mut ii = 0usize;
+        for arg in &manifest.args {
+            let lit = match arg.role {
+                Role::Param => {
+                    let t = HostTensor::F32(arg.shape.clone(), self.store.params[pi].clone());
+                    pi += 1;
+                    t.to_literal()?
+                }
+                Role::Input => {
+                    let t = &inputs[ii];
+                    ii += 1;
+                    if t.elements() != arg.elements() || t.dtype() != arg.dtype {
+                        bail!("{}: input {} mismatch", manifest.name, arg.name);
+                    }
+                    t.to_literal()?
+                }
+                other => bail!("{}: unexpected arg role {other:?}", manifest.name),
+            };
+            literals.push(lit);
+        }
+        let outputs = self.module.execute(&literals)?;
+        let mut aux = Vec::new();
+        for (spec, lit) in manifest.outputs.iter().zip(outputs.iter()) {
+            if spec.role == Role::Aux {
+                aux.push(literal_to_f32(lit)?);
+            }
+        }
+        Ok(aux)
+    }
+
+    /// Run and return each aux output's first element (the common
+    /// "scalar metric sums" case).
+    pub fn run_scalars(&self, inputs: &[HostTensor]) -> Result<Vec<f32>> {
+        Ok(self.run(inputs)?.into_iter().map(|v| v[0]).collect())
+    }
+}

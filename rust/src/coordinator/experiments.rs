@@ -1,0 +1,350 @@
+//! Per-domain experiment drivers: each function trains one model variant
+//! on one synthetic dataset and returns the paper's metrics for that
+//! table cell. The bench harnesses (rust/benches/, `aaren bench …`) sweep
+//! these over datasets × models × seeds to regenerate Tables 1–5.
+
+use anyhow::Result;
+
+use crate::coordinator::{Evaluator, Trainer};
+use crate::data::{events, rl, tsc, tsf};
+use crate::metrics::{self, SumMetric};
+use crate::runtime::exec::{Engine, HostTensor};
+use crate::util::rng::Rng;
+
+/// Model variant under comparison ("aaren" | "tf"), used in artifact names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Aaren,
+    Tf,
+}
+
+impl Kind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Kind::Aaren => "aaren",
+            Kind::Tf => "tf",
+        }
+    }
+
+    pub fn display(self) -> &'static str {
+        match self {
+            Kind::Aaren => "Aaren",
+            Kind::Tf => "Transformer",
+        }
+    }
+}
+
+pub const BOTH: [Kind; 2] = [Kind::Aaren, Kind::Tf];
+
+fn f32s(shape: &[usize], data: Vec<f32>) -> HostTensor {
+    HostTensor::F32(shape.to_vec(), data)
+}
+
+fn i32s(shape: &[usize], data: Vec<i32>) -> HostTensor {
+    HostTensor::I32(shape.to_vec(), data)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 / Table 5: time-series forecasting
+
+pub struct TsfResult {
+    pub mse: f64,
+    pub mae: f64,
+    pub final_train_loss: f32,
+}
+
+pub fn run_tsf(
+    engine: &mut Engine,
+    kind: Kind,
+    ds: tsf::TsfDataset,
+    horizon: usize,
+    train_steps: usize,
+    seed: u64,
+) -> Result<TsfResult> {
+    let train_mod = engine.load(&format!("tsf_{}_train_T{horizon}", kind.tag()))?;
+    let eval_mod = engine.load(&format!("tsf_{}_eval_T{horizon}", kind.tag()))?;
+    let b = train_mod.manifest.meta_usize("batch", 16);
+    let c = tsf::CHANNELS;
+
+    let series = tsf::generate(ds, 6000, seed);
+    let sampler = tsf::WindowSampler::new(series, horizon);
+    let mut rng = Rng::new(seed ^ 0x75F0);
+
+    let mut trainer = Trainer::new(train_mod)?;
+    for _ in 0..train_steps {
+        let (xs, ys) = sampler.train_batch(&mut rng, b);
+        trainer.step(&[
+            f32s(&[b, tsf::LOOKBACK, c], xs),
+            f32s(&[b, horizon, c], ys),
+        ])?;
+    }
+
+    let trained = trainer.sync_store()?;
+    let evaluator = Evaluator::with_trained(
+        eval_mod,
+        &trainer.module.manifest.params_key,
+        &trained,
+    )?;
+    let mut mse = SumMetric::default();
+    let mut mae = SumMetric::default();
+    // 4 test batches of b windows each
+    let windows = sampler.test_windows(4 * b);
+    for chunk in windows.chunks(b) {
+        if chunk.len() < b {
+            break;
+        }
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for w in chunk {
+            xs.extend_from_slice(&w.x);
+            ys.extend_from_slice(&w.y);
+        }
+        let out = evaluator.run_scalars(&[
+            f32s(&[b, tsf::LOOKBACK, c], xs),
+            f32s(&[b, horizon, c], ys),
+        ])?;
+        let n = (b * horizon * c) as f64;
+        mse.add(out[0] as f64, n);
+        mae.add(out[1] as f64, n);
+    }
+    Ok(TsfResult {
+        mse: mse.mean(),
+        mae: mae.mean(),
+        final_train_loss: trainer.recent_loss(20),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: time-series classification
+
+pub struct TscResult {
+    pub acc: f64,
+    pub final_train_loss: f32,
+}
+
+pub fn run_tsc(
+    engine: &mut Engine,
+    kind: Kind,
+    ds: tsc::TscDataset,
+    train_steps: usize,
+    seed: u64,
+) -> Result<TscResult> {
+    let train_mod = engine.load(&format!("tsc_{}_train", kind.tag()))?;
+    let eval_mod = engine.load(&format!("tsc_{}_eval", kind.tag()))?;
+    let b = train_mod.manifest.meta_usize("batch", 16);
+    let (n, c) = (tsc::SEQ_LEN, tsc::CHANNELS);
+
+    let gen = tsc::TscGenerator::new(ds, seed);
+    let mut rng = Rng::new(seed ^ 0x75C0);
+
+    let mut trainer = Trainer::new(train_mod)?;
+    for _ in 0..train_steps {
+        let (xs, labels) = gen.batch(&mut rng, b);
+        trainer.step(&[f32s(&[b, n, c], xs), i32s(&[b], labels)])?;
+    }
+
+    let trained = trainer.sync_store()?;
+    let evaluator = Evaluator::with_trained(
+        eval_mod,
+        &trainer.module.manifest.params_key,
+        &trained,
+    )?;
+    let mut correct = 0.0f64;
+    let mut total = 0.0f64;
+    let mut test_rng = Rng::new(seed ^ 0xEEE);
+    for _ in 0..8 {
+        let (xs, labels) = gen.batch(&mut test_rng, b);
+        let out = evaluator.run_scalars(&[f32s(&[b, n, c], xs), i32s(&[b], labels)])?;
+        correct += out[0] as f64;
+        total += b as f64;
+    }
+    Ok(TscResult {
+        acc: 100.0 * correct / total,
+        final_train_loss: trainer.recent_loss(20),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: event forecasting
+
+pub struct EfResult {
+    pub nll: f64,
+    pub rmse: f64,
+    /// mark accuracy in percent; None for unmarked datasets (Sin/Uber/Taxi)
+    pub acc: Option<f64>,
+    pub final_train_loss: f32,
+}
+
+pub fn run_ef(
+    engine: &mut Engine,
+    kind: Kind,
+    ds: events::EfDataset,
+    train_steps: usize,
+    seed: u64,
+) -> Result<EfResult> {
+    let train_mod = engine.load(&format!("ef_{}_train", kind.tag()))?;
+    let eval_mod = engine.load(&format!("ef_{}_eval", kind.tag()))?;
+    let b = train_mod.manifest.meta_usize("batch", 16);
+    let n = events::SEQ_LEN;
+
+    let mut rng = Rng::new(seed ^ 0xEF10);
+    let mut trainer = Trainer::new(train_mod)?;
+    for _ in 0..train_steps {
+        let (times, marks) = events::batch(ds, &mut rng, b);
+        trainer.step(&[f32s(&[b, n], times), i32s(&[b, n], marks)])?;
+    }
+
+    let trained = trainer.sync_store()?;
+    let evaluator = Evaluator::with_trained(
+        eval_mod,
+        &trainer.module.manifest.params_key,
+        &trained,
+    )?;
+    let mut nll = SumMetric::default();
+    let mut se = SumMetric::default();
+    let mut correct = SumMetric::default();
+    let mut test_rng = Rng::new(seed ^ 0xFFF1);
+    for _ in 0..8 {
+        let (times, marks) = events::batch(ds, &mut test_rng, b);
+        let out = evaluator.run_scalars(&[f32s(&[b, n], times), i32s(&[b, n], marks)])?;
+        // outputs: nll_sum, sq_err_sum, correct_marks, n_events
+        let cnt = out[3] as f64;
+        nll.add(out[0] as f64, cnt);
+        se.add(out[1] as f64, cnt);
+        correct.add(out[2] as f64, cnt);
+    }
+    Ok(EfResult {
+        nll: nll.mean(),
+        rmse: se.rmse(),
+        acc: if ds.has_marks() { Some(100.0 * correct.mean()) } else { None },
+        final_train_loss: trainer.recent_loss(20),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: offline RL (Decision Transformer protocol)
+
+pub struct RlResult {
+    pub normalised_score: f64,
+    pub raw_return: f64,
+    pub final_train_loss: f32,
+}
+
+pub fn run_rl(
+    engine: &mut Engine,
+    kind: Kind,
+    env_id: rl::EnvId,
+    tier: rl::Tier,
+    train_steps: usize,
+    episodes: usize,
+    eval_rollouts: usize,
+    seed: u64,
+) -> Result<RlResult> {
+    let train_mod = engine.load(&format!("rl_{}_train", kind.tag()))?;
+    let act_mod = engine.load(&format!("rl_{}_act", kind.tag()))?;
+    let b = train_mod.manifest.meta_usize("batch", 16);
+    let (t, s, a) = (rl::CTX, rl::STATE_DIM, rl::ACT_DIM);
+
+    let dataset = rl::generate_dataset(env_id, tier, episodes, seed);
+    let mut rng = Rng::new(seed ^ 0x4170);
+
+    let mut trainer = Trainer::new(train_mod)?;
+    for _ in 0..train_steps {
+        let batch = dataset.sample_batch(&mut rng, b);
+        trainer.step(&[
+            f32s(&[b, t, 1], batch.rtg),
+            f32s(&[b, t, s], batch.states),
+            f32s(&[b, t, a], batch.actions),
+            i32s(&[b, t], batch.timesteps),
+            f32s(&[b, t], batch.mask),
+        ])?;
+    }
+
+    // Online evaluation: condition on an expert-level return-to-go and
+    // roll out in the live environment (Decision Transformer protocol).
+    let trained = trainer.sync_store()?;
+    let actor = Evaluator::with_trained(
+        act_mod,
+        &trainer.module.manifest.params_key,
+        &trained,
+    )?;
+    let mut returns = Vec::with_capacity(eval_rollouts);
+    for ep in 0..eval_rollouts {
+        let ret = rollout_with_model(&actor, env_id, &dataset, seed ^ (0xE0 + ep as u64))?;
+        returns.push(ret);
+    }
+    let mean_return = returns.iter().sum::<f64>() / returns.len().max(1) as f64;
+    Ok(RlResult {
+        normalised_score: metrics::d4rl_normalised(
+            mean_return,
+            dataset.random_return,
+            dataset.expert_return,
+        ),
+        raw_return: mean_return,
+        final_train_loss: trainer.recent_loss(20),
+    })
+}
+
+/// One online episode driven by the trained model (context window of the
+/// last CTX steps, right-aligned with left padding, rtg-conditioned).
+fn rollout_with_model(
+    actor: &Evaluator,
+    env_id: rl::EnvId,
+    dataset: &rl::OfflineDataset,
+    seed: u64,
+) -> Result<f64> {
+    let (t, sdim, adim) = (rl::CTX, rl::STATE_DIM, rl::ACT_DIM);
+    let mut env = rl::Env::new(env_id, seed);
+    let mut state = env.reset(seed ^ 0x5EED);
+    // condition on an expert-level return (the DT evaluation convention)
+    let mut rtg = dataset.expert_return;
+
+    let mut hist_states: Vec<Vec<f32>> = Vec::new();
+    let mut hist_actions: Vec<Vec<f32>> = Vec::new();
+    let mut hist_rtg: Vec<f64> = Vec::new();
+    let mut total = 0.0f64;
+
+    for step in 0..rl::EPISODE_LEN {
+        hist_states.push(state.clone());
+        hist_actions.push(vec![0.0; adim]); // current action unknown (causal)
+        hist_rtg.push(rtg);
+
+        // right-aligned context window
+        let n = hist_states.len().min(t);
+        let start = hist_states.len() - n;
+        let pad = t - n;
+        let mut rtg_in = vec![0.0f32; t];
+        let mut states_in = vec![0.0f32; t * sdim];
+        let mut actions_in = vec![0.0f32; t * adim];
+        let mut ts_in = vec![0i32; t];
+        let mut mask_in = vec![0.0f32; t];
+        for i in 0..n {
+            let src = start + i;
+            let dst = pad + i;
+            rtg_in[dst] = (hist_rtg[src] / dataset.rtg_scale) as f32;
+            states_in[dst * sdim..(dst + 1) * sdim].copy_from_slice(&hist_states[src]);
+            actions_in[dst * adim..(dst + 1) * adim].copy_from_slice(&hist_actions[src]);
+            ts_in[dst] = src as i32;
+            mask_in[dst] = 1.0;
+        }
+        let out = actor.run(&[
+            f32s(&[1, t, 1], rtg_in),
+            f32s(&[1, t, sdim], states_in),
+            f32s(&[1, t, adim], actions_in),
+            i32s(&[1, t], ts_in),
+            f32s(&[1, t], mask_in),
+        ])?;
+        let action = &out[0]; // (1, ACT_DIM)
+        *hist_actions.last_mut().unwrap() = action.clone();
+
+        let (next, reward, done) = env.step(action);
+        total += reward;
+        rtg -= reward;
+        state = next;
+        let _ = step;
+        if done {
+            break;
+        }
+    }
+    Ok(total)
+}

@@ -1,0 +1,11 @@
+//! L3 coordination: the training loop (`trainer`), evaluation loop
+//! (`evaluator`) and the per-domain experiment drivers (`experiments`)
+//! that tie data substrates + AOT artifacts together into the paper's
+//! table rows. The streaming-session counterpart lives in `crate::serve`.
+
+pub mod evaluator;
+pub mod experiments;
+pub mod trainer;
+
+pub use evaluator::Evaluator;
+pub use trainer::Trainer;

@@ -1,0 +1,201 @@
+//! Training coordinator: owns the (params, adam-m, adam-v, step) buffers
+//! and drives an AOT `train` artifact — forward+backward+Adam are a single
+//! compiled HLO module; rust only marshals buffers and feeds outputs back
+//! into the next step's inputs (DESIGN.md §7).
+//!
+//! Hot-path note (EXPERIMENTS.md §Perf): the live training state is kept
+//! as xla `Literal`s and each step's *output* literals become the next
+//! step's *input* literals directly. The per-step host work is just the
+//! batch-input upload — params/moments never round-trip through Vec<f32>
+//! except at checkpoint/eval boundaries (`sync_store`).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::exec::{literal_scalar_f32, literal_to_f32, HostTensor, Module};
+use crate::runtime::manifest::Role;
+use crate::runtime::params::ParamStore;
+
+pub struct Trainer {
+    pub module: Rc<Module>,
+    /// live training state, as literals in manifest order
+    params_lit: Vec<xla::Literal>,
+    opt_m_lit: Vec<xla::Literal>,
+    opt_v_lit: Vec<xla::Literal>,
+    step_lit: xla::Literal,
+    n_steps: f32,
+    /// loss history, one entry per step
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    pub fn new(module: Rc<Module>) -> Result<Trainer> {
+        let store = ParamStore::load(&module.manifest)?;
+        Self::with_store(module, store)
+    }
+
+    /// With explicit (possibly pre-trained) parameters.
+    pub fn with_store(module: Rc<Module>, store: ParamStore) -> Result<Trainer> {
+        if module.manifest.kind != "train" {
+            bail!("{} is not a train artifact", module.manifest.name);
+        }
+        let mut params_lit = Vec::new();
+        let mut opt_m_lit = Vec::new();
+        let mut opt_v_lit = Vec::new();
+        let mut pi = 0usize;
+        for arg in &module.manifest.args {
+            match arg.role {
+                Role::Param => {
+                    params_lit.push(
+                        HostTensor::F32(arg.shape.clone(), store.params[pi].clone())
+                            .to_literal()?,
+                    );
+                    opt_m_lit.push(
+                        HostTensor::F32(arg.shape.clone(), store.opt_m[pi].clone())
+                            .to_literal()?,
+                    );
+                    opt_v_lit.push(
+                        HostTensor::F32(arg.shape.clone(), store.opt_v[pi].clone())
+                            .to_literal()?,
+                    );
+                    pi += 1;
+                }
+                _ => {}
+            }
+        }
+        let step_lit = HostTensor::scalar_f32(store.step).to_literal()?;
+        Ok(Trainer {
+            module,
+            params_lit,
+            opt_m_lit,
+            opt_v_lit,
+            step_lit,
+            n_steps: store.step,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Run one optimisation step. `inputs` must match the manifest's
+    /// input-role arguments in order. Returns the loss.
+    pub fn step(&mut self, inputs: &[HostTensor]) -> Result<f32> {
+        let manifest = &self.module.manifest;
+        let input_idx = manifest.input_indices();
+        if inputs.len() != input_idx.len() {
+            bail!(
+                "{}: expected {} batch inputs, got {}",
+                manifest.name,
+                input_idx.len(),
+                inputs.len()
+            );
+        }
+        // upload the batch, borrow everything else
+        let mut input_lits = Vec::with_capacity(inputs.len());
+        for (t, (_, arg)) in inputs.iter().zip(manifest.args_with_role(Role::Input)) {
+            if t.elements() != arg.elements() || t.dtype() != arg.dtype {
+                bail!(
+                    "{}: input {} shape/dtype mismatch (got {} elems {:?}, want {} {:?})",
+                    manifest.name,
+                    arg.name,
+                    t.elements(),
+                    t.dtype(),
+                    arg.elements(),
+                    arg.dtype
+                );
+            }
+            input_lits.push(t.to_literal()?);
+        }
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(manifest.args.len());
+        let (mut pi, mut mi, mut vi, mut ii) = (0usize, 0usize, 0usize, 0usize);
+        for arg in &manifest.args {
+            match arg.role {
+                Role::Param => {
+                    args.push(&self.params_lit[pi]);
+                    pi += 1;
+                }
+                Role::OptM => {
+                    args.push(&self.opt_m_lit[mi]);
+                    mi += 1;
+                }
+                Role::OptV => {
+                    args.push(&self.opt_v_lit[vi]);
+                    vi += 1;
+                }
+                Role::OptStep => args.push(&self.step_lit),
+                Role::Input => {
+                    args.push(&input_lits[ii]);
+                    ii += 1;
+                }
+                Role::State | Role::Aux => bail!("unexpected role in train args"),
+            }
+        }
+
+        let outputs = self.module.execute_refs(&args)?;
+        if outputs.len() != manifest.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                manifest.name,
+                outputs.len(),
+                manifest.outputs.len()
+            );
+        }
+        // feed output literals straight back into the live state
+        let (mut pi, mut mi, mut vi) = (0usize, 0usize, 0usize);
+        let mut loss = f32::NAN;
+        for (spec, lit) in manifest.outputs.iter().zip(outputs.into_iter()) {
+            match spec.role {
+                Role::Param => {
+                    self.params_lit[pi] = lit;
+                    pi += 1;
+                }
+                Role::OptM => {
+                    self.opt_m_lit[mi] = lit;
+                    mi += 1;
+                }
+                Role::OptV => {
+                    self.opt_v_lit[vi] = lit;
+                    vi += 1;
+                }
+                Role::OptStep => {
+                    self.n_steps = literal_scalar_f32(&lit)?;
+                    self.step_lit = lit;
+                }
+                Role::Aux => loss = literal_scalar_f32(&lit)?,
+                _ => {}
+            }
+        }
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss at step {}", manifest.name, self.n_steps);
+        }
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Materialise the live literals into a ParamStore (checkpoint / eval
+    /// handoff). Cost: one host copy per tensor; called once per run, not
+    /// per step.
+    pub fn sync_store(&self) -> Result<ParamStore> {
+        let mut params = Vec::with_capacity(self.params_lit.len());
+        let mut opt_m = Vec::with_capacity(self.opt_m_lit.len());
+        let mut opt_v = Vec::with_capacity(self.opt_v_lit.len());
+        for lit in &self.params_lit {
+            params.push(literal_to_f32(lit)?);
+        }
+        for lit in &self.opt_m_lit {
+            opt_m.push(literal_to_f32(lit)?);
+        }
+        for lit in &self.opt_v_lit {
+            opt_v.push(literal_to_f32(lit)?);
+        }
+        Ok(ParamStore { params, opt_m, opt_v, step: self.n_steps })
+    }
+
+    /// Mean loss over the trailing `n` steps (training-curve reporting).
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic dataset substrates for all 38 paper datasets (DESIGN.md §3
+//! documents each substitution):
+//!
+//! * `tsf`    — 8 forecasting series (Weather/Exchange/Traffic/ECL/ETT*)
+//! * `tsc`    — 10 UEA-style classification datasets
+//! * `events` — 8 marked temporal point processes (Hawkes simulator)
+//! * `rl`     — 4 locomotion-style environments × 3 D4RL-style dataset
+//!              tiers (Medium / Medium-Replay / Medium-Expert)
+//!
+//! Every generator is seeded and deterministic; dimensions mirror the AOT
+//! presets in python/compile/aot.py (asserted against manifest meta at
+//! load time by the coordinator).
+
+pub mod events;
+pub mod rl;
+pub mod tsc;
+pub mod tsf;

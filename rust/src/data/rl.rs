@@ -1,0 +1,491 @@
+//! Offline-RL substrate (paper §4.1, Table 1): four simulated
+//! locomotion-style environments with three D4RL-like dataset tiers each.
+//!
+//! The paper evaluates Decision Transformers on MuJoCo HalfCheetah / Ant /
+//! Hopper / Walker with Medium / Medium-Replay / Medium-Expert datasets.
+//! We build gait-tracking environments: each env hides a reference gait
+//! (per-joint sinusoids); reward is velocity-alignment with the gait minus
+//! control cost. A PD controller tracking the gait is the *expert*; a
+//! detuned, noisy PD controller is the *medium* policy; uniform actions
+//! are *random*. This reproduces the experimental object — return-
+//! conditioned sequence modelling over (rtg, state, action) streams with
+//! demonstrator-quality tiers — without MuJoCo (DESIGN.md §3).
+
+use crate::util::rng::Rng;
+
+pub const STATE_DIM: usize = 12; // matches aot.py RL preset
+pub const ACT_DIM: usize = 6;
+pub const CTX: usize = 20;
+pub const EPISODE_LEN: usize = 200;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnvId {
+    HalfCheetah,
+    Ant,
+    Hopper,
+    Walker,
+}
+
+pub const ALL_ENVS: [EnvId; 4] = [EnvId::HalfCheetah, EnvId::Ant, EnvId::Hopper, EnvId::Walker];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Medium,
+    MediumReplay,
+    MediumExpert,
+}
+
+pub const ALL_TIERS: [Tier; 3] = [Tier::Medium, Tier::MediumReplay, Tier::MediumExpert];
+
+impl EnvId {
+    pub fn name(self) -> &'static str {
+        match self {
+            EnvId::HalfCheetah => "HalfCheetah",
+            EnvId::Ant => "Ant",
+            EnvId::Hopper => "Hopper",
+            EnvId::Walker => "Walker",
+        }
+    }
+
+    fn spec(self) -> EnvSpec {
+        match self {
+            // joints / gait frequency / actuator gain / damping / noise
+            EnvId::HalfCheetah => EnvSpec { joints: 5, omega: 2.2, gain: 5.0, damping: 1.2, dyn_noise: 0.01 },
+            EnvId::Ant => EnvSpec { joints: 4, omega: 1.4, gain: 4.0, damping: 1.6, dyn_noise: 0.02 },
+            EnvId::Hopper => EnvSpec { joints: 3, omega: 2.8, gain: 6.0, damping: 1.0, dyn_noise: 0.015 },
+            EnvId::Walker => EnvSpec { joints: 5, omega: 1.8, gain: 4.5, damping: 1.4, dyn_noise: 0.02 },
+        }
+    }
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Medium => "Medium",
+            Tier::MediumReplay => "Med-Replay",
+            Tier::MediumExpert => "Med-Expert",
+        }
+    }
+}
+
+struct EnvSpec {
+    joints: usize,
+    omega: f64,
+    gain: f64,
+    damping: f64,
+    dyn_noise: f64,
+}
+
+/// Gait-tracking environment. State layout (STATE_DIM = 12):
+/// [cos(ωt), sin(ωt), qpos[0..5] (zero-padded), qvel[0..5] (zero-padded)].
+pub struct Env {
+    pub id: EnvId,
+    spec: EnvSpec,
+    qpos: Vec<f64>,
+    qvel: Vec<f64>,
+    t: usize,
+    phases: Vec<f64>,
+    rng: Rng,
+}
+
+pub const DT: f64 = 0.05;
+
+impl Env {
+    pub fn new(id: EnvId, seed: u64) -> Env {
+        let spec = id.spec();
+        let rng = Rng::new(seed ^ (id as u64).wrapping_mul(0xEC0_10D5));
+        // fixed gait phase offsets per joint (the "morphology")
+        let phases: Vec<f64> = (0..spec.joints)
+            .map(|j| j as f64 * std::f64::consts::TAU / spec.joints as f64)
+            .collect();
+        let mut env = Env {
+            id,
+            qpos: vec![0.0; spec.joints],
+            qvel: vec![0.0; spec.joints],
+            t: 0,
+            phases,
+            spec,
+            rng,
+        };
+        env.reset_with(&mut Rng::new(seed));
+        env.rng = Rng::new(seed.wrapping_mul(0x9E37));
+        env
+    }
+
+    pub fn reset(&mut self, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        self.reset_with(&mut r)
+    }
+
+    fn reset_with(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for q in self.qpos.iter_mut() {
+            *q = rng.range(-0.1, 0.1);
+        }
+        for q in self.qvel.iter_mut() {
+            *q = rng.range(-0.1, 0.1);
+        }
+        self.t = 0;
+        self.observe()
+    }
+
+    /// Reference gait: target joint positions/velocities at the current time.
+    fn gait(&self) -> (Vec<f64>, Vec<f64>) {
+        let w = self.spec.omega;
+        let time = self.t as f64 * DT;
+        let pos = self
+            .phases
+            .iter()
+            .map(|p| (w * time + p).sin())
+            .collect::<Vec<_>>();
+        let vel = self
+            .phases
+            .iter()
+            .map(|p| w * (w * time + p).cos())
+            .collect::<Vec<_>>();
+        (pos, vel)
+    }
+
+    pub fn observe(&self) -> Vec<f32> {
+        let w = self.spec.omega;
+        let time = self.t as f64 * DT;
+        let mut s = vec![0.0f32; STATE_DIM];
+        s[0] = (w * time).cos() as f32;
+        s[1] = (w * time).sin() as f32;
+        for j in 0..self.spec.joints {
+            s[2 + j] = self.qpos[j] as f32;
+            s[7 + j] = self.qvel[j] as f32;
+        }
+        s
+    }
+
+    /// Apply `action` (clipped to [-1, 1], entries past `joints` ignored),
+    /// return (next_state, reward, done).
+    pub fn step(&mut self, action: &[f32]) -> (Vec<f32>, f64, bool) {
+        let spec = &self.spec;
+        let (_, gait_vel) = self.gait();
+        let mut ctrl_cost = 0.0;
+        for j in 0..spec.joints {
+            let a = (action[j] as f64).clamp(-1.0, 1.0);
+            ctrl_cost += 0.01 * a * a;
+            let acc = spec.gain * a
+                - spec.damping * self.qvel[j]
+                - 1.0 * self.qpos[j]
+                + spec.dyn_noise * self.rng.gaussian() / DT.sqrt();
+            self.qvel[j] += DT * acc;
+            self.qpos[j] += DT * self.qvel[j];
+        }
+        self.t += 1;
+        // "forward progress": joint velocities aligned with the gait's
+        // velocity profile (a perfect tracker maximises this), normalised
+        // per joint so rewards are comparable across morphologies.
+        let mut align = 0.0;
+        for j in 0..spec.joints {
+            align += self.qvel[j] * gait_vel[j];
+        }
+        align /= spec.joints as f64 * spec.omega;
+        let reward = align - ctrl_cost;
+        let done = self.t >= EPISODE_LEN;
+        (self.observe(), reward, done)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scripted policies (demonstrators)
+
+/// Demonstrator: PD controller tracking the hidden gait, with quality
+/// knobs. `quality` = 1.0 → expert; ~0.45 → medium; 0.0 → random.
+pub struct ScriptedPolicy {
+    pub quality: f64,
+    pub noise: f64,
+}
+
+impl ScriptedPolicy {
+    pub fn expert() -> Self {
+        ScriptedPolicy { quality: 1.0, noise: 0.05 }
+    }
+
+    pub fn medium() -> Self {
+        ScriptedPolicy { quality: 0.45, noise: 0.35 }
+    }
+
+    pub fn random() -> Self {
+        ScriptedPolicy { quality: 0.0, noise: 1.0 }
+    }
+
+    pub fn act(&self, env: &Env, rng: &mut Rng) -> Vec<f32> {
+        let (gait_pos, gait_vel) = env.gait();
+        let spec = &env.spec;
+        let mut a = vec![0.0f32; ACT_DIM];
+        for j in 0..spec.joints {
+            let pd = 2.0 * (gait_pos[j] - env.qpos[j]) + 0.8 * (gait_vel[j] - env.qvel[j]);
+            let u = self.quality * pd + self.noise * rng.gaussian();
+            a[j] = (u.clamp(-1.0, 1.0)) as f32;
+        }
+        a
+    }
+}
+
+// ---------------------------------------------------------------------------
+// offline datasets (D4RL-style tiers)
+
+/// One trajectory: time-major flat buffers.
+pub struct Trajectory {
+    pub states: Vec<f32>,  // (T, STATE_DIM)
+    pub actions: Vec<f32>, // (T, ACT_DIM)
+    pub rewards: Vec<f64>, // (T,)
+}
+
+impl Trajectory {
+    pub fn len(&self) -> usize {
+        self.rewards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rewards.is_empty()
+    }
+
+    pub fn total_return(&self) -> f64 {
+        self.rewards.iter().sum()
+    }
+
+    /// Return-to-go at each step.
+    pub fn rtg(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        let mut acc = 0.0;
+        for t in (0..self.len()).rev() {
+            acc += self.rewards[t];
+            out[t] = acc;
+        }
+        out
+    }
+}
+
+pub fn rollout(env: &mut Env, policy: &ScriptedPolicy, seed: u64) -> Trajectory {
+    let mut rng = Rng::new(seed);
+    let mut state = env.reset(seed ^ 0xABCD);
+    let mut traj = Trajectory { states: Vec::new(), actions: Vec::new(), rewards: Vec::new() };
+    loop {
+        let a = policy.act(env, &mut rng);
+        traj.states.extend_from_slice(&state);
+        traj.actions.extend_from_slice(&a);
+        let (next, r, done) = env.step(&a);
+        traj.rewards.push(r);
+        state = next;
+        if done {
+            break;
+        }
+    }
+    traj
+}
+
+/// An offline dataset: trajectories plus normalisation references.
+pub struct OfflineDataset {
+    pub env: EnvId,
+    pub tier: Tier,
+    pub trajectories: Vec<Trajectory>,
+    /// mean return of the random / expert reference policies (for the
+    /// D4RL normalised score).
+    pub random_return: f64,
+    pub expert_return: f64,
+    /// rtg scale used to normalise return-to-go model inputs
+    pub rtg_scale: f64,
+}
+
+/// Generate a D4RL-style dataset for (env, tier).
+pub fn generate_dataset(env_id: EnvId, tier: Tier, episodes: usize, seed: u64) -> OfflineDataset {
+    let mut rng = Rng::new(seed ^ 0xD4D4);
+    let mut trajectories = Vec::with_capacity(episodes);
+    for e in 0..episodes {
+        let mut env = Env::new(env_id, rng.next_u64());
+        let policy = match tier {
+            Tier::Medium => ScriptedPolicy::medium(),
+            // replay buffer of medium training: a progression random→medium
+            Tier::MediumReplay => {
+                let frac = e as f64 / episodes.max(1) as f64;
+                ScriptedPolicy { quality: 0.45 * frac, noise: 1.0 - 0.65 * frac }
+            }
+            // half medium, half expert
+            Tier::MediumExpert => {
+                if e % 2 == 0 {
+                    ScriptedPolicy::medium()
+                } else {
+                    ScriptedPolicy::expert()
+                }
+            }
+        };
+        trajectories.push(rollout(&mut env, &policy, rng.next_u64()));
+    }
+    // reference returns for the normalised score (10 episodes each)
+    let reference = |p: ScriptedPolicy, tag: u64| -> f64 {
+        let mut total = 0.0;
+        for i in 0..10 {
+            let mut env = Env::new(env_id, seed ^ tag ^ i);
+            total += rollout(&mut env, &p, seed ^ tag ^ (100 + i)).total_return();
+        }
+        total / 10.0
+    };
+    let random_return = reference(ScriptedPolicy::random(), 0x11);
+    let expert_return = reference(ScriptedPolicy::expert(), 0x22);
+    let rtg_scale = expert_return.abs().max(1.0);
+    OfflineDataset { env: env_id, tier, trajectories, random_return, expert_return, rtg_scale }
+}
+
+/// One Decision-Transformer training batch in the AOT artifact layout:
+/// rtg (b, CTX, 1), states (b, CTX, STATE_DIM), actions (b, CTX, ACT_DIM),
+/// timesteps (b, CTX) i32, mask (b, CTX).
+pub struct RlBatch {
+    pub rtg: Vec<f32>,
+    pub states: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub timesteps: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl OfflineDataset {
+    pub fn sample_batch(&self, rng: &mut Rng, b: usize) -> RlBatch {
+        let mut batch = RlBatch {
+            rtg: Vec::with_capacity(b * CTX),
+            states: Vec::with_capacity(b * CTX * STATE_DIM),
+            actions: Vec::with_capacity(b * CTX * ACT_DIM),
+            timesteps: Vec::with_capacity(b * CTX),
+            mask: Vec::with_capacity(b * CTX),
+        };
+        for _ in 0..b {
+            let traj = &self.trajectories[rng.below(self.trajectories.len())];
+            let rtg = traj.rtg();
+            let t_len = traj.len();
+            // random window end (inclusive), left-padded to CTX
+            let end = rng.below(t_len) + 1; // 1..=t_len
+            let start = end.saturating_sub(CTX);
+            let n = end - start;
+            let pad = CTX - n;
+            for _ in 0..pad {
+                batch.rtg.push(0.0);
+                batch.states.extend(std::iter::repeat(0.0).take(STATE_DIM));
+                batch.actions.extend(std::iter::repeat(0.0).take(ACT_DIM));
+                batch.timesteps.push(0);
+                batch.mask.push(0.0);
+            }
+            for t in start..end {
+                batch.rtg.push((rtg[t] / self.rtg_scale) as f32);
+                batch
+                    .states
+                    .extend_from_slice(&traj.states[t * STATE_DIM..(t + 1) * STATE_DIM]);
+                batch
+                    .actions
+                    .extend_from_slice(&traj.actions[t * ACT_DIM..(t + 1) * ACT_DIM]);
+                batch.timesteps.push(t as i32);
+                batch.mask.push(1.0);
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_beats_medium_beats_random_in_all_envs() {
+        for env_id in ALL_ENVS {
+            let ret = |p: ScriptedPolicy| {
+                let mut total = 0.0;
+                for s in 0..5u64 {
+                    let mut env = Env::new(env_id, 1000 + s);
+                    total += rollout(&mut env, &p, 2000 + s).total_return();
+                }
+                total / 5.0
+            };
+            let (e, m, r) = (
+                ret(ScriptedPolicy::expert()),
+                ret(ScriptedPolicy::medium()),
+                ret(ScriptedPolicy::random()),
+            );
+            assert!(e > m + 1.0, "{}: expert {e} !>> medium {m}", env_id.name());
+            assert!(m > r, "{}: medium {m} !> random {r}", env_id.name());
+        }
+    }
+
+    #[test]
+    fn episode_fixed_length_and_shapes() {
+        let mut env = Env::new(EnvId::Hopper, 3);
+        let traj = rollout(&mut env, &ScriptedPolicy::medium(), 4);
+        assert_eq!(traj.len(), EPISODE_LEN);
+        assert_eq!(traj.states.len(), EPISODE_LEN * STATE_DIM);
+        assert_eq!(traj.actions.len(), EPISODE_LEN * ACT_DIM);
+    }
+
+    #[test]
+    fn rtg_is_suffix_sum() {
+        let traj = Trajectory {
+            states: vec![],
+            actions: vec![],
+            rewards: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(traj.rtg(), vec![6.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn dataset_tiers_have_ordered_mean_returns() {
+        let env_id = EnvId::HalfCheetah;
+        let mean_ret = |tier: Tier| {
+            let ds = generate_dataset(env_id, tier, 12, 9);
+            ds.trajectories.iter().map(Trajectory::total_return).sum::<f64>() / 12.0
+        };
+        let m = mean_ret(Tier::Medium);
+        let me = mean_ret(Tier::MediumExpert);
+        assert!(me > m, "med-expert {me} !> medium {m}");
+    }
+
+    #[test]
+    fn batch_layout_and_padding() {
+        let ds = generate_dataset(EnvId::Walker, Tier::Medium, 4, 5);
+        let mut rng = Rng::new(1);
+        let b = 8;
+        let batch = ds.sample_batch(&mut rng, b);
+        assert_eq!(batch.rtg.len(), b * CTX);
+        assert_eq!(batch.states.len(), b * CTX * STATE_DIM);
+        assert_eq!(batch.actions.len(), b * CTX * ACT_DIM);
+        assert_eq!(batch.mask.len(), b * CTX);
+        // masked slots must be zeroed
+        for i in 0..b * CTX {
+            if batch.mask[i] == 0.0 {
+                assert_eq!(batch.rtg[i], 0.0);
+                assert!(batch.states[i * STATE_DIM..(i + 1) * STATE_DIM]
+                    .iter()
+                    .all(|&x| x == 0.0));
+            }
+        }
+        // every row ends with a live slot (right-aligned windows)
+        for row in 0..b {
+            assert_eq!(batch.mask[row * CTX + CTX - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn actions_clipped_to_unit_box() {
+        let mut env = Env::new(EnvId::Ant, 7);
+        let mut rng = Rng::new(8);
+        let p = ScriptedPolicy::expert();
+        for _ in 0..50 {
+            let a = p.act(&env, &mut rng);
+            assert!(a.iter().all(|x| x.abs() <= 1.0));
+            let (_, _, done) = env.step(&a);
+            if done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn normalised_score_reference_sane() {
+        let ds = generate_dataset(EnvId::Hopper, Tier::Medium, 6, 13);
+        assert!(
+            ds.expert_return > ds.random_return + 1.0,
+            "expert {} vs random {}",
+            ds.expert_return,
+            ds.random_return
+        );
+    }
+}

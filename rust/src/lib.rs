@@ -1,0 +1,29 @@
+//! # aaren-rs — *Attention as an RNN* (Feng et al., 2024) in Rust + JAX + Pallas
+//!
+//! Three-layer reproduction of the paper's Aaren module and its full
+//! evaluation suite:
+//!
+//! * **L1** (build time): Pallas prefix-scan attention kernels, validated
+//!   against pure-jnp oracles (`python/compile/kernels/`).
+//! * **L2** (build time): JAX models per evaluation domain, AOT-lowered to
+//!   HLO text (`python/compile/`, `make artifacts`).
+//! * **L3** (this crate): the runtime/coordination layer — PJRT execution,
+//!   training orchestration, synthetic dataset substrates for all 38 paper
+//!   datasets, the constant-memory streaming session manager, and bench
+//!   harnesses regenerating every paper table and figure.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod scan;
+pub mod serve;
+pub mod util;

@@ -1,0 +1,213 @@
+//! `aaren` — CLI launcher for the Attention-as-an-RNN reproduction.
+//!
+//! Subcommands:
+//!   check                      verify artifacts load + run (smoke of all families)
+//!   train   --domain …         train one model/dataset cell and print metrics
+//!   bench   table1|table2|table3|table4|fig5|params|all
+//!   serve   --addr host:port   streaming inference server (line-JSON protocol)
+//!   info                       list artifacts with arg/param counts
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --seeds N,
+//! --steps N, --limit K (restrict #datasets), --horizons a,b,c.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use aaren::bench_harness::{self, BenchOpts};
+use aaren::coordinator::experiments::{self, Kind};
+use aaren::data::{events, rl, tsc, tsf};
+use aaren::runtime::exec::Engine;
+use aaren::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn opts(args: &Args) -> BenchOpts {
+    BenchOpts {
+        seeds: args.u64("seeds", 2),
+        train_steps: args.usize("steps", 150),
+        limit: args.usize("limit", 0),
+        artifacts: PathBuf::from(args.str("artifacts", "artifacts")),
+    }
+}
+
+fn kind_of(args: &Args) -> Result<Kind> {
+    match args.str("model", "aaren").as_str() {
+        "aaren" => Ok(Kind::Aaren),
+        "tf" | "transformer" => Ok(Kind::Tf),
+        other => bail!("unknown --model {other:?} (aaren|tf)"),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let o = opts(args);
+    match cmd {
+        "check" => bench_harness::tables::run_smoke(&o),
+        "info" => info(&o),
+        "train" => train(args, &o),
+        "serve" => {
+            let addr = args.str("addr", "127.0.0.1:7878");
+            aaren::serve::server::serve(&o.artifacts, &addr)
+        }
+        "bench" => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            let horizons: Vec<usize> = args
+                .str("horizons", "96,192,336,720")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            match which {
+                "table1" => bench_harness::run_table1(&o),
+                "table2" => bench_harness::run_table2(&o),
+                "table3" => bench_harness::run_table3(&o, &horizons),
+                "table4" => bench_harness::run_table4(&o),
+                "fig5" => bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512)).map(|_| ()),
+                "params" => bench_harness::run_params(&o.artifacts),
+                "all" => {
+                    bench_harness::run_table1(&o)?;
+                    bench_harness::run_table2(&o)?;
+                    bench_harness::run_table3(&o, &horizons)?;
+                    bench_harness::run_table4(&o)?;
+                    bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512))?;
+                    bench_harness::run_params(&o.artifacts)
+                }
+                other => bail!("unknown bench {other:?}"),
+            }
+        }
+        "help" | _ => {
+            println!(
+                "aaren — Attention as an RNN (Feng et al., 2024) reproduction\n\n\
+                 usage: aaren <command> [flags]\n\n\
+                 commands:\n  \
+                 check                 smoke-run every artifact family\n  \
+                 info                  list artifacts\n  \
+                 train --domain D      train one cell (domains: tsf tsc ef rl stream)\n  \
+                 bench <table1|table2|table3|table4|fig5|params|all>\n  \
+                 serve --addr H:P      streaming inference server\n\n\
+                 flags: --artifacts DIR  --model aaren|tf  --seeds N  --steps N\n       \
+                 --limit K  --horizons 96,192  --dataset NAME  --tokens N"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(o: &BenchOpts) -> Result<()> {
+    let mut names: Vec<String> = std::fs::read_dir(&o.artifacts)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_suffix(".manifest.json").map(String::from))
+        })
+        .collect();
+    names.sort();
+    println!("{} artifacts in {:?}:", names.len(), o.artifacts);
+    for name in names {
+        let m = aaren::runtime::manifest::Manifest::load(&o.artifacts, &name)?;
+        println!(
+            "  {:<28} kind={:<5} args={:<3} params={:>8} state_bytes={}",
+            m.name,
+            m.kind,
+            m.args.len(),
+            m.param_elements(),
+            m.state_bytes()
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args, o: &BenchOpts) -> Result<()> {
+    let mut engine = Engine::new(&o.artifacts)?;
+    let kind = kind_of(args)?;
+    let seed = args.u64("seed", 1);
+    let steps = o.train_steps;
+    match args.str("domain", "tsf").as_str() {
+        "tsf" => {
+            let horizon = args.usize("horizon", 96);
+            let ds = tsf::ALL
+                .into_iter()
+                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ETTh1")))
+                .unwrap_or(tsf::TsfDataset::Etth1);
+            let r = experiments::run_tsf(&mut engine, kind, ds, horizon, steps, seed)?;
+            println!(
+                "{} {} T={horizon}: MSE {:.3} MAE {:.3} (final train loss {:.4})",
+                kind.display(),
+                ds.name(),
+                r.mse,
+                r.mae,
+                r.final_train_loss
+            );
+        }
+        "tsc" => {
+            let ds = tsc::ALL
+                .into_iter()
+                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ArabicDigits")))
+                .unwrap_or(tsc::TscDataset::ArabicDigits);
+            let r = experiments::run_tsc(&mut engine, kind, ds, steps, seed)?;
+            println!(
+                "{} {}: Acc {:.2}% (final train loss {:.4})",
+                kind.display(),
+                ds.name(),
+                r.acc,
+                r.final_train_loss
+            );
+        }
+        "ef" => {
+            let ds = events::ALL
+                .into_iter()
+                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "Sin")))
+                .unwrap_or(events::EfDataset::Sin);
+            let r = experiments::run_ef(&mut engine, kind, ds, steps, seed)?;
+            println!(
+                "{} {}: NLL {:.3} RMSE {:.3} Acc {:?} (final train loss {:.4})",
+                kind.display(),
+                ds.name(),
+                r.nll,
+                r.rmse,
+                r.acc,
+                r.final_train_loss
+            );
+        }
+        "rl" => {
+            let env = rl::ALL_ENVS
+                .into_iter()
+                .find(|e| e.name().eq_ignore_ascii_case(&args.str("dataset", "Hopper")))
+                .unwrap_or(rl::EnvId::Hopper);
+            let tier = match args.str("tier", "medium").as_str() {
+                "medium" => rl::Tier::Medium,
+                "medium-replay" | "replay" => rl::Tier::MediumReplay,
+                "medium-expert" | "expert" => rl::Tier::MediumExpert,
+                other => bail!("unknown tier {other:?}"),
+            };
+            let r = experiments::run_rl(
+                &mut engine,
+                kind,
+                env,
+                tier,
+                steps,
+                args.usize("episodes", 40),
+                args.usize("rollouts", 3),
+                seed,
+            )?;
+            println!(
+                "{} {} {}: normalised score {:.1} (raw return {:.2}, final loss {:.4})",
+                kind.display(),
+                env.name(),
+                tier.name(),
+                r.normalised_score,
+                r.raw_return,
+                r.final_train_loss
+            );
+        }
+        other => bail!("unknown --domain {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Metric accumulation shared by all experiment harnesses: the paper
+//! reports MSE/MAE (TSF), NLL/RMSE/Acc (EF), Acc (TSC), D4RL normalised
+//! score (RL), plus the Figure-5 memory/time accounting.
+
+/// Streaming mean/variance (Welford) — used for dataset standardisation
+/// and for aggregating per-seed results.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Sum-based metric accumulator for eval loops that stream (sum, count)
+/// pairs out of the AOT eval artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct SumMetric {
+    pub sum: f64,
+    pub count: f64,
+}
+
+impl SumMetric {
+    pub fn add(&mut self, sum: f64, count: f64) {
+        self.sum += sum;
+        self.count += count;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0.0 {
+            self.sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn rmse(&self) -> f64 {
+        self.mean().sqrt()
+    }
+}
+
+/// D4RL-style normalised score: 100 · (score − random) / (expert − random)
+/// (Fu et al., 2020). `random` and `expert` are the per-environment
+/// reference returns measured from our scripted policies.
+pub fn d4rl_normalised(score: f64, random: f64, expert: f64) -> f64 {
+    100.0 * (score - random) / (expert - random).max(1e-9)
+}
+
+/// Figure-5 (left) memory accounting, in bytes, for a streaming session at
+/// context length `n` — computed analytically from the state layouts.
+pub mod memory {
+    /// Aaren: (a, c, m) per (layer, head): L·H·(dh + 2) f32 — CONSTANT in n.
+    pub fn aaren_state_bytes(layers: usize, heads: usize, d_head: usize) -> usize {
+        layers * heads * (d_head + 2) * 4
+    }
+
+    /// Transformer KV cache: 2·L·H·n·dh f32 — LINEAR in n.
+    pub fn kv_cache_bytes(layers: usize, heads: usize, d_head: usize, n: usize) -> usize {
+        2 * layers * heads * n * d_head * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::default();
+        for x in xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sum_metric_mean_and_rmse() {
+        let mut m = SumMetric::default();
+        m.add(8.0, 2.0);
+        m.add(10.0, 2.0);
+        assert!((m.mean() - 4.5).abs() < 1e-12);
+        assert!((m.rmse() - 4.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d4rl_score_endpoints() {
+        assert!((d4rl_normalised(10.0, 10.0, 110.0) - 0.0).abs() < 1e-9);
+        assert!((d4rl_normalised(110.0, 10.0, 110.0) - 100.0).abs() < 1e-9);
+        assert!(d4rl_normalised(60.0, 10.0, 110.0) > 0.0);
+    }
+
+    #[test]
+    fn memory_shapes() {
+        // Aaren state independent of n; KV linear in n.
+        let a = memory::aaren_state_bytes(2, 4, 16);
+        assert_eq!(a, 2 * 4 * 18 * 4);
+        assert_eq!(
+            memory::kv_cache_bytes(2, 4, 16, 200),
+            2 * memory::kv_cache_bytes(2, 4, 16, 100)
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client, and executes them with manifest-driven argument
+//! marshalling. Adapted from /opt/xla-example/load_hlo (HLO *text* is the
+//! interchange format — see aot.py's header for why).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{Dtype, Manifest};
+
+/// Host-side tensor for inputs (shape + typed data).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> HostTensor {
+        HostTensor::I32(vec![], vec![x])
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) => s.iter().product(),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(shape, data) => {
+                anyhow::ensure!(
+                    data.len() == shape.iter().product::<usize>(),
+                    "f32 tensor data/shape mismatch"
+                );
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?
+            }
+            HostTensor::I32(shape, data) => {
+                anyhow::ensure!(
+                    data.len() == shape.iter().product::<usize>(),
+                    "i32 tensor data/shape mismatch"
+                );
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled artifact: manifest + PJRT executable.
+pub struct Module {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Module {
+    /// Execute with fully-marshalled literals (order must match
+    /// `manifest.args`). Returns the decomposed output tuple.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.manifest.args.len(),
+            "{}: expected {} args, got {}",
+            self.manifest.name,
+            self.manifest.args.len(),
+            args.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with borrowed literals (avoids cloning cached arguments —
+    /// the streaming hot path keeps params/state as literals and passes
+    /// references).
+    pub fn execute_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.manifest.args.len(),
+            "{}: expected {} args, got {}",
+            self.manifest.name,
+            self.manifest.args.len(),
+            args.len()
+        );
+        let result = self.exe.execute::<&xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (hot path: avoids re-uploading
+    /// parameters every call). `args` must follow manifest order.
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with buffers, returning output *buffers* (kept on device —
+    /// for chaining steps without host round-trips).
+    pub fn execute_buffers_raw(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b::<&xla::PjRtBuffer>(args)?)
+    }
+}
+
+/// Read an f32 tensor out of a result literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// The engine owns the PJRT client and a compile cache.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Module>>,
+}
+
+impl Engine {
+    /// `dir` is the artifacts directory produced by `make artifacts`.
+    pub fn new(dir: &Path) -> Result<Engine> {
+        if !dir.is_dir() {
+            bail!("artifacts dir {dir:?} missing — run `make artifacts` first");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Load + compile `<name>` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Module>> {
+        if let Some(m) = self.cache.get(name) {
+            return Ok(m.clone());
+        }
+        let manifest = Manifest::load(&self.dir, name)?;
+        let hlo_text_path = manifest
+            .hlo_path
+            .to_str()
+            .context("non-utf8 artifact path")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_text_path)
+            .with_context(|| format!("parsing HLO text {hlo_text_path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let module = std::rc::Rc::new(Module { manifest, exe });
+        self.cache.insert(name.to_string(), module.clone());
+        Ok(module)
+    }
+
+    /// Upload a host tensor to the device (for persistent buffers).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.upload(&HostTensor::F32(shape.to_vec(), data.to_vec()))
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}

@@ -1,0 +1,273 @@
+//! Artifact manifests: the contract between the AOT exporter
+//! (python/compile/aot.py) and the rust runtime. A manifest lists every
+//! executable argument and output in order, with role / shape / dtype, so
+//! the runtime is fully generic over model variants — adding a new model
+//! requires zero rust changes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Where an argument/output slots into the training/streaming loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// model parameter (loaded from params.bin, updated by train steps)
+    Param,
+    /// Adam first/second moment (initialised to zero, threaded through)
+    OptM,
+    OptV,
+    /// float32 scalar step counter
+    OptStep,
+    /// streaming state (threaded output -> next input by the session)
+    State,
+    /// per-call input (batch data / token / position)
+    Input,
+    /// auxiliary output (loss, metric sums, predictions)
+    Aux,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "opt_step" => Role::OptStep,
+            "state" => Role::State,
+            "input" => Role::Input,
+            "aux" => Role::Aux,
+            other => bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OutSpec {
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl OutSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub hlo_path: PathBuf,
+    pub params_key: String,
+    pub params_bin: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutSpec>,
+    pub meta: Json,
+}
+
+impl Manifest {
+    /// Load `<dir>/<name>.manifest.json`.
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let parse_shape = |v: &Json| -> Result<Vec<usize>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        };
+
+        let mut args = Vec::new();
+        for a in j
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing args"))?
+        {
+            args.push(ArgSpec {
+                name: a.str_field("name")?.to_string(),
+                role: Role::parse(a.str_field("role")?)?,
+                shape: parse_shape(a.get("shape").ok_or_else(|| anyhow!("missing shape"))?)?,
+                dtype: Dtype::parse(a.str_field("dtype")?)?,
+            });
+        }
+        let mut outputs = Vec::new();
+        for o in j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing outputs"))?
+        {
+            outputs.push(OutSpec {
+                role: Role::parse(o.str_field("role")?)?,
+                shape: parse_shape(o.get("shape").ok_or_else(|| anyhow!("missing shape"))?)?,
+                dtype: Dtype::parse(o.str_field("dtype")?)?,
+            });
+        }
+
+        Ok(Manifest {
+            name: j.str_field("name")?.to_string(),
+            kind: j.str_field("kind")?.to_string(),
+            hlo_path: dir.join(j.str_field("hlo")?),
+            params_key: j.str_field("params_key")?.to_string(),
+            params_bin: dir.join(j.str_field("params_bin")?),
+            args,
+            outputs,
+            meta: j.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn args_with_role(&self, role: Role) -> impl Iterator<Item = (usize, &ArgSpec)> {
+        self.args
+            .iter()
+            .enumerate()
+            .filter(move |(_, a)| a.role == role)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.args_with_role(Role::Param).count()
+    }
+
+    /// Total parameter scalars (the §4.5 count).
+    pub fn param_elements(&self) -> usize {
+        self.args_with_role(Role::Param).map(|(_, a)| a.elements()).sum()
+    }
+
+    /// Index of the `idx`-th input-role argument.
+    pub fn input_indices(&self) -> Vec<usize> {
+        self.args_with_role(Role::Input).map(|(i, _)| i).collect()
+    }
+
+    pub fn state_indices(&self) -> Vec<usize> {
+        self.args_with_role(Role::State).map(|(i, _)| i).collect()
+    }
+
+    pub fn meta_usize(&self, key: &str, default: usize) -> usize {
+        self.meta.get(key).and_then(Json::as_usize).unwrap_or(default)
+    }
+
+    pub fn meta_f64(&self, key: &str, default: f64) -> f64 {
+        self.meta.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    /// Bytes of streaming state this module carries per session — the
+    /// Figure-5 (left) memory accounting.
+    pub fn state_bytes(&self) -> usize {
+        self.args
+            .iter()
+            .filter(|a| a.role == Role::State)
+            .map(|a| a.elements() * a.dtype.size_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, name: &str, body: &str) {
+        let mut f = std::fs::File::create(dir.join(format!("{name}.manifest.json"))).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_roles_shapes_and_meta() {
+        let dir = std::env::temp_dir().join("aaren_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "toy",
+            r#"{
+              "name": "toy", "kind": "train", "hlo": "toy.hlo.txt",
+              "params_key": "toy", "params_bin": "toy.params.bin",
+              "args": [
+                {"name": "param:w", "role": "param", "shape": [2, 3], "dtype": "f32"},
+                {"name": "opt_m:w", "role": "opt_m", "shape": [2, 3], "dtype": "f32"},
+                {"name": "opt_step:s", "role": "opt_step", "shape": [], "dtype": "f32"},
+                {"name": "input:x", "role": "input", "shape": [4], "dtype": "i32"}
+              ],
+              "outputs": [
+                {"role": "param", "shape": [2, 3], "dtype": "f32"},
+                {"role": "aux", "shape": [], "dtype": "f32"}
+              ],
+              "meta": {"lr": 0.001, "horizon": 96}
+            }"#,
+        );
+        let m = Manifest::load(&dir, "toy").unwrap();
+        assert_eq!(m.n_params(), 1);
+        assert_eq!(m.param_elements(), 6);
+        assert_eq!(m.args[3].dtype, Dtype::I32);
+        assert_eq!(m.input_indices(), vec![3]);
+        assert_eq!(m.meta_usize("horizon", 0), 96);
+        assert!(m.state_bytes() == 0);
+        assert_eq!(m.outputs.len(), 2);
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent"), "nope").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let dir = std::env::temp_dir().join("aaren_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "step",
+            r#"{
+              "name": "step", "kind": "step", "hlo": "s.hlo.txt",
+              "params_key": "s", "params_bin": "s.params.bin",
+              "args": [
+                {"name": "state:a", "role": "state", "shape": [2, 4, 16], "dtype": "f32"},
+                {"name": "state:c", "role": "state", "shape": [2, 4], "dtype": "f32"},
+                {"name": "input:x", "role": "input", "shape": [8], "dtype": "f32"}
+              ],
+              "outputs": [], "meta": {}
+            }"#,
+        );
+        let m = Manifest::load(&dir, "step").unwrap();
+        assert_eq!(m.state_bytes(), (2 * 4 * 16 + 2 * 4) * 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper (`exec`), artifact manifests
+//! (`manifest`) and the parameter store (`params`). The rust hot path
+//! loads `artifacts/*.hlo.txt` once and then executes compiled modules —
+//! python never runs at request time.
+
+pub mod exec;
+pub mod manifest;
+pub mod params;
+
+pub use exec::{Engine, HostTensor, Module};
+pub use manifest::{ArgSpec, Dtype, Manifest, OutSpec, Role};
+pub use params::ParamStore;

@@ -1,0 +1,145 @@
+//! Parameter store: loads the AOT exporter's `<key>.params.bin` (f32 LE,
+//! concatenated in manifest order), owns the live training buffers
+//! (params + Adam moments + step), and checkpoints back to the same
+//! format so trained weights flow train -> eval -> serve.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{Manifest, Role};
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    /// one buffer per param-role argument, in manifest order
+    pub params: Vec<Vec<f32>>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+    pub step: f32,
+}
+
+impl ParamStore {
+    /// Load initial parameters for `manifest` from its params.bin.
+    pub fn load(manifest: &Manifest) -> Result<ParamStore> {
+        let bytes = std::fs::read(&manifest.params_bin)
+            .with_context(|| format!("reading {:?} (run `make artifacts`?)", manifest.params_bin))?;
+        Self::from_bytes(manifest, &bytes)
+    }
+
+    /// Load from an explicit checkpoint path (same binary format).
+    pub fn load_from(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(manifest, &bytes)
+    }
+
+    fn from_bytes(manifest: &Manifest, bytes: &[u8]) -> Result<ParamStore> {
+        let total: usize = manifest.param_elements();
+        if bytes.len() != total * 4 {
+            bail!(
+                "params.bin for {} has {} bytes; manifest expects {} f32s ({} bytes)",
+                manifest.name,
+                bytes.len(),
+                total,
+                total * 4
+            );
+        }
+        let mut params = Vec::with_capacity(manifest.n_params());
+        let mut off = 0usize;
+        for (_, spec) in manifest.args_with_role(Role::Param) {
+            let n = spec.elements();
+            let mut buf = vec![0.0f32; n];
+            for (i, x) in buf.iter_mut().enumerate() {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += n * 4;
+            params.push(buf);
+        }
+        let opt_m = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let opt_v = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        Ok(ParamStore { params, opt_m, opt_v, step: 0.0 })
+    }
+
+    /// Serialize current params (not optimiser state) to the binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out = Vec::with_capacity(self.n_elements() * 4);
+        for p in &self.params {
+            for x in p {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+
+    /// Copy trained parameters into another store (e.g. the eval module's
+    /// store — same params_key, same layout).
+    pub fn copy_params_from(&mut self, other: &ParamStore) {
+        assert_eq!(self.params.len(), other.params.len(), "param layout mismatch");
+        for (dst, src) in self.params.iter_mut().zip(other.params.iter()) {
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::io::Write;
+
+    fn toy_manifest(dir: &Path) -> Manifest {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f =
+            std::fs::File::create(dir.join("toy.manifest.json")).unwrap();
+        f.write_all(
+            br#"{
+              "name": "toy", "kind": "train", "hlo": "toy.hlo.txt",
+              "params_key": "toy", "params_bin": "toy.params.bin",
+              "args": [
+                {"name": "param:a", "role": "param", "shape": [2], "dtype": "f32"},
+                {"name": "param:b", "role": "param", "shape": [3], "dtype": "f32"},
+                {"name": "input:x", "role": "input", "shape": [1], "dtype": "f32"}
+              ],
+              "outputs": [], "meta": {}
+            }"#,
+        )
+        .unwrap();
+        Manifest::load(dir, "toy").unwrap()
+    }
+
+    #[test]
+    fn roundtrips_binary_format() {
+        let dir = std::env::temp_dir().join("aaren_params_test");
+        let m = toy_manifest(&dir);
+        let vals: Vec<f32> = vec![1.0, -2.0, 3.5, 0.25, 1e-7];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&m.params_bin, &bytes).unwrap();
+
+        let store = ParamStore::load(&m).unwrap();
+        assert_eq!(store.params.len(), 2);
+        assert_eq!(store.params[0], vec![1.0, -2.0]);
+        assert_eq!(store.params[1], vec![3.5, 0.25, 1e-7]);
+        assert_eq!(store.opt_m[1], vec![0.0; 3]);
+
+        let ckpt = dir.join("ckpt.bin");
+        store.save(&ckpt).unwrap();
+        let store2 = ParamStore::load_from(&m, &ckpt).unwrap();
+        assert_eq!(store.params, store2.params);
+    }
+
+    #[test]
+    fn size_mismatch_is_rejected() {
+        let dir = std::env::temp_dir().join("aaren_params_test2");
+        let m = toy_manifest(&dir);
+        std::fs::write(&m.params_bin, [0u8; 12]).unwrap();
+        let err = ParamStore::load(&m).unwrap_err();
+        assert!(format!("{err}").contains("expects"));
+    }
+}

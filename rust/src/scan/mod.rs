@@ -1,0 +1,214 @@
+//! The paper's algorithmic core in pure Rust: the associative operator ⊕
+//! over (m, u, w) tuples (Appendix B) and three prefix-scan strategies —
+//! sequential (the §3.1 RNN view), Hillis–Steele (Algorithm 1,
+//! O(N log N) work / log N depth) and Blelloch (Ladner–Fischer style,
+//! O(N) work / 2 log N depth; §5 discusses the trade-off).
+//!
+//! These are the executable specification the AOT kernels are tested
+//! against, and the engine behind the rust-native streaming oracle in
+//! `crate::attention`.
+
+pub mod ops;
+
+pub use ops::{combine, combine_into, fold_token, Muw, MASK_FILL};
+
+/// Sequential left-fold prefix scan — the ground truth.
+pub fn sequential(leaves: &[Muw]) -> Vec<Muw> {
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut acc: Option<Muw> = None;
+    for leaf in leaves {
+        let next = match &acc {
+            None => leaf.clone(),
+            Some(a) => combine(a, leaf),
+        };
+        out.push(next.clone());
+        acc = Some(next);
+    }
+    out
+}
+
+/// Hillis–Steele inclusive scan (the paper's Algorithm 1): log2(N) sweeps,
+/// each combining element j with element j - 2^i. O(N log N) work but only
+/// ceil(log2 N) dependent steps — the variant the paper presents because it
+/// maps directly onto wide SIMD/SIMT hardware.
+pub fn hillis_steele(leaves: &[Muw]) -> Vec<Muw> {
+    let n = leaves.len();
+    let mut z: Vec<Muw> = leaves.to_vec();
+    let mut z_next: Vec<Muw> = z.clone();
+    let mut off = 1usize;
+    while off < n {
+        for j in 0..n {
+            if j < off {
+                z_next[j] = z[j].clone();
+            } else {
+                combine_into(&z[j - off], &z[j], &mut z_next[j]);
+            }
+        }
+        std::mem::swap(&mut z, &mut z_next);
+        off <<= 1;
+    }
+    z
+}
+
+/// Blelloch two-phase (up-sweep / down-sweep) inclusive scan: O(N) work,
+/// 2·log2(N) − 2 dependent steps (Ladner & Fischer, 1980). The paper notes
+/// (§5) any prefix-scan algorithm computes Aaren's outputs; we carry both
+/// to benchmark the work/depth trade-off (bench `scan_micro`).
+pub fn blelloch(leaves: &[Muw]) -> Vec<Muw> {
+    let n = leaves.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // pad to a power of two with identity elements
+    let np = n.next_power_of_two();
+    let dim = leaves[0].w.len();
+    let mut tree: Vec<Muw> = leaves.to_vec();
+    tree.resize(np, Muw::identity(dim));
+
+    // up-sweep: tree[j] at stride s accumulates its left sibling
+    let mut s = 1usize;
+    while s < np {
+        let mut j = 2 * s - 1;
+        while j < np {
+            let left = tree[j - s].clone();
+            let cur = tree[j].clone();
+            combine_into(&left, &cur, &mut tree[j]);
+            j += 2 * s;
+        }
+        s <<= 1;
+    }
+    // down-sweep for an *inclusive* scan: push prefixes to right children
+    let mut s = np / 4;
+    while s >= 1 {
+        let mut j = 3 * s - 1;
+        while j < np {
+            let left = tree[j - s].clone();
+            let cur = tree[j].clone();
+            combine_into(&left, &cur, &mut tree[j]);
+            j += 2 * s;
+        }
+        if s == 1 {
+            break;
+        }
+        s >>= 1;
+    }
+    tree.truncate(n);
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_leaves(rng: &mut Rng, n: usize, d: usize, mag: f64) -> Vec<Muw> {
+        (0..n)
+            .map(|_| {
+                let m = rng.range(-mag, mag) as f32;
+                let w: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                Muw { m, u: 1.0, w }
+            })
+            .collect()
+    }
+
+    fn close(a: &Muw, b: &Muw, atol: f32) -> Result<(), String> {
+        // compare normalised outputs (w/u) and the max — that is what
+        // attention consumes; u and w individually may differ by a common
+        // exp() factor between algorithms (both are valid representations).
+        if (a.m - b.m).abs() > atol {
+            return Err(format!("m: {} vs {}", a.m, b.m));
+        }
+        for (i, (x, y)) in a.w.iter().zip(b.w.iter()).enumerate() {
+            let (ox, oy) = (x / a.u, y / b.u);
+            if (ox - oy).abs() > atol {
+                return Err(format!("o[{i}]: {ox} vs {oy}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn hillis_steele_matches_sequential() {
+        prop::check("hillis_steele == sequential", 64, |rng| {
+            let n = 1 + rng.below(200);
+            let leaves = random_leaves(rng, n, 4, 5.0);
+            let a = sequential(&leaves);
+            let b = hillis_steele(&leaves);
+            for (x, y) in a.iter().zip(b.iter()) {
+                close(x, y, 1e-4)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blelloch_matches_sequential() {
+        prop::check("blelloch == sequential", 64, |rng| {
+            let n = 1 + rng.below(200);
+            let leaves = random_leaves(rng, n, 4, 5.0);
+            let a = sequential(&leaves);
+            let b = blelloch(&leaves);
+            for (x, y) in a.iter().zip(b.iter()) {
+                close(x, y, 1e-4)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scans_stable_under_extreme_scores() {
+        // the cumulative-max trick: |s| up to 80 would overflow exp in f32
+        prop::check("scan stable at |m|<=80", 32, |rng| {
+            let n = 1 + rng.below(64);
+            let leaves = random_leaves(rng, n, 3, 80.0);
+            for algo in [hillis_steele, blelloch] {
+                let out = algo(&leaves);
+                for t in &out {
+                    if !t.m.is_finite() || !t.u.is_finite() || t.u <= 0.0 {
+                        return Err(format!("non-finite tuple {t:?}"));
+                    }
+                    for w in &t.w {
+                        if !w.is_finite() {
+                            return Err("non-finite w".to_string());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_element_scan_is_identity() {
+        let leaves = vec![Muw { m: 0.5, u: 1.0, w: vec![1.0, -2.0] }];
+        for algo in [sequential, hillis_steele, blelloch] {
+            let out = algo(&leaves);
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].m, 0.5);
+        }
+    }
+
+    #[test]
+    fn empty_scan() {
+        assert!(sequential(&[]).is_empty());
+        assert!(hillis_steele(&[]).is_empty());
+        assert!(blelloch(&[]).is_empty());
+    }
+
+    #[test]
+    fn non_power_of_two_lengths() {
+        for n in [3usize, 5, 7, 9, 17, 31, 100] {
+            let mut rng = Rng::new(n as u64);
+            let leaves = random_leaves(&mut rng, n, 2, 3.0);
+            let a = sequential(&leaves);
+            for algo in [hillis_steele, blelloch] {
+                let b = algo(&leaves);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    close(x, y, 1e-4).unwrap();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! The associative operator ⊕ on (m, u, w) tuples — Appendix B of the
+//! paper, verbatim:
+//!
+//!   m_{A∪B} = max(m_A, m_B)
+//!   u_{A∪B} = u_A·exp(m_A − m_{A∪B}) + u_B·exp(m_B − m_{A∪B})
+//!   w_{A∪B} = w_A·exp(m_A − m_{A∪B}) + w_B·exp(m_B − m_{A∪B})
+//!
+//! A leaf for token i is (s_i, 1, v_i); after an inclusive scan, the k-th
+//! tuple is (m_k, c_k, a_k) and attention's prefix output is o_k = a_k/c_k.
+
+/// Finite "minus infinity": exp(MASK_FILL − m) underflows to exactly 0
+/// while every intermediate stays finite (a true −∞ would yield NaN via
+/// `−∞ − −∞` when combining two identities). Must match
+/// python/compile/kernels/ref.py::MASK_FILL.
+pub const MASK_FILL: f32 = -1e9;
+
+/// One scan element: running max `m`, normaliser `u`, weighted value sum `w`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Muw {
+    pub m: f32,
+    pub u: f32,
+    pub w: Vec<f32>,
+}
+
+impl Muw {
+    /// Leaf tuple for a token with score `s` and value `v`: (s, 1, v).
+    pub fn leaf(s: f32, v: &[f32]) -> Muw {
+        Muw { m: s, u: 1.0, w: v.to_vec() }
+    }
+
+    /// Identity element: ⊕-neutral on both sides.
+    pub fn identity(dim: usize) -> Muw {
+        Muw { m: MASK_FILL, u: 0.0, w: vec![0.0; dim] }
+    }
+
+    /// The attention output this prefix represents: o = w / u.
+    pub fn output(&self) -> Vec<f32> {
+        self.w.iter().map(|w| w / self.u).collect()
+    }
+}
+
+/// a ⊕ b, allocating the result.
+pub fn combine(a: &Muw, b: &Muw) -> Muw {
+    let mut out = Muw { m: 0.0, u: 0.0, w: vec![0.0; a.w.len()] };
+    combine_into(a, b, &mut out);
+    out
+}
+
+/// a ⊕ b into a preallocated tuple (the hot-path form: zero allocation).
+pub fn combine_into(a: &Muw, b: &Muw, out: &mut Muw) {
+    debug_assert_eq!(a.w.len(), b.w.len());
+    let m = a.m.max(b.m);
+    let ea = (a.m - m).exp();
+    let eb = (b.m - m).exp();
+    out.m = m;
+    out.u = a.u * ea + b.u * eb;
+    if out.w.len() != a.w.len() {
+        out.w.resize(a.w.len(), 0.0);
+    }
+    for ((o, x), y) in out.w.iter_mut().zip(a.w.iter()).zip(b.w.iter()) {
+        *o = x * ea + y * eb;
+    }
+}
+
+/// In-place fold: `acc = acc ⊕ leaf(s, v)` — the §3.1 RNN cell update
+/// (Figure 2), specialised to avoid allocating a leaf. This is the O(1)
+/// streaming update rust-native sessions use.
+pub fn fold_token(acc: &mut Muw, s: f32, v: &[f32]) {
+    let m = acc.m.max(s);
+    let ea = (acc.m - m).exp();
+    let eb = (s - m).exp();
+    acc.m = m;
+    acc.u = acc.u * ea + eb;
+    for (w, x) in acc.w.iter_mut().zip(v.iter()) {
+        *w = *w * ea + x * eb;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rand_tuple(rng: &mut crate::util::rng::Rng, d: usize, mag: f64) -> Muw {
+        Muw {
+            m: rng.range(-mag, mag) as f32,
+            u: rng.range(0.1, 3.0) as f32,
+            w: (0..d).map(|_| rng.gaussian() as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn operator_is_associative() {
+        // Appendix B.2 — including extreme magnitudes where a naive
+        // (un-maxed) implementation overflows.
+        prop::check("(a+b)+c == a+(b+c)", 256, |rng| {
+            let d = 1 + rng.below(6);
+            let mag = [1.0, 10.0, 80.0][rng.below(3)];
+            let (a, b, c) = (
+                rand_tuple(rng, d, mag),
+                rand_tuple(rng, d, mag),
+                rand_tuple(rng, d, mag),
+            );
+            let left = combine(&combine(&a, &b), &c);
+            let right = combine(&a, &combine(&b, &c));
+            if (left.m - right.m).abs() > 1e-5 {
+                return Err(format!("m {} vs {}", left.m, right.m));
+            }
+            let rel = |x: f32, y: f32| (x - y).abs() / (1e-6 + x.abs().max(y.abs()));
+            if rel(left.u, right.u) > 1e-4 {
+                return Err(format!("u {} vs {}", left.u, right.u));
+            }
+            for (x, y) in left.w.iter().zip(right.w.iter()) {
+                if rel(*x, *y) > 1e-3 && (x - y).abs() > 1e-4 {
+                    return Err(format!("w {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        prop::check("e+x == x+e == x", 64, |rng| {
+            let x = rand_tuple(rng, 4, 20.0);
+            let e = Muw::identity(4);
+            for got in [combine(&e, &x), combine(&x, &e)] {
+                if (got.m - x.m).abs() > 1e-6 || (got.u - x.u).abs() > 1e-5 {
+                    return Err(format!("{got:?} != {x:?}"));
+                }
+                prop::assert_close(&got.w, &x.w, 1e-5)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn correctness_against_direct_softmax() {
+        // Appendix B.1: folding leaves equals computing softmax directly.
+        prop::check("scan == direct softmax", 64, |rng| {
+            let n = 1 + rng.below(32);
+            let d = 3;
+            let scores: Vec<f32> = (0..n).map(|_| rng.range(-30.0, 30.0) as f32).collect();
+            let values: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let mut acc = Muw::identity(d);
+            for (s, v) in scores.iter().zip(values.iter()) {
+                fold_token(&mut acc, *s, v);
+            }
+            // direct, numerically-stable softmax
+            let mx = scores.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let mut want = vec![0.0f32; d];
+            for (e, v) in exps.iter().zip(values.iter()) {
+                for (wd, vd) in want.iter_mut().zip(v.iter()) {
+                    *wd += e / z * vd;
+                }
+            }
+            prop::assert_close(&acc.output(), &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn fold_token_equals_combine_with_leaf() {
+        prop::check("fold == combine(acc, leaf)", 64, |rng| {
+            let d = 4;
+            let mut acc = rand_tuple(rng, d, 10.0);
+            let s = rng.range(-10.0, 10.0) as f32;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let want = combine(&acc, &Muw::leaf(s, &v));
+            fold_token(&mut acc, s, &v);
+            if (acc.m - want.m).abs() > 1e-6 || (acc.u - want.u).abs() > 1e-5 {
+                return Err("m/u mismatch".to_string());
+            }
+            prop::assert_close(&acc.w, &want.w, 1e-5)
+        });
+    }
+
+    #[test]
+    fn output_is_softmax_weighted_average() {
+        let mut acc = Muw::identity(1);
+        fold_token(&mut acc, 0.0, &[1.0]);
+        fold_token(&mut acc, 0.0, &[3.0]);
+        let o = acc.output();
+        assert!((o[0] - 2.0).abs() < 1e-6, "equal scores average values");
+    }
+}

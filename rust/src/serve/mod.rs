@@ -1,0 +1,11 @@
+//! Streaming inference service: the session manager (`session`) holds
+//! per-client RNN state — constant-size for Aaren, bucketed KV cache for
+//! the Transformer baseline — and the TCP server (`server`) exposes a
+//! line-delimited JSON protocol over it. PJRT handles are not Sync, so a
+//! single executor thread owns all sessions and connection threads talk
+//! to it over channels (a router in front of one model replica).
+
+pub mod server;
+pub mod session;
+
+pub use session::{Session, StreamModel, TF_BUCKETS};

@@ -1,0 +1,220 @@
+//! Line-delimited JSON streaming server.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"op":"create","kind":"aaren"|"tf"}          <- {"id":N}
+//!   -> {"op":"step","id":N,"x":[f32;channels]}      <- {"y":[...],"state_bytes":B,"t":T}
+//!   -> {"op":"close","id":N}                        <- {"ok":true}
+//!   -> {"op":"stats"}                                <- {"sessions":K,"total_state_bytes":B}
+//!
+//! PJRT handles are single-threaded, so one executor thread owns the
+//! engine + sessions; connection handler threads forward requests over an
+//! mpsc channel and wait on a per-request reply channel (a minimal
+//! router/worker split, the shape vLLM-style serving uses).
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::exec::Engine;
+use crate::serve::session::{Session, StreamModel};
+use crate::util::json::Json;
+
+pub enum Request {
+    Create { kind: String },
+    Step { id: u64, x: Vec<f32> },
+    Close { id: u64 },
+    Stats,
+    Shutdown,
+}
+
+pub type Reply = Result<Json>;
+
+pub struct ServerHandle {
+    pub tx: mpsc::Sender<(Request, mpsc::Sender<Reply>)>,
+}
+
+impl ServerHandle {
+    pub fn call(&self, req: Request) -> Reply {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send((req, rtx))
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// The executor: owns engine, models and all sessions. Runs until a
+/// Shutdown request arrives.
+pub fn run_executor(
+    artifacts: &Path,
+    rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
+) -> Result<()> {
+    let mut engine = Engine::new(artifacts)?;
+    let aaren = StreamModel::load_aaren(&mut engine)?;
+    let tf = StreamModel::load_tf(&mut engine)?;
+    let mut sessions: HashMap<u64, (Session, bool)> = HashMap::new(); // bool: is_aaren
+    let mut next_id = 1u64;
+
+    while let Ok((req, reply)) = rx.recv() {
+        let resp: Reply = (|| match req {
+            Request::Create { kind } => {
+                let (session, is_aaren) = match kind.as_str() {
+                    "aaren" => (Session::new_aaren(&aaren)?, true),
+                    "tf" => (Session::new_tf(&tf)?, false),
+                    other => return Err(anyhow!("unknown kind {other:?}")),
+                };
+                let id = next_id;
+                next_id += 1;
+                sessions.insert(id, (session, is_aaren));
+                Ok(obj(vec![("id", Json::Num(id as f64))]))
+            }
+            Request::Step { id, x } => {
+                let (session, is_aaren) =
+                    sessions.get_mut(&id).ok_or_else(|| anyhow!("no session {id}"))?;
+                let model = if *is_aaren { &aaren } else { &tf };
+                let y = session.step(model, &x)?;
+                Ok(obj(vec![
+                    ("y", Json::Arr(y.into_iter().map(|v| Json::Num(v as f64)).collect())),
+                    ("state_bytes", Json::Num(session.state_bytes() as f64)),
+                    ("t", Json::Num(session.tokens_seen() as f64)),
+                ]))
+            }
+            Request::Close { id } => {
+                sessions
+                    .remove(&id)
+                    .ok_or_else(|| anyhow!("no session {id}"))?;
+                Ok(obj(vec![("ok", Json::Bool(true))]))
+            }
+            Request::Stats => {
+                let total: usize = sessions.values().map(|(s, _)| s.state_bytes()).sum();
+                Ok(obj(vec![
+                    ("sessions", Json::Num(sessions.len() as f64)),
+                    ("total_state_bytes", Json::Num(total as f64)),
+                ]))
+            }
+            Request::Shutdown => Err(anyhow!("__shutdown__")),
+        })();
+        match &resp {
+            Err(e) if e.to_string() == "__shutdown__" => {
+                let _ = reply.send(Ok(obj(vec![("ok", Json::Bool(true))])));
+                break;
+            }
+            _ => {
+                let _ = reply.send(resp);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    match j.str_field("op")? {
+        "create" => Ok(Request::Create { kind: j.str_field("kind")?.to_string() }),
+        "step" => {
+            let id = j.usize_field("id")? as u64;
+            let x = j
+                .get("x")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing x"))?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                .collect();
+            Ok(Request::Step { id, x })
+        }
+        "close" => Ok(Request::Close { id: j.usize_field("id")? as u64 }),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+fn handle_conn(stream: TcpStream, handle: &ServerHandle) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = parse_request(&line).and_then(|req| handle.call(req));
+        let body = match resp {
+            Ok(j) => j.to_string(),
+            Err(e) => obj(vec![("error", Json::Str(format!("{e}")))]).to_string(),
+        };
+        if writer.write_all(body.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7878").
+pub fn serve(artifacts: &Path, addr: &str) -> Result<()> {
+    let (tx, rx) = mpsc::channel();
+    let handle = ServerHandle { tx };
+    let dir = artifacts.to_path_buf();
+    let executor = std::thread::spawn(move || run_executor(&dir, rx));
+
+    let listener = TcpListener::bind(addr)?;
+    println!("[serve] listening on {addr} (line-delimited JSON; ops: create/step/close/stats)");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let h = ServerHandle { tx: handle.tx.clone() };
+                std::thread::spawn(move || handle_conn(s, &h));
+            }
+            Err(e) => eprintln!("[serve] accept error: {e}"),
+        }
+    }
+    drop(handle);
+    executor.join().ok();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_protocol_requests() {
+        assert!(matches!(
+            parse_request(r#"{"op":"create","kind":"aaren"}"#).unwrap(),
+            Request::Create { .. }
+        ));
+        match parse_request(r#"{"op":"step","id":3,"x":[1.0,-2.5]}"#).unwrap() {
+            Request::Step { id, x } => {
+                assert_eq!(id, 3);
+                assert_eq!(x, vec![1.0, -2.5]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(parse_request(r#"{"op":"bogus"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn obj_builder_emits_valid_json() {
+        let j = obj(vec![("a", Json::Num(1.0)), ("b", Json::Bool(true))]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.usize_field("a").unwrap(), 1);
+    }
+}

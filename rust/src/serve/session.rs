@@ -1,0 +1,260 @@
+//! Streaming inference sessions — the paper's efficiency claims made
+//! executable (§3.3, §4.5, Figure 5).
+//!
+//! * `AarenSession`: per-token state is the (a, c, m) tuple per
+//!   (layer, head) — **constant memory**, one fixed-cost HLO step per
+//!   token.
+//! * `TfSession`: the KV-cache baseline — **linear memory**, per-token
+//!   cost proportional to the current cache bucket; buckets grow
+//!   (32 → 64 → … → 512) with cache migration, the standard serving
+//!   practice, so cumulative time is quadratic.
+//!
+//! State is kept as device-side literals returned by the previous step —
+//! the hot loop never round-trips state through host Vec<f32>.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::exec::{literal_to_f32, Engine, HostTensor, Module};
+use crate::runtime::manifest::Role;
+use crate::runtime::params::ParamStore;
+
+/// Buckets must mirror aot.py FIG5_BUCKETS.
+pub const TF_BUCKETS: [usize; 5] = [32, 64, 128, 256, 512];
+
+/// Cached per-model assets shared by all sessions of one variant.
+///
+/// Parameters are marshalled to literals ONCE and borrowed per step.
+/// (A device-resident PjRtBuffer variant via `execute_b` was measured
+/// during the perf pass but segfaults in the published xla 0.1.6 crate
+/// after ~70 repeated tuple-output executions — see EXPERIMENTS.md
+/// §Perf L3 for the analysis; the literal path is stable at 512+ tokens.)
+pub struct StreamModel {
+    /// step module(s): aaren has one; tf has one per bucket
+    modules: Vec<Rc<Module>>,
+    /// parameter literals in manifest order (built once)
+    param_literals: Vec<xla::Literal>,
+    pub channels: usize,
+}
+
+impl StreamModel {
+    pub fn load_aaren(engine: &mut Engine) -> Result<StreamModel> {
+        let module = engine.load("stream_aaren_step")?;
+        Self::build(vec![module])
+    }
+
+    pub fn load_tf(engine: &mut Engine) -> Result<StreamModel> {
+        let mut modules = Vec::new();
+        for b in TF_BUCKETS {
+            modules.push(engine.load(&format!("stream_tf_step_c{b}"))?);
+        }
+        Self::build(modules)
+    }
+
+    fn build(modules: Vec<Rc<Module>>) -> Result<StreamModel> {
+        let manifest = &modules[0].manifest;
+        let store = ParamStore::load(manifest)?;
+        let channels = manifest.meta_usize("channels", 8);
+        let mut model = StreamModel { modules, param_literals: Vec::new(), channels };
+        model.set_params(&store)?;
+        Ok(model)
+    }
+
+    /// Marshal (trained) weights once (same params_key layout).
+    pub fn set_params(&mut self, store: &ParamStore) -> Result<()> {
+        let manifest = &self.modules[0].manifest;
+        let mut literals = Vec::new();
+        let mut pi = 0usize;
+        for arg in &manifest.args {
+            if arg.role == Role::Param {
+                literals.push(
+                    HostTensor::F32(arg.shape.clone(), store.params[pi].clone())
+                        .to_literal()?,
+                );
+                pi += 1;
+            }
+        }
+        self.param_literals = literals;
+        Ok(())
+    }
+
+    fn module_for_bucket(&self, bucket_idx: usize) -> &Rc<Module> {
+        &self.modules[bucket_idx.min(self.modules.len() - 1)]
+    }
+}
+
+/// A live streaming session: constant-state Aaren or KV-cache Transformer.
+pub enum Session {
+    Aaren {
+        /// state literals in manifest state order (a, c, m)
+        state: Vec<xla::Literal>,
+        t: i32,
+    },
+    Tf {
+        state: Vec<xla::Literal>, // (k_cache, v_cache) for current bucket
+        t: i32,
+        bucket_idx: usize,
+    },
+}
+
+impl Session {
+    /// Fresh Aaren session: zero state per the §3.1 init (a=c=0, m=MASK_FILL).
+    pub fn new_aaren(model: &StreamModel) -> Result<Session> {
+        let manifest = &model.modules[0].manifest;
+        let mut state = Vec::new();
+        for arg in &manifest.args {
+            if arg.role == Role::State {
+                let n: usize = arg.elements();
+                // m is initialised to MASK_FILL, a and c to zero
+                let fill = if arg.name.ends_with(":m") { crate::scan::MASK_FILL } else { 0.0 };
+                state.push(HostTensor::F32(arg.shape.clone(), vec![fill; n]).to_literal()?);
+            }
+        }
+        Ok(Session::Aaren { state, t: 0 })
+    }
+
+    pub fn new_tf(model: &StreamModel) -> Result<Session> {
+        let manifest = &model.modules[0].manifest;
+        let mut state = Vec::new();
+        for arg in &manifest.args {
+            if arg.role == Role::State {
+                state.push(
+                    HostTensor::F32(arg.shape.clone(), vec![0.0; arg.elements()])
+                        .to_literal()?,
+                );
+            }
+        }
+        Ok(Session::Tf { state, t: 0, bucket_idx: 0 })
+    }
+
+    pub fn tokens_seen(&self) -> i32 {
+        match self {
+            Session::Aaren { t, .. } | Session::Tf { t, .. } => *t,
+        }
+    }
+
+    /// Bytes of per-session state currently held — the Figure-5 (left)
+    /// measurement, taken from the live literals.
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            Session::Aaren { state, .. } | Session::Tf { state, .. } => {
+                state.iter().map(|l| l.size_bytes()).sum()
+            }
+        }
+    }
+
+    /// Feed one token; returns the model's next-value prediction.
+    pub fn step(&mut self, model: &StreamModel, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != model.channels {
+            bail!("token has {} channels, model expects {}", x.len(), model.channels);
+        }
+        match self {
+            Session::Aaren { state, t } => {
+                let module = &model.modules[0];
+                let y = run_step(module, model, state, *t, x)?;
+                *t += 1;
+                Ok(y)
+            }
+            Session::Tf { state, t, bucket_idx } => {
+                // migrate to the next bucket when the cache is full
+                let cur_bucket = TF_BUCKETS[*bucket_idx];
+                if *t as usize >= cur_bucket {
+                    if *bucket_idx + 1 >= TF_BUCKETS.len() {
+                        bail!("tf session exceeded the largest cache bucket");
+                    }
+                    migrate_kv(state, model, *bucket_idx, *bucket_idx + 1)
+                        .context("kv bucket migration")?;
+                    *bucket_idx += 1;
+                }
+                let module = model.module_for_bucket(*bucket_idx);
+                let y = run_step(module, model, state, *t, x)?;
+                *t += 1;
+                Ok(y)
+            }
+        }
+    }
+}
+
+/// Execute a step module: args = params…, state…, t, x. Parameters are
+/// device-resident buffers (uploaded once); per-step we upload only the
+/// state + token tensors. Mutates `state` in place with the returned
+/// state literals and yields the prediction.
+fn run_step(
+    module: &Rc<Module>,
+    model: &StreamModel,
+    state: &mut [xla::Literal],
+    t: i32,
+    x: &[f32],
+) -> Result<Vec<f32>> {
+    let manifest = &module.manifest;
+    let t_lit = HostTensor::scalar_i32(t).to_literal()?;
+    let x_lit = HostTensor::F32(vec![x.len()], x.to_vec()).to_literal()?;
+    let mut args: Vec<&xla::Literal> = Vec::with_capacity(manifest.args.len());
+    let (mut pi, mut si, mut ii) = (0usize, 0usize, 0usize);
+    for arg in &manifest.args {
+        match arg.role {
+            Role::Param => {
+                args.push(&model.param_literals[pi]);
+                pi += 1;
+            }
+            Role::State => {
+                args.push(&state[si]);
+                si += 1;
+            }
+            Role::Input => {
+                args.push(if ii == 0 { &t_lit } else { &x_lit });
+                ii += 1;
+            }
+            other => bail!("unexpected role {other:?} in step module"),
+        }
+    }
+    let outputs = module.execute_refs(&args)?;
+    // outputs: state… then aux y
+    let mut y = Vec::new();
+    let mut si = 0usize;
+    for (spec, lit) in manifest.outputs.iter().zip(outputs.into_iter()) {
+        match spec.role {
+            Role::State => {
+                state[si] = lit;
+                si += 1;
+            }
+            Role::Aux => y = literal_to_f32(&lit)?,
+            _ => {}
+        }
+    }
+    Ok(y)
+}
+
+/// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
+/// (L, H, new, dh) cache — validated against the JAX model in
+/// python/tests/test_model.py::test_kv_bucket_migration_preserves_outputs.
+fn migrate_kv(
+    state: &mut [xla::Literal],
+    model: &StreamModel,
+    old_idx: usize,
+    new_idx: usize,
+) -> Result<()> {
+    let old_manifest = &model.modules[old_idx].manifest;
+    let new_manifest = &model.modules[new_idx].manifest;
+    let old_specs: Vec<_> = old_manifest.args.iter().filter(|a| a.role == Role::State).collect();
+    let new_specs: Vec<_> = new_manifest.args.iter().filter(|a| a.role == Role::State).collect();
+    for (i, (os, ns)) in old_specs.iter().zip(new_specs.iter()).enumerate() {
+        // shapes (L, H, ctx, dh)
+        let (l, h, octx, dh) = (os.shape[0], os.shape[1], os.shape[2], os.shape[3]);
+        let nctx = ns.shape[2];
+        let old_data = literal_to_f32(&state[i])?;
+        let mut new_data = vec![0.0f32; l * h * nctx * dh];
+        for li in 0..l {
+            for hi in 0..h {
+                for ci in 0..octx {
+                    let src = ((li * h + hi) * octx + ci) * dh;
+                    let dst = ((li * h + hi) * nctx + ci) * dh;
+                    new_data[dst..dst + dh].copy_from_slice(&old_data[src..src + dh]);
+                }
+            }
+        }
+        state[i] = HostTensor::F32(ns.shape.clone(), new_data).to_literal()?;
+    }
+    Ok(())
+}

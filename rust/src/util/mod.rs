@@ -1,0 +1,10 @@
+//! Dependency-free substrates: RNG, JSON, CLI parsing, property testing,
+//! micro-benchmarking. The offline build environment carries only the
+//! `xla` crate's transitive closure, so these are implemented in-tree
+//! (see DESIGN.md §Substrates).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,71 @@
+//! Property-testing harness (no proptest in the offline crate set):
+//! runs a property over many seeded random cases and reports the first
+//! failing seed so failures are exactly reproducible with
+//! `check_with_seed`.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop(rng)` for `cases` independent seeds; panic with the failing
+/// seed on the first failure (re-run that seed to shrink by hand).
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000_0000 ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}",);
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_with_seed<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property {name:?} failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("element {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("uniform is in range", 64, |rng| {
+            let u = rng.uniform();
+            if (0.0..1.0).contains(&u) {
+                Ok(())
+            } else {
+                Err(format!("{u} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.5], 0.1).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 0.1).is_ok());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 0.1).is_err());
+    }
+}
