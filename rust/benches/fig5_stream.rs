@@ -1,11 +1,18 @@
 //! Regenerates paper Figure 5: memory + cumulative time of streaming
 //! inference, Aaren (O(1) state) vs Transformer (KV cache buckets).
 //! AAREN_TOKENS sets the stream length (default 512).
+//!
+//! With the `pjrt` feature this drives the compiled HLO sessions over
+//! `artifacts/`; the default build measures the rust-native session pair
+//! instead — same claim, no XLA required.
 fn main() {
     let tokens = std::env::var("AAREN_TOKENS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(512);
+    #[cfg(feature = "pjrt")]
     aaren::bench_harness::run_fig5(std::path::Path::new("artifacts"), tokens)
         .expect("fig5 failed");
+    #[cfg(not(feature = "pjrt"))]
+    aaren::bench_harness::run_fig5_native(tokens, 8).expect("fig5 (native) failed");
 }

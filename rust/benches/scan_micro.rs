@@ -1,37 +1,116 @@
-//! Microbenchmarks for the paper's algorithmic core (ablation for
-//! DESIGN.md: Hillis–Steele O(N log N) vs Blelloch O(N) work, vs the
-//! sequential fold, plus the O(1) streaming update vs naive recompute —
-//! the §3.1 "methods for computing attention" comparison, rust-native).
+//! Microbenchmarks for the paper's algorithmic core: the SoA prefix-scan
+//! engine (sequential / Hillis–Steele / Blelloch / multi-threaded chunked)
+//! against the seed's allocating AoS sequential scan, plus the O(1)
+//! streaming update vs naive recompute (the §3.1 "methods for computing
+//! attention" comparison, rust-native).
+//!
+//! Emits a machine-readable `BENCH_scan.json` (schema:
+//! `util::bench::BenchRecord`) in the working directory so later PRs can
+//! track the perf trajectory. `speedup_vs_sequential` is relative to the
+//! SoA sequential scan at the same n — the acceptance bar is
+//! soa_sequential ≥ 2× aos_sequential (i.e. the aos row ≤ 0.5) and
+//! chunked_parallel > 1.0 on ≥ 4 threads at n = 4096.
+
 use aaren::attention;
-use aaren::scan::{self, Muw};
-use aaren::util::bench::{bench, print_result};
+use aaren::scan::{self, Muw, ScanBuffer};
+use aaren::util::bench::{bench, print_result, write_records, BenchRecord};
 use aaren::util::rng::Rng;
 
-fn leaves(rng: &mut Rng, n: usize, d: usize) -> Vec<Muw> {
-    (0..n)
-        .map(|_| Muw {
-            m: rng.range(-5.0, 5.0) as f32,
-            u: 1.0,
-            w: (0..d).map(|_| rng.gaussian() as f32).collect(),
-        })
-        .collect()
+/// The seed's array-of-structs sequential scan, kept verbatim as the
+/// baseline the SoA engine is measured against: one `combine` allocation
+/// plus one clone per element.
+mod aos_baseline {
+    use aaren::scan::{combine, Muw};
+
+    pub fn sequential(leaves: &[Muw]) -> Vec<Muw> {
+        let mut out = Vec::with_capacity(leaves.len());
+        let mut acc: Option<Muw> = None;
+        for leaf in leaves {
+            let next = match &acc {
+                None => leaf.clone(),
+                Some(a) => combine(a, leaf),
+            };
+            out.push(next.clone());
+            acc = Some(next);
+        }
+        out
+    }
+}
+
+fn leaves(rng: &mut Rng, n: usize, d: usize) -> ScanBuffer {
+    let mut buf = ScanBuffer::with_capacity(d, n);
+    for _ in 0..n {
+        let s = rng.range(-5.0, 5.0) as f32;
+        let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        buf.push_leaf(s, &v);
+    }
+    buf
 }
 
 fn main() {
     let d = 16;
-    println!("prefix scan over (m,u,w) tuples, d={d}:");
+    let cores = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    println!("prefix scan over (m,u,w) tuples, d={d} ({cores} cores):");
     for n in [64usize, 256, 1024, 4096] {
         let mut rng = Rng::new(n as u64);
         let ls = leaves(&mut rng, n, d);
-        for (name, algo) in [
-            ("sequential", scan::sequential as fn(&[Muw]) -> Vec<Muw>),
-            ("hillis_steele", scan::hillis_steele),
-            ("blelloch", scan::blelloch),
-        ] {
-            let r = bench(&format!("{name:<14} n={n}"), 2, 12, || {
-                std::hint::black_box(algo(&ls));
-            });
+        let ls_aos = ls.to_muws();
+
+        let mut variants: Vec<(String, Box<dyn FnMut() + '_>)> = vec![
+            (
+                "soa_sequential".into(),
+                Box::new(|| {
+                    std::hint::black_box(scan::sequential(&ls));
+                }),
+            ),
+            (
+                "aos_sequential".into(),
+                Box::new(|| {
+                    std::hint::black_box(aos_baseline::sequential(&ls_aos));
+                }),
+            ),
+            (
+                "soa_hillis_steele".into(),
+                Box::new(|| {
+                    std::hint::black_box(scan::hillis_steele(&ls));
+                }),
+            ),
+            (
+                "soa_blelloch".into(),
+                Box::new(|| {
+                    std::hint::black_box(scan::blelloch(&ls));
+                }),
+            ),
+        ];
+        for threads in [2usize, 4, 8] {
+            if threads > cores.max(2) {
+                continue;
+            }
+            let ls_ref = &ls;
+            variants.push((
+                format!("chunked_parallel_t{threads}"),
+                Box::new(move || {
+                    std::hint::black_box(scan::chunked_parallel(ls_ref, threads));
+                }),
+            ));
+        }
+
+        let mut seq_ns = 0.0f64;
+        for (name, f) in variants.iter_mut() {
+            let r = bench(&format!("{name:<22} n={n}"), 2, 12, f);
             print_result(&r);
+            if name.as_str() == "soa_sequential" {
+                seq_ns = r.mean_ns;
+            }
+            records.push(BenchRecord {
+                name: name.clone(),
+                n,
+                d,
+                ns_per_iter: r.mean_ns,
+                speedup_vs_sequential: if seq_ns > 0.0 { seq_ns / r.mean_ns } else { 1.0 },
+            });
         }
     }
 
@@ -43,15 +122,21 @@ fn main() {
         let v: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
         // O(1): fold one token into the carried (a,c,m) state
         let mut acc = Muw::identity(d);
-        let r = bench(&format!("{:<14} n={n}", "rnn_fold O(1)"), 8, 64, || {
+        let r = bench(&format!("{:<22} n={n}", "rnn_fold O(1)"), 8, 64, || {
             scan::fold_token(&mut acc, 0.3, &v[..d]);
             std::hint::black_box(&acc);
         });
         print_result(&r);
         // O(n): recompute attention over the full prefix (transformer view)
-        let r = bench(&format!("{:<14} n={n}", "recompute O(n)"), 2, 16, || {
+        let r = bench(&format!("{:<22} n={n}", "recompute O(n)"), 2, 16, || {
             std::hint::black_box(attention::many_to_one(&q, &k, &v, None));
         });
         print_result(&r);
+    }
+
+    let out = std::path::Path::new("BENCH_scan.json");
+    match write_records(out, &records) {
+        Ok(()) => println!("\nwrote {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
     }
 }

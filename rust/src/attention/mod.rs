@@ -6,8 +6,35 @@
 //!   3. microbench baselines for fig5 (many-to-one recompute vs O(1) fold).
 //!
 //! Layout convention: `k`/`v` are row-major (n, d) flat slices.
+//!
+//! The prefix (many-to-many) paths are fused onto the SoA scan engine:
+//! scores are computed inline while filling the flat `ScanBuffer` (or the
+//! O(1) `Muw` accumulator), so per-token leaf tuples are never
+//! materialized — no `Vec<Muw>` and no intermediate score vector on the
+//! hot path.
 
-use crate::scan::{fold_token, Muw, MASK_FILL};
+use crate::scan::{self, fold_token, Muw, ScanBuffer, MASK_FILL};
+
+/// Which prefix-scan engine computes the many-to-many outputs.
+/// See `crate::scan` module docs for the work/depth trade-offs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanStrategy {
+    /// O(N) single-core left fold — lowest constant.
+    Sequential,
+    /// O(N log N) work / log N depth (the paper's Algorithm 1).
+    HillisSteele,
+    /// O(N) work / 2 log N depth tree scan.
+    Blelloch,
+    /// Multi-threaded chunked scan with this many chunks.
+    Chunked(usize),
+    /// Chunked with one chunk per available core.
+    ChunkedAuto,
+}
+
+#[inline]
+fn dot_scaled(q: &[f32], k_row: &[f32], scale: f32) -> f32 {
+    q.iter().zip(k_row.iter()).map(|(a, b)| a * b).sum::<f32>() * scale
+}
 
 /// s_i = <q, k_i>/sqrt(d) with optional {0,1} mask (masked -> MASK_FILL).
 pub fn scores(q: &[f32], k: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
@@ -21,10 +48,26 @@ pub fn scores(q: &[f32], k: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
                     return MASK_FILL;
                 }
             }
-            let row = &k[i * d..(i + 1) * d];
-            row.iter().zip(q.iter()).map(|(a, b)| a * b).sum::<f32>() * scale
+            dot_scaled(q, &k[i * d..(i + 1) * d], scale)
         })
         .collect()
+}
+
+/// Fill a flat SoA leaf buffer with (s_i, 1, v_i) tuples, computing the
+/// scores inline — the leaves exist only as rows of the returned
+/// `ScanBuffer`, never as owned per-token tuples.
+pub fn leaf_buffer(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> ScanBuffer {
+    let d = q.len();
+    let n = k.len() / d;
+    let dv = if n == 0 { 0 } else { v.len() / n };
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut buf = ScanBuffer::with_capacity(dv, n);
+    for i in 0..n {
+        let masked = mask.is_some_and(|m| m[i] <= 0.0);
+        let s = if masked { MASK_FILL } else { dot_scaled(q, &k[i * d..(i + 1) * d], scale) };
+        buf.push_leaf(s, &v[i * dv..(i + 1) * dv]);
+    }
+    buf
 }
 
 /// Conventional many-to-one attention: softmax(s) @ v over the whole
@@ -48,24 +91,50 @@ pub fn many_to_one(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec
 }
 
 /// Many-to-many prefix attention via the recurrent O(1)-state fold
-/// (§3.1's RNN cell applied token-by-token). Returns (n, dv) flat.
-pub fn prefix_recurrent(
+/// (§3.1's RNN cell applied token-by-token). Score computation is fused
+/// into the fold loop — no score vector, no leaf tuples, one `Muw`
+/// accumulator and the preallocated output. Returns (n, dv) flat.
+pub fn prefix_recurrent(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
+    let d = q.len();
+    let n = k.len() / d;
+    if n == 0 {
+        return Vec::new();
+    }
+    let dv = v.len() / n;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut acc = Muw::identity(dv);
+    let mut out = vec![0.0f32; n * dv];
+    for i in 0..n {
+        let masked = mask.is_some_and(|m| m[i] <= 0.0);
+        let s = if masked { MASK_FILL } else { dot_scaled(q, &k[i * d..(i + 1) * d], scale) };
+        fold_token(&mut acc, s, &v[i * dv..(i + 1) * dv]);
+        acc.output_into(&mut out[i * dv..(i + 1) * dv]);
+    }
+    out
+}
+
+/// Many-to-many prefix attention through a parallel prefix scan over the
+/// flat SoA buffer (§5: any prefix-scan algorithm computes Aaren's
+/// outputs). Returns (n, dv) flat.
+pub fn prefix_scan(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     mask: Option<&[f32]>,
+    strategy: ScanStrategy,
 ) -> Vec<f32> {
-    let d = q.len();
-    let n = k.len() / d;
-    let dv = v.len() / n;
-    let s = scores(q, k, mask);
-    let mut acc = Muw::identity(dv);
-    let mut out = Vec::with_capacity(n * dv);
-    for i in 0..n {
-        fold_token(&mut acc, s[i], &v[i * dv..(i + 1) * dv]);
-        out.extend(acc.output());
-    }
-    out
+    let mut leaves = leaf_buffer(q, k, v, mask);
+    let scanned = match strategy {
+        ScanStrategy::Sequential => {
+            scan::sequential_inplace(&mut leaves);
+            leaves
+        }
+        ScanStrategy::HillisSteele => scan::hillis_steele(&leaves),
+        ScanStrategy::Blelloch => scan::blelloch(&leaves),
+        ScanStrategy::Chunked(c) => scan::chunked_parallel(&leaves, c),
+        ScanStrategy::ChunkedAuto => scan::chunked_parallel_auto(&leaves),
+    };
+    scanned.outputs()
 }
 
 /// Many-to-many prefix attention the naive way: one full softmax per
@@ -137,13 +206,7 @@ pub fn causal_self_attention_nd(q: &[f32], k: &[f32], v: &[f32], n: usize, d: us
     for i in 0..n {
         let qi = &q[i * d..(i + 1) * d];
         let mut s: Vec<f32> = (0..=i)
-            .map(|j| {
-                qi.iter()
-                    .zip(k[j * d..(j + 1) * d].iter())
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>()
-                    * scale
-            })
+            .map(|j| dot_scaled(qi, &k[j * d..(j + 1) * d], scale))
             .collect();
         let mx = s.iter().cloned().fold(f32::MIN, f32::max);
         let mut z = 0.0f32;
@@ -171,6 +234,14 @@ mod tests {
     fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| rng.gaussian() as f32).collect()
     }
+
+    const STRATEGIES: [ScanStrategy; 5] = [
+        ScanStrategy::Sequential,
+        ScanStrategy::HillisSteele,
+        ScanStrategy::Blelloch,
+        ScanStrategy::Chunked(4),
+        ScanStrategy::ChunkedAuto,
+    ];
 
     #[test]
     fn recurrent_prefix_matches_naive() {
@@ -206,6 +277,62 @@ mod tests {
     }
 
     #[test]
+    fn prefix_scan_matches_naive_for_every_strategy() {
+        prop::check("prefix_scan == prefix_naive", 48, |rng| {
+            let (n, d) = (1 + rng.below(48), 1 + rng.below(8));
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let want = prefix_naive(&q, &k, &v, None);
+            for strategy in STRATEGIES {
+                prop::assert_close(&prefix_scan(&q, &k, &v, None, strategy), &want, 1e-4)
+                    .map_err(|e| format!("{strategy:?}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefix_scan_matches_naive_with_mask() {
+        prop::check("masked prefix_scan", 48, |rng| {
+            let (n, d) = (2 + rng.below(32), 4);
+            let q = randv(rng, d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let mask: Vec<f32> = (0..n)
+                .map(|_| if rng.uniform() < 0.7 { 1.0 } else { 0.0 })
+                .collect();
+            let want = prefix_naive(&q, &k, &v, Some(&mask));
+            for strategy in STRATEGIES {
+                prop::assert_close(&prefix_scan(&q, &k, &v, Some(&mask), strategy), &want, 1e-4)
+                    .map_err(|e| format!("{strategy:?}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fully_masked_prefix_is_finite_and_matches_naive() {
+        // regression for the u == 0 output guard: an all-masked context
+        // must stay finite on every path and agree with the naive oracle.
+        let mut rng = Rng::new(21);
+        let (n, d) = (12, 4);
+        let q = randv(&mut rng, d);
+        let k = randv(&mut rng, n * d);
+        let v = randv(&mut rng, n * d);
+        let mask = vec![0.0f32; n];
+        let want = prefix_naive(&q, &k, &v, Some(&mask));
+        let got = prefix_recurrent(&q, &k, &v, Some(&mask));
+        assert!(got.iter().all(|x| x.is_finite()), "masked prefix produced non-finite");
+        prop::assert_close(&got, &want, 1e-4).unwrap();
+        for strategy in STRATEGIES {
+            let got = prefix_scan(&q, &k, &v, Some(&mask), strategy);
+            assert!(got.iter().all(|x| x.is_finite()), "{strategy:?} non-finite");
+            prop::assert_close(&got, &want, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
     fn blocked_matches_full_for_every_block_size() {
         // Appendix A: any block size gives the same many-to-one output.
         prop::check("block-by-block == full", 48, |rng| {
@@ -216,8 +343,7 @@ mod tests {
             let want = many_to_one(&q, &k, &v, None);
             for b in [1usize, 2, 3, 5, 8, n.max(1)] {
                 let got = many_to_one_blocked(&q, &k, &v, None, b);
-                prop::assert_close(&got, &want, 1e-4)
-                    .map_err(|e| format!("b={b}: {e}"))?;
+                prop::assert_close(&got, &want, 1e-4).map_err(|e| format!("b={b}: {e}"))?;
             }
             Ok(())
         });
@@ -245,6 +371,28 @@ mod tests {
         let v = randv(&mut rng, n * d);
         for x in prefix_recurrent(&q, &k, &v, None) {
             assert!(x.is_finite());
+        }
+        for x in prefix_scan(&q, &k, &v, None, ScanStrategy::ChunkedAuto) {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn leaf_buffer_matches_scores() {
+        let mut rng = Rng::new(8);
+        let (n, d) = (20, 4);
+        let q = randv(&mut rng, d);
+        let k = randv(&mut rng, n * d);
+        let v = randv(&mut rng, n * d);
+        let mask: Vec<f32> = (0..n).map(|i| (i % 3 != 0) as u8 as f32).collect();
+        let buf = leaf_buffer(&q, &k, &v, Some(&mask));
+        let s = scores(&q, &k, Some(&mask));
+        assert_eq!(buf.len(), n);
+        for i in 0..n {
+            let (m, u, w) = buf.row(i);
+            assert_eq!(m, s[i]);
+            assert_eq!(u, 1.0);
+            assert_eq!(w, &v[i * d..(i + 1) * d]);
         }
     }
 

@@ -1,17 +1,17 @@
 //! Figure 5: memory usage (left) and cumulative time (right) of Aaren vs
 //! Transformer+KV-cache when processing a token stream.
 //!
-//! Memory is measured from the live session state literals (exact bytes
-//! held per session); time is wall-clock over the compiled HLO steps. The
-//! paper's claim is about *shape*: constant vs linear memory, linear vs
-//! quadratic cumulative time — both reproduce on CPU PJRT.
+//! Memory is measured from the live session state (exact bytes held per
+//! session); time is wall-clock per step. The paper's claim is about
+//! *shape*: constant vs linear memory, linear vs quadratic cumulative
+//! time. Both the compiled-HLO tier (`pjrt` feature) and the rust-native
+//! session fallback reproduce it; the native path runs on any build.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::serve::session::{Session, StreamModel};
-use crate::runtime::exec::Engine;
+use crate::serve::session::{NativeAarenSession, NativeTfSession};
 use crate::util::bench::print_table;
 use crate::util::rng::Rng;
 
@@ -23,40 +23,47 @@ pub struct Fig5Point {
     pub tf_cum_ms: f64,
 }
 
-/// Stream `n_tokens` through both session kinds, sampling at `checkpoints`.
-pub fn measure(
-    engine: &mut Engine,
+/// The sampling grid both tiers use, clipped to the stream length.
+pub fn default_checkpoints(n_tokens: usize) -> Vec<usize> {
+    [1, 2, 4, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512]
+        .into_iter()
+        .filter(|&c| c <= n_tokens)
+        .collect()
+}
+
+/// Shared measurement loop: stream `n_tokens` seeded-random tokens
+/// through two sessions, timing each step and sampling (state bytes,
+/// cumulative ms) at `checkpoints`. Each closure feeds its session one
+/// token and returns the session's current state size in bytes.
+fn measure_with(
     n_tokens: usize,
+    channels: usize,
     checkpoints: &[usize],
+    mut aaren_step: impl FnMut(&[f32]) -> Result<usize>,
+    mut tf_step: impl FnMut(&[f32]) -> Result<usize>,
 ) -> Result<Vec<Fig5Point>> {
-    let aaren_model = StreamModel::load_aaren(engine)?;
-    let tf_model = StreamModel::load_tf(engine)?;
-    let channels = aaren_model.channels;
     let mut rng = Rng::new(5);
     let tokens: Vec<Vec<f32>> = (0..n_tokens)
         .map(|_| (0..channels).map(|_| rng.gaussian() as f32).collect())
         .collect();
-
-    let mut aaren = Session::new_aaren(&aaren_model)?;
-    let mut tf = Session::new_tf(&tf_model)?;
 
     let mut points = Vec::new();
     let mut aaren_cum = 0.0f64;
     let mut tf_cum = 0.0f64;
     for (i, tok) in tokens.iter().enumerate() {
         let t0 = Instant::now();
-        aaren.step(&aaren_model, tok)?;
+        let aaren_bytes = aaren_step(tok)?;
         aaren_cum += t0.elapsed().as_secs_f64() * 1e3;
 
         let t0 = Instant::now();
-        tf.step(&tf_model, tok)?;
+        let tf_bytes = tf_step(tok)?;
         tf_cum += t0.elapsed().as_secs_f64() * 1e3;
 
         if checkpoints.contains(&(i + 1)) {
             points.push(Fig5Point {
                 tokens: i + 1,
-                aaren_bytes: aaren.state_bytes(),
-                tf_bytes: tf.state_bytes(),
+                aaren_bytes,
+                tf_bytes,
                 aaren_cum_ms: aaren_cum,
                 tf_cum_ms: tf_cum,
             });
@@ -65,13 +72,7 @@ pub fn measure(
     Ok(points)
 }
 
-pub fn run_fig5(artifacts: &std::path::Path, n_tokens: usize) -> Result<Vec<Fig5Point>> {
-    let mut engine = Engine::new(artifacts)?;
-    let checkpoints: Vec<usize> = [1, 2, 4, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512]
-        .into_iter()
-        .filter(|&c| c <= n_tokens)
-        .collect();
-    let points = measure(&mut engine, n_tokens, &checkpoints)?;
+fn print_points(title: &str, points: &[Fig5Point]) {
     let rows: Vec<Vec<String>> = points
         .iter()
         .map(|p| {
@@ -85,7 +86,7 @@ pub fn run_fig5(artifacts: &std::path::Path, n_tokens: usize) -> Result<Vec<Fig5
         })
         .collect();
     print_table(
-        "Figure 5: streaming memory (bytes of session state) and cumulative time (ms)",
+        title,
         &["tokens", "Aaren bytes", "TF(KV) bytes", "Aaren cum ms", "TF(KV) cum ms"],
         &rows,
     );
@@ -117,5 +118,127 @@ pub fn run_fig5(artifacts: &std::path::Path, n_tokens: usize) -> Result<Vec<Fig5
              (paper: ~1 linear), TF {tf_p:.2} (paper: ~2 quadratic)"
         );
     }
+}
+
+/// Stream `n_tokens` through the rust-native session pair (no XLA),
+/// sampling at `checkpoints`. The Aaren side is the O(1) `Muw` fold; the
+/// TF side recomputes attention over its growing KV cache.
+pub fn measure_native(
+    n_tokens: usize,
+    channels: usize,
+    checkpoints: &[usize],
+) -> Result<Vec<Fig5Point>> {
+    let mut aaren = NativeAarenSession::new(channels);
+    let mut tf = NativeTfSession::new(channels);
+    measure_with(
+        n_tokens,
+        channels,
+        checkpoints,
+        |tok| {
+            aaren.step(tok)?;
+            Ok(aaren.state_bytes())
+        },
+        |tok| {
+            tf.step(tok)?;
+            Ok(tf.state_bytes())
+        },
+    )
+}
+
+/// Rust-native Figure-5 run: measure, print the table + shape summary.
+/// The native TF baseline tops out at the largest KV bucket, so streams
+/// longer than that are clamped (with a notice) to keep both columns
+/// comparable; the pjrt path instead errors past the largest bucket.
+pub fn run_fig5_native(n_tokens: usize, channels: usize) -> Result<Vec<Fig5Point>> {
+    let max_tokens = crate::serve::TF_BUCKETS[crate::serve::TF_BUCKETS.len() - 1];
+    if n_tokens > max_tokens {
+        println!(
+            "note: clamping stream length {n_tokens} -> {max_tokens} \
+             (largest native TF KV bucket)"
+        );
+    }
+    let n_tokens = n_tokens.min(max_tokens);
+    let points = measure_native(n_tokens, channels, &default_checkpoints(n_tokens))?;
+    print_points(
+        "Figure 5 (rust-native sessions): streaming memory (bytes) and cumulative time (ms)",
+        &points,
+    );
     Ok(points)
+}
+
+#[cfg(feature = "pjrt")]
+pub use hlo::{measure, run_fig5};
+
+#[cfg(feature = "pjrt")]
+mod hlo {
+    use super::*;
+    use crate::runtime::exec::Engine;
+    use crate::serve::session::{Session, StreamModel};
+
+    /// Stream `n_tokens` through both HLO session kinds, sampling at
+    /// `checkpoints`.
+    pub fn measure(
+        engine: &mut Engine,
+        n_tokens: usize,
+        checkpoints: &[usize],
+    ) -> Result<Vec<Fig5Point>> {
+        let aaren_model = StreamModel::load_aaren(engine)?;
+        let tf_model = StreamModel::load_tf(engine)?;
+        let channels = aaren_model.channels;
+        let mut aaren = Session::new_aaren(&aaren_model)?;
+        let mut tf = Session::new_tf(&tf_model)?;
+        measure_with(
+            n_tokens,
+            channels,
+            checkpoints,
+            |tok| {
+                aaren.step(&aaren_model, tok)?;
+                Ok(aaren.state_bytes())
+            },
+            |tok| {
+                tf.step(&tf_model, tok)?;
+                Ok(tf.state_bytes())
+            },
+        )
+    }
+
+    pub fn run_fig5(artifacts: &std::path::Path, n_tokens: usize) -> Result<Vec<Fig5Point>> {
+        let mut engine = Engine::new(artifacts)?;
+        let points = measure(&mut engine, n_tokens, &default_checkpoints(n_tokens))?;
+        print_points(
+            "Figure 5: streaming memory (bytes of session state) and cumulative time (ms)",
+            &points,
+        );
+        Ok(points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_fig5_reproduces_the_paper_shape() {
+        let points = measure_native(48, 4, &[1, 16, 48]).unwrap();
+        assert_eq!(points.len(), 3);
+        // Aaren: constant memory
+        assert_eq!(points[0].aaren_bytes, points[2].aaren_bytes);
+        // TF: memory grows (48 tokens crosses the 32-token bucket)
+        assert!(points[2].tf_bytes > points[0].tf_bytes);
+        // cumulative times are monotone
+        assert!(points[2].aaren_cum_ms >= points[1].aaren_cum_ms);
+        assert!(points[2].tf_cum_ms >= points[1].tf_cum_ms);
+    }
+
+    #[test]
+    fn native_fig5_clamps_overlong_streams() {
+        let points = run_fig5_native(100_000, 2).unwrap();
+        assert_eq!(points.last().unwrap().tokens, 512);
+    }
+
+    #[test]
+    fn checkpoints_clip_to_stream_length() {
+        assert_eq!(default_checkpoints(10), vec![1, 2, 4, 8]);
+        assert!(default_checkpoints(512).contains(&512));
+    }
 }

@@ -2,9 +2,19 @@
 //! experiment driver over datasets × {Transformer, Aaren} × seeds and
 //! prints a table in the paper's layout (mean ± std). Shared by the
 //! `aaren bench …` CLI and the `cargo bench` targets.
+//!
+//! The table harnesses execute compiled HLO and need the `pjrt` feature;
+//! `fig5` additionally carries a rust-native measurement path
+//! ([`fig5::run_fig5_native`]) that reproduces the Figure-5 *shape*
+//! (constant vs linear memory, linear vs quadratic cumulative time) on
+//! any build.
 
 pub mod fig5;
+#[cfg(feature = "pjrt")]
 pub mod tables;
 
+pub use fig5::run_fig5_native;
+#[cfg(feature = "pjrt")]
 pub use fig5::run_fig5;
+#[cfg(feature = "pjrt")]
 pub use tables::{run_params, run_table1, run_table2, run_table3, run_table4, BenchOpts};

@@ -1,48 +1,100 @@
 //! The paper's algorithmic core in pure Rust: the associative operator ⊕
-//! over (m, u, w) tuples (Appendix B) and three prefix-scan strategies —
-//! sequential (the §3.1 RNN view), Hillis–Steele (Algorithm 1,
-//! O(N log N) work / log N depth) and Blelloch (Ladner–Fischer style,
-//! O(N) work / 2 log N depth; §5 discusses the trade-off).
+//! over (m, u, w) tuples (Appendix B) and four prefix-scan strategies over
+//! the flat SoA [`ScanBuffer`] — sequential (the §3.1 RNN view),
+//! Hillis–Steele (Algorithm 1), Blelloch (Ladner–Fischer style) and a
+//! multi-threaded chunked scan (the CPU analogue of the paper's claim
+//! that any parallel prefix-scan algorithm computes Aaren's outputs, §5).
 //!
-//! These are the executable specification the AOT kernels are tested
-//! against, and the engine behind the rust-native streaming oracle in
-//! `crate::attention`.
+//! # SoA layout
+//!
+//! Every strategy operates on [`ScanBuffer`]: three contiguous buffers
+//! `m: [f32; n]`, `u: [f32; n]`, `w: [f32; n*d]` (row-major). No strategy
+//! allocates per element — sweeps are linear walks over flat memory,
+//! Hillis–Steele ping-pongs two preallocated buffers, Blelloch mutates one
+//! padded buffer in place, and the chunked scan hands each worker thread a
+//! disjoint `&mut` window of a single allocation. The owned [`Muw`] tuple
+//! survives only as the O(1)-state view for streaming folds
+//! ([`fold_token`]).
+//!
+//! # Choosing a strategy
+//!
+//! | strategy            | work       | depth        | when it wins                          |
+//! |---------------------|------------|--------------|---------------------------------------|
+//! | [`sequential`]      | O(N)       | O(N)         | single core; small N; lowest constant |
+//! | [`hillis_steele`]   | O(N log N) | O(log N)     | wide SIMD/SIMT hardware (the paper's Algorithm 1); on CPU its extra work loses to `sequential` |
+//! | [`blelloch`]        | O(N)       | O(2 log N)   | work-optimal tree scan; on CPU the strided access pattern still trails `sequential` — kept as the executable spec the accelerator kernels mirror |
+//! | [`chunked_parallel`]| O(N)       | O(N/C + C)   | multi-core CPU: near-linear speedup once N/C amortises thread spawn (N ≳ a few thousand) |
+//!
+//! The chunked scan is the classic three-phase decomposition:
+//!
+//! 1. split the sequence into C contiguous chunks and sequentially scan
+//!    each chunk on its own `std::thread::scope` worker (no sharing — each
+//!    worker owns a disjoint window of the output buffer);
+//! 2. sequentially scan the C chunk-final tuples ("carries") — C is tiny,
+//!    so this serial step is negligible;
+//! 3. broadcast-combine carry k−1 into every element of chunk k (again one
+//!    worker per chunk, reading the shared carry row).
+//!
+//! Phases 1 and 3 touch each element exactly once ⇒ O(N) total work like
+//! `sequential`, but spread over C cores. These pure-Rust scans are the
+//! executable specification the AOT Pallas kernels are tested against,
+//! and the engine behind the rust-native streaming fallback in
+//! `crate::serve`.
 
 pub mod ops;
+pub mod soa;
 
-pub use ops::{combine, combine_into, fold_token, Muw, MASK_FILL};
+pub use ops::{
+    combine, combine_into, combine_rows, fold_row, fold_token, scan_rows_inplace, Muw, MASK_FILL,
+};
+pub use soa::ScanBuffer;
 
-/// Sequential left-fold prefix scan — the ground truth.
-pub fn sequential(leaves: &[Muw]) -> Vec<Muw> {
-    let mut out = Vec::with_capacity(leaves.len());
-    let mut acc: Option<Muw> = None;
-    for leaf in leaves {
-        let next = match &acc {
-            None => leaf.clone(),
-            Some(a) => combine(a, leaf),
-        };
-        out.push(next.clone());
-        acc = Some(next);
-    }
+/// Sequential left-fold inclusive prefix scan — the ground truth. One
+/// linear pass, one output allocation, zero per-element allocation.
+pub fn sequential(src: &ScanBuffer) -> ScanBuffer {
+    let mut out = src.clone();
+    sequential_inplace(&mut out);
     out
 }
 
-/// Hillis–Steele inclusive scan (the paper's Algorithm 1): log2(N) sweeps,
-/// each combining element j with element j - 2^i. O(N log N) work but only
-/// ceil(log2 N) dependent steps — the variant the paper presents because it
-/// maps directly onto wide SIMD/SIMT hardware.
-pub fn hillis_steele(leaves: &[Muw]) -> Vec<Muw> {
-    let n = leaves.len();
-    let mut z: Vec<Muw> = leaves.to_vec();
-    let mut z_next: Vec<Muw> = z.clone();
+/// Sequential scan in place: row i := row i−1 ⊕ row i. The zero-copy form
+/// consumers use when they own the leaf buffer (and the per-chunk kernel
+/// of [`chunked_parallel`]).
+pub fn sequential_inplace(buf: &mut ScanBuffer) {
+    let d = buf.dim();
+    scan_rows_inplace(&mut buf.m, &mut buf.u, &mut buf.w, d);
+}
+
+/// Hillis–Steele inclusive scan (the paper's Algorithm 1): ceil(log2 N)
+/// sweeps, each combining element j with element j − 2^i. O(N log N) work
+/// but only log N dependent steps — the variant the paper presents because
+/// it maps directly onto wide SIMD/SIMT hardware. Ping-pongs two
+/// preallocated SoA buffers; no sweep allocates or clones tuples.
+pub fn hillis_steele(src: &ScanBuffer) -> ScanBuffer {
+    let n = src.len();
+    let d = src.dim();
+    let mut z = src.clone();
+    let mut z_next = src.clone();
     let mut off = 1usize;
     while off < n {
-        for j in 0..n {
-            if j < off {
-                z_next[j] = z[j].clone();
-            } else {
-                combine_into(&z[j - off], &z[j], &mut z_next[j]);
-            }
+        // rows < off are already final for this sweep: bulk-copy them
+        z_next.m[..off].copy_from_slice(&z.m[..off]);
+        z_next.u[..off].copy_from_slice(&z.u[..off]);
+        z_next.w[..off * d].copy_from_slice(&z.w[..off * d]);
+        for j in off..n {
+            let (wa, wb) = (&z.w[(j - off) * d..(j - off + 1) * d], &z.w[j * d..(j + 1) * d]);
+            let (mo, rest_u) = (&mut z_next.m[j], &mut z_next.u[j]);
+            combine_rows(
+                z.m[j - off],
+                z.u[j - off],
+                wa,
+                z.m[j],
+                z.u[j],
+                wb,
+                mo,
+                rest_u,
+                &mut z_next.w[j * d..(j + 1) * d],
+            );
         }
         std::mem::swap(&mut z, &mut z_next);
         off <<= 1;
@@ -51,28 +103,24 @@ pub fn hillis_steele(leaves: &[Muw]) -> Vec<Muw> {
 }
 
 /// Blelloch two-phase (up-sweep / down-sweep) inclusive scan: O(N) work,
-/// 2·log2(N) − 2 dependent steps (Ladner & Fischer, 1980). The paper notes
-/// (§5) any prefix-scan algorithm computes Aaren's outputs; we carry both
-/// to benchmark the work/depth trade-off (bench `scan_micro`).
-pub fn blelloch(leaves: &[Muw]) -> Vec<Muw> {
-    let n = leaves.len();
+/// 2·log2(N) − 2 dependent steps (Ladner & Fischer, 1980). Pads to a
+/// power of two with identity elements and mutates a single SoA buffer in
+/// place — no per-step clones.
+pub fn blelloch(src: &ScanBuffer) -> ScanBuffer {
+    let n = src.len();
     if n == 0 {
-        return Vec::new();
+        return ScanBuffer::new(src.dim());
     }
-    // pad to a power of two with identity elements
     let np = n.next_power_of_two();
-    let dim = leaves[0].w.len();
-    let mut tree: Vec<Muw> = leaves.to_vec();
-    tree.resize(np, Muw::identity(dim));
+    let mut tree = src.clone();
+    tree.resize(np);
 
     // up-sweep: tree[j] at stride s accumulates its left sibling
     let mut s = 1usize;
     while s < np {
         let mut j = 2 * s - 1;
         while j < np {
-            let left = tree[j - s].clone();
-            let cur = tree[j].clone();
-            combine_into(&left, &cur, &mut tree[j]);
+            tree.fold_left_into(j - s, j);
             j += 2 * s;
         }
         s <<= 1;
@@ -82,9 +130,7 @@ pub fn blelloch(leaves: &[Muw]) -> Vec<Muw> {
     while s >= 1 {
         let mut j = 3 * s - 1;
         while j < np {
-            let left = tree[j - s].clone();
-            let cur = tree[j].clone();
-            combine_into(&left, &cur, &mut tree[j]);
+            tree.fold_left_into(j - s, j);
             j += 2 * s;
         }
         if s == 1 {
@@ -92,8 +138,95 @@ pub fn blelloch(leaves: &[Muw]) -> Vec<Muw> {
         }
         s >>= 1;
     }
-    tree.truncate(n);
+    tree.resize(n);
     tree
+}
+
+/// Multi-threaded chunked inclusive scan: split into `num_chunks`
+/// contiguous chunks, sequentially scan each on its own scoped thread,
+/// scan the chunk carries, then broadcast-combine each carry into the next
+/// chunk (again in parallel). O(N) work, ~N/C + C depth — near-linear
+/// speedup on C cores for N large enough to amortise thread spawn.
+///
+/// Any `num_chunks` is valid: it is clamped to [1, n], and n need not be
+/// divisible by it (the final chunk is short).
+pub fn chunked_parallel(src: &ScanBuffer, num_chunks: usize) -> ScanBuffer {
+    let n = src.len();
+    let d = src.dim();
+    if n == 0 {
+        return ScanBuffer::new(d);
+    }
+    let chunk = n.div_ceil(num_chunks.clamp(1, n));
+    let nchunks = n.div_ceil(chunk);
+    let mut out = src.clone();
+    if nchunks == 1 {
+        sequential_inplace(&mut out);
+        return out;
+    }
+
+    // phase 1: independent sequential scan of each chunk, in place on
+    // disjoint &mut windows of the one output allocation
+    std::thread::scope(|scope| {
+        for (ms, us, ws) in chunk_views(&mut out, chunk, d, 0) {
+            scope.spawn(move || scan_rows_inplace(ms, us, ws, d));
+        }
+    });
+
+    // phase 2: scan the chunk-final carries (nchunks elements — serial)
+    let mut carries = ScanBuffer::with_capacity(d, nchunks);
+    for k in 0..nchunks {
+        let last = ((k + 1) * chunk).min(n) - 1;
+        let (m, u, w) = out.row(last);
+        carries.push_tuple(m, u, w);
+    }
+    sequential_inplace(&mut carries);
+
+    // phase 3: broadcast carry k−1 into every element of chunk k
+    std::thread::scope(|scope| {
+        let carries = &carries;
+        for (k, (ms, us, ws)) in chunk_views(&mut out, chunk, d, 1).into_iter().enumerate() {
+            let (cm, cu, cw) = carries.row(k);
+            scope.spawn(move || {
+                for i in 0..ms.len() {
+                    fold_row(cm, cu, cw, &mut ms[i], &mut us[i], &mut ws[i * d..(i + 1) * d]);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// [`chunked_parallel`] with one chunk per available core.
+pub fn chunked_parallel_auto(src: &ScanBuffer) -> ScanBuffer {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    chunked_parallel(src, threads)
+}
+
+/// Split `buf` into per-chunk disjoint (&mut m, &mut u, &mut w) windows of
+/// `chunk` rows, skipping the first `skip` chunks.
+#[allow(clippy::type_complexity)]
+fn chunk_views<'a>(
+    buf: &'a mut ScanBuffer,
+    chunk: usize,
+    d: usize,
+    skip: usize,
+) -> Vec<(&'a mut [f32], &'a mut [f32], &'a mut [f32])> {
+    let start = (chunk * skip).min(buf.len());
+    let mut ms = &mut buf.m[start..];
+    let mut us = &mut buf.u[start..];
+    let mut ws = &mut buf.w[start * d..];
+    let mut views = Vec::new();
+    while !ms.is_empty() {
+        let take = chunk.min(ms.len());
+        let (mh, mt) = ms.split_at_mut(take);
+        let (uh, ut) = us.split_at_mut(take);
+        let (wh, wt) = ws.split_at_mut(take * d);
+        ms = mt;
+        us = ut;
+        ws = wt;
+        views.push((mh, uh, wh));
+    }
+    views
 }
 
 #[cfg(test)]
@@ -102,28 +235,43 @@ mod tests {
     use crate::util::prop;
     use crate::util::rng::Rng;
 
-    fn random_leaves(rng: &mut Rng, n: usize, d: usize, mag: f64) -> Vec<Muw> {
-        (0..n)
-            .map(|_| {
-                let m = rng.range(-mag, mag) as f32;
-                let w: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
-                Muw { m, u: 1.0, w }
-            })
-            .collect()
+    fn random_buffer(rng: &mut Rng, n: usize, d: usize, mag: f64) -> ScanBuffer {
+        let mut buf = ScanBuffer::with_capacity(d, n);
+        for _ in 0..n {
+            let s = rng.range(-mag, mag) as f32;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            buf.push_leaf(s, &v);
+        }
+        buf
     }
 
-    fn close(a: &Muw, b: &Muw, atol: f32) -> Result<(), String> {
+    fn close(a: &ScanBuffer, b: &ScanBuffer, i: usize, atol: f32) -> Result<(), String> {
         // compare normalised outputs (w/u) and the max — that is what
         // attention consumes; u and w individually may differ by a common
         // exp() factor between algorithms (both are valid representations).
-        if (a.m - b.m).abs() > atol {
-            return Err(format!("m: {} vs {}", a.m, b.m));
+        if (a.m[i] - b.m[i]).abs() > atol {
+            return Err(format!("m[{i}]: {} vs {}", a.m[i], b.m[i]));
         }
-        for (i, (x, y)) in a.w.iter().zip(b.w.iter()).enumerate() {
-            let (ox, oy) = (x / a.u, y / b.u);
-            if (ox - oy).abs() > atol {
-                return Err(format!("o[{i}]: {ox} vs {oy}"));
-            }
+        let d = a.dim();
+        let mut oa = vec![0.0f32; d];
+        let mut ob = vec![0.0f32; d];
+        a.output_into(i, &mut oa);
+        b.output_into(i, &mut ob);
+        prop::assert_close(&oa, &ob, atol).map_err(|e| format!("row {i}: {e}"))
+    }
+
+    fn assert_matches_sequential(
+        algo: impl Fn(&ScanBuffer) -> ScanBuffer,
+        leaves: &ScanBuffer,
+        atol: f32,
+    ) -> Result<(), String> {
+        let a = sequential(leaves);
+        let b = algo(leaves);
+        if a.len() != b.len() {
+            return Err(format!("length {} vs {}", a.len(), b.len()));
+        }
+        for i in 0..a.len() {
+            close(&a, &b, i, atol)?;
         }
         Ok(())
     }
@@ -132,13 +280,8 @@ mod tests {
     fn hillis_steele_matches_sequential() {
         prop::check("hillis_steele == sequential", 64, |rng| {
             let n = 1 + rng.below(200);
-            let leaves = random_leaves(rng, n, 4, 5.0);
-            let a = sequential(&leaves);
-            let b = hillis_steele(&leaves);
-            for (x, y) in a.iter().zip(b.iter()) {
-                close(x, y, 1e-4)?;
-            }
-            Ok(())
+            let leaves = random_buffer(rng, n, 4, 5.0);
+            assert_matches_sequential(hillis_steele, &leaves, 1e-4)
         });
     }
 
@@ -146,14 +289,40 @@ mod tests {
     fn blelloch_matches_sequential() {
         prop::check("blelloch == sequential", 64, |rng| {
             let n = 1 + rng.below(200);
-            let leaves = random_leaves(rng, n, 4, 5.0);
-            let a = sequential(&leaves);
-            let b = blelloch(&leaves);
-            for (x, y) in a.iter().zip(b.iter()) {
-                close(x, y, 1e-4)?;
-            }
-            Ok(())
+            let leaves = random_buffer(rng, n, 4, 5.0);
+            assert_matches_sequential(blelloch, &leaves, 1e-4)
         });
+    }
+
+    #[test]
+    fn chunked_parallel_matches_sequential() {
+        // satellite property: random n (divisible or not), random chunk
+        // counts — including chunks > n and chunks == 1.
+        prop::check("chunked_parallel == sequential", 64, |rng| {
+            let n = 1 + rng.below(300);
+            let chunks = 1 + rng.below(17);
+            let leaves = random_buffer(rng, n, 1 + rng.below(6), 5.0);
+            assert_matches_sequential(|b| chunked_parallel(b, chunks), &leaves, 1e-4)
+                .map_err(|e| format!("n={n} chunks={chunks}: {e}"))
+        });
+    }
+
+    #[test]
+    fn chunked_parallel_with_more_chunks_than_items() {
+        prop::check("chunked n < C", 32, |rng| {
+            let n = 1 + rng.below(7);
+            let chunks = 8 + rng.below(8);
+            let leaves = random_buffer(rng, n, 3, 5.0);
+            assert_matches_sequential(|b| chunked_parallel(b, chunks), &leaves, 1e-4)
+                .map_err(|e| format!("n={n} chunks={chunks}: {e}"))
+        });
+    }
+
+    #[test]
+    fn chunked_parallel_auto_matches_sequential() {
+        let mut rng = Rng::new(17);
+        let leaves = random_buffer(&mut rng, 257, 5, 5.0);
+        assert_matches_sequential(chunked_parallel_auto, &leaves, 1e-4).unwrap();
     }
 
     #[test]
@@ -161,17 +330,18 @@ mod tests {
         // the cumulative-max trick: |s| up to 80 would overflow exp in f32
         prop::check("scan stable at |m|<=80", 32, |rng| {
             let n = 1 + rng.below(64);
-            let leaves = random_leaves(rng, n, 3, 80.0);
-            for algo in [hillis_steele, blelloch] {
+            let leaves = random_buffer(rng, n, 3, 80.0);
+            let algos: [fn(&ScanBuffer) -> ScanBuffer; 3] =
+                [hillis_steele, blelloch, |b| chunked_parallel(b, 5)];
+            for algo in algos {
                 let out = algo(&leaves);
-                for t in &out {
-                    if !t.m.is_finite() || !t.u.is_finite() || t.u <= 0.0 {
-                        return Err(format!("non-finite tuple {t:?}"));
+                for i in 0..out.len() {
+                    let (m, u, w) = out.row(i);
+                    if !m.is_finite() || !u.is_finite() || u <= 0.0 {
+                        return Err(format!("non-finite tuple at {i}: m={m} u={u}"));
                     }
-                    for w in &t.w {
-                        if !w.is_finite() {
-                            return Err("non-finite w".to_string());
-                        }
+                    if w.iter().any(|x| !x.is_finite()) {
+                        return Err(format!("non-finite w at {i}"));
                     }
                 }
             }
@@ -180,35 +350,66 @@ mod tests {
     }
 
     #[test]
+    fn chunked_parallel_extreme_scores_match_sequential() {
+        prop::check("chunked stable+correct at |m|<=80", 32, |rng| {
+            let n = 1 + rng.below(128);
+            let chunks = 1 + rng.below(9);
+            let leaves = random_buffer(rng, n, 3, 80.0);
+            assert_matches_sequential(|b| chunked_parallel(b, chunks), &leaves, 1e-4)
+        });
+    }
+
+    #[test]
     fn single_element_scan_is_identity() {
-        let leaves = vec![Muw { m: 0.5, u: 1.0, w: vec![1.0, -2.0] }];
-        for algo in [sequential, hillis_steele, blelloch] {
+        let mut leaves = ScanBuffer::new(2);
+        leaves.push_leaf(0.5, &[1.0, -2.0]);
+        let algos: [fn(&ScanBuffer) -> ScanBuffer; 4] =
+            [sequential, hillis_steele, blelloch, |b| chunked_parallel(b, 4)];
+        for algo in algos {
             let out = algo(&leaves);
             assert_eq!(out.len(), 1);
-            assert_eq!(out[0].m, 0.5);
+            assert_eq!(out.m[0], 0.5);
         }
     }
 
     #[test]
     fn empty_scan() {
-        assert!(sequential(&[]).is_empty());
-        assert!(hillis_steele(&[]).is_empty());
-        assert!(blelloch(&[]).is_empty());
+        let empty = ScanBuffer::new(3);
+        assert!(sequential(&empty).is_empty());
+        assert!(hillis_steele(&empty).is_empty());
+        assert!(blelloch(&empty).is_empty());
+        assert!(chunked_parallel(&empty, 4).is_empty());
     }
 
     #[test]
     fn non_power_of_two_lengths() {
         for n in [3usize, 5, 7, 9, 17, 31, 100] {
             let mut rng = Rng::new(n as u64);
-            let leaves = random_leaves(&mut rng, n, 2, 3.0);
-            let a = sequential(&leaves);
-            for algo in [hillis_steele, blelloch] {
-                let b = algo(&leaves);
-                assert_eq!(a.len(), b.len());
-                for (x, y) in a.iter().zip(b.iter()) {
-                    close(x, y, 1e-4).unwrap();
-                }
+            let leaves = random_buffer(&mut rng, n, 2, 3.0);
+            let algos: [fn(&ScanBuffer) -> ScanBuffer; 3] =
+                [hillis_steele, blelloch, |b| chunked_parallel(b, 3)];
+            for algo in algos {
+                assert_matches_sequential(algo, &leaves, 1e-4).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn soa_agrees_with_aos_streaming_fold() {
+        // the SoA scans and the Muw streaming view are the same operator
+        prop::check("scan == fold chain", 48, |rng| {
+            let (n, d) = (1 + rng.below(64), 4);
+            let leaves = random_buffer(rng, n, d, 10.0);
+            let scanned = sequential(&leaves);
+            let mut acc = Muw::identity(d);
+            let mut out = vec![0.0f32; d];
+            for i in 0..n {
+                let (s, _, v) = leaves.row(i);
+                fold_token(&mut acc, s, v);
+                scanned.output_into(i, &mut out);
+                prop::assert_close(&out, &acc.output(), 1e-4).map_err(|e| format!("row {i}: {e}"))?;
+            }
+            Ok(())
+        });
     }
 }

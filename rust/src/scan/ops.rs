@@ -7,6 +7,16 @@
 //!
 //! A leaf for token i is (s_i, 1, v_i); after an inclusive scan, the k-th
 //! tuple is (m_k, c_k, a_k) and attention's prefix output is o_k = a_k/c_k.
+//!
+//! Two forms live here:
+//!
+//! * [`Muw`] — a single owned tuple. Since the SoA refactor this is only
+//!   the O(1)-state view used by the streaming fold (`fold_token`) and by
+//!   tests/interop; bulk scans operate on [`crate::scan::ScanBuffer`]
+//!   instead and never allocate per element.
+//! * slice kernels ([`combine_rows`], [`fold_row`], [`scan_rows_inplace`])
+//!   — the allocation-free ⊕ over raw SoA components that every scan
+//!   strategy is built from.
 
 /// Finite "minus infinity": exp(MASK_FILL − m) underflows to exactly 0
 /// while every intermediate stays finite (a true −∞ would yield NaN via
@@ -15,6 +25,9 @@
 pub const MASK_FILL: f32 = -1e9;
 
 /// One scan element: running max `m`, normaliser `u`, weighted value sum `w`.
+///
+/// Kept as the single-tuple view for the O(1) streaming fold; the scan
+/// strategies themselves work on the flat SoA `ScanBuffer`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Muw {
     pub m: f32,
@@ -33,9 +46,25 @@ impl Muw {
         Muw { m: MASK_FILL, u: 0.0, w: vec![0.0; dim] }
     }
 
-    /// The attention output this prefix represents: o = w / u.
+    /// The attention output this prefix represents: o = w / u. The
+    /// identity (u == 0, nothing folded in yet / a fully-masked prefix
+    /// encoded as identity) yields zeros, not NaN.
     pub fn output(&self) -> Vec<f32> {
-        self.w.iter().map(|w| w / self.u).collect()
+        let mut out = vec![0.0f32; self.w.len()];
+        self.output_into(&mut out);
+        out
+    }
+
+    /// `output()` into a caller-provided slice — the hot-path form.
+    pub fn output_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.w.len());
+        if self.u == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, w) in out.iter_mut().zip(self.w.iter()) {
+            *o = w / self.u;
+        }
     }
 }
 
@@ -46,20 +75,13 @@ pub fn combine(a: &Muw, b: &Muw) -> Muw {
     out
 }
 
-/// a ⊕ b into a preallocated tuple (the hot-path form: zero allocation).
+/// a ⊕ b into a preallocated tuple (zero allocation).
 pub fn combine_into(a: &Muw, b: &Muw, out: &mut Muw) {
     debug_assert_eq!(a.w.len(), b.w.len());
-    let m = a.m.max(b.m);
-    let ea = (a.m - m).exp();
-    let eb = (b.m - m).exp();
-    out.m = m;
-    out.u = a.u * ea + b.u * eb;
     if out.w.len() != a.w.len() {
         out.w.resize(a.w.len(), 0.0);
     }
-    for ((o, x), y) in out.w.iter_mut().zip(a.w.iter()).zip(b.w.iter()) {
-        *o = x * ea + y * eb;
-    }
+    combine_rows(a.m, a.u, &a.w, b.m, b.u, &b.w, &mut out.m, &mut out.u, &mut out.w);
 }
 
 /// In-place fold: `acc = acc ⊕ leaf(s, v)` — the §3.1 RNN cell update
@@ -73,6 +95,68 @@ pub fn fold_token(acc: &mut Muw, s: f32, v: &[f32]) {
     acc.u = acc.u * ea + eb;
     for (w, x) in acc.w.iter_mut().zip(v.iter()) {
         *w = *w * ea + x * eb;
+    }
+}
+
+/// ⊕ over raw SoA components: (ma, ua, wa) ⊕ (mb, ub, wb) → (mo, uo, wo).
+/// All three `w` slices have the same length `d`; nothing allocates.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn combine_rows(
+    ma: f32,
+    ua: f32,
+    wa: &[f32],
+    mb: f32,
+    ub: f32,
+    wb: &[f32],
+    mo: &mut f32,
+    uo: &mut f32,
+    wo: &mut [f32],
+) {
+    let m = ma.max(mb);
+    let ea = (ma - m).exp();
+    let eb = (mb - m).exp();
+    *mo = m;
+    *uo = ua * ea + ub * eb;
+    for ((o, x), y) in wo.iter_mut().zip(wa.iter()).zip(wb.iter()) {
+        *o = x * ea + y * eb;
+    }
+}
+
+/// In-place right-fold over raw SoA components:
+/// (mb, ub, wb) := (ma, ua, wa) ⊕ (mb, ub, wb). The broadcast kernel of
+/// the chunked scan (`a` is a carry prefix shared across many rows).
+#[inline(always)]
+pub fn fold_row(ma: f32, ua: f32, wa: &[f32], mb: &mut f32, ub: &mut f32, wb: &mut [f32]) {
+    let m = ma.max(*mb);
+    let ea = (ma - m).exp();
+    let eb = (*mb - m).exp();
+    *mb = m;
+    *ub = ua * ea + *ub * eb;
+    for (y, x) in wb.iter_mut().zip(wa.iter()) {
+        *y = x * ea + *y * eb;
+    }
+}
+
+/// Sequential inclusive scan over raw SoA slices, in place:
+/// row i := row i-1 ⊕ row i. `m`/`u` have n rows, `w` is (n, d) flat.
+/// This is the single-pass kernel behind `scan::sequential` and each
+/// per-chunk worker of `scan::chunked_parallel` — zero allocation, one
+/// linear walk over three flat buffers.
+pub fn scan_rows_inplace(m: &mut [f32], u: &mut [f32], w: &mut [f32], d: usize) {
+    let n = m.len();
+    debug_assert_eq!(u.len(), n);
+    debug_assert_eq!(w.len(), n * d);
+    for i in 1..n {
+        let mm = m[i - 1].max(m[i]);
+        let ea = (m[i - 1] - mm).exp();
+        let eb = (m[i] - mm).exp();
+        m[i] = mm;
+        u[i] = u[i - 1] * ea + u[i] * eb;
+        let (prev, cur) = w[(i - 1) * d..(i + 1) * d].split_at_mut(d);
+        for (y, x) in cur.iter_mut().zip(prev.iter()) {
+            *y = x * ea + *y * eb;
+        }
     }
 }
 
@@ -185,5 +269,58 @@ mod tests {
         fold_token(&mut acc, 0.0, &[3.0]);
         let o = acc.output();
         assert!((o[0] - 2.0).abs() < 1e-6, "equal scores average values");
+    }
+
+    #[test]
+    fn identity_output_is_zero_not_nan() {
+        // regression: the identity / fully-masked prefix has u == 0 and
+        // used to emit NaN from the w/u division.
+        let e = Muw::identity(3);
+        assert_eq!(e.output(), vec![0.0, 0.0, 0.0]);
+        let mut out = vec![f32::NAN; 3];
+        e.output_into(&mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fold_row_equals_combine_rows() {
+        prop::check("fold_row == combine_rows", 64, |rng| {
+            let d = 5;
+            let a = rand_tuple(rng, d, 40.0);
+            let b = rand_tuple(rng, d, 40.0);
+            let mut want = Muw::identity(d);
+            combine_into(&a, &b, &mut want);
+            let (mut mb, mut ub, mut wb) = (b.m, b.u, b.w.clone());
+            fold_row(a.m, a.u, &a.w, &mut mb, &mut ub, &mut wb);
+            if (mb - want.m).abs() > 1e-6 {
+                return Err(format!("m {mb} vs {}", want.m));
+            }
+            if (ub - want.u).abs() > 1e-4 * want.u.abs().max(1.0) {
+                return Err(format!("u {ub} vs {}", want.u));
+            }
+            prop::assert_close(&wb, &want.w, 1e-4)
+        });
+    }
+
+    #[test]
+    fn scan_rows_inplace_matches_repeated_fold() {
+        prop::check("scan_rows_inplace == fold chain", 64, |rng| {
+            let (n, d) = (1 + rng.below(40), 1 + rng.below(6));
+            let tuples: Vec<Muw> = (0..n).map(|_| rand_tuple(rng, d, 30.0)).collect();
+            let mut m: Vec<f32> = tuples.iter().map(|t| t.m).collect();
+            let mut u: Vec<f32> = tuples.iter().map(|t| t.u).collect();
+            let mut w: Vec<f32> = tuples.iter().flat_map(|t| t.w.clone()).collect();
+            scan_rows_inplace(&mut m, &mut u, &mut w, d);
+            let mut acc = tuples[0].clone();
+            for (i, t) in tuples.iter().enumerate().skip(1) {
+                acc = combine(&acc, t);
+                if (m[i] - acc.m).abs() > 1e-5 {
+                    return Err(format!("m[{i}] {} vs {}", m[i], acc.m));
+                }
+                let got: Vec<f32> = w[i * d..(i + 1) * d].iter().map(|x| x / u[i]).collect();
+                prop::assert_close(&got, &acc.output(), 1e-4)?;
+            }
+            Ok(())
+        });
     }
 }

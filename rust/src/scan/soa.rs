@@ -1,0 +1,240 @@
+//! Struct-of-arrays storage for (m, u, w) scan elements.
+//!
+//! The seed implementation stored each tuple as an owned `Muw` with a
+//! heap-allocated `Vec<f32>` value row — an array-of-structs layout that
+//! put an allocator round-trip and a pointer chase on every ⊕ of the hot
+//! path. [`ScanBuffer`] flattens a whole sequence into three contiguous
+//! buffers:
+//!
+//! ```text
+//!   m: [f32; n]        running maxes
+//!   u: [f32; n]        normalisers
+//!   w: [f32; n * d]    value rows, row-major (row i = w[i*d .. (i+1)*d])
+//! ```
+//!
+//! so a sweep is a linear walk over flat memory (SIMD/prefetch friendly),
+//! buffers are reusable across sweeps (ping-pong instead of clone), and
+//! chunked parallel scans can hand each worker a disjoint `&mut` window
+//! of the same allocation. `Muw` remains only as the single-tuple view
+//! for O(1) streaming state.
+
+use crate::scan::ops::{Muw, MASK_FILL};
+
+/// A sequence of (m, u, w) scan elements in flat SoA layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanBuffer {
+    d: usize,
+    /// running max per element, length n
+    pub m: Vec<f32>,
+    /// normaliser per element, length n
+    pub u: Vec<f32>,
+    /// value rows, (n, d) row-major flat
+    pub w: Vec<f32>,
+}
+
+impl ScanBuffer {
+    /// Empty buffer for elements of value-dimension `d`.
+    pub fn new(d: usize) -> ScanBuffer {
+        ScanBuffer { d, m: Vec::new(), u: Vec::new(), w: Vec::new() }
+    }
+
+    /// Empty buffer with room for `n` elements (no reallocation while
+    /// pushing up to `n` leaves).
+    pub fn with_capacity(d: usize, n: usize) -> ScanBuffer {
+        ScanBuffer {
+            d,
+            m: Vec::with_capacity(n),
+            u: Vec::with_capacity(n),
+            w: Vec::with_capacity(n * d),
+        }
+    }
+
+    /// `n` identity elements (⊕-neutral): m = MASK_FILL, u = 0, w = 0.
+    pub fn identities(n: usize, d: usize) -> ScanBuffer {
+        ScanBuffer {
+            d,
+            m: vec![MASK_FILL; n],
+            u: vec![0.0; n],
+            w: vec![0.0; n * d],
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    /// Value dimension `d` of each element.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Append a leaf (s, 1, v) — the tuple attention builds per token.
+    pub fn push_leaf(&mut self, s: f32, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.d);
+        self.m.push(s);
+        self.u.push(1.0);
+        self.w.extend_from_slice(v);
+    }
+
+    /// Append an arbitrary tuple (m, u, w).
+    pub fn push_tuple(&mut self, m: f32, u: f32, w: &[f32]) {
+        debug_assert_eq!(w.len(), self.d);
+        self.m.push(m);
+        self.u.push(u);
+        self.w.extend_from_slice(w);
+    }
+
+    /// Append the identity element.
+    pub fn push_identity(&mut self) {
+        self.m.push(MASK_FILL);
+        self.u.push(0.0);
+        self.w.resize(self.w.len() + self.d, 0.0);
+    }
+
+    /// Grow (with identities) or shrink to exactly `n` elements.
+    pub fn resize(&mut self, n: usize) {
+        self.m.resize(n, MASK_FILL);
+        self.u.resize(n, 0.0);
+        self.w.resize(n * self.d, 0.0);
+    }
+
+    /// Borrow element `i` as (m, u, w-row).
+    pub fn row(&self, i: usize) -> (f32, f32, &[f32]) {
+        (self.m[i], self.u[i], &self.w[i * self.d..(i + 1) * self.d])
+    }
+
+    /// Copy element `i` out as an owned `Muw` (tests / streaming handoff).
+    pub fn tuple(&self, i: usize) -> Muw {
+        let (m, u, w) = self.row(i);
+        Muw { m, u, w: w.to_vec() }
+    }
+
+    /// The attention output element `i` represents: o = w / u, with the
+    /// u == 0 identity / fully-masked case yielding zeros (not NaN).
+    pub fn output_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let (_, u, w) = self.row(i);
+        if u == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, x) in out.iter_mut().zip(w.iter()) {
+            *o = x / u;
+        }
+    }
+
+    /// All outputs as one (n, d) row-major vector — what the prefix
+    /// attention consumers read back after a scan.
+    pub fn outputs(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len() * self.d];
+        for (i, row) in out.chunks_exact_mut(self.d.max(1)).enumerate() {
+            self.output_into(i, row);
+        }
+        out
+    }
+
+    /// Build from owned tuples (interop / tests). All tuples must share
+    /// one dimension; an empty slice yields an empty d = 0 buffer.
+    pub fn from_leaves(leaves: &[Muw]) -> ScanBuffer {
+        let d = leaves.first().map_or(0, |t| t.w.len());
+        let mut buf = ScanBuffer::with_capacity(d, leaves.len());
+        for t in leaves {
+            buf.push_tuple(t.m, t.u, &t.w);
+        }
+        buf
+    }
+
+    /// Explode back into owned tuples (interop / tests).
+    pub fn to_muws(&self) -> Vec<Muw> {
+        (0..self.len()).map(|i| self.tuple(i)).collect()
+    }
+
+    /// In-place ⊕ between two rows of this buffer:
+    /// row j := row i ⊕ row j. Requires i < j (disjointness).
+    pub(crate) fn fold_left_into(&mut self, i: usize, j: usize) {
+        debug_assert!(i < j);
+        let d = self.d;
+        let m = self.m[i].max(self.m[j]);
+        let ea = (self.m[i] - m).exp();
+        let eb = (self.m[j] - m).exp();
+        self.m[j] = m;
+        self.u[j] = self.u[i] * ea + self.u[j] * eb;
+        let (left, right) = self.w.split_at_mut(j * d);
+        let wa = &left[i * d..(i + 1) * d];
+        let wo = &mut right[..d];
+        for (o, x) in wo.iter_mut().zip(wa.iter()) {
+            *o = x * ea + *o * eb;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::ops::combine;
+
+    #[test]
+    fn push_and_row_roundtrip() {
+        let mut buf = ScanBuffer::new(2);
+        buf.push_leaf(0.5, &[1.0, -2.0]);
+        buf.push_identity();
+        buf.push_tuple(1.5, 2.0, &[4.0, 6.0]);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.row(0), (0.5, 1.0, &[1.0, -2.0][..]));
+        assert_eq!(buf.row(1), (MASK_FILL, 0.0, &[0.0, 0.0][..]));
+        assert_eq!(buf.tuple(2), Muw { m: 1.5, u: 2.0, w: vec![4.0, 6.0] });
+    }
+
+    #[test]
+    fn from_to_muws_roundtrip() {
+        let tuples = vec![
+            Muw { m: 0.1, u: 1.0, w: vec![1.0, 2.0, 3.0] },
+            Muw { m: -0.7, u: 0.5, w: vec![-1.0, 0.0, 4.0] },
+        ];
+        let buf = ScanBuffer::from_leaves(&tuples);
+        assert_eq!(buf.dim(), 3);
+        assert_eq!(buf.to_muws(), tuples);
+    }
+
+    #[test]
+    fn outputs_guard_identity_rows() {
+        let mut buf = ScanBuffer::new(2);
+        buf.push_identity();
+        buf.push_tuple(0.0, 2.0, &[4.0, -8.0]);
+        let o = buf.outputs();
+        assert_eq!(&o[..2], &[0.0, 0.0], "identity row must read as zeros");
+        assert_eq!(&o[2..], &[2.0, -4.0]);
+    }
+
+    #[test]
+    fn fold_left_into_matches_combine() {
+        let a = Muw { m: 3.0, u: 1.2, w: vec![1.0, -1.0] };
+        let b = Muw { m: -2.0, u: 0.7, w: vec![0.5, 2.0] };
+        let want = combine(&a, &b);
+        let mut buf = ScanBuffer::from_leaves(&[a, b]);
+        buf.fold_left_into(0, 1);
+        let got = buf.tuple(1);
+        assert!((got.m - want.m).abs() < 1e-6);
+        assert!((got.u - want.u).abs() < 1e-5);
+        for (x, y) in got.w.iter().zip(want.w.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn resize_pads_with_identities() {
+        let mut buf = ScanBuffer::new(1);
+        buf.push_leaf(1.0, &[2.0]);
+        buf.resize(3);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.row(2), (MASK_FILL, 0.0, &[0.0][..]));
+        buf.resize(1);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.w.len(), 1);
+    }
+}

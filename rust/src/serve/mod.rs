@@ -1,11 +1,20 @@
 //! Streaming inference service: the session manager (`session`) holds
 //! per-client RNN state — constant-size for Aaren, bucketed KV cache for
-//! the Transformer baseline — and the TCP server (`server`) exposes a
-//! line-delimited JSON protocol over it. PJRT handles are not Sync, so a
-//! single executor thread owns all sessions and connection threads talk
-//! to it over channels (a router in front of one model replica).
+//! the Transformer baseline — and the TCP server (`server`, `pjrt`
+//! feature) exposes a line-delimited JSON protocol over it. PJRT handles
+//! are not Sync, so a single executor thread owns all sessions and
+//! connection threads talk to it over channels (a router in front of one
+//! model replica).
+//!
+//! Builds without the `pjrt` feature still get the rust-native streaming
+//! sessions ([`NativeAarenSession`], [`NativeTfSession`]) — the O(1)
+//! `Muw`-fold fallback over the SoA scan engine.
 
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod session;
 
-pub use session::{Session, StreamModel, TF_BUCKETS};
+pub use session::{NativeAarenSession, NativeTfSession, TF_BUCKETS};
+
+#[cfg(feature = "pjrt")]
+pub use session::{Session, StreamModel};

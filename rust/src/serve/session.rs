@@ -1,260 +1,473 @@
 //! Streaming inference sessions — the paper's efficiency claims made
 //! executable (§3.3, §4.5, Figure 5).
 //!
-//! * `AarenSession`: per-token state is the (a, c, m) tuple per
-//!   (layer, head) — **constant memory**, one fixed-cost HLO step per
-//!   token.
-//! * `TfSession`: the KV-cache baseline — **linear memory**, per-token
-//!   cost proportional to the current cache bucket; buckets grow
-//!   (32 → 64 → … → 512) with cache migration, the standard serving
-//!   practice, so cumulative time is quadratic.
+//! Two tiers live here:
 //!
-//! State is kept as device-side literals returned by the previous step —
-//! the hot loop never round-trips state through host Vec<f32>.
+//! * the **HLO tier** (`pjrt` feature): `StreamModel`/`Session` execute
+//!   compiled step modules through PJRT. Per-token state is the (a, c, m)
+//!   tuple per (layer, head) for Aaren — **constant memory** — and a
+//!   bucketed KV cache (32 → 64 → … → 512, with migration) for the
+//!   Transformer baseline, so its cumulative time is quadratic.
+//! * the **rust-native tier** (always compiled): [`NativeAarenSession`] /
+//!   [`NativeTfSession`], single-head oracles over raw channel vectors.
+//!   The Aaren fallback is exactly the §3.1 RNN cell: one `Muw` tuple —
+//!   the thin single-tuple view over the SoA scan engine — updated by the
+//!   O(1) `fold_token`. These back `bench_harness::fig5` and the serve
+//!   layer on builds without XLA.
+//!
+//! HLO-tier state is kept as device-side literals returned by the
+//! previous step — the hot loop never round-trips state through host
+//! Vec<f32>.
 
-use std::rc::Rc;
+use anyhow::{bail, Result};
 
-use anyhow::{bail, Context, Result};
+use crate::attention;
+use crate::scan::{fold_token, Muw};
 
-use crate::runtime::exec::{literal_to_f32, Engine, HostTensor, Module};
-use crate::runtime::manifest::Role;
-use crate::runtime::params::ParamStore;
-
-/// Buckets must mirror aot.py FIG5_BUCKETS.
+/// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
+/// Transformer baselines).
 pub const TF_BUCKETS: [usize; 5] = [32, 64, 128, 256, 512];
 
-/// Cached per-model assets shared by all sessions of one variant.
-///
-/// Parameters are marshalled to literals ONCE and borrowed per step.
-/// (A device-resident PjRtBuffer variant via `execute_b` was measured
-/// during the perf pass but segfaults in the published xla 0.1.6 crate
-/// after ~70 repeated tuple-output executions — see EXPERIMENTS.md
-/// §Perf L3 for the analysis; the literal path is stable at 512+ tokens.)
-pub struct StreamModel {
-    /// step module(s): aaren has one; tf has one per bucket
-    modules: Vec<Rc<Module>>,
-    /// parameter literals in manifest order (built once)
-    param_literals: Vec<xla::Literal>,
-    pub channels: usize,
+/// Rust-native Aaren streaming session: the O(1)-state fallback. Holds a
+/// fixed query vector and a single (m, u, w) accumulator; each token is
+/// folded in with `fold_token` (the §3.1 RNN cell), so per-step cost and
+/// state size are constant in the stream length.
+pub struct NativeAarenSession {
+    q: Vec<f32>,
+    acc: Muw,
+    scale: f32,
+    t: usize,
 }
 
-impl StreamModel {
-    pub fn load_aaren(engine: &mut Engine) -> Result<StreamModel> {
-        let module = engine.load("stream_aaren_step")?;
-        Self::build(vec![module])
+impl NativeAarenSession {
+    /// Session over `channels`-dim tokens with the uniform (zero) query —
+    /// outputs are running softmax-weighted value averages.
+    pub fn new(channels: usize) -> NativeAarenSession {
+        Self::with_query(vec![0.0; channels])
     }
 
-    pub fn load_tf(engine: &mut Engine) -> Result<StreamModel> {
-        let mut modules = Vec::new();
-        for b in TF_BUCKETS {
-            modules.push(engine.load(&format!("stream_tf_step_c{b}"))?);
+    /// Session with an explicit query vector (k = v = incoming token).
+    pub fn with_query(q: Vec<f32>) -> NativeAarenSession {
+        let d = q.len();
+        NativeAarenSession {
+            q,
+            acc: Muw::identity(d),
+            scale: 1.0 / (d.max(1) as f32).sqrt(),
+            t: 0,
         }
-        Self::build(modules)
     }
 
-    fn build(modules: Vec<Rc<Module>>) -> Result<StreamModel> {
-        let manifest = &modules[0].manifest;
-        let store = ParamStore::load(manifest)?;
-        let channels = manifest.meta_usize("channels", 8);
-        let mut model = StreamModel { modules, param_literals: Vec::new(), channels };
-        model.set_params(&store)?;
-        Ok(model)
+    pub fn channels(&self) -> usize {
+        self.q.len()
     }
 
-    /// Marshal (trained) weights once (same params_key layout).
-    pub fn set_params(&mut self, store: &ParamStore) -> Result<()> {
-        let manifest = &self.modules[0].manifest;
-        let mut literals = Vec::new();
-        let mut pi = 0usize;
-        for arg in &manifest.args {
-            if arg.role == Role::Param {
-                literals.push(
-                    HostTensor::F32(arg.shape.clone(), store.params[pi].clone())
-                        .to_literal()?,
-                );
-                pi += 1;
+    pub fn tokens_seen(&self) -> usize {
+        self.t
+    }
+
+    /// Bytes of per-session state — constant: the (m, u) scalars plus the
+    /// d-dim w row of the single `Muw` accumulator.
+    pub fn state_bytes(&self) -> usize {
+        (2 + self.acc.w.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Feed one token (used as both key and value); returns the prefix
+    /// attention output so far. O(1) work and memory per step.
+    pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.q.len() {
+            bail!("token has {} channels, session expects {}", x.len(), self.q.len());
+        }
+        let s = self.q.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f32>() * self.scale;
+        fold_token(&mut self.acc, s, x);
+        self.t += 1;
+        Ok(self.acc.output())
+    }
+}
+
+/// Rust-native Transformer-with-KV-cache baseline: caches every (k, v)
+/// row and recomputes many-to-one attention (query = newest token) per
+/// step — linear memory, O(t) per-token work, quadratic cumulative time.
+/// Cache storage grows through the same `TF_BUCKETS` the HLO tier uses,
+/// with a copy on each bucket migration.
+pub struct NativeTfSession {
+    channels: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bucket_idx: usize,
+    t: usize,
+}
+
+impl NativeTfSession {
+    pub fn new(channels: usize) -> NativeTfSession {
+        let cap = TF_BUCKETS[0] * channels;
+        NativeTfSession {
+            channels,
+            k: Vec::with_capacity(cap),
+            v: Vec::with_capacity(cap),
+            bucket_idx: 0,
+            t: 0,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn tokens_seen(&self) -> usize {
+        self.t
+    }
+
+    /// Bytes of per-session state: the full capacity of the current k/v
+    /// cache bucket (what a serving system must reserve).
+    pub fn state_bytes(&self) -> usize {
+        2 * TF_BUCKETS[self.bucket_idx] * self.channels * std::mem::size_of::<f32>()
+    }
+
+    pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.channels {
+            bail!("token has {} channels, session expects {}", x.len(), self.channels);
+        }
+        if self.t >= TF_BUCKETS[self.bucket_idx] {
+            if self.bucket_idx + 1 >= TF_BUCKETS.len() {
+                bail!("tf session exceeded the largest cache bucket");
+            }
+            self.bucket_idx += 1;
+            // bucket migration: reallocate at the new capacity and copy
+            let cap = TF_BUCKETS[self.bucket_idx] * self.channels;
+            let mut k = Vec::with_capacity(cap);
+            k.extend_from_slice(&self.k);
+            let mut v = Vec::with_capacity(cap);
+            v.extend_from_slice(&self.v);
+            self.k = k;
+            self.v = v;
+        }
+        self.k.extend_from_slice(x);
+        self.v.extend_from_slice(x);
+        self.t += 1;
+        Ok(attention::many_to_one(x, &self.k, &self.v, None))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use hlo::{Session, StreamModel};
+
+#[cfg(feature = "pjrt")]
+mod hlo {
+    use std::rc::Rc;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::TF_BUCKETS;
+    use crate::runtime::exec::{literal_to_f32, Engine, HostTensor, Module};
+    use crate::runtime::manifest::Role;
+    use crate::runtime::params::ParamStore;
+
+    /// Cached per-model assets shared by all sessions of one variant.
+    ///
+    /// Parameters are marshalled to literals ONCE and borrowed per step.
+    /// (A device-resident PjRtBuffer variant via `execute_b` was measured
+    /// during the perf pass but segfaults in the published xla 0.1.6 crate
+    /// after ~70 repeated tuple-output executions — see EXPERIMENTS.md
+    /// §Perf L3 for the analysis; the literal path is stable at 512+ tokens.)
+    pub struct StreamModel {
+        /// step module(s): aaren has one; tf has one per bucket
+        modules: Vec<Rc<Module>>,
+        /// parameter literals in manifest order (built once)
+        param_literals: Vec<xla::Literal>,
+        pub channels: usize,
+    }
+
+    impl StreamModel {
+        pub fn load_aaren(engine: &mut Engine) -> Result<StreamModel> {
+            let module = engine.load("stream_aaren_step")?;
+            Self::build(vec![module])
+        }
+
+        pub fn load_tf(engine: &mut Engine) -> Result<StreamModel> {
+            let mut modules = Vec::new();
+            for b in TF_BUCKETS {
+                modules.push(engine.load(&format!("stream_tf_step_c{b}"))?);
+            }
+            Self::build(modules)
+        }
+
+        fn build(modules: Vec<Rc<Module>>) -> Result<StreamModel> {
+            let manifest = &modules[0].manifest;
+            let store = ParamStore::load(manifest)?;
+            let channels = manifest.meta_usize("channels", 8);
+            let mut model = StreamModel { modules, param_literals: Vec::new(), channels };
+            model.set_params(&store)?;
+            Ok(model)
+        }
+
+        /// Marshal (trained) weights once (same params_key layout).
+        pub fn set_params(&mut self, store: &ParamStore) -> Result<()> {
+            let manifest = &self.modules[0].manifest;
+            let mut literals = Vec::new();
+            let mut pi = 0usize;
+            for arg in &manifest.args {
+                if arg.role == Role::Param {
+                    literals.push(
+                        HostTensor::F32(arg.shape.clone(), store.params[pi].clone())
+                            .to_literal()?,
+                    );
+                    pi += 1;
+                }
+            }
+            self.param_literals = literals;
+            Ok(())
+        }
+
+        fn module_for_bucket(&self, bucket_idx: usize) -> &Rc<Module> {
+            &self.modules[bucket_idx.min(self.modules.len() - 1)]
+        }
+    }
+
+    /// A live streaming session: constant-state Aaren or KV-cache Transformer.
+    pub enum Session {
+        Aaren {
+            /// state literals in manifest state order (a, c, m)
+            state: Vec<xla::Literal>,
+            t: i32,
+        },
+        Tf {
+            state: Vec<xla::Literal>, // (k_cache, v_cache) for current bucket
+            t: i32,
+            bucket_idx: usize,
+        },
+    }
+
+    impl Session {
+        /// Fresh Aaren session: zero state per the §3.1 init (a=c=0, m=MASK_FILL).
+        pub fn new_aaren(model: &StreamModel) -> Result<Session> {
+            let manifest = &model.modules[0].manifest;
+            let mut state = Vec::new();
+            for arg in &manifest.args {
+                if arg.role == Role::State {
+                    let n: usize = arg.elements();
+                    // m is initialised to MASK_FILL, a and c to zero
+                    let fill =
+                        if arg.name.ends_with(":m") { crate::scan::MASK_FILL } else { 0.0 };
+                    state.push(HostTensor::F32(arg.shape.clone(), vec![fill; n]).to_literal()?);
+                }
+            }
+            Ok(Session::Aaren { state, t: 0 })
+        }
+
+        pub fn new_tf(model: &StreamModel) -> Result<Session> {
+            let manifest = &model.modules[0].manifest;
+            let mut state = Vec::new();
+            for arg in &manifest.args {
+                if arg.role == Role::State {
+                    state.push(
+                        HostTensor::F32(arg.shape.clone(), vec![0.0; arg.elements()])
+                            .to_literal()?,
+                    );
+                }
+            }
+            Ok(Session::Tf { state, t: 0, bucket_idx: 0 })
+        }
+
+        pub fn tokens_seen(&self) -> i32 {
+            match self {
+                Session::Aaren { t, .. } | Session::Tf { t, .. } => *t,
             }
         }
-        self.param_literals = literals;
+
+        /// Bytes of per-session state currently held — the Figure-5 (left)
+        /// measurement, taken from the live literals.
+        pub fn state_bytes(&self) -> usize {
+            match self {
+                Session::Aaren { state, .. } | Session::Tf { state, .. } => {
+                    state.iter().map(|l| l.size_bytes()).sum()
+                }
+            }
+        }
+
+        /// Feed one token; returns the model's next-value prediction.
+        pub fn step(&mut self, model: &StreamModel, x: &[f32]) -> Result<Vec<f32>> {
+            if x.len() != model.channels {
+                bail!("token has {} channels, model expects {}", x.len(), model.channels);
+            }
+            match self {
+                Session::Aaren { state, t } => {
+                    let module = &model.modules[0];
+                    let y = run_step(module, model, state, *t, x)?;
+                    *t += 1;
+                    Ok(y)
+                }
+                Session::Tf { state, t, bucket_idx } => {
+                    // migrate to the next bucket when the cache is full
+                    let cur_bucket = TF_BUCKETS[*bucket_idx];
+                    if *t as usize >= cur_bucket {
+                        if *bucket_idx + 1 >= TF_BUCKETS.len() {
+                            bail!("tf session exceeded the largest cache bucket");
+                        }
+                        migrate_kv(state, model, *bucket_idx, *bucket_idx + 1)
+                            .context("kv bucket migration")?;
+                        *bucket_idx += 1;
+                    }
+                    let module = model.module_for_bucket(*bucket_idx);
+                    let y = run_step(module, model, state, *t, x)?;
+                    *t += 1;
+                    Ok(y)
+                }
+            }
+        }
+    }
+
+    /// Execute a step module: args = params…, state…, t, x. Parameters are
+    /// device-resident buffers (uploaded once); per-step we upload only the
+    /// state + token tensors. Mutates `state` in place with the returned
+    /// state literals and yields the prediction.
+    fn run_step(
+        module: &Rc<Module>,
+        model: &StreamModel,
+        state: &mut [xla::Literal],
+        t: i32,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let manifest = &module.manifest;
+        let t_lit = HostTensor::scalar_i32(t).to_literal()?;
+        let x_lit = HostTensor::F32(vec![x.len()], x.to_vec()).to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(manifest.args.len());
+        let (mut pi, mut si, mut ii) = (0usize, 0usize, 0usize);
+        for arg in &manifest.args {
+            match arg.role {
+                Role::Param => {
+                    args.push(&model.param_literals[pi]);
+                    pi += 1;
+                }
+                Role::State => {
+                    args.push(&state[si]);
+                    si += 1;
+                }
+                Role::Input => {
+                    args.push(if ii == 0 { &t_lit } else { &x_lit });
+                    ii += 1;
+                }
+                other => bail!("unexpected role {other:?} in step module"),
+            }
+        }
+        let outputs = module.execute_refs(&args)?;
+        // outputs: state… then aux y
+        let mut y = Vec::new();
+        let mut si = 0usize;
+        for (spec, lit) in manifest.outputs.iter().zip(outputs.into_iter()) {
+            match spec.role {
+                Role::State => {
+                    state[si] = lit;
+                    si += 1;
+                }
+                Role::Aux => y = literal_to_f32(&lit)?,
+                _ => {}
+            }
+        }
+        Ok(y)
+    }
+
+    /// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
+    /// (L, H, new, dh) cache — validated against the JAX model in
+    /// python/tests/test_model.py::test_kv_bucket_migration_preserves_outputs.
+    fn migrate_kv(
+        state: &mut [xla::Literal],
+        model: &StreamModel,
+        old_idx: usize,
+        new_idx: usize,
+    ) -> Result<()> {
+        let old_manifest = &model.modules[old_idx].manifest;
+        let new_manifest = &model.modules[new_idx].manifest;
+        let old_specs: Vec<_> =
+            old_manifest.args.iter().filter(|a| a.role == Role::State).collect();
+        let new_specs: Vec<_> =
+            new_manifest.args.iter().filter(|a| a.role == Role::State).collect();
+        for (i, (os, ns)) in old_specs.iter().zip(new_specs.iter()).enumerate() {
+            // shapes (L, H, ctx, dh)
+            let (l, h, octx, dh) = (os.shape[0], os.shape[1], os.shape[2], os.shape[3]);
+            let nctx = ns.shape[2];
+            let old_data = literal_to_f32(&state[i])?;
+            let mut new_data = vec![0.0f32; l * h * nctx * dh];
+            for li in 0..l {
+                for hi in 0..h {
+                    for ci in 0..octx {
+                        let src = ((li * h + hi) * octx + ci) * dh;
+                        let dst = ((li * h + hi) * nctx + ci) * dh;
+                        new_data[dst..dst + dh].copy_from_slice(&old_data[src..src + dh]);
+                    }
+                }
+            }
+            state[i] = HostTensor::F32(ns.shape.clone(), new_data).to_literal()?;
+        }
         Ok(())
     }
-
-    fn module_for_bucket(&self, bucket_idx: usize) -> &Rc<Module> {
-        &self.modules[bucket_idx.min(self.modules.len() - 1)]
-    }
 }
 
-/// A live streaming session: constant-state Aaren or KV-cache Transformer.
-pub enum Session {
-    Aaren {
-        /// state literals in manifest state order (a, c, m)
-        state: Vec<xla::Literal>,
-        t: i32,
-    },
-    Tf {
-        state: Vec<xla::Literal>, // (k_cache, v_cache) for current bucket
-        t: i32,
-        bucket_idx: usize,
-    },
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
 
-impl Session {
-    /// Fresh Aaren session: zero state per the §3.1 init (a=c=0, m=MASK_FILL).
-    pub fn new_aaren(model: &StreamModel) -> Result<Session> {
-        let manifest = &model.modules[0].manifest;
-        let mut state = Vec::new();
-        for arg in &manifest.args {
-            if arg.role == Role::State {
-                let n: usize = arg.elements();
-                // m is initialised to MASK_FILL, a and c to zero
-                let fill = if arg.name.ends_with(":m") { crate::scan::MASK_FILL } else { 0.0 };
-                state.push(HostTensor::F32(arg.shape.clone(), vec![fill; n]).to_literal()?);
+    #[test]
+    fn native_aaren_matches_prefix_recurrent() {
+        // streaming the tokens one by one equals the many-to-many oracle
+        // with the same query over the whole stream
+        prop::check("native session == prefix_recurrent", 32, |rng| {
+            let (n, d) = (1 + rng.below(40), 1 + rng.below(6));
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let xs: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let want = crate::attention::prefix_recurrent(&q, &xs, &xs, None);
+            let mut session = NativeAarenSession::with_query(q);
+            for t in 0..n {
+                let y = session.step(&xs[t * d..(t + 1) * d]).map_err(|e| e.to_string())?;
+                prop::assert_close(&y, &want[t * d..(t + 1) * d], 1e-4)
+                    .map_err(|e| format!("t={t}: {e}"))?;
             }
-        }
-        Ok(Session::Aaren { state, t: 0 })
+            Ok(())
+        });
     }
 
-    pub fn new_tf(model: &StreamModel) -> Result<Session> {
-        let manifest = &model.modules[0].manifest;
-        let mut state = Vec::new();
-        for arg in &manifest.args {
-            if arg.role == Role::State {
-                state.push(
-                    HostTensor::F32(arg.shape.clone(), vec![0.0; arg.elements()])
-                        .to_literal()?,
-                );
-            }
+    #[test]
+    fn native_aaren_state_is_constant() {
+        let mut session = NativeAarenSession::new(8);
+        let b0 = session.state_bytes();
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+            session.step(&x).unwrap();
+            assert_eq!(session.state_bytes(), b0, "aaren session memory must be constant");
         }
-        Ok(Session::Tf { state, t: 0, bucket_idx: 0 })
+        assert_eq!(session.tokens_seen(), 100);
     }
 
-    pub fn tokens_seen(&self) -> i32 {
-        match self {
-            Session::Aaren { t, .. } | Session::Tf { t, .. } => *t,
+    #[test]
+    fn native_tf_state_grows_through_buckets() {
+        let mut session = NativeTfSession::new(4);
+        let b0 = session.state_bytes();
+        assert_eq!(b0, 2 * 32 * 4 * 4);
+        let mut rng = Rng::new(3);
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..4).map(|_| rng.gaussian() as f32).collect();
+            let y = session.step(&x).unwrap();
+            assert!(y.iter().all(|v| v.is_finite()));
         }
+        // 40 tokens crossed the 32-bucket boundary: cache migrated + grew
+        assert_eq!(session.state_bytes(), 2 * 64 * 4 * 4);
+        assert_eq!(session.tokens_seen(), 40);
     }
 
-    /// Bytes of per-session state currently held — the Figure-5 (left)
-    /// measurement, taken from the live literals.
-    pub fn state_bytes(&self) -> usize {
-        match self {
-            Session::Aaren { state, .. } | Session::Tf { state, .. } => {
-                state.iter().map(|l| l.size_bytes()).sum()
-            }
+    #[test]
+    fn native_tf_exceeding_largest_bucket_errors() {
+        let mut session = NativeTfSession::new(1);
+        for _ in 0..TF_BUCKETS[TF_BUCKETS.len() - 1] {
+            session.step(&[1.0]).unwrap();
         }
+        assert!(session.step(&[1.0]).is_err());
     }
 
-    /// Feed one token; returns the model's next-value prediction.
-    pub fn step(&mut self, model: &StreamModel, x: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != model.channels {
-            bail!("token has {} channels, model expects {}", x.len(), model.channels);
-        }
-        match self {
-            Session::Aaren { state, t } => {
-                let module = &model.modules[0];
-                let y = run_step(module, model, state, *t, x)?;
-                *t += 1;
-                Ok(y)
-            }
-            Session::Tf { state, t, bucket_idx } => {
-                // migrate to the next bucket when the cache is full
-                let cur_bucket = TF_BUCKETS[*bucket_idx];
-                if *t as usize >= cur_bucket {
-                    if *bucket_idx + 1 >= TF_BUCKETS.len() {
-                        bail!("tf session exceeded the largest cache bucket");
-                    }
-                    migrate_kv(state, model, *bucket_idx, *bucket_idx + 1)
-                        .context("kv bucket migration")?;
-                    *bucket_idx += 1;
-                }
-                let module = model.module_for_bucket(*bucket_idx);
-                let y = run_step(module, model, state, *t, x)?;
-                *t += 1;
-                Ok(y)
-            }
-        }
+    #[test]
+    fn native_sessions_reject_wrong_channel_count() {
+        assert!(NativeAarenSession::new(3).step(&[1.0]).is_err());
+        assert!(NativeTfSession::new(3).step(&[1.0]).is_err());
     }
-}
-
-/// Execute a step module: args = params…, state…, t, x. Parameters are
-/// device-resident buffers (uploaded once); per-step we upload only the
-/// state + token tensors. Mutates `state` in place with the returned
-/// state literals and yields the prediction.
-fn run_step(
-    module: &Rc<Module>,
-    model: &StreamModel,
-    state: &mut [xla::Literal],
-    t: i32,
-    x: &[f32],
-) -> Result<Vec<f32>> {
-    let manifest = &module.manifest;
-    let t_lit = HostTensor::scalar_i32(t).to_literal()?;
-    let x_lit = HostTensor::F32(vec![x.len()], x.to_vec()).to_literal()?;
-    let mut args: Vec<&xla::Literal> = Vec::with_capacity(manifest.args.len());
-    let (mut pi, mut si, mut ii) = (0usize, 0usize, 0usize);
-    for arg in &manifest.args {
-        match arg.role {
-            Role::Param => {
-                args.push(&model.param_literals[pi]);
-                pi += 1;
-            }
-            Role::State => {
-                args.push(&state[si]);
-                si += 1;
-            }
-            Role::Input => {
-                args.push(if ii == 0 { &t_lit } else { &x_lit });
-                ii += 1;
-            }
-            other => bail!("unexpected role {other:?} in step module"),
-        }
-    }
-    let outputs = module.execute_refs(&args)?;
-    // outputs: state… then aux y
-    let mut y = Vec::new();
-    let mut si = 0usize;
-    for (spec, lit) in manifest.outputs.iter().zip(outputs.into_iter()) {
-        match spec.role {
-            Role::State => {
-                state[si] = lit;
-                si += 1;
-            }
-            Role::Aux => y = literal_to_f32(&lit)?,
-            _ => {}
-        }
-    }
-    Ok(y)
-}
-
-/// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
-/// (L, H, new, dh) cache — validated against the JAX model in
-/// python/tests/test_model.py::test_kv_bucket_migration_preserves_outputs.
-fn migrate_kv(
-    state: &mut [xla::Literal],
-    model: &StreamModel,
-    old_idx: usize,
-    new_idx: usize,
-) -> Result<()> {
-    let old_manifest = &model.modules[old_idx].manifest;
-    let new_manifest = &model.modules[new_idx].manifest;
-    let old_specs: Vec<_> = old_manifest.args.iter().filter(|a| a.role == Role::State).collect();
-    let new_specs: Vec<_> = new_manifest.args.iter().filter(|a| a.role == Role::State).collect();
-    for (i, (os, ns)) in old_specs.iter().zip(new_specs.iter()).enumerate() {
-        // shapes (L, H, ctx, dh)
-        let (l, h, octx, dh) = (os.shape[0], os.shape[1], os.shape[2], os.shape[3]);
-        let nctx = ns.shape[2];
-        let old_data = literal_to_f32(&state[i])?;
-        let mut new_data = vec![0.0f32; l * h * nctx * dh];
-        for li in 0..l {
-            for hi in 0..h {
-                for ci in 0..octx {
-                    let src = ((li * h + hi) * octx + ci) * dh;
-                    let dst = ((li * h + hi) * nctx + ci) * dh;
-                    new_data[dst..dst + dh].copy_from_slice(&old_data[src..src + dh]);
-                }
-            }
-        }
-        state[i] = HostTensor::F32(ns.shape.clone(), new_data).to_literal()?;
-    }
-    Ok(())
 }

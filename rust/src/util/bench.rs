@@ -1,8 +1,14 @@
 //! Micro-benchmark harness (no criterion in the offline crate set):
-//! warmup + timed iterations with mean / p50 / p95 reporting, plus a
-//! simple table printer shared by all paper-table benches.
+//! warmup + timed iterations with mean / p50 / p95 reporting, a simple
+//! table printer shared by all paper-table benches, and a machine-readable
+//! JSON emitter (`write_records`) so benches can leave `BENCH_*.json`
+//! trails for cross-PR perf tracking.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -93,9 +99,67 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// One machine-readable benchmark record — the schema of the repo's
+/// `BENCH_*.json` perf-trail files.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// algorithm / variant name, e.g. "soa_sequential"
+    pub name: String,
+    /// problem size (sequence length)
+    pub n: usize,
+    /// value dimension
+    pub d: usize,
+    /// mean wall time per iteration
+    pub ns_per_iter: f64,
+    /// throughput relative to this run's reference variant at the same n
+    /// (reference_ns / ns_per_iter; > 1 means faster than the reference)
+    pub speedup_vs_sequential: f64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("d".to_string(), Json::Num(self.d as f64));
+        m.insert("ns_per_iter".to_string(), Json::Num(self.ns_per_iter));
+        m.insert(
+            "speedup_vs_sequential".to_string(),
+            Json::Num(self.speedup_vs_sequential),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Write bench records as a JSON array (one `BENCH_*.json` file).
+pub fn write_records(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let arr = Json::Arr(records.iter().map(BenchRecord::to_json).collect());
+    std::fs::write(path, format!("{arr}\n"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_records_roundtrip_as_json() {
+        let recs = vec![BenchRecord {
+            name: "soa_sequential".into(),
+            n: 4096,
+            d: 16,
+            ns_per_iter: 1234.5,
+            speedup_vs_sequential: 1.0,
+        }];
+        let tmp = std::env::temp_dir().join("aaren_bench_record_test.json");
+        write_records(&tmp, &recs).unwrap();
+        let parsed = Json::parse(std::fs::read_to_string(&tmp).unwrap().trim()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].str_field("name").unwrap(), "soa_sequential");
+        assert_eq!(arr[0].usize_field("n").unwrap(), 4096);
+        assert!(arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&tmp).ok();
+    }
 
     #[test]
     fn bench_reports_sane_stats() {
