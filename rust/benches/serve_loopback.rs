@@ -1,0 +1,73 @@
+//! Loopback serving throughput for the rust-native TCP stack (no XLA):
+//! one client streams AAREN_TOKENS tokens through an aaren session, then
+//! AAREN_CLIENTS concurrent clients stream through their own sessions to
+//! exercise the sharded executor pool. Prints tokens/sec per phase.
+
+use std::time::Instant;
+
+use aaren::serve::server::{Client, ServeConfig, Server};
+
+fn stream_one(addr: &std::net::SocketAddr, step_body: &str, tokens: usize) -> f64 {
+    let mut client = Client::connect(addr).expect("connect");
+    let id = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .expect("create")
+        .usize_field("id")
+        .expect("id");
+    let t0 = Instant::now();
+    for _ in 0..tokens {
+        client
+            .call(&format!(r#"{{"op":"step","id":{id},"x":[{step_body}]}}"#))
+            .expect("step");
+    }
+    tokens as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let tokens: usize = std::env::var("AAREN_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let clients: usize = std::env::var("AAREN_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let channels = 8usize;
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels,
+        shards: clients.max(1),
+        artifacts: None,
+    };
+    let server = Server::bind(&cfg).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    std::thread::spawn(move || server.run());
+
+    let xs: Vec<String> = (0..channels).map(|i| format!("0.{i}")).collect();
+    let step_body = xs.join(",");
+
+    // phase 1: single client, one session
+    let rate = stream_one(&addr, &step_body, tokens);
+    println!("serve_loopback: 1 client   {rate:>12.0} tokens/s");
+
+    // phase 2: concurrent clients, one session each, across shards
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let body = step_body.clone();
+            std::thread::spawn(move || stream_one(&addr, &body, tokens))
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "serve_loopback: {clients} clients  {:>12.0} tokens/s aggregate",
+        (clients * tokens) as f64 / dt
+    );
+
+    let mut shutdown = Client::connect(&addr).expect("connect");
+    let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+}

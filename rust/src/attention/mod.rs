@@ -39,7 +39,7 @@ fn dot_scaled(q: &[f32], k_row: &[f32], scale: f32) -> f32 {
 /// s_i = <q, k_i>/sqrt(d) with optional {0,1} mask (masked -> MASK_FILL).
 pub fn scores(q: &[f32], k: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
     let scale = 1.0 / (d as f32).sqrt();
     (0..n)
         .map(|i| {
@@ -58,7 +58,7 @@ pub fn scores(q: &[f32], k: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
 /// `ScanBuffer`, never as owned per-token tuples.
 pub fn leaf_buffer(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> ScanBuffer {
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
     let dv = if n == 0 { 0 } else { v.len() / n };
     let scale = 1.0 / (d as f32).sqrt();
     let mut buf = ScanBuffer::with_capacity(dv, n);
@@ -74,7 +74,12 @@ pub fn leaf_buffer(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Sca
 /// context — O(N) memory, one output (paper Figure 1a).
 pub fn many_to_one(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
+    if n == 0 {
+        // empty context: nothing to attend over — mirror prefix_recurrent
+        // and return an empty output instead of dividing by zero
+        return Vec::new();
+    }
     let dv = v.len() / n;
     let s = scores(q, k, mask);
     let mx = s.iter().cloned().fold(f32::MIN, f32::max);
@@ -96,7 +101,7 @@ pub fn many_to_one(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec
 /// accumulator and the preallocated output. Returns (n, dv) flat.
 pub fn prefix_recurrent(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
     if n == 0 {
         return Vec::new();
     }
@@ -142,7 +147,10 @@ pub fn prefix_scan(
 /// ascribes to Transformers handling streams.
 pub fn prefix_naive(q: &[f32], k: &[f32], v: &[f32], mask: Option<&[f32]>) -> Vec<f32> {
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
+    if n == 0 {
+        return Vec::new();
+    }
     let dv = v.len() / n;
     let mut out = Vec::with_capacity(n * dv);
     for i in 0..n {
@@ -167,7 +175,10 @@ pub fn many_to_one_blocked(
 ) -> Vec<f32> {
     assert!(b >= 1, "block size must be >= 1");
     let d = q.len();
-    let n = k.len() / d;
+    let n = if d == 0 { 0 } else { k.len() / d };
+    if n == 0 {
+        return Vec::new();
+    }
     let dv = v.len() / n;
     let s = scores(q, k, mask);
 
@@ -200,6 +211,9 @@ pub fn many_to_one_blocked(
 /// Standard causal self-attention with explicit dims (n tokens, d model)
 /// — the Transformer baseline. q/k are (n, d) flat; returns (n, dv).
 pub fn causal_self_attention_nd(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+    if n == 0 {
+        return Vec::new();
+    }
     let dv = v.len() / n;
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Vec::with_capacity(n * dv);
@@ -329,6 +343,31 @@ mod tests {
             let got = prefix_scan(&q, &k, &v, Some(&mask), strategy);
             assert!(got.iter().all(|x| x.is_finite()), "{strategy:?} non-finite");
             prop::assert_close(&got, &want, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_context_attention_is_empty_not_a_panic() {
+        // regression: `v.len() / n` used to divide by zero on n == 0
+        assert!(many_to_one(&[1.0, 2.0], &[], &[], None).is_empty());
+        assert!(prefix_naive(&[1.0], &[], &[], None).is_empty());
+        assert!(many_to_one_blocked(&[1.0, 2.0], &[], &[], None, 4).is_empty());
+        assert!(causal_self_attention_nd(&[], &[], &[], 0, 3).is_empty());
+        assert!(prefix_recurrent(&[1.0], &[], &[], None).is_empty());
+        assert!(prefix_scan(&[1.0], &[], &[], None, ScanStrategy::Sequential).is_empty());
+    }
+
+    #[test]
+    fn empty_query_attention_is_empty_not_a_panic() {
+        // regression: with d == 0, `k.len() / d` was a 0/0 panic on the
+        // scores/leaf_buffer/prefix paths too, not just many_to_one
+        assert!(many_to_one(&[], &[], &[], None).is_empty());
+        assert!(scores(&[], &[], None).is_empty());
+        assert!(leaf_buffer(&[], &[], &[], None).is_empty());
+        assert!(prefix_recurrent(&[], &[], &[], None).is_empty());
+        assert!(prefix_naive(&[], &[], &[], None).is_empty());
+        for strategy in STRATEGIES {
+            assert!(prefix_scan(&[], &[], &[], None, strategy).is_empty());
         }
     }
 

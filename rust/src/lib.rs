@@ -17,12 +17,14 @@
 //!
 //! ## Features
 //!
-//! The XLA/PJRT execution tier (`runtime`, `coordinator`, the serve HLO
-//! paths and the paper-table harnesses) requires a machine with XLA
-//! installed and is gated behind the **`pjrt`** cargo feature. The default
-//! feature set is pure Rust: the SoA scan engine, attention oracles,
-//! rust-native streaming sessions, data substrates and benches all build
-//! and test with `cargo build --release && cargo test -q` alone.
+//! The XLA/PJRT execution tier (`runtime`, `coordinator`, the compiled-HLO
+//! serve backend and the paper-table harnesses) requires a machine with
+//! XLA installed and is gated behind the **`pjrt`** cargo feature. The
+//! default feature set is pure Rust: the SoA scan engine (with its
+//! persistent worker pool), attention oracles, rust-native streaming
+//! sessions, the TCP serving stack behind the `StreamSession` trait, the
+//! `aaren` CLI, data substrates and benches all build and test with
+//! `cargo build --release && cargo test -q` alone.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -1,213 +1,318 @@
 //! `aaren` — CLI launcher for the Attention-as-an-RNN reproduction.
 //!
+//! The binary builds with the default (pure-Rust, no XLA) feature set:
+//! `serve` and `bench fig5` run everywhere over the rust-native sessions,
+//! while the HLO-driven subcommands (`check`, `info`, `train`, the paper
+//! tables) are compiled in with `--features pjrt`.
+//!
 //! Subcommands:
-//!   check                      verify artifacts load + run (smoke of all families)
-//!   train   --domain …         train one model/dataset cell and print metrics
-//!   bench   table1|table2|table3|table4|fig5|params|all
 //!   serve   --addr host:port   streaming inference server (line-JSON protocol)
-//!   info                       list artifacts with arg/param counts
+//!           --channels N --shards N  native session width / executor pool size
+//!           --smoke            loopback create/step/stats round-trip, then exit
+//!   bench   fig5 [+ table1..table4|params|all with pjrt]
+//!   check                      verify artifacts load + run (pjrt)
+//!   train   --domain …         train one model/dataset cell (pjrt)
+//!   info                       list artifacts (pjrt)
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --seeds N,
 //! --steps N, --limit K (restrict #datasets), --horizons a,b,c.
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use aaren::bench_harness::{self, BenchOpts};
-use aaren::coordinator::experiments::{self, Kind};
-use aaren::data::{events, rl, tsc, tsf};
-use aaren::runtime::exec::Engine;
+use aaren::serve::server::{self, ServeConfig};
 use aaren::util::cli::Args;
 
+#[cfg(feature = "pjrt")]
+use pjrt_cli::{bench_cmd, hlo_cmd};
+
 fn main() {
-    let args = Args::from_env();
+    let args = match Args::from_env() {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("run `aaren help` for usage");
+            std::process::exit(2);
+        }
+    };
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
-fn opts(args: &Args) -> BenchOpts {
-    BenchOpts {
-        seeds: args.u64("seeds", 2),
-        train_steps: args.usize("steps", 150),
-        limit: args.usize("limit", 0),
-        artifacts: PathBuf::from(args.str("artifacts", "artifacts")),
-    }
-}
-
-fn kind_of(args: &Args) -> Result<Kind> {
-    match args.str("model", "aaren").as_str() {
-        "aaren" => Ok(Kind::Aaren),
-        "tf" | "transformer" => Ok(Kind::Tf),
-        other => bail!("unknown --model {other:?} (aaren|tf)"),
-    }
-}
-
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    let o = opts(args);
     match cmd {
-        "check" => bench_harness::tables::run_smoke(&o),
-        "info" => info(&o),
-        "train" => train(args, &o),
-        "serve" => {
-            let addr = args.str("addr", "127.0.0.1:7878");
-            aaren::serve::server::serve(&o.artifacts, &addr)
-        }
+        "serve" => serve_cmd(args),
         "bench" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
-            let horizons: Vec<usize> = args
-                .str("horizons", "96,192,336,720")
-                .split(',')
-                .filter_map(|s| s.trim().parse().ok())
-                .collect();
-            match which {
-                "table1" => bench_harness::run_table1(&o),
-                "table2" => bench_harness::run_table2(&o),
-                "table3" => bench_harness::run_table3(&o, &horizons),
-                "table4" => bench_harness::run_table4(&o),
-                "fig5" => bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512)).map(|_| ()),
-                "params" => bench_harness::run_params(&o.artifacts),
-                "all" => {
-                    bench_harness::run_table1(&o)?;
-                    bench_harness::run_table2(&o)?;
-                    bench_harness::run_table3(&o, &horizons)?;
-                    bench_harness::run_table4(&o)?;
-                    bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512))?;
-                    bench_harness::run_params(&o.artifacts)
-                }
-                other => bail!("unknown bench {other:?}"),
-            }
+            bench_cmd(which, args)
         }
-        "help" | _ => {
-            println!(
-                "aaren — Attention as an RNN (Feng et al., 2024) reproduction\n\n\
-                 usage: aaren <command> [flags]\n\n\
-                 commands:\n  \
-                 check                 smoke-run every artifact family\n  \
-                 info                  list artifacts\n  \
-                 train --domain D      train one cell (domains: tsf tsc ef rl stream)\n  \
-                 bench <table1|table2|table3|table4|fig5|params|all>\n  \
-                 serve --addr H:P      streaming inference server\n\n\
-                 flags: --artifacts DIR  --model aaren|tf  --seeds N  --steps N\n       \
-                 --limit K  --horizons 96,192  --dataset NAME  --tokens N"
-            );
+        "check" | "info" | "train" => hlo_cmd(cmd, args),
+        _ => {
+            help();
             Ok(())
         }
     }
 }
 
-fn info(o: &BenchOpts) -> Result<()> {
-    let mut names: Vec<String> = std::fs::read_dir(&o.artifacts)?
-        .filter_map(|e| e.ok())
-        .filter_map(|e| {
-            e.file_name()
-                .to_str()
-                .and_then(|n| n.strip_suffix(".manifest.json").map(String::from))
-        })
-        .collect();
-    names.sort();
-    println!("{} artifacts in {:?}:", names.len(), o.artifacts);
-    for name in names {
-        let m = aaren::runtime::manifest::Manifest::load(&o.artifacts, &name)?;
-        println!(
-            "  {:<28} kind={:<5} args={:<3} params={:>8} state_bytes={}",
-            m.name,
-            m.kind,
-            m.args.len(),
-            m.param_elements(),
-            m.state_bytes()
-        );
+fn serve_cmd(args: &Args) -> Result<()> {
+    let defaults = ServeConfig::default();
+    // the HLO backend exists only in pjrt builds; native serving needs no
+    // artifacts at all. Offer it only when --artifacts was given or the
+    // default dir exists — otherwise the router's "pass --artifacts DIR"
+    // error stays reachable instead of a dead HLO executor swallowing it.
+    let artifacts = if cfg!(feature = "pjrt") {
+        let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+        (args.flags.contains_key("artifacts") || dir.is_dir()).then_some(dir)
+    } else {
+        if args.flags.contains_key("artifacts") {
+            eprintln!(
+                "warning: --artifacts ignored — this build has no HLO backend \
+                 (rebuild with --features pjrt)"
+            );
+        }
+        None
+    };
+    let cfg = ServeConfig {
+        addr: args.str("addr", &defaults.addr),
+        channels: args.usize("channels", defaults.channels),
+        shards: args.usize("shards", defaults.shards),
+        artifacts,
+    };
+    if args.bool("smoke") {
+        return server::run_smoke(&cfg);
     }
-    Ok(())
+    server::serve(&cfg)
 }
 
-fn train(args: &Args, o: &BenchOpts) -> Result<()> {
-    let mut engine = Engine::new(&o.artifacts)?;
-    let kind = kind_of(args)?;
-    let seed = args.u64("seed", 1);
-    let steps = o.train_steps;
-    match args.str("domain", "tsf").as_str() {
-        "tsf" => {
-            let horizon = args.usize("horizon", 96);
-            let ds = tsf::ALL
-                .into_iter()
-                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ETTh1")))
-                .unwrap_or(tsf::TsfDataset::Etth1);
-            let r = experiments::run_tsf(&mut engine, kind, ds, horizon, steps, seed)?;
-            println!(
-                "{} {} T={horizon}: MSE {:.3} MAE {:.3} (final train loss {:.4})",
-                kind.display(),
-                ds.name(),
-                r.mse,
-                r.mae,
-                r.final_train_loss
-            );
+#[cfg(not(feature = "pjrt"))]
+fn bench_cmd(which: &str, args: &Args) -> Result<()> {
+    match which {
+        "fig5" | "all" => {
+            if which == "all" {
+                println!(
+                    "note: table1-table4/params drive compiled HLO and need --features pjrt \
+                     — running the rust-native fig5 bench only"
+                );
+            }
+            let tokens = args.usize("tokens", 512);
+            let channels = args.usize("channels", 8);
+            aaren::bench_harness::run_fig5_native(tokens, channels).map(|_| ())
         }
-        "tsc" => {
-            let ds = tsc::ALL
-                .into_iter()
-                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ArabicDigits")))
-                .unwrap_or(tsc::TscDataset::ArabicDigits);
-            let r = experiments::run_tsc(&mut engine, kind, ds, steps, seed)?;
-            println!(
-                "{} {}: Acc {:.2}% (final train loss {:.4})",
-                kind.display(),
-                ds.name(),
-                r.acc,
-                r.final_train_loss
-            );
+        "table1" | "table2" | "table3" | "table4" | "params" => {
+            anyhow::bail!("bench {which:?} drives compiled HLO — rebuild with `--features pjrt`")
         }
-        "ef" => {
-            let ds = events::ALL
-                .into_iter()
-                .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "Sin")))
-                .unwrap_or(events::EfDataset::Sin);
-            let r = experiments::run_ef(&mut engine, kind, ds, steps, seed)?;
-            println!(
-                "{} {}: NLL {:.3} RMSE {:.3} Acc {:?} (final train loss {:.4})",
-                kind.display(),
-                ds.name(),
-                r.nll,
-                r.rmse,
-                r.acc,
-                r.final_train_loss
-            );
-        }
-        "rl" => {
-            let env = rl::ALL_ENVS
-                .into_iter()
-                .find(|e| e.name().eq_ignore_ascii_case(&args.str("dataset", "Hopper")))
-                .unwrap_or(rl::EnvId::Hopper);
-            let tier = match args.str("tier", "medium").as_str() {
-                "medium" => rl::Tier::Medium,
-                "medium-replay" | "replay" => rl::Tier::MediumReplay,
-                "medium-expert" | "expert" => rl::Tier::MediumExpert,
-                other => bail!("unknown tier {other:?}"),
-            };
-            let r = experiments::run_rl(
-                &mut engine,
-                kind,
-                env,
-                tier,
-                steps,
-                args.usize("episodes", 40),
-                args.usize("rollouts", 3),
-                seed,
-            )?;
-            println!(
-                "{} {} {}: normalised score {:.1} (raw return {:.2}, final loss {:.4})",
-                kind.display(),
-                env.name(),
-                tier.name(),
-                r.normalised_score,
-                r.raw_return,
-                r.final_train_loss
-            );
-        }
-        other => bail!("unknown --domain {other:?}"),
+        other => anyhow::bail!("unknown bench {other:?}"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn hlo_cmd(cmd: &str, _args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "`{cmd}` executes compiled HLO artifacts — rebuild with `--features pjrt` on a \
+         machine with XLA"
+    )
+}
+
+fn help() {
+    println!(
+        "aaren — Attention as an RNN (Feng et al., 2024) reproduction\n\n\
+         usage: aaren <command> [flags]\n\n\
+         commands (default build, no XLA needed):\n  \
+         serve --addr H:P      streaming inference server (line-JSON protocol)\n                        \
+         --channels N   native session width (default 8)\n                        \
+         --shards N     native executor pool size (default: cores, max 8)\n                        \
+         --smoke        loopback self-test, then exit\n                        \
+         protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \
+         bench fig5            streaming memory/time shape (rust-native sessions)\n\n\
+         commands needing --features pjrt + compiled artifacts:\n  \
+         check                 smoke-run every artifact family\n  \
+         info                  list artifacts\n  \
+         train --domain D      train one cell (domains: tsf tsc ef rl stream)\n  \
+         bench <table1|table2|table3|table4|params|all>\n\n\
+         flags: --artifacts DIR  --model aaren|tf  --seeds N  --steps N\n       \
+         --limit K  --horizons 96,192  --dataset NAME  --tokens N"
+    );
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_cli {
+    use std::path::PathBuf;
+
+    use anyhow::{bail, Result};
+
+    use aaren::bench_harness::{self, BenchOpts};
+    use aaren::coordinator::experiments::{self, Kind};
+    use aaren::data::{events, rl, tsc, tsf};
+    use aaren::runtime::exec::Engine;
+    use aaren::util::cli::Args;
+
+    fn opts(args: &Args) -> BenchOpts {
+        BenchOpts {
+            seeds: args.u64("seeds", 2),
+            train_steps: args.usize("steps", 150),
+            limit: args.usize("limit", 0),
+            artifacts: PathBuf::from(args.str("artifacts", "artifacts")),
+        }
+    }
+
+    fn kind_of(args: &Args) -> Result<Kind> {
+        match args.str("model", "aaren").as_str() {
+            "aaren" => Ok(Kind::Aaren),
+            "tf" | "transformer" => Ok(Kind::Tf),
+            other => bail!("unknown --model {other:?} (aaren|tf)"),
+        }
+    }
+
+    pub fn bench_cmd(which: &str, args: &Args) -> Result<()> {
+        let o = opts(args);
+        let horizons: Vec<usize> = args
+            .str("horizons", "96,192,336,720")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        match which {
+            "table1" => bench_harness::run_table1(&o),
+            "table2" => bench_harness::run_table2(&o),
+            "table3" => bench_harness::run_table3(&o, &horizons),
+            "table4" => bench_harness::run_table4(&o),
+            "fig5" => bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512)).map(|_| ()),
+            "params" => bench_harness::run_params(&o.artifacts),
+            "all" => {
+                bench_harness::run_table1(&o)?;
+                bench_harness::run_table2(&o)?;
+                bench_harness::run_table3(&o, &horizons)?;
+                bench_harness::run_table4(&o)?;
+                bench_harness::run_fig5(&o.artifacts, args.usize("tokens", 512))?;
+                bench_harness::run_params(&o.artifacts)
+            }
+            other => bail!("unknown bench {other:?}"),
+        }
+    }
+
+    pub fn hlo_cmd(cmd: &str, args: &Args) -> Result<()> {
+        let o = opts(args);
+        match cmd {
+            "check" => bench_harness::tables::run_smoke(&o),
+            "info" => info(&o),
+            "train" => train(args, &o),
+            other => bail!("unknown command {other:?}"),
+        }
+    }
+
+    fn info(o: &BenchOpts) -> Result<()> {
+        let mut names: Vec<String> = std::fs::read_dir(&o.artifacts)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_suffix(".manifest.json").map(String::from))
+            })
+            .collect();
+        names.sort();
+        println!("{} artifacts in {:?}:", names.len(), o.artifacts);
+        for name in names {
+            let m = aaren::runtime::manifest::Manifest::load(&o.artifacts, &name)?;
+            println!(
+                "  {:<28} kind={:<5} args={:<3} params={:>8} state_bytes={}",
+                m.name,
+                m.kind,
+                m.args.len(),
+                m.param_elements(),
+                m.state_bytes()
+            );
+        }
+        Ok(())
+    }
+
+    fn train(args: &Args, o: &BenchOpts) -> Result<()> {
+        let mut engine = Engine::new(&o.artifacts)?;
+        let kind = kind_of(args)?;
+        let seed = args.u64("seed", 1);
+        let steps = o.train_steps;
+        match args.str("domain", "tsf").as_str() {
+            "tsf" => {
+                let horizon = args.usize("horizon", 96);
+                let ds = tsf::ALL
+                    .into_iter()
+                    .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ETTh1")))
+                    .unwrap_or(tsf::TsfDataset::Etth1);
+                let r = experiments::run_tsf(&mut engine, kind, ds, horizon, steps, seed)?;
+                println!(
+                    "{} {} T={horizon}: MSE {:.3} MAE {:.3} (final train loss {:.4})",
+                    kind.display(),
+                    ds.name(),
+                    r.mse,
+                    r.mae,
+                    r.final_train_loss
+                );
+            }
+            "tsc" => {
+                let ds = tsc::ALL
+                    .into_iter()
+                    .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "ArabicDigits")))
+                    .unwrap_or(tsc::TscDataset::ArabicDigits);
+                let r = experiments::run_tsc(&mut engine, kind, ds, steps, seed)?;
+                println!(
+                    "{} {}: Acc {:.2}% (final train loss {:.4})",
+                    kind.display(),
+                    ds.name(),
+                    r.acc,
+                    r.final_train_loss
+                );
+            }
+            "ef" => {
+                let ds = events::ALL
+                    .into_iter()
+                    .find(|d| d.name().eq_ignore_ascii_case(&args.str("dataset", "Sin")))
+                    .unwrap_or(events::EfDataset::Sin);
+                let r = experiments::run_ef(&mut engine, kind, ds, steps, seed)?;
+                println!(
+                    "{} {}: NLL {:.3} RMSE {:.3} Acc {:?} (final train loss {:.4})",
+                    kind.display(),
+                    ds.name(),
+                    r.nll,
+                    r.rmse,
+                    r.acc,
+                    r.final_train_loss
+                );
+            }
+            "rl" => {
+                let env = rl::ALL_ENVS
+                    .into_iter()
+                    .find(|e| e.name().eq_ignore_ascii_case(&args.str("dataset", "Hopper")))
+                    .unwrap_or(rl::EnvId::Hopper);
+                let tier = match args.str("tier", "medium").as_str() {
+                    "medium" => rl::Tier::Medium,
+                    "medium-replay" | "replay" => rl::Tier::MediumReplay,
+                    "medium-expert" | "expert" => rl::Tier::MediumExpert,
+                    other => bail!("unknown tier {other:?}"),
+                };
+                let r = experiments::run_rl(
+                    &mut engine,
+                    kind,
+                    env,
+                    tier,
+                    steps,
+                    args.usize("episodes", 40),
+                    args.usize("rollouts", 3),
+                    seed,
+                )?;
+                println!(
+                    "{} {} {}: normalised score {:.1} (raw return {:.2}, final loss {:.4})",
+                    kind.display(),
+                    env.name(),
+                    tier.name(),
+                    r.normalised_score,
+                    r.raw_return,
+                    r.final_train_loss
+                );
+            }
+            other => bail!("unknown --domain {other:?}"),
+        }
+        Ok(())
+    }
 }

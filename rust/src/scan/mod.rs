@@ -23,13 +23,15 @@
 //! | [`sequential`]      | O(N)       | O(N)         | single core; small N; lowest constant |
 //! | [`hillis_steele`]   | O(N log N) | O(log N)     | wide SIMD/SIMT hardware (the paper's Algorithm 1); on CPU its extra work loses to `sequential` |
 //! | [`blelloch`]        | O(N)       | O(2 log N)   | work-optimal tree scan; on CPU the strided access pattern still trails `sequential` — kept as the executable spec the accelerator kernels mirror |
-//! | [`chunked_parallel`]| O(N)       | O(N/C + C)   | multi-core CPU: near-linear speedup once N/C amortises thread spawn (N ≳ a few thousand) |
+//! | [`chunked_parallel`]| O(N)       | O(N/C + C)   | multi-core CPU: near-linear speedup once chunks amortise the pool handoff (a few hundred elements) |
 //!
 //! The chunked scan is the classic three-phase decomposition:
 //!
 //! 1. split the sequence into C contiguous chunks and sequentially scan
-//!    each chunk on its own `std::thread::scope` worker (no sharing — each
-//!    worker owns a disjoint window of the output buffer);
+//!    each chunk on a persistent [`ScanPool`] worker (no sharing — each
+//!    worker owns a disjoint window of the output buffer; the pool is
+//!    spawned once per process and reused across calls, so no scan pays
+//!    a thread-spawn cost);
 //! 2. sequentially scan the C chunk-final tuples ("carries") — C is tiny,
 //!    so this serial step is negligible;
 //! 3. broadcast-combine carry k−1 into every element of chunk k (again one
@@ -42,11 +44,13 @@
 //! `crate::serve`.
 
 pub mod ops;
+pub mod pool;
 pub mod soa;
 
 pub use ops::{
     combine, combine_into, combine_rows, fold_row, fold_token, scan_rows_inplace, Muw, MASK_FILL,
 };
+pub use pool::ScanPool;
 pub use soa::ScanBuffer;
 
 /// Sequential left-fold inclusive prefix scan — the ground truth. One
@@ -143,10 +147,11 @@ pub fn blelloch(src: &ScanBuffer) -> ScanBuffer {
 }
 
 /// Multi-threaded chunked inclusive scan: split into `num_chunks`
-/// contiguous chunks, sequentially scan each on its own scoped thread,
-/// scan the chunk carries, then broadcast-combine each carry into the next
-/// chunk (again in parallel). O(N) work, ~N/C + C depth — near-linear
-/// speedup on C cores for N large enough to amortise thread spawn.
+/// contiguous chunks, sequentially scan each on a persistent
+/// [`ScanPool`] worker, scan the chunk carries, then broadcast-combine
+/// each carry into the next chunk (again on the pool). O(N) work,
+/// ~N/C + C depth — near-linear speedup on C cores, without paying a
+/// thread spawn per call (the pool is process-wide and lazily spawned).
 ///
 /// Any `num_chunks` is valid: it is clamped to [1, n], and n need not be
 /// divisible by it (the final chunk is short).
@@ -163,14 +168,18 @@ pub fn chunked_parallel(src: &ScanBuffer, num_chunks: usize) -> ScanBuffer {
         sequential_inplace(&mut out);
         return out;
     }
+    let pool = ScanPool::global();
 
     // phase 1: independent sequential scan of each chunk, in place on
     // disjoint &mut windows of the one output allocation
-    std::thread::scope(|scope| {
-        for (ms, us, ws) in chunk_views(&mut out, chunk, d, 0) {
-            scope.spawn(move || scan_rows_inplace(ms, us, ws, d));
-        }
-    });
+    pool.scope(
+        chunk_views(&mut out, chunk, d, 0)
+            .into_iter()
+            .map(|(ms, us, ws)| {
+                Box::new(move || scan_rows_inplace(ms, us, ws, d)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect(),
+    );
 
     // phase 2: scan the chunk-final carries (nchunks elements — serial)
     let mut carries = ScanBuffer::with_capacity(d, nchunks);
@@ -182,24 +191,27 @@ pub fn chunked_parallel(src: &ScanBuffer, num_chunks: usize) -> ScanBuffer {
     sequential_inplace(&mut carries);
 
     // phase 3: broadcast carry k−1 into every element of chunk k
-    std::thread::scope(|scope| {
-        let carries = &carries;
-        for (k, (ms, us, ws)) in chunk_views(&mut out, chunk, d, 1).into_iter().enumerate() {
-            let (cm, cu, cw) = carries.row(k);
-            scope.spawn(move || {
-                for i in 0..ms.len() {
-                    fold_row(cm, cu, cw, &mut ms[i], &mut us[i], &mut ws[i * d..(i + 1) * d]);
-                }
-            });
-        }
-    });
+    let carries = &carries;
+    pool.scope(
+        chunk_views(&mut out, chunk, d, 1)
+            .into_iter()
+            .enumerate()
+            .map(|(k, (ms, us, ws))| {
+                Box::new(move || {
+                    let (cm, cu, cw) = carries.row(k);
+                    for i in 0..ms.len() {
+                        fold_row(cm, cu, cw, &mut ms[i], &mut us[i], &mut ws[i * d..(i + 1) * d]);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect(),
+    );
     out
 }
 
-/// [`chunked_parallel`] with one chunk per available core.
+/// [`chunked_parallel`] with one chunk per pool worker (one per core).
 pub fn chunked_parallel_auto(src: &ScanBuffer) -> ScanBuffer {
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
-    chunked_parallel(src, threads)
+    chunked_parallel(src, ScanPool::global().threads())
 }
 
 /// Split `buf` into per-chunk disjoint (&mut m, &mut u, &mut w) windows of

@@ -1,0 +1,251 @@
+//! Persistent worker pool for the chunked parallel scan.
+//!
+//! `scan::chunked_parallel` used to spawn a fresh `std::thread::scope`
+//! worker set on every call; for n ≲ 10k the spawn cost capped the
+//! speedup (ROADMAP follow-up). This pool spawns its workers once
+//! (lazily, one per available core) and reuses them for every scan: a
+//! scope is now a channel send per chunk instead of a thread spawn +
+//! join per chunk.
+//!
+//! The API is intentionally scan-shaped: [`ScanPool::scope`] takes a
+//! batch of jobs that may borrow the caller's stack (the disjoint `&mut`
+//! chunk windows of one `ScanBuffer`) and blocks until every job has
+//! run. That blocking is what makes the lifetime erasure sound: no job
+//! can outlive the borrow it captured because `scope` does not return —
+//! even on panic, a drop guard waits — until the last job finished.
+//!
+//! Do not call `scope` from inside a pool job: jobs queued by an inner
+//! scope could wait on the very worker that is blocked inside it.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// A type-erased unit of work. Jobs submitted through [`ScanPool::scope`]
+/// actually borrow the caller's stack; the latch protocol in `scope`
+/// guarantees they finish before those borrows end.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Counts outstanding jobs of one `scope` call and records panics.
+struct Latch {
+    /// (pending jobs, any job panicked)
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { state: Mutex::new((0, false)), done: Condvar::new() }
+    }
+
+    fn add(&self) {
+        self.state.lock().unwrap().0 += 1;
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        g.1 |= panicked;
+        if g.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+
+    fn panicked(&self) -> bool {
+        self.state.lock().unwrap().1
+    }
+}
+
+/// Decrements the latch when a job finishes — including by unwinding, so
+/// a panicking job can never leave `scope` waiting forever.
+struct LatchGuard(Arc<Latch>);
+
+impl LatchGuard {
+    fn new(latch: &Arc<Latch>) -> LatchGuard {
+        latch.add();
+        LatchGuard(Arc::clone(latch))
+    }
+}
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.0.complete(std::thread::panicking());
+    }
+}
+
+/// Waits for all submitted jobs even if the caller's inline job panics,
+/// so borrowed chunk windows stay alive until every worker is done.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// A fixed set of worker threads consuming jobs from one shared queue.
+/// Workers live as long as the pool (forever, for [`ScanPool::global`]).
+pub struct ScanPool {
+    tx: mpsc::Sender<Job>,
+    threads: usize,
+}
+
+impl ScanPool {
+    /// Pool with exactly `threads` workers (tests use this; production
+    /// code shares [`ScanPool::global`]).
+    pub fn with_threads(threads: usize) -> ScanPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("scan-pool-{i}"))
+                .spawn(move || loop {
+                    // hold the queue lock only while waiting for a job,
+                    // never while running one
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // pool dropped: workers drain out
+                    };
+                    // a panicking job must not kill the worker; the
+                    // LatchGuard inside `job` records the panic for the
+                    // waiting `scope` caller
+                    let _ = catch_unwind(AssertUnwindSafe(job));
+                })
+                .expect("spawn scan pool worker");
+        }
+        ScanPool { tx, threads }
+    }
+
+    /// The process-wide pool, spawned on first use with one worker per
+    /// available core.
+    pub fn global() -> &'static ScanPool {
+        static POOL: OnceLock<ScanPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let t = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+            ScanPool::with_threads(t)
+        })
+    }
+
+    /// Number of worker threads (the natural chunk count for a scan).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every job on the pool and return once all of them completed.
+    /// Jobs may borrow from the caller's stack (`'env`); the final job
+    /// runs inline on the calling thread. Panics (after all jobs have
+    /// finished) if any job panicked.
+    pub fn scope<'env>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let latch = Arc::new(Latch::new());
+        // run the last job on the caller: with C jobs on C busy cores
+        // this saves one handoff, and a singleton batch never queues
+        let inline = jobs.pop();
+        // from here on, every exit path must wait for queued jobs first
+        let wait = WaitGuard(&latch);
+        for job in jobs {
+            let guard = LatchGuard::new(&latch);
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let _guard = guard;
+                job();
+            });
+            // SAFETY: `wrapped` borrows at most 'env data. It is either
+            // executed by a worker or handed back by a failed send and
+            // run below — and `wait` (the WaitGuard) blocks this frame
+            // from returning, normally or by unwind, until the latch
+            // hits zero, i.e. until the job has run and dropped. The
+            // erased borrow therefore never outlives 'env.
+            let erased: Job = unsafe { std::mem::transmute(wrapped) };
+            if let Err(send_err) = self.tx.send(erased) {
+                // workers gone (cannot happen for the global pool): run
+                // the job here so correctness never depends on the pool
+                (send_err.0)();
+            }
+        }
+        if let Some(job) = inline {
+            job();
+        }
+        drop(wait); // blocks until all queued jobs completed
+        if latch.panicked() {
+            panic!("scan pool job panicked");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_and_reuses_workers() {
+        let pool = ScanPool::with_threads(3);
+        for round in 0..50 {
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(jobs);
+            assert_eq!(counter.load(Ordering::SeqCst), 8, "round {round}");
+        }
+    }
+
+    #[test]
+    fn jobs_mutate_disjoint_borrowed_windows() {
+        let pool = ScanPool::with_threads(4);
+        let mut data = vec![0usize; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(k, chunk)| {
+                Box::new(move || {
+                    for x in chunk.iter_mut() {
+                        *x = k + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i / 16 + 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scan pool job panicked")]
+    fn propagates_job_panics_after_draining() {
+        let pool = ScanPool::with_threads(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|k| {
+                Box::new(move || {
+                    if k == 1 {
+                        panic!("boom");
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+    }
+
+    #[test]
+    fn empty_scope_is_a_no_op() {
+        ScanPool::with_threads(2).scope(Vec::new());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        assert!(ScanPool::global().threads() >= 1);
+        assert!(std::ptr::eq(ScanPool::global(), ScanPool::global()));
+    }
+}

@@ -1,20 +1,34 @@
-//! Streaming inference service: the session manager (`session`) holds
-//! per-client RNN state — constant-size for Aaren, bucketed KV cache for
-//! the Transformer baseline — and the TCP server (`server`, `pjrt`
-//! feature) exposes a line-delimited JSON protocol over it. PJRT handles
-//! are not Sync, so a single executor thread owns all sessions and
-//! connection threads talk to it over channels (a router in front of one
-//! model replica).
+//! Streaming inference service — the paper's §3.3 constant-memory serving
+//! claim as a runnable stack, with no XLA required.
 //!
-//! Builds without the `pjrt` feature still get the rust-native streaming
-//! sessions ([`NativeAarenSession`], [`NativeTfSession`]) — the O(1)
-//! `Muw`-fold fallback over the SoA scan engine.
+//! * [`session`] defines the [`StreamSession`] trait (step / state_bytes /
+//!   tokens_seen) and its implementations: the always-available rust-native
+//!   sessions ([`NativeAarenSession`] — one O(1) `Muw` fold per token — and
+//!   [`NativeTfSession`] — a KV cache walking [`TF_BUCKETS`] then doubling
+//!   geometrically) plus, with the `pjrt` feature, the model-bound
+//!   compiled-HLO session.
+//! * [`server`] exposes a line-delimited JSON TCP protocol over trait
+//!   objects. `create` picks the backend per session: `"backend":"native"`
+//!   (default, pure Rust) or `"backend":"hlo"` (`pjrt` builds started with
+//!   artifacts). Native sessions are served by a **sharded executor pool**
+//!   — N worker threads with sessions pinned by id — while HLO sessions,
+//!   whose PJRT handles are not `Send`, stay on one dedicated executor
+//!   thread.
+//!
+//! Protocol (one JSON object per line):
+//! ```text
+//! -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
+//! -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
+//! -> {"op":"close","id":N}                     <- {"ok":true}
+//! -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B}
+//! -> {"op":"shutdown"}                         <- {"ok":true}
+//! ```
 
-#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod session;
 
-pub use session::{NativeAarenSession, NativeTfSession, TF_BUCKETS};
+pub use server::{Client, ServeConfig, Server};
+pub use session::{NativeAarenSession, NativeTfSession, StreamSession, TF_BUCKETS};
 
 #[cfg(feature = "pjrt")]
-pub use session::{Session, StreamModel};
+pub use session::{BoundSession, Session, StreamModel};

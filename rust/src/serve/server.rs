@@ -1,50 +1,96 @@
-//! Line-delimited JSON streaming server.
+//! Line-delimited JSON streaming server over [`StreamSession`] trait
+//! objects — the rust-native serving stack, no XLA required.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"op":"create","kind":"aaren"|"tf"}          <- {"id":N}
-//!   -> {"op":"step","id":N,"x":[f32;channels]}      <- {"y":[...],"state_bytes":B,"t":T}
-//!   -> {"op":"close","id":N}                        <- {"ok":true}
-//!   -> {"op":"stats"}                                <- {"sessions":K,"total_state_bytes":B}
+//!   -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
+//!   -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
+//!   -> {"op":"close","id":N}                     <- {"ok":true}
+//!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B}
+//!   -> {"op":"shutdown"}                         <- {"ok":true}
 //!
-//! PJRT handles are single-threaded, so one executor thread owns the
-//! engine + sessions; connection handler threads forward requests over an
-//! mpsc channel and wait on a per-request reply channel (a minimal
-//! router/worker split, the shape vLLM-style serving uses).
+//! Architecture: connection handler threads parse requests and hand them
+//! to a [`Router`], which forwards each to an executor over an mpsc
+//! channel and waits on a per-request reply channel. Native sessions are
+//! plain `Send` Rust data, so they are served by a **sharded executor
+//! pool** — `shards` worker threads, each owning the sessions pinned to
+//! it by `id % shards` — instead of the single-executor bottleneck the
+//! PJRT tier needs. HLO sessions (whose PJRT handles are not `Send`,
+//! `pjrt` builds only) stay on one dedicated executor thread; the session
+//! id's namespace encodes the route, so no shared routing table exists.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::path::Path;
-use std::sync::mpsc;
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::runtime::exec::Engine;
-use crate::serve::session::{Session, StreamModel};
+use crate::serve::session::{NativeAarenSession, NativeTfSession, StreamSession};
 use crate::util::json::Json;
 
+/// A request as an executor sees it (ids are assigned by the router
+/// before dispatch, so `Create` already carries one).
 pub enum Request {
-    Create { kind: String },
+    Create { id: u64, kind: String },
     Step { id: u64, x: Vec<f32> },
     Close { id: u64 },
     Stats,
     Shutdown,
 }
 
-pub type Reply = Result<Json>;
-
-pub struct ServerHandle {
-    pub tx: mpsc::Sender<(Request, mpsc::Sender<Reply>)>,
+/// What an executor sends back. Shutdown is a first-class variant of the
+/// reply path — not an error-message sentinel to be string-matched.
+pub enum Response {
+    /// The wire-level reply body.
+    Value(Json),
+    /// Per-shard stats, aggregated by the router before hitting the wire.
+    Stats { sessions: usize, state_bytes: usize },
+    /// The executor acknowledges shutdown and exits its loop.
+    ShuttingDown,
 }
 
-impl ServerHandle {
-    pub fn call(&self, req: Request) -> Reply {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send((req, rtx))
-            .map_err(|_| anyhow!("executor thread gone"))?;
-        rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+pub type Reply = Result<Response>;
+
+/// A request plus the channel its reply goes back on.
+pub type Envelope = (Request, mpsc::Sender<Reply>);
+pub type ReqTx = mpsc::Sender<Envelope>;
+pub type ReqRx = mpsc::Receiver<Envelope>;
+
+/// Which executor family a `create` lands on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust-native sessions on the sharded executor pool (default).
+    Native,
+    /// Compiled-HLO sessions on the dedicated PJRT executor (`pjrt`
+    /// builds started with artifacts).
+    Hlo,
+}
+
+/// Session-id namespace split: ids below the base are native (routed to
+/// shard `id % shards`), ids at or above it belong to the HLO executor —
+/// the route is a pure function of the id.
+const HLO_ID_BASE: u64 = 1 << 32;
+
+/// Creates the sessions one executor owns; each executor family brings
+/// its own factory (native widths vs loaded HLO models).
+pub trait SessionFactory {
+    fn create(&mut self, kind: &str) -> Result<Box<dyn StreamSession>>;
+}
+
+/// Factory for the rust-native tier: sessions over `channels`-dim tokens.
+pub struct NativeFactory {
+    pub channels: usize,
+}
+
+impl SessionFactory for NativeFactory {
+    fn create(&mut self, kind: &str) -> Result<Box<dyn StreamSession>> {
+        match kind {
+            "aaren" => Ok(Box::new(NativeAarenSession::new(self.channels))),
+            "tf" => Ok(Box::new(NativeTfSession::new(self.channels))),
+            other => Err(anyhow!("unknown kind {other:?} (aaren|tf)")),
+        }
     }
 }
 
@@ -52,94 +98,256 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
-/// The executor: owns engine, models and all sessions. Runs until a
-/// Shutdown request arrives.
-pub fn run_executor(
-    artifacts: &Path,
-    rx: mpsc::Receiver<(Request, mpsc::Sender<Reply>)>,
-) -> Result<()> {
-    let mut engine = Engine::new(artifacts)?;
-    let aaren = StreamModel::load_aaren(&mut engine)?;
-    let tf = StreamModel::load_tf(&mut engine)?;
-    let mut sessions: HashMap<u64, (Session, bool)> = HashMap::new(); // bool: is_aaren
-    let mut next_id = 1u64;
-
+/// One executor shard: owns a private id → session map and serves
+/// requests from its channel until a `Shutdown` request arrives
+/// (acknowledged with [`Response::ShuttingDown`]).
+pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx) {
+    let mut sessions: HashMap<u64, Box<dyn StreamSession>> = HashMap::new();
     while let Ok((req, reply)) = rx.recv() {
-        let resp: Reply = (|| match req {
-            Request::Create { kind } => {
-                let (session, is_aaren) = match kind.as_str() {
-                    "aaren" => (Session::new_aaren(&aaren)?, true),
-                    "tf" => (Session::new_tf(&tf)?, false),
-                    other => return Err(anyhow!("unknown kind {other:?}")),
+        let resp: Reply = match req {
+            Request::Create { id, kind } => factory.create(&kind).map(|session| {
+                sessions.insert(id, session);
+                Response::Value(obj(vec![("id", Json::Num(id as f64))]))
+            }),
+            Request::Step { id, x } => step_session(&mut sessions, id, &x),
+            Request::Close { id } => sessions
+                .remove(&id)
+                .map(|_| Response::Value(obj(vec![("ok", Json::Bool(true))])))
+                .ok_or_else(|| anyhow!("no session {id}")),
+            Request::Stats => Ok(Response::Stats {
+                sessions: sessions.len(),
+                state_bytes: sessions.values().map(|s| s.state_bytes()).sum(),
+            }),
+            Request::Shutdown => Ok(Response::ShuttingDown),
+        };
+        let shutting_down = matches!(resp, Ok(Response::ShuttingDown));
+        let _ = reply.send(resp);
+        if shutting_down {
+            break;
+        }
+    }
+}
+
+fn step_session(sessions: &mut HashMap<u64, Box<dyn StreamSession>>, id: u64, x: &[f32]) -> Reply {
+    let session = sessions.get_mut(&id).ok_or_else(|| anyhow!("no session {id}"))?;
+    let y = session.step(x)?;
+    Ok(Response::Value(obj(vec![
+        ("y", Json::Arr(y.into_iter().map(|v| Json::Num(v as f64)).collect())),
+        ("state_bytes", Json::Num(session.state_bytes() as f64)),
+        ("t", Json::Num(session.tokens_seen() as f64)),
+    ])))
+}
+
+/// Server configuration; `Default` serves rust-native sessions on
+/// 127.0.0.1:7878 with one shard per core (capped).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// channel width of rust-native sessions created by this server
+    pub channels: usize,
+    /// number of native executor shards (worker threads)
+    pub shards: usize,
+    /// artifacts dir enabling the compiled-HLO backend (`pjrt` builds
+    /// only; ignored otherwise)
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            channels: 8,
+            shards: std::thread::available_parallelism().map(|t| t.get().min(8)).unwrap_or(4),
+            artifacts: None,
+        }
+    }
+}
+
+/// Routes wire requests to executor shards and aggregates fan-out ops.
+pub struct Router {
+    shards: Vec<ReqTx>,
+    hlo: Option<ReqTx>,
+    next_native_id: AtomicU64,
+    next_hlo_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+fn call_on(tx: &ReqTx, req: Request) -> Reply {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send((req, rtx)).map_err(|_| anyhow!("executor thread gone"))?;
+    rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+}
+
+impl Router {
+    /// Spawn the executor pool described by `cfg` and return the router
+    /// over it.
+    pub fn start(cfg: &ServeConfig) -> Result<Router> {
+        let nshards = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let (tx, rx) = mpsc::channel();
+            let channels = cfg.channels;
+            std::thread::Builder::new()
+                .name(format!("serve-exec-{s}"))
+                .spawn(move || run_executor(NativeFactory { channels }, rx))?;
+            shards.push(tx);
+        }
+        #[cfg(feature = "pjrt")]
+        let hlo = match &cfg.artifacts {
+            Some(dir) => {
+                let (tx, rx) = mpsc::channel();
+                let dir = dir.clone();
+                std::thread::Builder::new().name("serve-exec-hlo".to_string()).spawn(
+                    move || match hlo_backend::HloFactory::new(&dir) {
+                        Ok(factory) => run_executor(factory, rx),
+                        // dropping rx makes every later hlo request fail
+                        // with "executor thread gone" instead of hanging
+                        Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
+                    },
+                )?;
+                Some(tx)
+            }
+            None => None,
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let hlo: Option<ReqTx> = None;
+        Ok(Router {
+            shards,
+            hlo,
+            next_native_id: AtomicU64::new(1),
+            next_hlo_id: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn create_target(&self, backend: Backend) -> Result<(&ReqTx, u64)> {
+        match backend {
+            Backend::Native => {
+                let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
+                Ok((&self.shards[(id as usize) % self.shards.len()], id))
+            }
+            Backend::Hlo => {
+                let msg = if cfg!(feature = "pjrt") {
+                    "server started without HLO artifacts (pass --artifacts DIR)"
+                } else {
+                    "this build has no HLO backend (rebuild with --features pjrt)"
                 };
-                let id = next_id;
-                next_id += 1;
-                sessions.insert(id, (session, is_aaren));
-                Ok(obj(vec![("id", Json::Num(id as f64))]))
-            }
-            Request::Step { id, x } => {
-                let (session, is_aaren) =
-                    sessions.get_mut(&id).ok_or_else(|| anyhow!("no session {id}"))?;
-                let model = if *is_aaren { &aaren } else { &tf };
-                let y = session.step(model, &x)?;
-                Ok(obj(vec![
-                    ("y", Json::Arr(y.into_iter().map(|v| Json::Num(v as f64)).collect())),
-                    ("state_bytes", Json::Num(session.state_bytes() as f64)),
-                    ("t", Json::Num(session.tokens_seen() as f64)),
-                ]))
-            }
-            Request::Close { id } => {
-                sessions
-                    .remove(&id)
-                    .ok_or_else(|| anyhow!("no session {id}"))?;
-                Ok(obj(vec![("ok", Json::Bool(true))]))
-            }
-            Request::Stats => {
-                let total: usize = sessions.values().map(|(s, _)| s.state_bytes()).sum();
-                Ok(obj(vec![
-                    ("sessions", Json::Num(sessions.len() as f64)),
-                    ("total_state_bytes", Json::Num(total as f64)),
-                ]))
-            }
-            Request::Shutdown => Err(anyhow!("__shutdown__")),
-        })();
-        match &resp {
-            Err(e) if e.to_string() == "__shutdown__" => {
-                let _ = reply.send(Ok(obj(vec![("ok", Json::Bool(true))])));
-                break;
-            }
-            _ => {
-                let _ = reply.send(resp);
+                let tx = self.hlo.as_ref().ok_or_else(|| anyhow!(msg))?;
+                let id = HLO_ID_BASE + self.next_hlo_id.fetch_add(1, Ordering::Relaxed);
+                Ok((tx, id))
             }
         }
     }
-    Ok(())
+
+    fn route(&self, id: u64) -> Result<&ReqTx> {
+        if id >= HLO_ID_BASE {
+            self.hlo.as_ref().ok_or_else(|| anyhow!("no session {id}"))
+        } else {
+            Ok(&self.shards[(id as usize) % self.shards.len()])
+        }
+    }
+
+    fn targets(&self) -> impl Iterator<Item = &ReqTx> + '_ {
+        self.shards.iter().chain(self.hlo.iter())
+    }
+
+    /// Execute one wire request, fanning out / aggregating where the op
+    /// spans shards (`stats`, `shutdown`).
+    pub fn dispatch(&self, op: WireOp) -> Result<Json> {
+        match op {
+            WireOp::Create { kind, backend } => {
+                let (tx, id) = self.create_target(backend)?;
+                match call_on(tx, Request::Create { id, kind })? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to create"),
+                }
+            }
+            WireOp::Step { id, x } => match call_on(self.route(id)?, Request::Step { id, x })? {
+                Response::Value(j) => Ok(j),
+                _ => bail!("unexpected reply to step"),
+            },
+            WireOp::Close { id } => match call_on(self.route(id)?, Request::Close { id })? {
+                Response::Value(j) => Ok(j),
+                _ => bail!("unexpected reply to close"),
+            },
+            WireOp::Stats => {
+                let (mut count, mut bytes) = (0usize, 0usize);
+                for tx in self.targets() {
+                    // a dead executor contributes nothing instead of
+                    // failing the whole aggregate
+                    if let Ok(Response::Stats { sessions, state_bytes }) =
+                        call_on(tx, Request::Stats)
+                    {
+                        count += sessions;
+                        bytes += state_bytes;
+                    }
+                }
+                Ok(obj(vec![
+                    ("sessions", Json::Num(count as f64)),
+                    ("total_state_bytes", Json::Num(bytes as f64)),
+                ]))
+            }
+            WireOp::Shutdown => {
+                for tx in self.targets() {
+                    let _ = call_on(tx, Request::Shutdown);
+                }
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok(obj(vec![("ok", Json::Bool(true))]))
+            }
+        }
+    }
 }
 
-fn parse_request(line: &str) -> Result<Request> {
+/// A request as it arrives on the wire, before the router assigns ids.
+pub enum WireOp {
+    Create { kind: String, backend: Backend },
+    Step { id: u64, x: Vec<f32> },
+    Close { id: u64 },
+    Stats,
+    Shutdown,
+}
+
+fn parse_request(line: &str) -> Result<WireOp> {
     let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     match j.str_field("op")? {
-        "create" => Ok(Request::Create { kind: j.str_field("kind")?.to_string() }),
+        "create" => {
+            let backend = match j.get("backend").and_then(Json::as_str) {
+                None | Some("native") => Backend::Native,
+                Some("hlo") => Backend::Hlo,
+                Some(other) => bail!("unknown backend {other:?} (native|hlo)"),
+            };
+            Ok(WireOp::Create { kind: j.str_field("kind")?.to_string(), backend })
+        }
         "step" => {
             let id = j.usize_field("id")? as u64;
-            let x = j
-                .get("x")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("missing x"))?
-                .iter()
-                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
-                .collect();
-            Ok(Request::Step { id, x })
+            let arr = j.get("x").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing x"))?;
+            let mut x = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                // reject instead of coercing to NaN/inf: one such value
+                // would poison the session's (m, u, w) state for every
+                // later step and make the reply line unprintable as JSON.
+                // Validate AFTER the f32 cast — a finite f64 like 1e40
+                // still saturates to +inf in f32.
+                let f = v.as_f64().ok_or_else(|| anyhow!("x[{i}] is not a number"))? as f32;
+                if !f.is_finite() {
+                    bail!("x[{i}] is not a finite f32");
+                }
+                x.push(f);
+            }
+            Ok(WireOp::Step { id, x })
         }
-        "close" => Ok(Request::Close { id: j.usize_field("id")? as u64 }),
-        "stats" => Ok(Request::Stats),
-        "shutdown" => Ok(Request::Shutdown),
+        "close" => Ok(WireOp::Close { id: j.usize_field("id")? as u64 }),
+        "stats" => Ok(WireOp::Stats),
+        "shutdown" => Ok(WireOp::Shutdown),
         other => Err(anyhow!("unknown op {other:?}")),
     }
 }
 
-fn handle_conn(stream: TcpStream, handle: &ServerHandle) {
-    let peer = stream.peer_addr().ok();
+fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -153,41 +361,195 @@ fn handle_conn(stream: TcpStream, handle: &ServerHandle) {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = parse_request(&line).and_then(|req| handle.call(req));
+        let resp = parse_request(&line).and_then(|op| router.dispatch(op));
         let body = match resp {
             Ok(j) => j.to_string(),
-            Err(e) => obj(vec![("error", Json::Str(format!("{e}")))]).to_string(),
+            Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
         };
-        if writer.write_all(body.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
+        if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+        if router.is_shutdown() {
             break;
         }
     }
-    let _ = peer;
-}
-
-/// Serve forever on `addr` (e.g. "127.0.0.1:7878").
-pub fn serve(artifacts: &Path, addr: &str) -> Result<()> {
-    let (tx, rx) = mpsc::channel();
-    let handle = ServerHandle { tx };
-    let dir = artifacts.to_path_buf();
-    let executor = std::thread::spawn(move || run_executor(&dir, rx));
-
-    let listener = TcpListener::bind(addr)?;
-    println!("[serve] listening on {addr} (line-delimited JSON; ops: create/step/close/stats)");
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                let h = ServerHandle { tx: handle.tx.clone() };
-                std::thread::spawn(move || handle_conn(s, &h));
+    if router.is_shutdown() {
+        // wake the accept loop so Server::run can observe the flag; a
+        // listener bound to the unspecified address (0.0.0.0 / ::) is not
+        // connectable on every platform, so rewrite to its loopback
+        if let Some(mut addr) = wake_addr {
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                });
             }
-            Err(e) => eprintln!("[serve] accept error: {e}"),
+            let _ = TcpStream::connect(addr);
         }
     }
-    drop(handle);
-    executor.join().ok();
+}
+
+/// A bound listener plus its executor pool. `run` serves until a
+/// `shutdown` request arrives.
+pub struct Server {
+    listener: TcpListener,
+    router: Arc<Router>,
+}
+
+impl Server {
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let router = Arc::new(Router::start(cfg)?);
+        Ok(Server { listener, router })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept connections (one handler thread each) until shutdown.
+    pub fn run(&self) -> Result<()> {
+        let wake_addr = self.listener.local_addr().ok();
+        for stream in self.listener.incoming() {
+            if self.router.is_shutdown() {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let router = Arc::clone(&self.router);
+                    std::thread::spawn(move || handle_conn(s, &router, wake_addr));
+                }
+                Err(e) => eprintln!("[serve] accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serve forever on `cfg.addr` (e.g. "127.0.0.1:7878").
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    let server = Server::bind(cfg)?;
+    println!(
+        "[serve] listening on {} ({} native executor shard(s); line-delimited JSON; \
+         ops: create/step/close/stats/shutdown)",
+        server.local_addr()?,
+        cfg.shards.max(1)
+    );
+    server.run()
+}
+
+/// Minimal blocking line-JSON client over one TCP connection — used by
+/// the CLI `serve --smoke` self-test, the loopback integration tests and
+/// the `serve_loopback` bench.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, read one reply line, parse it. Replies
+    /// carrying an `"error"` field become `Err`.
+    pub fn call(&mut self, line: &str) -> Result<Json> {
+        let reply = self.call_raw(line)?;
+        if let Some(e) = reply.get("error").and_then(Json::as_str) {
+            bail!("server error: {e}");
+        }
+        Ok(reply)
+    }
+
+    /// Like [`call`](Client::call) but returns error replies as plain
+    /// objects (protocol tests inspect them).
+    pub fn call_raw(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut buf = String::new();
+        if self.reader.read_line(&mut buf)? == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(buf.trim()).map_err(|e| anyhow!("bad reply {buf:?}: {e}"))
+    }
+}
+
+/// One loopback self-test for CI: bind an ephemeral port, run a
+/// create/step/stats/shutdown round-trip over both native session kinds,
+/// and shut the server down. Errors if any reply is wrong.
+pub fn run_smoke(base: &ServeConfig) -> Result<()> {
+    let mut cfg = base.clone();
+    cfg.addr = "127.0.0.1:0".to_string();
+    let channels = cfg.channels;
+    let server = Server::bind(&cfg)?;
+    let addr = server.local_addr()?;
+    let run = std::thread::spawn(move || server.run());
+
+    let mut client = Client::connect(&addr)?;
+    let xs: Vec<String> = (0..channels).map(|i| format!("{}.5", i % 3)).collect();
+    let x = xs.join(",");
+    let aaren = client.call(r#"{"op":"create","kind":"aaren"}"#)?.usize_field("id")?;
+    let tf = client.call(r#"{"op":"create","kind":"tf"}"#)?.usize_field("id")?;
+    let mut aaren_bytes = Vec::new();
+    for _ in 0..8 {
+        let r = client.call(&format!(r#"{{"op":"step","id":{aaren},"x":[{x}]}}"#))?;
+        aaren_bytes.push(r.usize_field("state_bytes")?);
+        client.call(&format!(r#"{{"op":"step","id":{tf},"x":[{x}]}}"#))?;
+    }
+    ensure!(
+        aaren_bytes.windows(2).all(|w| w[0] == w[1]),
+        "aaren state must be constant, got {aaren_bytes:?}"
+    );
+    let stats = client.call(r#"{"op":"stats"}"#)?;
+    ensure!(stats.usize_field("sessions")? == 2, "expected 2 live sessions");
+    client.call(r#"{"op":"shutdown"}"#)?;
+    run.join().map_err(|_| anyhow!("server thread panicked"))??;
+    println!(
+        "[serve] smoke ok: aaren + tf sessions served on {addr}, aaren state constant at {} bytes",
+        aaren_bytes[0]
+    );
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+mod hlo_backend {
+    use std::rc::Rc;
+
+    use anyhow::{anyhow, Result};
+
+    use super::SessionFactory;
+    use crate::runtime::exec::Engine;
+    use crate::serve::session::{BoundSession, StreamModel, StreamSession};
+
+    /// Factory for the compiled-HLO tier: loads both stream models once
+    /// and binds every created session to them. Lives (with its engine)
+    /// on the dedicated HLO executor thread — PJRT handles are not Send.
+    pub struct HloFactory {
+        _engine: Engine,
+        aaren: Rc<StreamModel>,
+        tf: Rc<StreamModel>,
+    }
+
+    impl HloFactory {
+        pub fn new(artifacts: &std::path::Path) -> Result<HloFactory> {
+            let mut engine = Engine::new(artifacts)?;
+            let aaren = Rc::new(StreamModel::load_aaren(&mut engine)?);
+            let tf = Rc::new(StreamModel::load_tf(&mut engine)?);
+            Ok(HloFactory { _engine: engine, aaren, tf })
+        }
+    }
+
+    impl SessionFactory for HloFactory {
+        fn create(&mut self, kind: &str) -> Result<Box<dyn StreamSession>> {
+            match kind {
+                "aaren" => Ok(Box::new(BoundSession::new_aaren(Rc::clone(&self.aaren))?)),
+                "tf" => Ok(Box::new(BoundSession::new_tf(Rc::clone(&self.tf))?)),
+                other => Err(anyhow!("unknown kind {other:?} (aaren|tf)")),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -196,19 +558,32 @@ mod tests {
 
     #[test]
     fn parses_protocol_requests() {
-        assert!(matches!(
-            parse_request(r#"{"op":"create","kind":"aaren"}"#).unwrap(),
-            Request::Create { .. }
-        ));
+        match parse_request(r#"{"op":"create","kind":"aaren"}"#).unwrap() {
+            WireOp::Create { kind, backend } => {
+                assert_eq!(kind, "aaren");
+                assert_eq!(backend, Backend::Native);
+            }
+            _ => panic!("wrong variant"),
+        }
+        match parse_request(r#"{"op":"create","kind":"tf","backend":"hlo"}"#).unwrap() {
+            WireOp::Create { backend, .. } => assert_eq!(backend, Backend::Hlo),
+            _ => panic!("wrong variant"),
+        }
         match parse_request(r#"{"op":"step","id":3,"x":[1.0,-2.5]}"#).unwrap() {
-            Request::Step { id, x } => {
+            WireOp::Step { id, x } => {
                 assert_eq!(id, 3);
                 assert_eq!(x, vec![1.0, -2.5]);
             }
             _ => panic!("wrong variant"),
         }
+        assert!(parse_request(r#"{"op":"create","kind":"aaren","backend":"tpu"}"#).is_err());
         assert!(parse_request(r#"{"op":"bogus"}"#).is_err());
         assert!(parse_request("not json").is_err());
+        // non-numeric / non-finite-in-f32 token elements are rejected,
+        // not coerced to NaN or saturated to infinity
+        assert!(parse_request(r#"{"op":"step","id":1,"x":[1.0,null]}"#).is_err());
+        assert!(parse_request(r#"{"op":"step","id":1,"x":[1.0,"2.0"]}"#).is_err());
+        assert!(parse_request(r#"{"op":"step","id":1,"x":[1e40]}"#).is_err());
     }
 
     #[test]
@@ -216,5 +591,64 @@ mod tests {
         let j = obj(vec![("a", Json::Num(1.0)), ("b", Json::Bool(true))]);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.usize_field("a").unwrap(), 1);
+    }
+
+    fn test_router(shards: usize) -> Router {
+        let cfg = ServeConfig { addr: String::new(), channels: 4, shards, artifacts: None };
+        Router::start(&cfg).unwrap()
+    }
+
+    #[test]
+    fn router_shards_sessions_and_aggregates_stats() {
+        let router = test_router(3);
+        let mut ids = Vec::new();
+        for _ in 0..5 {
+            let r = router
+                .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Native })
+                .unwrap();
+            ids.push(r.usize_field("id").unwrap() as u64);
+        }
+        // ids are distinct and deterministically pinned across shards
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, i as u64 + 1);
+        }
+        for &id in &ids {
+            let r = router.dispatch(WireOp::Step { id, x: vec![0.5; 4] }).unwrap();
+            assert_eq!(r.usize_field("t").unwrap(), 1);
+        }
+        let stats = router.dispatch(WireOp::Stats).unwrap();
+        assert_eq!(stats.usize_field("sessions").unwrap(), 5);
+        assert!(stats.usize_field("total_state_bytes").unwrap() > 0);
+        router.dispatch(WireOp::Close { id: ids[0] }).unwrap();
+        let stats = router.dispatch(WireOp::Stats).unwrap();
+        assert_eq!(stats.usize_field("sessions").unwrap(), 4);
+        assert!(router.dispatch(WireOp::Step { id: ids[0], x: vec![0.5; 4] }).is_err());
+        router.dispatch(WireOp::Shutdown).unwrap();
+        assert!(router.is_shutdown());
+    }
+
+    #[test]
+    fn hlo_backend_unavailable_without_artifacts() {
+        let router = test_router(1);
+        let err = router
+            .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Hlo })
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt") || msg.contains("artifacts"), "got: {msg}");
+        router.dispatch(WireOp::Shutdown).unwrap();
+    }
+
+    #[test]
+    fn unknown_kind_is_reported_not_fatal() {
+        let router = test_router(1);
+        assert!(router
+            .dispatch(WireOp::Create { kind: "mamba".into(), backend: Backend::Native })
+            .is_err());
+        // the executor is still alive and serving
+        let r = router
+            .dispatch(WireOp::Create { kind: "tf".into(), backend: Backend::Native })
+            .unwrap();
+        assert!(r.usize_field("id").unwrap() >= 1);
+        router.dispatch(WireOp::Shutdown).unwrap();
     }
 }

@@ -15,6 +15,10 @@
 //!   O(1) `fold_token`. These back `bench_harness::fig5` and the serve
 //!   layer on builds without XLA.
 //!
+//! Both tiers implement [`StreamSession`], the trait the TCP server's
+//! executors hold sessions through; the backend is chosen per `create`
+//! request.
+//!
 //! HLO-tier state is kept as device-side literals returned by the
 //! previous step — the hot loop never round-trips state through host
 //! Vec<f32>.
@@ -27,6 +31,23 @@ use crate::scan::{fold_token, Muw};
 /// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
 /// Transformer baselines).
 pub const TF_BUCKETS: [usize; 5] = [32, 64, 128, 256, 512];
+
+/// Backend-agnostic streaming session: the contract the serve layer
+/// programs against. One token in, one prediction out, plus the two
+/// observables the paper's Figure-5 efficiency story is about — bytes of
+/// state currently held and tokens folded in so far. Implemented by the
+/// rust-native sessions (always compiled) and by the model-bound HLO
+/// session (`pjrt` feature), so `serve::server` holds
+/// `Box<dyn StreamSession>` trait objects and picks the backend per
+/// `create` request.
+pub trait StreamSession {
+    /// Feed one token (used as key and value); returns this step's output.
+    fn step(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+    /// Bytes of per-session state currently held.
+    fn state_bytes(&self) -> usize;
+    /// Number of tokens folded in so far.
+    fn tokens_seen(&self) -> usize;
+}
 
 /// Rust-native Aaren streaming session: the O(1)-state fallback. Holds a
 /// fixed query vector and a single (m, u, w) accumulator; each token is
@@ -84,27 +105,46 @@ impl NativeAarenSession {
     }
 }
 
+impl StreamSession for NativeAarenSession {
+    fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        NativeAarenSession::step(self, x)
+    }
+
+    fn state_bytes(&self) -> usize {
+        NativeAarenSession::state_bytes(self)
+    }
+
+    fn tokens_seen(&self) -> usize {
+        NativeAarenSession::tokens_seen(self)
+    }
+}
+
 /// Rust-native Transformer-with-KV-cache baseline: caches every (k, v)
 /// row and recomputes many-to-one attention (query = newest token) per
 /// step — linear memory, O(t) per-token work, quadratic cumulative time.
-/// Cache storage grows through the same `TF_BUCKETS` the HLO tier uses,
-/// with a copy on each bucket migration.
+/// Cache storage walks the same `TF_BUCKETS` ladder the HLO tier uses,
+/// with a copy on each bucket migration, then keeps doubling capacity
+/// geometrically past the last bucket so long-lived sessions degrade in
+/// memory, not availability (the HLO tier, bound to compiled per-bucket
+/// step modules, still ends at the largest bucket).
 pub struct NativeTfSession {
     channels: usize,
     k: Vec<f32>,
     v: Vec<f32>,
-    bucket_idx: usize,
+    /// current cache capacity in tokens: a `TF_BUCKETS` entry, or a
+    /// power-of-two multiple of the last one once the ladder is exhausted
+    cap_tokens: usize,
     t: usize,
 }
 
 impl NativeTfSession {
     pub fn new(channels: usize) -> NativeTfSession {
-        let cap = TF_BUCKETS[0] * channels;
+        let cap_tokens = TF_BUCKETS[0];
         NativeTfSession {
             channels,
-            k: Vec::with_capacity(cap),
-            v: Vec::with_capacity(cap),
-            bucket_idx: 0,
+            k: Vec::with_capacity(cap_tokens * channels),
+            v: Vec::with_capacity(cap_tokens * channels),
+            cap_tokens,
             t: 0,
         }
     }
@@ -120,26 +160,31 @@ impl NativeTfSession {
     /// Bytes of per-session state: the full capacity of the current k/v
     /// cache bucket (what a serving system must reserve).
     pub fn state_bytes(&self) -> usize {
-        2 * TF_BUCKETS[self.bucket_idx] * self.channels * std::mem::size_of::<f32>()
+        2 * self.cap_tokens * self.channels * std::mem::size_of::<f32>()
     }
 
     pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         if x.len() != self.channels {
             bail!("token has {} channels, session expects {}", x.len(), self.channels);
         }
-        if self.t >= TF_BUCKETS[self.bucket_idx] {
-            if self.bucket_idx + 1 >= TF_BUCKETS.len() {
-                bail!("tf session exceeded the largest cache bucket");
-            }
-            self.bucket_idx += 1;
-            // bucket migration: reallocate at the new capacity and copy
-            let cap = TF_BUCKETS[self.bucket_idx] * self.channels;
+        if self.t >= self.cap_tokens {
+            // bucket migration: grow to the next TF_BUCKETS entry while
+            // inside the ladder, then double geometrically past the last
+            // one; reallocate at the new capacity and copy, mirroring the
+            // HLO tier's migration cost
+            let next = TF_BUCKETS
+                .iter()
+                .copied()
+                .find(|&b| b > self.cap_tokens)
+                .unwrap_or(2 * self.cap_tokens);
+            let cap = next * self.channels;
             let mut k = Vec::with_capacity(cap);
             k.extend_from_slice(&self.k);
             let mut v = Vec::with_capacity(cap);
             v.extend_from_slice(&self.v);
             self.k = k;
             self.v = v;
+            self.cap_tokens = next;
         }
         self.k.extend_from_slice(x);
         self.v.extend_from_slice(x);
@@ -148,8 +193,22 @@ impl NativeTfSession {
     }
 }
 
+impl StreamSession for NativeTfSession {
+    fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        NativeTfSession::step(self, x)
+    }
+
+    fn state_bytes(&self) -> usize {
+        NativeTfSession::state_bytes(self)
+    }
+
+    fn tokens_seen(&self) -> usize {
+        NativeTfSession::tokens_seen(self)
+    }
+}
+
 #[cfg(feature = "pjrt")]
-pub use hlo::{Session, StreamModel};
+pub use hlo::{BoundSession, Session, StreamModel};
 
 #[cfg(feature = "pjrt")]
 mod hlo {
@@ -157,7 +216,7 @@ mod hlo {
 
     use anyhow::{bail, Context, Result};
 
-    use super::TF_BUCKETS;
+    use super::{StreamSession, TF_BUCKETS};
     use crate::runtime::exec::{literal_to_f32, Engine, HostTensor, Module};
     use crate::runtime::manifest::Role;
     use crate::runtime::params::ParamStore;
@@ -366,6 +425,42 @@ mod hlo {
         Ok(y)
     }
 
+    /// A session bound to its shared per-model assets — the `pjrt` tier's
+    /// [`StreamSession`] implementation, held as a trait object by the
+    /// serve executor alongside the rust-native sessions. PJRT handles are
+    /// not `Send`, so these live on the server's dedicated HLO executor
+    /// thread rather than the sharded native pool.
+    pub struct BoundSession {
+        model: Rc<StreamModel>,
+        inner: Session,
+    }
+
+    impl BoundSession {
+        pub fn new_aaren(model: Rc<StreamModel>) -> Result<BoundSession> {
+            let inner = Session::new_aaren(&model)?;
+            Ok(BoundSession { model, inner })
+        }
+
+        pub fn new_tf(model: Rc<StreamModel>) -> Result<BoundSession> {
+            let inner = Session::new_tf(&model)?;
+            Ok(BoundSession { model, inner })
+        }
+    }
+
+    impl StreamSession for BoundSession {
+        fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+            self.inner.step(&self.model, x)
+        }
+
+        fn state_bytes(&self) -> usize {
+            self.inner.state_bytes()
+        }
+
+        fn tokens_seen(&self) -> usize {
+            self.inner.tokens_seen() as usize
+        }
+    }
+
     /// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
     /// (L, H, new, dh) cache — validated against the JAX model in
     /// python/tests/test_model.py::test_kv_bucket_migration_preserves_outputs.
@@ -457,17 +552,46 @@ mod tests {
     }
 
     #[test]
-    fn native_tf_exceeding_largest_bucket_errors() {
+    fn native_tf_survives_past_largest_bucket() {
+        // regression: streams used to die at t == 512 with "exceeded the
+        // largest cache bucket"; capacity now doubles geometrically, so a
+        // long-lived session costs memory instead of availability
         let mut session = NativeTfSession::new(1);
-        for _ in 0..TF_BUCKETS[TF_BUCKETS.len() - 1] {
+        let largest = TF_BUCKETS[TF_BUCKETS.len() - 1];
+        for _ in 0..largest {
             session.step(&[1.0]).unwrap();
         }
-        assert!(session.step(&[1.0]).is_err());
+        assert_eq!(session.state_bytes(), 2 * largest * 4);
+        let y = session.step(&[1.0]).unwrap();
+        assert!(y[0].is_finite());
+        assert_eq!(session.tokens_seen(), largest + 1);
+        // first doubling past the bucket ladder
+        assert_eq!(session.state_bytes(), 2 * (2 * largest) * 4);
+        for _ in 0..largest {
+            session.step(&[1.0]).unwrap();
+        }
+        // 2·largest + 1 tokens: one more doubling, still serving
+        assert_eq!(session.tokens_seen(), 2 * largest + 1);
+        assert_eq!(session.state_bytes(), 2 * (4 * largest) * 4);
     }
 
     #[test]
     fn native_sessions_reject_wrong_channel_count() {
         assert!(NativeAarenSession::new(3).step(&[1.0]).is_err());
         assert!(NativeTfSession::new(3).step(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn sessions_unify_behind_the_stream_session_trait() {
+        let mut sessions: Vec<Box<dyn StreamSession>> =
+            vec![Box::new(NativeAarenSession::new(3)), Box::new(NativeTfSession::new(3))];
+        for s in sessions.iter_mut() {
+            for t in 0..5 {
+                let y = s.step(&[0.1, -0.2, 0.3]).unwrap();
+                assert_eq!(y.len(), 3);
+                assert_eq!(s.tokens_seen(), t + 1);
+            }
+            assert!(s.state_bytes() > 0);
+        }
     }
 }

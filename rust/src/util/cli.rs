@@ -1,8 +1,13 @@
 //! Tiny flag parser (no clap in the offline crate set): supports
 //! `--key value`, `--key=value` and boolean `--flag` forms plus free
-//! positional arguments, with typed accessors and defaults.
+//! positional arguments, with typed accessors and defaults. Parsing
+//! reports malformed input (e.g. an empty flag name like `--` or `--=v`)
+//! as a proper error instead of panicking; a trailing valueless flag is
+//! simply boolean `true`.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -11,31 +16,37 @@ pub struct Args {
 }
 
 impl Args {
-    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(a) = iter.next() {
-            if let Some(rest) = a.strip_prefix("--") {
-                if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
-                } else {
-                    out.flags.insert(rest.to_string(), "true".to_string());
-                }
-            } else {
+            let Some(rest) = a.strip_prefix("--") else {
                 out.positional.push(a);
+                continue;
+            };
+            let (key, inline_value) = match rest.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (rest, None),
+            };
+            if key.is_empty() {
+                bail!("malformed flag {a:?}: empty flag name");
             }
+            let value = if let Some(v) = inline_value {
+                v
+            } else if iter.peek().is_some_and(|next| !next.starts_with("--")) {
+                // `--key value`; the peek proved a next argument exists,
+                // so a trailing valueless flag can never reach this branch
+                iter.next().unwrap_or_default()
+            } else {
+                // boolean `--flag` (including as the final argument)
+                "true".to_string()
+            };
+            out.flags.insert(key.to_string(), value);
         }
-        out
+        Ok(out)
     }
 
-    pub fn from_env() -> Args {
+    pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
@@ -74,7 +85,7 @@ mod tests {
     use super::*;
 
     fn parse(s: &[&str]) -> Args {
-        Args::parse(s.iter().map(|x| x.to_string()))
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
     }
 
     #[test]
@@ -98,5 +109,33 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = parse(&["--offset", "-3.5"]);
         assert_eq!(a.f64("offset", 0.0), -3.5);
+    }
+
+    #[test]
+    fn trailing_valueless_flag_is_boolean() {
+        // `aaren serve --smoke` style argv ends on a bare flag
+        let a = parse(&["serve", "--addr", "127.0.0.1:0", "--smoke"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.str("addr", ""), "127.0.0.1:0");
+        assert!(a.bool("smoke"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--verbose", "--seeds", "2"]);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.u64("seeds", 0), 2);
+    }
+
+    #[test]
+    fn empty_flag_names_are_reported_not_panicked() {
+        assert!(Args::parse(["--".to_string()]).is_err());
+        assert!(Args::parse(["--=3".to_string()]).is_err());
+    }
+
+    #[test]
+    fn inline_empty_value_is_kept() {
+        let a = parse(&["--name="]);
+        assert_eq!(a.str("name", "default"), "");
     }
 }

@@ -195,21 +195,32 @@ fn checkpoint_roundtrip_preserves_behaviour() {
 #[test]
 fn session_manager_protocol_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
-    // run the serve executor directly over its channel protocol
-    use aaren::serve::server::{run_executor, Request, ServerHandle};
-    use std::sync::mpsc;
-    let (tx, rx) = mpsc::channel();
-    let handle = ServerHandle { tx };
-    let d = dir.clone();
-    let th = std::thread::spawn(move || run_executor(&d, rx));
+    // full loopback TCP round-trip over the compiled-HLO backend,
+    // selected per session with "backend":"hlo"
+    use aaren::serve::server::{Client, ServeConfig, Server};
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels: 8,
+        shards: 1,
+        artifacts: Some(dir),
+    };
+    let server = Server::bind(&cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let th = std::thread::spawn(move || server.run());
 
-    let reply = handle.call(Request::Create { kind: "aaren".into() }).unwrap();
-    let id = reply.usize_field("id").unwrap() as u64;
+    let mut client = Client::connect(&addr).unwrap();
+    let id = client
+        .call(r#"{"op":"create","kind":"aaren","backend":"hlo"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
     let mut rng = Rng::new(4);
     let mut last_bytes = 0;
     for _ in 0..8 {
-        let x: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
-        let r = handle.call(Request::Step { id, x }).unwrap();
+        let xs: Vec<String> = (0..8).map(|_| format!("{}", rng.gaussian() as f32)).collect();
+        let r = client
+            .call(&format!(r#"{{"op":"step","id":{id},"x":[{}]}}"#, xs.join(",")))
+            .unwrap();
         let bytes = r.usize_field("state_bytes").unwrap();
         if last_bytes != 0 {
             assert_eq!(bytes, last_bytes, "aaren session memory must be constant");
@@ -217,11 +228,11 @@ fn session_manager_protocol_end_to_end() {
         last_bytes = bytes;
         assert!(r.get("y").is_some());
     }
-    let stats = handle.call(Request::Stats).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
     assert_eq!(stats.usize_field("sessions").unwrap(), 1);
-    handle.call(Request::Close { id }).unwrap();
-    let stats = handle.call(Request::Stats).unwrap();
+    client.call(&format!(r#"{{"op":"close","id":{id}}}"#)).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
     assert_eq!(stats.usize_field("sessions").unwrap(), 0);
-    let _ = handle.call(Request::Shutdown);
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
     th.join().unwrap().unwrap();
 }

@@ -1,0 +1,126 @@
+//! Loopback TCP integration tests for the rust-native serving stack.
+//! These run in the **default feature set** (no XLA): the paper's
+//! Figure-5 serving story end to end — create → step × k → stats → close
+//! over line-delimited JSON, with Aaren `state_bytes` constant in stream
+//! length and the tf KV session surviving past the largest cache bucket.
+
+use aaren::serve::server::{Client, ServeConfig, Server};
+use aaren::serve::TF_BUCKETS;
+use aaren::util::json::Json;
+
+type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start(channels: usize, shards: usize) -> (std::net::SocketAddr, ServerHandle) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels,
+        shards,
+        artifacts: None,
+    };
+    let server = Server::bind(&cfg).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn step_line(id: usize, x: &[f32]) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}]}}"#, xs.join(","))
+}
+
+#[test]
+fn aaren_session_streams_with_constant_state() {
+    let (addr, server) = start(4, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let mut bytes = Vec::new();
+    for t in 0..64 {
+        let r = client.call(&step_line(id, &[0.1, 0.2, -0.3, 0.4])).unwrap();
+        assert_eq!(r.usize_field("t").unwrap(), t + 1);
+        assert_eq!(r.get("y").and_then(Json::as_arr).unwrap().len(), 4);
+        bytes.push(r.usize_field("state_bytes").unwrap());
+    }
+    assert!(bytes.windows(2).all(|w| w[0] == w[1]), "aaren state must be constant: {bytes:?}");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn tf_session_state_grows_and_survives_past_largest_bucket() {
+    let (addr, server) = start(1, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let id = client.call(r#"{"op":"create","kind":"tf"}"#).unwrap().usize_field("id").unwrap();
+    let largest = TF_BUCKETS[TF_BUCKETS.len() - 1];
+    let mut first_bytes = 0;
+    let mut last_bytes = 0;
+    for t in 0..largest + 40 {
+        let r = client.call(&step_line(id, &[1.0])).unwrap();
+        last_bytes = r.usize_field("state_bytes").unwrap();
+        if t == 0 {
+            first_bytes = last_bytes;
+        }
+        assert_eq!(r.usize_field("t").unwrap(), t + 1);
+    }
+    // the stream crossed every bucket and kept going past the largest one
+    assert!(last_bytes > first_bytes, "kv cache must grow: {first_bytes} -> {last_bytes}");
+    assert_eq!(last_bytes, 2 * (2 * largest) * 4, "one geometric doubling past the ladder");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_aggregate_across_shards_and_close_frees_sessions() {
+    let (addr, server) = start(4, 3);
+    let mut client = Client::connect(&addr).unwrap();
+    let mut ids = Vec::new();
+    for kind in ["aaren", "tf", "aaren", "tf"] {
+        let id = client
+            .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        ids.push(id);
+    }
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 4);
+    // two aaren ((2 + channels) f32s each) + two tf (first bucket each)
+    let aaren_bytes = (2 + 4) * 4;
+    let tf_bytes = 2 * TF_BUCKETS[0] * 4 * 4;
+    let total = stats.usize_field("total_state_bytes").unwrap();
+    assert_eq!(total, 2 * aaren_bytes + 2 * tf_bytes);
+    for id in &ids[..2] {
+        client.call(&format!(r#"{{"op":"close","id":{id}}}"#)).unwrap();
+    }
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 2);
+    // a second connection reaches the same sessions
+    let mut other = Client::connect(&addr).unwrap();
+    let r = other.call(&step_line(ids[3], &[0.0, 0.0, 0.0, 0.0])).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 1);
+    other.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn protocol_errors_are_replies_not_disconnects() {
+    let (addr, server) = start(2, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    // unknown session, unknown kind, bad json: all error replies
+    let r = client.call_raw(r#"{"op":"step","id":99,"x":[0.0,0.0]}"#).unwrap();
+    assert!(r.get("error").is_some());
+    let r = client.call_raw(r#"{"op":"create","kind":"mamba"}"#).unwrap();
+    assert!(r.get("error").is_some());
+    let r = client.call_raw("not json").unwrap();
+    assert!(r.get("error").is_some());
+    // the hlo backend is absent from the default build
+    let r = client.call_raw(r#"{"op":"create","kind":"aaren","backend":"hlo"}"#).unwrap();
+    assert!(r.get("error").is_some());
+    // ...and the connection still serves afterwards
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let r = client.call(&step_line(id, &[0.5, 0.5])).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 1);
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
