@@ -12,7 +12,7 @@
 //! chunked_parallel > 1.0 on ≥ 4 threads at n = 4096.
 
 use aaren::attention;
-use aaren::scan::{self, Muw, ScanBuffer};
+use aaren::scan::{self, BatchScanBuffer, Muw, ScanBuffer, ScanPool};
 use aaren::util::bench::{bench, print_result, write_records, BenchRecord};
 use aaren::util::rng::Rng;
 
@@ -48,12 +48,17 @@ fn leaves(rng: &mut Rng, n: usize, d: usize) -> ScanBuffer {
 }
 
 fn main() {
+    // --quick: the CI smoke shape — fewer sizes and iterations, same
+    // record names so BENCH_scan.json deltas stay comparable across PRs
+    let quick = std::env::args().any(|a| a == "--quick");
     let d = 16;
     let cores = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     let mut records: Vec<BenchRecord> = Vec::new();
+    let sizes: &[usize] = if quick { &[256, 4096] } else { &[64, 256, 1024, 4096] };
+    let (warmup, iters) = if quick { (1, 6) } else { (2, 12) };
 
     println!("prefix scan over (m,u,w) tuples, d={d} ({cores} cores):");
-    for n in [64usize, 256, 1024, 4096] {
+    for &n in sizes {
         let mut rng = Rng::new(n as u64);
         let ls = leaves(&mut rng, n, d);
         let ls_aos = ls.to_muws();
@@ -99,7 +104,7 @@ fn main() {
 
         let mut seq_ns = 0.0f64;
         for (name, f) in variants.iter_mut() {
-            let r = bench(&format!("{name:<22} n={n}"), 2, 12, f);
+            let r = bench(&format!("{name:<22} n={n}"), warmup, iters, f);
             print_result(&r);
             if name.as_str() == "soa_sequential" {
                 seq_ns = r.mean_ns;
@@ -114,8 +119,72 @@ fn main() {
         }
     }
 
+    // batched multi-lane scans: B query heads sharing one engine vs B
+    // separate single-lane buffers (the serving-side allocation hotspot)
+    println!("\nbatched lanes: 8 lanes of n steps each, d={d}:");
+    for &n in sizes {
+        let lanes = 8usize;
+        let mut rng = Rng::new(n as u64 ^ 0xba7c);
+        let mut batch = BatchScanBuffer::with_capacity(lanes, d, n);
+        let mut singles: Vec<ScanBuffer> = Vec::new();
+        for _ in 0..lanes {
+            singles.push(leaves(&mut rng, n, d));
+        }
+        for t in 0..n {
+            for (b, single) in singles.iter().enumerate() {
+                let (m, _, w) = single.row(t);
+                batch.push_leaf_lane(b, m, w);
+            }
+        }
+        let r = bench(&format!("{:<22} n={n}", "lanes8_per_lane_seq"), warmup, iters, || {
+            for single in &singles {
+                std::hint::black_box(scan::sequential(single));
+            }
+        });
+        print_result(&r);
+        let base_ns = r.mean_ns;
+        records.push(BenchRecord {
+            name: "lanes8_per_lane_seq".into(),
+            n,
+            d,
+            ns_per_iter: r.mean_ns,
+            speedup_vs_sequential: 1.0,
+        });
+        let mut variants: Vec<(String, Box<dyn FnMut() + '_>)> = vec![(
+            "lanes8_batch_seq".into(),
+            Box::new(|| {
+                let mut buf = batch.clone();
+                buf.scan_inplace();
+                std::hint::black_box(&buf);
+            }),
+        )];
+        let threads = ScanPool::global().threads().min(8);
+        if threads >= 2 {
+            let batch_ref = &batch;
+            variants.push((
+                format!("lanes8_batch_chunked_t{threads}"),
+                Box::new(move || {
+                    let mut buf = batch_ref.clone();
+                    buf.scan_chunked(threads);
+                    std::hint::black_box(&buf);
+                }),
+            ));
+        }
+        for (name, f) in variants.iter_mut() {
+            let r = bench(&format!("{name:<22} n={n}"), warmup, iters, f);
+            print_result(&r);
+            records.push(BenchRecord {
+                name: name.clone(),
+                n,
+                d,
+                ns_per_iter: r.mean_ns,
+                speedup_vs_sequential: if r.mean_ns > 0.0 { base_ns / r.mean_ns } else { 1.0 },
+            });
+        }
+    }
+
     println!("\nstreaming one new token at context n (the paper's O(1) vs O(n)):");
-    for n in [64usize, 256, 1024, 4096] {
+    for &n in sizes {
         let mut rng = Rng::new(7);
         let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
         let k: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();

@@ -1,13 +1,27 @@
-//! Loopback serving throughput for the rust-native TCP stack (no XLA):
-//! one client streams AAREN_TOKENS tokens through an aaren session, then
-//! AAREN_CLIENTS concurrent clients stream through their own sessions to
-//! exercise the sharded executor pool. Prints tokens/sec per phase.
+//! Loopback serving throughput for the rust-native TCP stack (no XLA),
+//! tracking the request-coalescing work: per-step streaming (one
+//! round-trip per token) vs batched `steps` blocks (one round-trip per
+//! BATCH tokens), single-client and with AAREN_CLIENTS concurrent
+//! clients across the sharded executor pool.
+//!
+//! Emits a machine-readable `BENCH_serve.json` (schema:
+//! `util::bench::BenchRecord`, `speedup_vs_sequential` relative to the
+//! single-client per-step baseline) so the serving perf trajectory is
+//! tracked across PRs alongside `BENCH_scan.json`. The acceptance bar
+//! for the batched path is `batched_steps_b16 ≥ 3×` the per-step
+//! baseline. Pass `--quick` (CI) for a shorter run; AAREN_TOKENS /
+//! AAREN_CLIENTS override the workload size.
 
+use std::net::SocketAddr;
 use std::time::Instant;
 
 use aaren::serve::server::{Client, ServeConfig, Server};
+use aaren::util::bench::{write_records, BenchRecord};
 
-fn stream_one(addr: &std::net::SocketAddr, step_body: &str, tokens: usize) -> f64 {
+/// Stream `tokens` tokens through one fresh aaren session and return
+/// tokens/sec. `batch <= 1` uses one `step` request per token; larger
+/// batches send `steps` blocks of up to `batch` tokens per round-trip.
+fn stream_one(addr: &SocketAddr, step_body: &str, tokens: usize, batch: usize) -> f64 {
     let mut client = Client::connect(addr).expect("connect");
     let id = client
         .call(r#"{"op":"create","kind":"aaren"}"#)
@@ -15,29 +29,75 @@ fn stream_one(addr: &std::net::SocketAddr, step_body: &str, tokens: usize) -> f6
         .usize_field("id")
         .expect("id");
     let t0 = Instant::now();
-    for _ in 0..tokens {
-        client
-            .call(&format!(r#"{{"op":"step","id":{id},"x":[{step_body}]}}"#))
-            .expect("step");
+    if batch <= 1 {
+        for _ in 0..tokens {
+            client
+                .call(&format!(r#"{{"op":"step","id":{id},"x":[{step_body}]}}"#))
+                .expect("step");
+        }
+    } else {
+        let row = format!("[{step_body}]");
+        let mut sent = 0usize;
+        while sent < tokens {
+            let take = batch.min(tokens - sent);
+            let xs = vec![row.as_str(); take].join(",");
+            let reply = client
+                .call(&format!(r#"{{"op":"steps","id":{id},"xs":[{xs}]}}"#))
+                .expect("steps");
+            assert_eq!(
+                reply.get("ys").and_then(aaren::util::json::Json::as_arr).expect("ys").len(),
+                take,
+                "steps must return one output per token"
+            );
+            sent += take;
+        }
     }
-    tokens as f64 / t0.elapsed().as_secs_f64()
+    let rate = tokens as f64 / t0.elapsed().as_secs_f64();
+    let _ = client.call(&format!(r#"{{"op":"close","id":{id}}}"#));
+    rate
+}
+
+/// `clients` concurrent `stream_one`s; returns aggregate tokens/sec.
+fn stream_many(
+    addr: &SocketAddr,
+    step_body: &str,
+    tokens: usize,
+    batch: usize,
+    clients: usize,
+) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let body = step_body.to_string();
+            let addr = *addr;
+            std::thread::spawn(move || stream_one(&addr, &body, tokens, batch))
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    (clients * tokens) as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let tokens: usize = std::env::var("AAREN_TOKENS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(2000);
+        .unwrap_or(if quick { 500 } else { 2000 });
     let clients: usize = std::env::var("AAREN_CLIENTS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(4);
+        .unwrap_or(4)
+        .max(1);
     let channels = 8usize;
+    const BATCH: usize = 16;
 
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         channels,
-        shards: clients.max(1),
+        shards: clients,
+        session_ttl: None,
         artifacts: None,
     };
     let server = Server::bind(&cfg).expect("bind");
@@ -46,28 +106,59 @@ fn main() {
 
     let xs: Vec<String> = (0..channels).map(|i| format!("0.{i}")).collect();
     let step_body = xs.join(",");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let record = |records: &mut Vec<BenchRecord>, name: &str, n: usize, rate: f64, base: f64| {
+        let ns = 1e9 / rate;
+        records.push(BenchRecord {
+            name: name.to_string(),
+            n,
+            d: channels,
+            ns_per_iter: ns,
+            speedup_vs_sequential: if base > 0.0 { rate / base } else { 1.0 },
+        });
+    };
 
-    // phase 1: single client, one session
-    let rate = stream_one(&addr, &step_body, tokens);
-    println!("serve_loopback: 1 client   {rate:>12.0} tokens/s");
+    // phase 1: single client, one round-trip per token — the baseline
+    let base_rate = stream_one(&addr, &step_body, tokens, 1);
+    println!("serve_loopback: per_step        1 client   {base_rate:>12.0} tokens/s");
+    record(&mut records, "per_step_1client", tokens, base_rate, base_rate);
 
-    // phase 2: concurrent clients, one session each, across shards
-    let t0 = Instant::now();
-    let handles: Vec<_> = (0..clients)
-        .map(|_| {
-            let body = step_body.clone();
-            std::thread::spawn(move || stream_one(&addr, &body, tokens))
-        })
-        .collect();
-    for h in handles {
-        h.join().expect("client thread");
-    }
-    let dt = t0.elapsed().as_secs_f64();
+    // phase 2: single client, BATCH tokens per round-trip (the `steps`
+    // op) — the acceptance scenario: >= 3x the per-step baseline
+    let rate = stream_one(&addr, &step_body, tokens, BATCH);
+    let speedup = rate / base_rate;
     println!(
-        "serve_loopback: {clients} clients  {:>12.0} tokens/s aggregate",
-        (clients * tokens) as f64 / dt
+        "serve_loopback: steps b={BATCH}      1 client   {rate:>12.0} tokens/s  ({speedup:.1}x \
+         per-step{})",
+        if speedup >= 3.0 { "" } else { "  ** below the 3x acceptance bar **" }
+    );
+    record(&mut records, "batched_steps_b16_1client", tokens, rate, base_rate);
+
+    // phase 3: concurrent clients, per-step, one session each — shard
+    // fan-out plus drain coalescing across sessions
+    let rate = stream_many(&addr, &step_body, tokens, 1, clients);
+    println!("serve_loopback: per_step        {clients} clients  {rate:>12.0} tokens/s aggregate");
+    record(&mut records, &format!("per_step_{clients}clients"), clients * tokens, rate, base_rate);
+
+    // phase 4: concurrent clients, batched steps
+    let rate = stream_many(&addr, &step_body, tokens, BATCH, clients);
+    println!(
+        "serve_loopback: steps b={BATCH}      {clients} clients  {rate:>12.0} tokens/s aggregate"
+    );
+    record(
+        &mut records,
+        &format!("batched_steps_b16_{clients}clients"),
+        clients * tokens,
+        rate,
+        base_rate,
     );
 
     let mut shutdown = Client::connect(&addr).expect("connect");
     let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+
+    let out = std::path::Path::new("BENCH_serve.json");
+    match write_records(out, &records) {
+        Ok(()) => println!("wrote {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
 }

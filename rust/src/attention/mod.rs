@@ -13,7 +13,7 @@
 //! materialized — no `Vec<Muw>` and no intermediate score vector on the
 //! hot path.
 
-use crate::scan::{self, fold_token, Muw, ScanBuffer, MASK_FILL};
+use crate::scan::{self, fold_token, BatchScanBuffer, Muw, ScanBuffer, MASK_FILL};
 
 /// Which prefix-scan engine computes the many-to-many outputs.
 /// See `crate::scan` module docs for the work/depth trade-offs.
@@ -140,6 +140,62 @@ pub fn prefix_scan(
         ScanStrategy::ChunkedAuto => scan::chunked_parallel_auto(&leaves),
     };
     scanned.outputs()
+}
+
+/// Batched multi-query prefix attention: `nq` queries (rows of the
+/// (nq, d) flat `qs`) share one (k, v) context and an optional mask. All
+/// nq lanes live in a single flat [`BatchScanBuffer`] and are scanned
+/// together — one allocation and one sweep for the whole bundle instead
+/// of one `ScanBuffer` per query, which was the per-head allocation
+/// hotspot of multi-head serving. `chunks > 1` runs the scan on the
+/// shared `ScanPool` (chunked over time, all lanes per chunk).
+///
+/// Per lane the result is bitwise identical to
+/// [`prefix_scan`] with [`ScanStrategy::Sequential`] (`chunks <= 1`) or
+/// [`ScanStrategy::Chunked`] with the same chunk count. Returns
+/// (nq, n, dv) flat, lane-major (query q's outputs are contiguous).
+pub fn prefix_scan_multi(
+    qs: &[f32],
+    d: usize,
+    k: &[f32],
+    v: &[f32],
+    mask: Option<&[f32]>,
+    chunks: usize,
+) -> Vec<f32> {
+    let nq = if d == 0 { 0 } else { qs.len() / d };
+    let n = if d == 0 { 0 } else { k.len() / d };
+    if nq == 0 || n == 0 {
+        return Vec::new();
+    }
+    let dv = v.len() / n;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut lanes = BatchScanBuffer::with_capacity(nq, dv, n);
+    for t in 0..n {
+        let masked = mask.is_some_and(|m| m[t] <= 0.0);
+        let k_row = &k[t * d..(t + 1) * d];
+        let v_row = &v[t * dv..(t + 1) * dv];
+        for q in 0..nq {
+            let s = if masked {
+                MASK_FILL
+            } else {
+                dot_scaled(&qs[q * d..(q + 1) * d], k_row, scale)
+            };
+            lanes.push_leaf_lane(q, s, v_row);
+        }
+    }
+    if chunks > 1 {
+        lanes.scan_chunked(chunks);
+    } else {
+        lanes.scan_inplace();
+    }
+    let mut out = vec![0.0f32; nq * n * dv];
+    for q in 0..nq {
+        for t in 0..n {
+            let start = (q * n + t) * dv;
+            lanes.lane_output_into(t, q, &mut out[start..start + dv]);
+        }
+    }
+    out
 }
 
 /// Many-to-many prefix attention the naive way: one full softmax per
@@ -323,6 +379,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn multi_query_prefix_matches_per_query_scans() {
+        // satellite property: the batched lanes engine must agree with
+        // running each query through its own single-lane ScanBuffer —
+        // sequential and pool-chunked alike.
+        prop::check("prefix_scan_multi == per-query prefix_scan", 32, |rng| {
+            let (nq, n, d) = (1 + rng.below(5), 1 + rng.below(40), 1 + rng.below(6));
+            let chunks = 1 + rng.below(6);
+            let qs = randv(rng, nq * d);
+            let k = randv(rng, n * d);
+            let v = randv(rng, n * d);
+            let seq = prefix_scan_multi(&qs, d, &k, &v, None, 1);
+            let par = prefix_scan_multi(&qs, d, &k, &v, None, chunks);
+            if seq.len() != nq * n * d || par.len() != nq * n * d {
+                return Err(format!("bad output length {} / {}", seq.len(), par.len()));
+            }
+            for q in 0..nq {
+                let qv = &qs[q * d..(q + 1) * d];
+                let lane = &seq[q * n * d..(q + 1) * n * d];
+                let want_seq = prefix_scan(qv, &k, &v, None, ScanStrategy::Sequential);
+                prop::assert_close(lane, &want_seq, 1e-6)
+                    .map_err(|e| format!("sequential lane {q}: {e}"))?;
+                let lane_par = &par[q * n * d..(q + 1) * n * d];
+                let want_par = prefix_scan(qv, &k, &v, None, ScanStrategy::Chunked(chunks));
+                prop::assert_close(lane_par, &want_par, 1e-6)
+                    .map_err(|e| format!("chunked({chunks}) lane {q}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multi_query_prefix_respects_masks_and_edges() {
+        let mut rng = Rng::new(13);
+        let (nq, n, d) = (3, 17, 4);
+        let qs = randv(&mut rng, nq * d);
+        let k = randv(&mut rng, n * d);
+        let v = randv(&mut rng, n * d);
+        let mask: Vec<f32> = (0..n).map(|i| (i % 3 != 0) as u8 as f32).collect();
+        let got = prefix_scan_multi(&qs, d, &k, &v, Some(&mask), 3);
+        for q in 0..nq {
+            let want =
+                prefix_scan(&qs[q * d..(q + 1) * d], &k, &v, Some(&mask), ScanStrategy::Chunked(3));
+            prop::assert_close(&got[q * n * d..(q + 1) * n * d], &want, 1e-6).unwrap();
+        }
+        // degenerate shapes are empty, not a panic
+        assert!(prefix_scan_multi(&[], 4, &k, &v, None, 1).is_empty());
+        assert!(prefix_scan_multi(&qs, 0, &[], &[], None, 1).is_empty());
+        assert!(prefix_scan_multi(&qs, 4, &[], &[], None, 1).is_empty());
     }
 
     #[test]

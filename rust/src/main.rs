@@ -8,7 +8,8 @@
 //! Subcommands:
 //!   serve   --addr host:port   streaming inference server (line-JSON protocol)
 //!           --channels N --shards N  native session width / executor pool size
-//!           --smoke            loopback create/step/stats round-trip, then exit
+//!           --session-ttl-secs N     evict sessions idle longer than N seconds
+//!           --smoke            loopback create/step/steps/stats round-trip, then exit
 //!   bench   fig5 [+ table1..table4|params|all with pjrt]
 //!   check                      verify artifacts load + run (pjrt)
 //!   train   --domain …         train one model/dataset cell (pjrt)
@@ -76,10 +77,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
         }
         None
     };
+    let ttl_secs = args.u64("session-ttl-secs", 0);
     let cfg = ServeConfig {
         addr: args.str("addr", &defaults.addr),
         channels: args.usize("channels", defaults.channels),
         shards: args.usize("shards", defaults.shards),
+        // 0 (the default) keeps sessions until an explicit close
+        session_ttl: (ttl_secs > 0).then(|| std::time::Duration::from_secs(ttl_secs)),
         artifacts,
     };
     if args.bool("smoke") {
@@ -125,7 +129,10 @@ fn help() {
          serve --addr H:P      streaming inference server (line-JSON protocol)\n                        \
          --channels N   native session width (default 8)\n                        \
          --shards N     native executor pool size (default: cores, max 8)\n                        \
+         --session-ttl-secs N  evict sessions idle > N seconds (default: never)\n                        \
          --smoke        loopback self-test, then exit\n                        \
+         ops: create/step/steps/close/stats/shutdown — steps batches\n                        \
+         {{\"op\":\"steps\",\"id\":I,\"xs\":[[...];n]}} into one round-trip\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \
          bench fig5            streaming memory/time shape (rust-native sessions)\n\n\
          commands needing --features pjrt + compiled artifacts:\n  \

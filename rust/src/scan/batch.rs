@@ -1,0 +1,560 @@
+//! Multi-lane struct-of-arrays storage for batched (m, u, w) scans — the
+//! lane-parallel engine behind request coalescing in `crate::serve` and
+//! the batched multi-query prefix consumers in `crate::attention`.
+//!
+//! [`super::ScanBuffer`] holds ONE sequence; serving B streams (or B
+//! query heads) with it means B separate allocations and B separate
+//! sweeps — the per-head allocation hotspot named in ROADMAP. A
+//! [`BatchScanBuffer`] flattens B independent lanes of shared value
+//! dimension `d` into one allocation, laid out **time-major**:
+//!
+//! ```text
+//!   element (t, b)  at flat index  i = t·B + b
+//!   m: [f32; n·B]        running maxes
+//!   u: [f32; n·B]        normalisers
+//!   w: [f32; n·B·d]      value rows (row i = w[i·d .. (i+1)·d])
+//! ```
+//!
+//! so one time step is a contiguous B-wide row block. That makes the two
+//! hot operations linear walks over flat memory:
+//!
+//! * [`fold_all`](BatchScanBuffer::fold_all) — fold one leaf into every
+//!   lane's accumulator (the coalesced-serving step: B sessions advance
+//!   one token in a single pass over a B×d block);
+//! * [`scan_inplace`](BatchScanBuffer::scan_inplace) /
+//!   [`scan_chunked`](BatchScanBuffer::scan_chunked) — inclusive prefix
+//!   scan of all B lanes at once, `row-block t := row-block t−1 ⊕
+//!   row-block t` with per-lane coefficients; the chunked form splits
+//!   the time axis across the shared [`ScanPool`] exactly like
+//!   `scan::chunked_parallel` does for one lane.
+//!
+//! Per lane, both scans perform the identical ⊕ sequence (and share the
+//! fixed-width `axpby` inner kernels of `scan::ops`) as the single-lane
+//! `ScanBuffer` strategies, so outputs are **bitwise equal** to scanning
+//! each lane on its own — the batch engine changes memory layout and
+//! parallelism, never numerics.
+
+use crate::scan::ops::{axpby_inplace, fold_row, MASK_FILL};
+use crate::scan::pool::ScanPool;
+use crate::scan::soa::ScanBuffer;
+
+/// B independent (m, u, w) lanes of shared dim `d` in one flat, reusable
+/// time-major SoA allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchScanBuffer {
+    lanes: usize,
+    d: usize,
+    /// lanes of the trailing step already filled by `push_leaf_lane`
+    /// (0 = no step is partially staged)
+    staged: usize,
+    m: Vec<f32>,
+    u: Vec<f32>,
+    w: Vec<f32>,
+}
+
+impl BatchScanBuffer {
+    /// Empty buffer for `lanes` lanes of value-dimension `d`.
+    pub fn new(lanes: usize, d: usize) -> BatchScanBuffer {
+        BatchScanBuffer { lanes, d, staged: 0, m: Vec::new(), u: Vec::new(), w: Vec::new() }
+    }
+
+    /// Empty buffer with room for `steps` time steps per lane.
+    pub fn with_capacity(lanes: usize, d: usize, steps: usize) -> BatchScanBuffer {
+        BatchScanBuffer {
+            lanes,
+            d,
+            staged: 0,
+            m: Vec::with_capacity(steps * lanes),
+            u: Vec::with_capacity(steps * lanes),
+            w: Vec::with_capacity(steps * lanes * d),
+        }
+    }
+
+    /// Number of lanes B.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Value dimension `d` of each element.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Time steps held per lane (a partially staged trailing step counts:
+    /// its unfilled lanes are identities).
+    pub fn steps(&self) -> usize {
+        if self.lanes == 0 {
+            0
+        } else {
+            self.m.len() / self.lanes
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    /// Re-shape for reuse (executor scratch): keeps the allocations,
+    /// drops the contents.
+    pub fn reset(&mut self, lanes: usize, d: usize) {
+        self.lanes = lanes;
+        self.d = d;
+        self.staged = 0;
+        self.m.clear();
+        self.u.clear();
+        self.w.clear();
+    }
+
+    /// Append one identity row block (every lane gets an ⊕-neutral
+    /// element: m = MASK_FILL, u = 0, w = 0).
+    pub fn push_identity_row(&mut self) {
+        assert_eq!(self.staged, 0, "cannot start a new step mid-way through a staged one");
+        self.m.resize(self.m.len() + self.lanes, MASK_FILL);
+        self.u.resize(self.u.len() + self.lanes, 0.0);
+        self.w.resize(self.w.len() + self.lanes * self.d, 0.0);
+    }
+
+    /// Append the leaf (s, 1, v) for `lane` in the current time step.
+    /// Lanes must be pushed in round-robin order (0, 1, …, B−1, 0, …);
+    /// the first lane of a step appends a fresh identity row block, so a
+    /// step left partially pushed is still well-formed (identity lanes).
+    pub fn push_leaf_lane(&mut self, lane: usize, s: f32, v: &[f32]) {
+        assert!(self.lanes > 0, "push_leaf_lane on a zero-lane buffer");
+        assert_eq!(lane, self.staged, "lanes must be pushed in order 0..B per step");
+        debug_assert_eq!(v.len(), self.d);
+        if self.staged == 0 {
+            self.push_identity_row();
+        }
+        let i = (self.steps() - 1) * self.lanes + lane;
+        self.m[i] = s;
+        self.u[i] = 1.0;
+        self.w[i * self.d..(i + 1) * self.d].copy_from_slice(v);
+        self.staged = (self.staged + 1) % self.lanes;
+    }
+
+    /// Borrow element (t, lane) as (m, u, w-row).
+    pub fn row(&self, t: usize, lane: usize) -> (f32, f32, &[f32]) {
+        let i = t * self.lanes + lane;
+        (self.m[i], self.u[i], &self.w[i * self.d..(i + 1) * self.d])
+    }
+
+    /// Overwrite element (t, lane) — the state-gather path of the serve
+    /// executor (sessions load their accumulators into lanes).
+    pub fn set_row(&mut self, t: usize, lane: usize, m: f32, u: f32, w: &[f32]) {
+        debug_assert_eq!(w.len(), self.d);
+        let i = t * self.lanes + lane;
+        self.m[i] = m;
+        self.u[i] = u;
+        self.w[i * self.d..(i + 1) * self.d].copy_from_slice(w);
+    }
+
+    /// Fold one leaf (scores[b], 1, tokens[b·d..(b+1)·d]) into the LAST
+    /// row of every lane, in place — the batched §3.1 RNN cell update: B
+    /// streams advance one token in a single linear pass over the flat
+    /// row block. Per lane this is exactly `ops::fold_token`.
+    pub fn fold_all(&mut self, scores: &[f32], tokens: &[f32]) {
+        let (lanes, d) = (self.lanes, self.d);
+        assert_eq!(scores.len(), lanes, "one score per lane");
+        assert_eq!(tokens.len(), lanes * d, "one d-dim token per lane");
+        for b in 0..lanes {
+            self.fold_lane(b, scores[b], &tokens[b * d..(b + 1) * d]);
+        }
+    }
+
+    /// [`fold_all`](Self::fold_all) for a single lane — the straggler
+    /// path when lanes carry different numbers of pending tokens.
+    pub fn fold_lane(&mut self, lane: usize, s: f32, x: &[f32]) {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        assert!(self.staged == 0 && self.steps() > 0, "fold_lane needs a committed row block");
+        let i = (self.steps() - 1) * self.lanes + lane;
+        let mm = self.m[i].max(s);
+        let ea = (self.m[i] - mm).exp();
+        let eb = (s - mm).exp();
+        self.m[i] = mm;
+        self.u[i] = self.u[i] * ea + eb;
+        axpby_inplace(eb, x, ea, &mut self.w[i * d..(i + 1) * d]);
+    }
+
+    /// The attention output element (t, lane) represents: o = w / u, with
+    /// the u == 0 identity / fully-masked case yielding zeros (not NaN).
+    pub fn lane_output_into(&self, t: usize, lane: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let (_, u, w) = self.row(t, lane);
+        if u == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, x) in out.iter_mut().zip(w.iter()) {
+            *o = x / u;
+        }
+    }
+
+    /// All lane outputs at time step `t` as one contiguous (B, d) block —
+    /// what the coalesced serve executor writes straight into replies.
+    pub fn outputs_into(&self, t: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.lanes * self.d);
+        for (b, row) in out.chunks_exact_mut(self.d.max(1)).enumerate() {
+            self.lane_output_into(t, b, row);
+        }
+    }
+
+    /// Copy lane `lane` out as a single-sequence [`ScanBuffer`]
+    /// (tests / interop with the single-lane strategies).
+    pub fn lane_buffer(&self, lane: usize) -> ScanBuffer {
+        let mut buf = ScanBuffer::with_capacity(self.d, self.steps());
+        for t in 0..self.steps() {
+            let (m, u, w) = self.row(t, lane);
+            buf.push_tuple(m, u, w);
+        }
+        buf
+    }
+
+    /// Sequential inclusive prefix scan of every lane at once, in place:
+    /// row-block t := row-block t−1 ⊕ row-block t, per-lane coefficients.
+    /// One linear walk; per lane bitwise equal to
+    /// `ops::scan_rows_inplace` on that lane alone.
+    pub fn scan_inplace(&mut self) {
+        scan_block(&mut self.m, &mut self.u, &mut self.w, self.lanes, self.d);
+    }
+
+    /// Multi-threaded chunked inclusive scan of every lane: the time axis
+    /// is split into `num_chunks` contiguous chunks scanned independently
+    /// on the shared [`ScanPool`], the per-chunk carry row-blocks are
+    /// scanned serially, then each carry is broadcast into the next
+    /// chunk — the same three phases (and, per lane, the same chunk
+    /// boundaries, hence bitwise the same result) as
+    /// `scan::chunked_parallel` with the same `num_chunks`.
+    pub fn scan_chunked(&mut self, num_chunks: usize) {
+        let steps = self.steps();
+        assert_eq!(self.staged, 0, "cannot scan a partially staged step");
+        if steps == 0 {
+            return;
+        }
+        let chunk = steps.div_ceil(num_chunks.clamp(1, steps));
+        let nchunks = steps.div_ceil(chunk);
+        if nchunks == 1 {
+            self.scan_inplace();
+            return;
+        }
+        let (lanes, d) = (self.lanes, self.d);
+        let pool = ScanPool::global();
+
+        // phase 1: independent scan of each time chunk (all lanes), on
+        // disjoint &mut windows of the one allocation
+        pool.scope(
+            block_views(&mut self.m, &mut self.u, &mut self.w, lanes, d, chunk, 0)
+                .into_iter()
+                .map(|(ms, us, ws)| {
+                    Box::new(move || scan_block(ms, us, ws, lanes, d))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect(),
+        );
+
+        // phase 2: scan the chunk-final carry row blocks (nchunks blocks
+        // — serial, tiny)
+        let mut carries = BatchScanBuffer::with_capacity(lanes, d, nchunks);
+        for kc in 0..nchunks {
+            let last = ((kc + 1) * chunk).min(steps) - 1;
+            carries.push_identity_row();
+            for b in 0..lanes {
+                let (m, u, w) = self.row(last, b);
+                carries.set_row(kc, b, m, u, w);
+            }
+        }
+        carries.scan_inplace();
+
+        // phase 3: broadcast carry block kc−1 into every row of chunk kc
+        let carries = &carries;
+        pool.scope(
+            block_views(&mut self.m, &mut self.u, &mut self.w, lanes, d, chunk, 1)
+                .into_iter()
+                .enumerate()
+                .map(|(kc, (ms, us, ws))| {
+                    Box::new(move || {
+                        let rows = if lanes == 0 { 0 } else { ms.len() / lanes };
+                        for t in 0..rows {
+                            for b in 0..lanes {
+                                let (cm, cu, cw) = carries.row(kc, b);
+                                let i = t * lanes + b;
+                                fold_row(
+                                    cm,
+                                    cu,
+                                    cw,
+                                    &mut ms[i],
+                                    &mut us[i],
+                                    &mut ws[i * d..(i + 1) * d],
+                                );
+                            }
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect(),
+        );
+    }
+}
+
+/// The batched sequential scan kernel over raw time-major SoA windows:
+/// `m`/`u` hold k·lanes elements (k complete row blocks), `w` is
+/// (k·lanes, d) flat. Shared by `scan_inplace` and each phase-1 worker of
+/// `scan_chunked`.
+fn scan_block(m: &mut [f32], u: &mut [f32], w: &mut [f32], lanes: usize, d: usize) {
+    let steps = if lanes == 0 { 0 } else { m.len() / lanes };
+    debug_assert_eq!(u.len(), m.len());
+    debug_assert_eq!(w.len(), m.len() * d);
+    let rw = lanes * d;
+    for t in 1..steps {
+        let (mp, mc) = m[(t - 1) * lanes..(t + 1) * lanes].split_at_mut(lanes);
+        let (up, uc) = u[(t - 1) * lanes..(t + 1) * lanes].split_at_mut(lanes);
+        let (wp, wc) = w[(t - 1) * rw..(t + 1) * rw].split_at_mut(rw);
+        for b in 0..lanes {
+            let mm = mp[b].max(mc[b]);
+            let ea = (mp[b] - mm).exp();
+            let eb = (mc[b] - mm).exp();
+            mc[b] = mm;
+            uc[b] = up[b] * ea + uc[b] * eb;
+            axpby_inplace(ea, &wp[b * d..(b + 1) * d], eb, &mut wc[b * d..(b + 1) * d]);
+        }
+    }
+}
+
+/// Split time-major SoA buffers into per-chunk disjoint
+/// (&mut m, &mut u, &mut w) windows of `chunk` row blocks, skipping the
+/// first `skip` chunks — the batch analogue of `scan::chunk_views`.
+#[allow(clippy::type_complexity)]
+fn block_views<'a>(
+    m: &'a mut [f32],
+    u: &'a mut [f32],
+    w: &'a mut [f32],
+    lanes: usize,
+    d: usize,
+    chunk: usize,
+    skip: usize,
+) -> Vec<(&'a mut [f32], &'a mut [f32], &'a mut [f32])> {
+    let start = (chunk * skip * lanes).min(m.len());
+    let mut ms = &mut m[start..];
+    let mut us = &mut u[start..];
+    let mut ws = &mut w[start * d..];
+    let mut views = Vec::new();
+    while !ms.is_empty() {
+        let take = (chunk * lanes).min(ms.len());
+        let (mh, mt) = ms.split_at_mut(take);
+        let (uh, ut) = us.split_at_mut(take);
+        let (wh, wt) = ws.split_at_mut(take * d);
+        ms = mt;
+        us = ut;
+        ws = wt;
+        views.push((mh, uh, wh));
+    }
+    views
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::ops::{fold_token, Muw};
+    use crate::scan::{chunked_parallel, sequential_inplace};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Random (B, n, d) leaves, materialized both as one batch buffer and
+    /// as B independent single-lane buffers with identical rows.
+    fn random_batch(
+        rng: &mut Rng,
+        lanes: usize,
+        steps: usize,
+        d: usize,
+    ) -> (BatchScanBuffer, Vec<ScanBuffer>) {
+        let mut batch = BatchScanBuffer::with_capacity(lanes, d, steps);
+        let mut singles: Vec<ScanBuffer> =
+            (0..lanes).map(|_| ScanBuffer::with_capacity(d, steps)).collect();
+        for _ in 0..steps {
+            for (b, single) in singles.iter_mut().enumerate() {
+                let s = rng.range(-30.0, 30.0) as f32;
+                let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                batch.push_leaf_lane(b, s, &v);
+                single.push_leaf(s, &v);
+            }
+        }
+        (batch, singles)
+    }
+
+    fn assert_lane_bitwise(batch: &BatchScanBuffer, lane: usize, single: &ScanBuffer) {
+        assert_eq!(batch.steps(), single.len());
+        for t in 0..single.len() {
+            let (bm, bu, bw) = batch.row(t, lane);
+            let (sm, su, sw) = single.row(t);
+            assert_eq!(bm.to_bits(), sm.to_bits(), "m lane {lane} t {t}: {bm} vs {sm}");
+            assert_eq!(bu.to_bits(), su.to_bits(), "u lane {lane} t {t}: {bu} vs {su}");
+            for (i, (x, y)) in bw.iter().zip(sw.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "w lane {lane} t {t} [{i}]: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn push_and_row_roundtrip() {
+        let mut buf = BatchScanBuffer::new(2, 2);
+        buf.push_leaf_lane(0, 0.5, &[1.0, -2.0]);
+        // lane 1 of step 0 left staged: reads as the identity
+        assert_eq!(buf.steps(), 1);
+        assert_eq!(buf.row(0, 0), (0.5, 1.0, &[1.0, -2.0][..]));
+        assert_eq!(buf.row(0, 1), (MASK_FILL, 0.0, &[0.0, 0.0][..]));
+        buf.push_leaf_lane(1, 1.5, &[4.0, 6.0]);
+        buf.push_leaf_lane(0, -0.5, &[0.0, 9.0]);
+        assert_eq!(buf.steps(), 2);
+        assert_eq!(buf.row(0, 1), (1.5, 1.0, &[4.0, 6.0][..]));
+        assert_eq!(buf.row(1, 0), (-0.5, 1.0, &[0.0, 9.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "in order")]
+    fn out_of_order_push_is_rejected() {
+        let mut buf = BatchScanBuffer::new(3, 1);
+        buf.push_leaf_lane(1, 0.0, &[0.0]);
+    }
+
+    #[test]
+    fn batch_sequential_scan_is_bitwise_equal_to_per_lane_scans() {
+        // satellite property: random B, d, n — the batch engine must not
+        // change numerics, only layout.
+        prop::check("batch scan == per-lane scan (bitwise)", 48, |rng| {
+            let lanes = 1 + rng.below(6);
+            let steps = 1 + rng.below(40);
+            let d = 1 + rng.below(7);
+            let (mut batch, mut singles) = random_batch(rng, lanes, steps, d);
+            batch.scan_inplace();
+            for (b, single) in singles.iter_mut().enumerate() {
+                sequential_inplace(single);
+                assert_lane_bitwise(&batch, b, single);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_chunked_scan_is_bitwise_equal_to_per_lane_chunked_scans() {
+        // same chunk count → same per-lane chunk boundaries → the exact
+        // same ⊕ sequence per lane, pool-parallel or not.
+        prop::check("batch chunked == per-lane chunked (bitwise)", 32, |rng| {
+            let lanes = 1 + rng.below(5);
+            let steps = 1 + rng.below(120);
+            let d = 1 + rng.below(5);
+            let chunks = 1 + rng.below(9);
+            let (mut batch, singles) = random_batch(rng, lanes, steps, d);
+            batch.scan_chunked(chunks);
+            for (b, single) in singles.iter().enumerate() {
+                let want = chunked_parallel(single, chunks);
+                assert_lane_bitwise(&batch, b, &want);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fold_all_is_bitwise_equal_to_per_lane_fold_token() {
+        prop::check("fold_all == fold_token per lane", 48, |rng| {
+            let lanes = 1 + rng.below(8);
+            let d = 1 + rng.below(9);
+            let rounds = 1 + rng.below(12);
+            let mut batch = BatchScanBuffer::new(lanes, d);
+            batch.push_identity_row();
+            let mut accs: Vec<Muw> = (0..lanes).map(|_| Muw::identity(d)).collect();
+            for _ in 0..rounds {
+                let scores: Vec<f32> = (0..lanes).map(|_| rng.range(-40.0, 40.0) as f32).collect();
+                let tokens: Vec<f32> = (0..lanes * d).map(|_| rng.gaussian() as f32).collect();
+                batch.fold_all(&scores, &tokens);
+                for (b, acc) in accs.iter_mut().enumerate() {
+                    fold_token(acc, scores[b], &tokens[b * d..(b + 1) * d]);
+                }
+            }
+            let mut got = vec![0.0f32; lanes * d];
+            batch.outputs_into(0, &mut got);
+            for (b, acc) in accs.iter().enumerate() {
+                let (m, u, w) = batch.row(0, b);
+                if m.to_bits() != acc.m.to_bits() || u.to_bits() != acc.u.to_bits() {
+                    return Err(format!("lane {b} m/u diverged: ({m},{u}) vs {acc:?}"));
+                }
+                for (x, y) in w.iter().zip(acc.w.iter()) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("lane {b} w diverged: {x} vs {y}"));
+                    }
+                }
+                prop::assert_close(&got[b * d..(b + 1) * d], &acc.output(), 0.0)
+                    .map_err(|e| format!("lane {b} output: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fold_lane_matches_fold_all_on_that_lane() {
+        let d = 4;
+        let mut rng = Rng::new(9);
+        let mut a = BatchScanBuffer::new(3, d);
+        let mut b = BatchScanBuffer::new(3, d);
+        a.push_identity_row();
+        b.push_identity_row();
+        for _ in 0..6 {
+            let scores: Vec<f32> = (0..3).map(|_| rng.range(-5.0, 5.0) as f32).collect();
+            let tokens: Vec<f32> = (0..3 * d).map(|_| rng.gaussian() as f32).collect();
+            a.fold_all(&scores, &tokens);
+            for lane in 0..3 {
+                b.fold_lane(lane, scores[lane], &tokens[lane * d..(lane + 1) * d]);
+            }
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn outputs_into_writes_lane_major_blocks() {
+        let mut buf = BatchScanBuffer::new(2, 2);
+        buf.push_identity_row();
+        // lane 0: u=2, w=(4,-8) → (2,-4); lane 1 identity → zeros
+        buf.set_row(0, 0, 0.0, 2.0, &[4.0, -8.0]);
+        let mut out = vec![f32::NAN; 4];
+        buf.outputs_into(0, &mut out);
+        assert_eq!(out, vec![2.0, -4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn lane_buffer_roundtrips_rows() {
+        let mut rng = Rng::new(3);
+        let (batch, singles) = random_batch(&mut rng, 3, 5, 2);
+        for (b, single) in singles.iter().enumerate() {
+            assert_eq!(&batch.lane_buffer(b), single);
+        }
+    }
+
+    #[test]
+    fn reset_reuses_the_allocation_across_shapes() {
+        let mut rng = Rng::new(4);
+        let (mut buf, _) = random_batch(&mut rng, 4, 8, 3);
+        buf.scan_inplace();
+        buf.reset(2, 5);
+        assert_eq!((buf.lanes(), buf.dim(), buf.steps()), (2, 5, 0));
+        buf.push_identity_row();
+        buf.fold_all(&[1.0, -1.0], &[0.5; 10]);
+        let mut out = vec![0.0f32; 10];
+        buf.outputs_into(0, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_lane_batch_degenerates_to_scan_buffer() {
+        let mut rng = Rng::new(6);
+        let (mut batch, mut singles) = random_batch(&mut rng, 1, 33, 4);
+        batch.scan_chunked(4);
+        let want = chunked_parallel(&singles.remove(0), 4);
+        assert_lane_bitwise(&batch, 0, &want);
+    }
+
+    #[test]
+    fn empty_batch_scans_are_no_ops() {
+        let mut buf = BatchScanBuffer::new(3, 2);
+        buf.scan_inplace();
+        buf.scan_chunked(4);
+        assert_eq!(buf.steps(), 0);
+    }
+}

@@ -42,11 +42,23 @@
 //! executable specification the AOT Pallas kernels are tested against,
 //! and the engine behind the rust-native streaming fallback in
 //! `crate::serve`.
+//!
+//! # Batched lanes
+//!
+//! [`batch::BatchScanBuffer`] extends the SoA layout to B independent
+//! lanes in ONE time-major allocation: `fold_all` advances every lane by
+//! one token in a single linear pass (the coalesced-serving hot path) and
+//! `scan_inplace`/`scan_chunked` run the inclusive scan of all lanes at
+//! once, per lane bitwise equal to the single-lane strategies here. The
+//! ⊕ inner loops of every path — single-lane and batch — share the
+//! fixed-width, bounds-check-free `axpby` kernels in [`ops`].
 
+pub mod batch;
 pub mod ops;
 pub mod pool;
 pub mod soa;
 
+pub use batch::BatchScanBuffer;
 pub use ops::{
     combine, combine_into, combine_rows, fold_row, fold_token, scan_rows_inplace, Muw, MASK_FILL,
 };

@@ -24,6 +24,52 @@
 /// python/compile/kernels/ref.py::MASK_FILL.
 pub const MASK_FILL: f32 = -1e9;
 
+/// Fixed width of the bounds-check-free inner kernels: eight f32 lanes is
+/// one AVX2 register (two NEON ones). `chunks_exact` hands the optimizer
+/// constant-length windows with no tail condition inside the loop, which
+/// is what lets the `w`-row axpby autovectorize; the scalar remainder
+/// handles `d % KERNEL_WIDTH` rows.
+const KERNEL_WIDTH: usize = 8;
+
+/// `wo = wa·ea + wb·eb` over three equal-length rows — the shared inner
+/// kernel of every ⊕ (single-lane and batch): fixed-width chunks, no
+/// per-element bounds checks. Product-then-sum order matches the scalar
+/// loops it replaced, so results are bitwise identical.
+#[inline(always)]
+pub(crate) fn axpby_into(ea: f32, wa: &[f32], eb: f32, wb: &[f32], wo: &mut [f32]) {
+    debug_assert_eq!(wa.len(), wo.len());
+    debug_assert_eq!(wb.len(), wo.len());
+    let mut oc = wo.chunks_exact_mut(KERNEL_WIDTH);
+    let mut ac = wa.chunks_exact(KERNEL_WIDTH);
+    let mut bc = wb.chunks_exact(KERNEL_WIDTH);
+    for ((o, a), b) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..KERNEL_WIDTH {
+            o[i] = a[i] * ea + b[i] * eb;
+        }
+    }
+    for ((o, a), b) in oc.into_remainder().iter_mut().zip(ac.remainder()).zip(bc.remainder()) {
+        *o = a * ea + *b * eb;
+    }
+}
+
+/// In-place form of [`axpby_into`]: `wb = wa·ea + wb·eb`. The broadcast /
+/// fold kernel of the sequential scan, the chunked scan's carry phase and
+/// the batched lane fold.
+#[inline(always)]
+pub(crate) fn axpby_inplace(ea: f32, wa: &[f32], eb: f32, wb: &mut [f32]) {
+    debug_assert_eq!(wa.len(), wb.len());
+    let mut bc = wb.chunks_exact_mut(KERNEL_WIDTH);
+    let mut ac = wa.chunks_exact(KERNEL_WIDTH);
+    for (b, a) in (&mut bc).zip(&mut ac) {
+        for i in 0..KERNEL_WIDTH {
+            b[i] = a[i] * ea + b[i] * eb;
+        }
+    }
+    for (b, a) in bc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *b = a * ea + *b * eb;
+    }
+}
+
 /// One scan element: running max `m`, normaliser `u`, weighted value sum `w`.
 ///
 /// Kept as the single-tuple view for the O(1) streaming fold; the scan
@@ -93,9 +139,7 @@ pub fn fold_token(acc: &mut Muw, s: f32, v: &[f32]) {
     let eb = (s - m).exp();
     acc.m = m;
     acc.u = acc.u * ea + eb;
-    for (w, x) in acc.w.iter_mut().zip(v.iter()) {
-        *w = *w * ea + x * eb;
-    }
+    axpby_inplace(eb, v, ea, &mut acc.w);
 }
 
 /// ⊕ over raw SoA components: (ma, ua, wa) ⊕ (mb, ub, wb) → (mo, uo, wo).
@@ -118,9 +162,7 @@ pub fn combine_rows(
     let eb = (mb - m).exp();
     *mo = m;
     *uo = ua * ea + ub * eb;
-    for ((o, x), y) in wo.iter_mut().zip(wa.iter()).zip(wb.iter()) {
-        *o = x * ea + y * eb;
-    }
+    axpby_into(ea, wa, eb, wb, wo);
 }
 
 /// In-place right-fold over raw SoA components:
@@ -133,9 +175,7 @@ pub fn fold_row(ma: f32, ua: f32, wa: &[f32], mb: &mut f32, ub: &mut f32, wb: &m
     let eb = (*mb - m).exp();
     *mb = m;
     *ub = ua * ea + *ub * eb;
-    for (y, x) in wb.iter_mut().zip(wa.iter()) {
-        *y = x * ea + *y * eb;
-    }
+    axpby_inplace(ea, wa, eb, wb);
 }
 
 /// Sequential inclusive scan over raw SoA slices, in place:
@@ -154,9 +194,7 @@ pub fn scan_rows_inplace(m: &mut [f32], u: &mut [f32], w: &mut [f32], d: usize) 
         m[i] = mm;
         u[i] = u[i - 1] * ea + u[i] * eb;
         let (prev, cur) = w[(i - 1) * d..(i + 1) * d].split_at_mut(d);
-        for (y, x) in cur.iter_mut().zip(prev.iter()) {
-            *y = x * ea + *y * eb;
-        }
+        axpby_inplace(ea, prev, eb, cur);
     }
 }
 
@@ -280,6 +318,26 @@ mod tests {
         let mut out = vec![f32::NAN; 3];
         e.output_into(&mut out);
         assert_eq!(out, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn axpby_kernels_match_scalar_reference_at_every_width() {
+        // widths straddling the fixed KERNEL_WIDTH chunking: empty, pure
+        // remainder, exactly one chunk, chunk + remainder, several chunks
+        let mut rng = crate::util::rng::Rng::new(11);
+        for d in [0usize, 1, 3, 7, 8, 9, 15, 16, 23, 64] {
+            let wa: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let wb: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let (ea, eb) = (0.37f32, 1.21f32);
+            let want: Vec<f32> =
+                wa.iter().zip(wb.iter()).map(|(a, b)| a * ea + b * eb).collect();
+            let mut out = vec![f32::NAN; d];
+            axpby_into(ea, &wa, eb, &wb, &mut out);
+            assert_eq!(out, want, "axpby_into d={d}");
+            let mut inout = wb.clone();
+            axpby_inplace(ea, &wa, eb, &mut inout);
+            assert_eq!(inout, want, "axpby_inplace d={d}");
+        }
     }
 
     #[test]

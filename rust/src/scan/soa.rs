@@ -18,7 +18,7 @@
 //! of the same allocation. `Muw` remains only as the single-tuple view
 //! for O(1) streaming state.
 
-use crate::scan::ops::{Muw, MASK_FILL};
+use crate::scan::ops::{axpby_inplace, Muw, MASK_FILL};
 
 /// A sequence of (m, u, w) scan elements in flat SoA layout.
 #[derive(Clone, Debug, PartialEq)]
@@ -167,9 +167,7 @@ impl ScanBuffer {
         let (left, right) = self.w.split_at_mut(j * d);
         let wa = &left[i * d..(i + 1) * d];
         let wo = &mut right[..d];
-        for (o, x) in wo.iter_mut().zip(wa.iter()) {
-            *o = x * ea + *o * eb;
-        }
+        axpby_inplace(ea, wa, eb, wo);
     }
 }
 
@@ -236,5 +234,37 @@ mod tests {
         buf.resize(1);
         assert_eq!(buf.len(), 1);
         assert_eq!(buf.w.len(), 1);
+    }
+
+    #[test]
+    fn resize_grown_rows_are_scan_neutral() {
+        // regression: growth must pad with identity tuples (m = MASK_FILL,
+        // u = 0, w = 0). A zeroed m = 0.0 row is NOT ⊕-neutral — it lifts
+        // the running max of any negative-scored prefix (max(m, 0) = 0),
+        // which the Blelloch power-of-two padding would then propagate.
+        // Scanning through grown rows must leave every real prefix
+        // bitwise untouched and keep the padded tail equal to the last
+        // real prefix.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let d = 3;
+        let mut real = ScanBuffer::with_capacity(d, 6);
+        for _ in 0..6 {
+            // negative scores: the case a zero-m pad would corrupt
+            let s = rng.range(-9.0, -1.0) as f32;
+            let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            real.push_leaf(s, &v);
+        }
+        let mut grown = real.clone();
+        grown.resize(9);
+        let want = crate::scan::sequential(&real);
+        let got = crate::scan::sequential(&grown);
+        for i in 0..6 {
+            assert_eq!(got.row(i), want.row(i), "real prefix {i} changed by padding");
+        }
+        let (lm, lu, lw) = want.row(5);
+        for i in 6..9 {
+            let (m, u, w) = got.row(i);
+            assert_eq!((m, u, w), (lm, lu, lw), "padded row {i} is not ⊕-neutral");
+        }
     }
 }

@@ -15,20 +15,74 @@
 //!   whose PJRT handles are not `Send`, stay on one dedicated executor
 //!   thread.
 //!
-//! Protocol (one JSON object per line):
+//! # Wire protocol
+//!
+//! One JSON object per line, one reply line per request, over plain TCP:
+//!
 //! ```text
 //! -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
-//! -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
-//! -> {"op":"close","id":N}                     <- {"ok":true}
-//! -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B}
-//! -> {"op":"shutdown"}                         <- {"ok":true}
+//! -> {"op":"step","id":N,"x":[f32;channels]}       <- {"y":[...],"state_bytes":B,"t":T}
+//! -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
+//! -> {"op":"close","id":N}                         <- {"ok":true}
+//! -> {"op":"stats"}                                <- {"sessions":K,"total_state_bytes":B}
+//! -> {"op":"shutdown"}                             <- {"ok":true}
 //! ```
+//!
+//! * `create` — allocate a session. `kind` selects the model family
+//!   (`"aaren"`: O(1)-state prefix attention; `"tf"`: KV-cache
+//!   Transformer baseline); the optional `backend` field selects the
+//!   executor tier (`"native"` is the default; `"hlo"` needs a `pjrt`
+//!   build started with `--artifacts`). The reply's `id` routes every
+//!   later request — ids are pinned to one executor shard, so a
+//!   session's requests always serialize in order.
+//! * `step` — fold one token (used as key and value); the reply carries
+//!   the step's output `y`, the session's current `state_bytes` (the
+//!   Figure-5 observable) and `t`, the number of tokens folded so far.
+//!   Token values must be finite in f32; anything else is rejected
+//!   rather than poisoning the (m, u, w) state.
+//! * `steps` — the batch form of `step`: n tokens in one message, n
+//!   outputs in one reply, amortizing the TCP + executor round-trip
+//!   (see `benches/serve_loopback.rs` for the measured effect). `t` and
+//!   `state_bytes` describe the session after the whole block. Rows
+//!   must share one width.
+//! * `close` — free the session. Sessions can also expire: with
+//!   `--session-ttl-secs N` (ServeConfig::session_ttl), executor drains
+//!   sweep out sessions idle longer than the TTL, so disconnected
+//!   clients cannot leak state.
+//! * `stats` — live session count and total state bytes, aggregated
+//!   across every executor shard.
+//! * `shutdown` — stop all executors and the accept loop. Executors
+//!   acknowledge with a first-class `Response::ShuttingDown` reply (the
+//!   wire sees `{"ok":true}`); requests that race a shutdown fail with
+//!   an error rather than hanging.
+//!
+//! Any request-level failure (unknown op, bad JSON, unknown session,
+//! width mismatch) is replied as `{"error":"…"}` on the same
+//! connection, which stays usable.
+//!
+//! # Coalescing
+//!
+//! Executor shards drain their whole queue per iteration and serve every
+//! pending `step`/`steps` as one batch: all native Aaren sessions with
+//! pending tokens advance together as lanes of a single flat
+//! [`crate::scan::BatchScanBuffer`] fold per token round
+//! ([`session::step_many_batched`]), instead of paying a map lookup and
+//! accumulator walk per request. Numerics are unchanged — batched
+//! outputs and `t` are bitwise those of sequential per-request stepping.
+//! One observable coarsens: when several requests for the SAME session
+//! land in one drain, each reply's `state_bytes` reflects the session
+//! after the whole drain (per-request `t` stays exact). A request that
+//! fails mid-block may have partially advanced the stream — exactly as
+//! with individual `step` calls — and its error reply names the
+//! session's current `t` so clients can resync.
 
 pub mod server;
 pub mod session;
 
 pub use server::{Client, ServeConfig, Server};
-pub use session::{NativeAarenSession, NativeTfSession, StreamSession, TF_BUCKETS};
+pub use session::{
+    step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession, TF_BUCKETS,
+};
 
 #[cfg(feature = "pjrt")]
 pub use session::{BoundSession, Session, StreamModel};

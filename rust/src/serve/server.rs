@@ -4,6 +4,7 @@
 //! Protocol (one JSON object per line):
 //!   -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
 //!   -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
+//!   -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
 //!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
@@ -17,6 +18,17 @@
 //! PJRT tier needs. HLO sessions (whose PJRT handles are not `Send`,
 //! `pjrt` builds only) stay on one dedicated executor thread; the session
 //! id's namespace encodes the route, so no shared routing table exists.
+//!
+//! Executors COALESCE: each iteration drains its whole request queue and
+//! serves every pending `step`/`steps` in one pass — native Aaren
+//! sessions advance together as lanes of one shared
+//! [`BatchScanBuffer`] fold (`session::step_many_batched`) instead of
+//! paying a map lookup + accumulator walk per request, and a `steps`
+//! block of n tokens costs one executor round-trip instead of n. The
+//! drain is also where idle sessions are swept: with a session TTL
+//! configured (`--session-ttl-secs`), sessions idle past it are dropped,
+//! so a client that disconnected without `close` cannot leak its
+//! sessions forever.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -24,10 +36,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::serve::session::{NativeAarenSession, NativeTfSession, StreamSession};
+use crate::scan::BatchScanBuffer;
+use crate::serve::session::{
+    step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession,
+};
 use crate::util::json::Json;
 
 /// A request as an executor sees it (ids are assigned by the router
@@ -35,6 +51,9 @@ use crate::util::json::Json;
 pub enum Request {
     Create { id: u64, kind: String },
     Step { id: u64, x: Vec<f32> },
+    /// `n` tokens for one session as a flat (n, channels) block — one
+    /// round-trip, n outputs.
+    Steps { id: u64, xs: Vec<f32>, n: usize },
     Close { id: u64 },
     Stats,
     Shutdown,
@@ -98,44 +117,320 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
-/// One executor shard: owns a private id → session map and serves
-/// requests from its channel until a `Shutdown` request arrives
-/// (acknowledged with [`Response::ShuttingDown`]).
-pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx) {
-    let mut sessions: HashMap<u64, Box<dyn StreamSession>> = HashMap::new();
-    while let Ok((req, reply)) = rx.recv() {
-        let resp: Reply = match req {
-            Request::Create { id, kind } => factory.create(&kind).map(|session| {
-                sessions.insert(id, session);
-                Response::Value(obj(vec![("id", Json::Num(id as f64))]))
-            }),
-            Request::Step { id, x } => step_session(&mut sessions, id, &x),
-            Request::Close { id } => sessions
-                .remove(&id)
-                .map(|_| Response::Value(obj(vec![("ok", Json::Bool(true))])))
-                .ok_or_else(|| anyhow!("no session {id}")),
-            Request::Stats => Ok(Response::Stats {
-                sessions: sessions.len(),
-                state_bytes: sessions.values().map(|s| s.state_bytes()).sum(),
-            }),
-            Request::Shutdown => Ok(Response::ShuttingDown),
+/// A session an executor owns, plus the idle timestamp the TTL sweep
+/// reads.
+struct Held {
+    session: Box<dyn StreamSession>,
+    last_used: Instant,
+}
+
+/// One queued step-shaped request inside a drain: the flat token block,
+/// its token count, whether the reply uses the single-step (`{"y":…}`)
+/// or block (`{"ys":…}`) shape, and the channel the reply goes back on.
+struct PendingSteps {
+    id: u64,
+    xs: Vec<f32>,
+    n: usize,
+    single: bool,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// One executor shard: owns a private id → session map and serves its
+/// channel until a `Shutdown` request arrives (acknowledged with
+/// [`Response::ShuttingDown`]).
+///
+/// Each iteration DRAINS the queue: every request already waiting is
+/// pulled in one go, maximal runs of `step`/`steps` are executed as one
+/// coalesced batch ([`flush_steps`]) and — with `session_ttl` set —
+/// sessions idle past the TTL are swept before the drain is served.
+/// Request order is preserved: a `close` (or any other op) between two
+/// step runs splits them, so a step never observes a later op's effect.
+pub fn run_executor<F: SessionFactory>(
+    mut factory: F,
+    rx: ReqRx,
+    session_ttl: Option<Duration>,
+) {
+    let mut sessions: HashMap<u64, Held> = HashMap::new();
+    let mut scratch = BatchScanBuffer::new(0, 0);
+    'serve: loop {
+        // with a TTL configured, an idle shard must still wake up to
+        // sweep: bound the blocking wait so sessions of disconnected
+        // clients are reaped even when no request ever arrives here again
+        let first = match session_ttl {
+            Some(ttl) => match rx.recv_timeout(ttl.min(Duration::from_secs(5))) {
+                Ok(envelope) => Some(envelope),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(envelope) => Some(envelope),
+                Err(_) => break, // router gone: no more work can arrive
+            },
         };
-        let shutting_down = matches!(resp, Ok(Response::ShuttingDown));
-        let _ = reply.send(resp);
-        if shutting_down {
-            break;
+        let mut batch: Vec<Envelope> = first.into_iter().collect();
+        while let Ok(envelope) = rx.try_recv() {
+            batch.push(envelope);
         }
+        let now = Instant::now();
+        if let Some(ttl) = session_ttl {
+            // a request already in hand keeps its session alive: refresh
+            // before sweeping, so a slow-but-connected client can never
+            // lose its stream state between enqueue and execution
+            for (req, _) in &batch {
+                if let Request::Step { id, .. }
+                | Request::Steps { id, .. }
+                | Request::Close { id } = req
+                {
+                    if let Some(held) = sessions.get_mut(id) {
+                        held.last_used = now;
+                    }
+                }
+            }
+            // the drain is the sweep point; idle shards wake on the
+            // recv_timeout above so disconnected clients still get reaped
+            sessions.retain(|_, held| now.duration_since(held.last_used) <= ttl);
+        }
+        let mut pending: Vec<PendingSteps> = Vec::new();
+        for (req, reply) in batch {
+            match req {
+                Request::Step { id, x } => {
+                    pending.push(PendingSteps { id, xs: x, n: 1, single: true, reply });
+                }
+                Request::Steps { id, xs, n } => {
+                    pending.push(PendingSteps { id, xs, n, single: false, reply });
+                }
+                other => {
+                    // anything that is not a step splits the batch: flush
+                    // what came before it so ordering is preserved
+                    flush_steps(&mut sessions, &mut pending, &mut scratch, now);
+                    let resp: Reply = match other {
+                        Request::Create { id, kind } => factory.create(&kind).map(|session| {
+                            sessions.insert(id, Held { session, last_used: now });
+                            Response::Value(obj(vec![("id", Json::Num(id as f64))]))
+                        }),
+                        Request::Close { id } => sessions
+                            .remove(&id)
+                            .map(|_| Response::Value(obj(vec![("ok", Json::Bool(true))])))
+                            .ok_or_else(|| anyhow!("no session {id}")),
+                        Request::Stats => Ok(Response::Stats {
+                            sessions: sessions.len(),
+                            state_bytes: sessions.values().map(|h| h.session.state_bytes()).sum(),
+                        }),
+                        Request::Shutdown => Ok(Response::ShuttingDown),
+                        Request::Step { .. } | Request::Steps { .. } => {
+                            unreachable!("step-shaped requests are queued above")
+                        }
+                    };
+                    let shutting_down = matches!(resp, Ok(Response::ShuttingDown));
+                    let _ = reply.send(resp);
+                    if shutting_down {
+                        break 'serve;
+                    }
+                }
+            }
+        }
+        flush_steps(&mut sessions, &mut pending, &mut scratch, now);
     }
 }
 
-fn step_session(sessions: &mut HashMap<u64, Box<dyn StreamSession>>, id: u64, x: &[f32]) -> Reply {
-    let session = sessions.get_mut(&id).ok_or_else(|| anyhow!("no session {id}"))?;
-    let y = session.step(x)?;
-    Ok(Response::Value(obj(vec![
-        ("y", Json::Arr(y.into_iter().map(|v| Json::Num(v as f64)).collect())),
-        ("state_bytes", Json::Num(session.state_bytes() as f64)),
-        ("t", Json::Num(session.tokens_seen() as f64)),
-    ])))
+/// One session's share of a drain: its concatenated pending tokens and
+/// the (work index, token count) segments they came from.
+struct SessionRun {
+    id: u64,
+    d: usize,
+    tokens: Vec<f32>,
+    segments: Vec<(usize, usize)>,
+}
+
+/// Execute every queued step-shaped request of a drain as one coalesced
+/// batch and reply to each. Requests are grouped per session (order
+/// preserved within a session); native Aaren sessions then advance
+/// TOGETHER as lanes of the shared scratch [`BatchScanBuffer`] — one
+/// flat fold per token round across all of them — while other backends
+/// (tf KV cache, compiled HLO) take their per-session `step_many` path.
+fn flush_steps(
+    sessions: &mut HashMap<u64, Held>,
+    pending: &mut Vec<PendingSteps>,
+    scratch: &mut BatchScanBuffer,
+    now: Instant,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let work = std::mem::take(pending);
+
+    // group per session, preserving arrival order within each
+    let mut runs: Vec<SessionRun> = Vec::new();
+    let mut run_of: HashMap<u64, usize> = HashMap::new();
+    let mut replies: Vec<Option<Reply>> = (0..work.len()).map(|_| None).collect();
+    for (wi, p) in work.iter().enumerate() {
+        let Some(held) = sessions.get_mut(&p.id) else {
+            replies[wi] = Some(Err(anyhow!("no session {}", p.id)));
+            continue;
+        };
+        held.last_used = now;
+        let d = held.session.channels();
+        if p.xs.len() != p.n * d {
+            replies[wi] = Some(Err(anyhow!(
+                "token block has {} floats, session {} expects {} × {d} channels",
+                p.xs.len(),
+                p.id,
+                p.n
+            )));
+            continue;
+        }
+        let ri = match run_of.get(&p.id) {
+            Some(&ri) => ri,
+            None => {
+                runs.push(SessionRun { id: p.id, d, tokens: Vec::new(), segments: Vec::new() });
+                run_of.insert(p.id, runs.len() - 1);
+                runs.len() - 1
+            }
+        };
+        // single-request runs (the common case) execute straight from the
+        // request's own block; `tokens` concatenates only when a second
+        // request for the same session lands in one drain
+        if !runs[ri].segments.is_empty() {
+            if runs[ri].tokens.is_empty() {
+                let (first_wi, _) = runs[ri].segments[0];
+                let first = work[first_wi].xs.as_slice();
+                runs[ri].tokens.extend_from_slice(first);
+            }
+            runs[ri].tokens.extend_from_slice(&p.xs);
+        }
+        runs[ri].segments.push((wi, p.n));
+    }
+    let token_views: Vec<&[f32]> = runs
+        .iter()
+        .map(|run| {
+            if run.segments.len() == 1 {
+                work[run.segments[0].0].xs.as_slice()
+            } else {
+                run.tokens.as_slice()
+            }
+        })
+        .collect();
+
+    // execute: split runs into the aaren lane batch and the rest
+    let mut outs: Vec<Vec<f32>> = (0..runs.len()).map(|_| Vec::new()).collect();
+    let mut run_err: Vec<Option<anyhow::Error>> = (0..runs.len()).map(|_| None).collect();
+    let mut batch_runs: Vec<usize> = Vec::new();
+    let mut batch_held: Vec<Held> = Vec::new();
+    for (ri, run) in runs.iter().enumerate() {
+        let is_aaren = match sessions.get_mut(&run.id) {
+            Some(held) => held.session.as_native_aaren().is_some(),
+            None => {
+                run_err[ri] = Some(anyhow!("no session {}", run.id));
+                continue;
+            }
+        };
+        if is_aaren {
+            // pull it out of the map so every batched session can be
+            // borrowed mutably at once; reinserted below
+            batch_runs.push(ri);
+            batch_held.push(sessions.remove(&run.id).expect("session checked above"));
+        } else if let Some(held) = sessions.get_mut(&run.id) {
+            if let Err(e) = held.session.step_many(token_views[ri], &mut outs[ri]) {
+                run_err[ri] = Some(e);
+            }
+        }
+    }
+    if !batch_held.is_empty() {
+        let mut lanes: Vec<PendingLane<'_>> = Vec::with_capacity(batch_held.len());
+        for (k, held) in batch_held.iter_mut().enumerate() {
+            let aaren = held.session.as_native_aaren().expect("checked above");
+            lanes.push((aaren, token_views[batch_runs[k]]));
+        }
+        let mut lane_outs: Vec<Vec<f32>> = (0..batch_runs.len()).map(|_| Vec::new()).collect();
+        match step_many_batched(&mut lanes, scratch, &mut lane_outs) {
+            Ok(()) => {
+                drop(lanes);
+                for (k, out) in lane_outs.into_iter().enumerate() {
+                    outs[batch_runs[k]] = out;
+                }
+            }
+            Err(e) => {
+                // validation refused the batch before touching any state
+                // (cannot happen after the per-request checks above):
+                // fall back to advancing each session on its own
+                drop(lanes);
+                eprintln!("[serve] batched fold rejected ({e:#}); using per-session path");
+                for (k, held) in batch_held.iter_mut().enumerate() {
+                    let ri = batch_runs[k];
+                    if let Err(e2) = held.session.step_many(token_views[ri], &mut outs[ri]) {
+                        run_err[ri] = Some(e2);
+                    }
+                }
+            }
+        }
+        for (&ri, held) in batch_runs.iter().zip(batch_held.into_iter()) {
+            sessions.insert(runs[ri].id, held);
+        }
+    }
+
+    // build one reply per original request, in arrival order
+    for (ri, run) in runs.iter().enumerate() {
+        let d = run.d;
+        let (state_bytes, t_after) = match sessions.get(&run.id) {
+            Some(h) => (h.session.state_bytes(), h.session.tokens_seen()),
+            None => (0, 0),
+        };
+        // tokens of this run that actually executed: all of them on
+        // success; on a mid-block failure, the folded prefix (the stream
+        // HAS advanced by these, exactly as with individual `step`
+        // calls). Earlier requests whose tokens all lie in that prefix
+        // still get their success replies — sequential semantics — and
+        // the rest get the error, stamped with the stream's actual
+        // position so the client can resync instead of re-sending.
+        let ok_tokens: usize = if run_err[ri].is_some() {
+            if d == 0 {
+                0
+            } else {
+                outs[ri].len() / d
+            }
+        } else {
+            run.segments.iter().map(|&(_, n)| n).sum()
+        };
+        let mut off = 0usize;
+        for &(wi, n) in &run.segments {
+            let end = off + n;
+            if end > ok_tokens {
+                let e = run_err[ri].as_ref().expect("successful runs execute every token");
+                replies[wi] = Some(Err(anyhow!("{e:#} (stream at t={t_after})")));
+                off = end;
+                continue;
+            }
+            let t_seg = t_after.saturating_sub(ok_tokens - end);
+            let seg = &outs[ri][off * d..end * d];
+            off = end;
+            let num = |v: f32| Json::Num(v as f64);
+            let body = if work[wi].single {
+                obj(vec![
+                    ("y", Json::Arr(seg.iter().copied().map(num).collect())),
+                    ("state_bytes", Json::Num(state_bytes as f64)),
+                    ("t", Json::Num(t_seg as f64)),
+                ])
+            } else {
+                let ys: Vec<Json> = if d == 0 {
+                    (0..n).map(|_| Json::Arr(Vec::new())).collect()
+                } else {
+                    seg.chunks_exact(d)
+                        .map(|row| Json::Arr(row.iter().copied().map(num).collect()))
+                        .collect()
+                };
+                obj(vec![
+                    ("ys", Json::Arr(ys)),
+                    ("state_bytes", Json::Num(state_bytes as f64)),
+                    ("t", Json::Num(t_seg as f64)),
+                ])
+            };
+            replies[wi] = Some(Ok(Response::Value(body)));
+        }
+    }
+    for (p, r) in work.into_iter().zip(replies.into_iter()) {
+        let resp = r.unwrap_or_else(|| Err(anyhow!("internal: request missed its reply")));
+        let _ = p.reply.send(resp);
+    }
 }
 
 /// Server configuration; `Default` serves rust-native sessions on
@@ -147,6 +442,9 @@ pub struct ServeConfig {
     pub channels: usize,
     /// number of native executor shards (worker threads)
     pub shards: usize,
+    /// evict sessions idle longer than this (swept on executor drains);
+    /// `None` keeps sessions until an explicit `close`
+    pub session_ttl: Option<Duration>,
     /// artifacts dir enabling the compiled-HLO backend (`pjrt` builds
     /// only; ignored otherwise)
     pub artifacts: Option<std::path::PathBuf>,
@@ -158,6 +456,7 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:7878".to_string(),
             channels: 8,
             shards: std::thread::available_parallelism().map(|t| t.get().min(8)).unwrap_or(4),
+            session_ttl: None,
             artifacts: None,
         }
     }
@@ -187,9 +486,10 @@ impl Router {
         for s in 0..nshards {
             let (tx, rx) = mpsc::channel();
             let channels = cfg.channels;
+            let ttl = cfg.session_ttl;
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
-                .spawn(move || run_executor(NativeFactory { channels }, rx))?;
+                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl))?;
             shards.push(tx);
         }
         #[cfg(feature = "pjrt")]
@@ -197,9 +497,10 @@ impl Router {
             Some(dir) => {
                 let (tx, rx) = mpsc::channel();
                 let dir = dir.clone();
+                let ttl = cfg.session_ttl;
                 std::thread::Builder::new().name("serve-exec-hlo".to_string()).spawn(
                     move || match hlo_backend::HloFactory::new(&dir) {
-                        Ok(factory) => run_executor(factory, rx),
+                        Ok(factory) => run_executor(factory, rx, ttl),
                         // dropping rx makes every later hlo request fail
                         // with "executor thread gone" instead of hanging
                         Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
@@ -270,6 +571,12 @@ impl Router {
                 Response::Value(j) => Ok(j),
                 _ => bail!("unexpected reply to step"),
             },
+            WireOp::Steps { id, xs, n } => {
+                match call_on(self.route(id)?, Request::Steps { id, xs, n })? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to steps"),
+                }
+            }
             WireOp::Close { id } => match call_on(self.route(id)?, Request::Close { id })? {
                 Response::Value(j) => Ok(j),
                 _ => bail!("unexpected reply to close"),
@@ -306,6 +613,7 @@ impl Router {
 pub enum WireOp {
     Create { kind: String, backend: Backend },
     Step { id: u64, x: Vec<f32> },
+    Steps { id: u64, xs: Vec<f32>, n: usize },
     Close { id: u64 },
     Stats,
     Shutdown,
@@ -339,6 +647,37 @@ fn parse_request(line: &str) -> Result<WireOp> {
                 x.push(f);
             }
             Ok(WireOp::Step { id, x })
+        }
+        "steps" => {
+            // n tokens in one message, n outputs in one reply — the
+            // round-trip-amortizing batch form of `step`
+            let id = j.usize_field("id")? as u64;
+            let rows = j.get("xs").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing xs"))?;
+            let n = rows.len();
+            let mut xs = Vec::new();
+            let mut width: Option<usize> = None;
+            for (r, row) in rows.iter().enumerate() {
+                let arr = row.as_arr().ok_or_else(|| anyhow!("xs[{r}] is not an array"))?;
+                match width {
+                    None => width = Some(arr.len()),
+                    Some(w) => ensure!(
+                        arr.len() == w,
+                        "xs[{r}] has {} elements, xs[0] has {w}",
+                        arr.len()
+                    ),
+                }
+                for (i, v) in arr.iter().enumerate() {
+                    // same finiteness contract as `step`: reject rather
+                    // than poison the session's (m, u, w) state
+                    let f =
+                        v.as_f64().ok_or_else(|| anyhow!("xs[{r}][{i}] is not a number"))? as f32;
+                    if !f.is_finite() {
+                        bail!("xs[{r}][{i}] is not a finite f32");
+                    }
+                    xs.push(f);
+                }
+            }
+            Ok(WireOp::Steps { id, xs, n })
         }
         "close" => Ok(WireOp::Close { id: j.usize_field("id")? as u64 }),
         "stats" => Ok(WireOp::Stats),
@@ -429,9 +768,13 @@ impl Server {
 /// Serve forever on `cfg.addr` (e.g. "127.0.0.1:7878").
 pub fn serve(cfg: &ServeConfig) -> Result<()> {
     let server = Server::bind(cfg)?;
+    let ttl = match cfg.session_ttl {
+        Some(d) => format!("session ttl {}s", d.as_secs()),
+        None => "no session ttl".to_string(),
+    };
     println!(
-        "[serve] listening on {} ({} native executor shard(s); line-delimited JSON; \
-         ops: create/step/close/stats/shutdown)",
+        "[serve] listening on {} ({} native executor shard(s); {ttl}; line-delimited JSON; \
+         ops: create/step/steps/close/stats/shutdown)",
         server.local_addr()?,
         cfg.shards.max(1)
     );
@@ -502,6 +845,12 @@ pub fn run_smoke(base: &ServeConfig) -> Result<()> {
         aaren_bytes.windows(2).all(|w| w[0] == w[1]),
         "aaren state must be constant, got {aaren_bytes:?}"
     );
+    // batched steps: 4 tokens in one message continue the same stream
+    let r = client
+        .call(&format!(r#"{{"op":"steps","id":{aaren},"xs":[[{x}],[{x}],[{x}],[{x}]]}}"#))?;
+    let ys = r.get("ys").and_then(Json::as_arr).ok_or_else(|| anyhow!("steps reply missing ys"))?;
+    ensure!(ys.len() == 4, "expected 4 outputs from steps, got {}", ys.len());
+    ensure!(r.usize_field("t")? == 12, "steps must advance t to 12, got {}", r.usize_field("t")?);
     let stats = client.call(r#"{"op":"stats"}"#)?;
     ensure!(stats.usize_field("sessions")? == 2, "expected 2 live sessions");
     client.call(r#"{"op":"shutdown"}"#)?;
@@ -557,6 +906,169 @@ mod tests {
     use super::*;
 
     #[test]
+    fn parses_steps_requests() {
+        match parse_request(r#"{"op":"steps","id":7,"xs":[[1.0,2.0],[3.0,-4.0]]}"#).unwrap() {
+            WireOp::Steps { id, xs, n } => {
+                assert_eq!(id, 7);
+                assert_eq!(n, 2);
+                assert_eq!(xs, vec![1.0, 2.0, 3.0, -4.0]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // an empty block is a valid no-op request
+        match parse_request(r#"{"op":"steps","id":1,"xs":[]}"#).unwrap() {
+            WireOp::Steps { xs, n, .. } => {
+                assert_eq!(n, 0);
+                assert!(xs.is_empty());
+            }
+            _ => panic!("wrong variant"),
+        }
+        // ragged rows, non-numbers and non-finite-in-f32 values are rejected
+        assert!(parse_request(r#"{"op":"steps","id":1,"xs":[[1.0],[1.0,2.0]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"steps","id":1,"xs":[[1.0],["x"]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"steps","id":1,"xs":[[1e40]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"steps","id":1,"xs":3}"#).is_err());
+        assert!(parse_request(r#"{"op":"steps","id":1}"#).is_err());
+    }
+
+    /// Queue envelopes up front, then run the executor: the first `recv`
+    /// plus the `try_recv` drain serves them as ONE coalesced batch —
+    /// the deterministic way to exercise the batched path.
+    fn run_drained(requests: Vec<Request>, ttl: Option<Duration>) -> Vec<mpsc::Receiver<Reply>> {
+        let (tx, rx) = mpsc::channel();
+        let mut receivers = Vec::new();
+        for req in requests {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            receivers.push(rrx);
+        }
+        drop(tx);
+        run_executor(NativeFactory { channels: 2 }, rx, ttl);
+        receivers
+    }
+
+    fn value_reply(rrx: &mpsc::Receiver<Reply>) -> Json {
+        match rrx.recv().unwrap() {
+            Ok(Response::Value(j)) => j,
+            Ok(_) => panic!("non-value reply"),
+            Err(e) => panic!("error reply: {e:#}"),
+        }
+    }
+
+    fn ys_of(j: &Json) -> Vec<Vec<f64>> {
+        j.get("ys")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn coalesced_drain_matches_sequential_sessions_and_preserves_order() {
+        // two aaren sessions and a tf session advance inside ONE drain,
+        // interleaved step/steps for the same session, a close splitting
+        // the runs — replies must be what strictly sequential processing
+        // would produce.
+        let x1 = vec![0.5f32, -1.0];
+        let x2 = vec![2.0f32, 0.25];
+        let x3 = vec![-0.75f32, 1.5];
+        let requests = vec![
+            Request::Create { id: 1, kind: "aaren".into() },
+            Request::Create { id: 2, kind: "aaren".into() },
+            Request::Create { id: 3, kind: "tf".into() },
+            Request::Step { id: 1, x: x1.clone() },
+            Request::Steps { id: 2, xs: [x1.clone(), x2.clone()].concat(), n: 2 },
+            Request::Step { id: 1, x: x2.clone() },
+            Request::Steps { id: 3, xs: [x2.clone(), x3.clone()].concat(), n: 2 },
+            Request::Step { id: 99, x: x1.clone() }, // unknown session
+            Request::Close { id: 2 },
+            Request::Step { id: 2, x: x3.clone() }, // after close: must fail
+            Request::Steps { id: 1, xs: x3.clone(), n: 1 },
+            Request::Shutdown,
+        ];
+        let replies = run_drained(requests, None);
+
+        // reference: the same tokens through plain sessions
+        let mut ref1 = NativeAarenSession::new(2);
+        let mut ref2 = NativeAarenSession::new(2);
+        let mut ref3 = NativeTfSession::new(2);
+        let y1a = ref1.step(&x1).unwrap();
+        let y2 = [ref2.step(&x1).unwrap(), ref2.step(&x2).unwrap()];
+        let y1b = ref1.step(&x2).unwrap();
+        let y3 = [ref3.step(&x2).unwrap(), ref3.step(&x3).unwrap()];
+        let y1c = ref1.step(&x3).unwrap();
+
+        let as_f64 = |v: &[f32]| v.iter().map(|x| *x as f64).collect::<Vec<_>>();
+        for rrx in &replies[..3] {
+            value_reply(rrx).usize_field("id").unwrap();
+        }
+        let r = value_reply(&replies[3]);
+        let y = r.get("y").and_then(Json::as_arr).unwrap();
+        let got: Vec<f64> = y.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, as_f64(&y1a));
+        assert_eq!(r.usize_field("t").unwrap(), 1);
+
+        let r = value_reply(&replies[4]);
+        assert_eq!(ys_of(&r), vec![as_f64(&y2[0]), as_f64(&y2[1])]);
+        assert_eq!(r.usize_field("t").unwrap(), 2);
+
+        let r = value_reply(&replies[5]);
+        let y = r.get("y").and_then(Json::as_arr).unwrap();
+        let got: Vec<f64> = y.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, as_f64(&y1b));
+        assert_eq!(r.usize_field("t").unwrap(), 2);
+
+        let r = value_reply(&replies[6]);
+        assert_eq!(ys_of(&r), vec![as_f64(&y3[0]), as_f64(&y3[1])]);
+
+        assert!(replies[7].recv().unwrap().is_err(), "unknown session must error");
+        value_reply(&replies[8]); // close ok
+        assert!(replies[9].recv().unwrap().is_err(), "step after close must error");
+
+        let r = value_reply(&replies[10]);
+        assert_eq!(ys_of(&r), vec![as_f64(&y1c)]);
+        assert_eq!(r.usize_field("t").unwrap(), 3);
+
+        assert!(matches!(replies[11].recv().unwrap(), Ok(Response::ShuttingDown)));
+    }
+
+    #[test]
+    fn executor_sweeps_idle_sessions_after_ttl() {
+        // generous ttl-to-touch ratio (20x) so a CI scheduler stall
+        // cannot spuriously evict the live session
+        let ttl = Duration::from_millis(1000);
+        let (tx, rx) = mpsc::channel();
+        let exec = std::thread::spawn(move || {
+            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl))
+        });
+        let call = |req: Request| -> Reply {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx.recv().unwrap()
+        };
+        call(Request::Create { id: 1, kind: "aaren".into() }).unwrap();
+        // an active session survives: keep touching it within the ttl
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(50));
+            call(Request::Step { id: 1, x: vec![0.1, 0.2] }).unwrap();
+        }
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, .. } => assert_eq!(sessions, 1, "live session swept"),
+            _ => panic!("non-stats reply"),
+        }
+        // idle past the ttl: the next drain reaps it
+        std::thread::sleep(Duration::from_millis(2200));
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, .. } => assert_eq!(sessions, 0, "idle session kept"),
+            _ => panic!("non-stats reply"),
+        }
+        assert!(call(Request::Step { id: 1, x: vec![0.1, 0.2] }).is_err());
+        let _ = call(Request::Shutdown);
+        exec.join().unwrap();
+    }
+
+    #[test]
     fn parses_protocol_requests() {
         match parse_request(r#"{"op":"create","kind":"aaren"}"#).unwrap() {
             WireOp::Create { kind, backend } => {
@@ -594,7 +1106,13 @@ mod tests {
     }
 
     fn test_router(shards: usize) -> Router {
-        let cfg = ServeConfig { addr: String::new(), channels: 4, shards, artifacts: None };
+        let cfg = ServeConfig {
+            addr: String::new(),
+            channels: 4,
+            shards,
+            session_ttl: None,
+            artifacts: None,
+        };
         Router::start(&cfg).unwrap()
     }
 

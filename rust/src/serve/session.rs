@@ -23,14 +23,31 @@
 //! previous step — the hot loop never round-trips state through host
 //! Vec<f32>.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::attention;
-use crate::scan::{fold_token, Muw};
+use crate::scan::{fold_token, BatchScanBuffer, Muw};
 
 /// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
 /// Transformer baselines).
 pub const TF_BUCKETS: [usize; 5] = [32, 64, 128, 256, 512];
+
+/// Validate a flat token block against a session's channel width and
+/// return its token count — the ONE definition of the `step_many` block
+/// contract, shared by the trait default, the native fast path and the
+/// cross-session batcher so their validation can never diverge.
+fn check_token_block(d: usize, xs: &[f32]) -> Result<usize> {
+    if xs.is_empty() {
+        return Ok(0);
+    }
+    ensure!(d > 0, "zero-channel session cannot step a token block");
+    ensure!(
+        xs.len() % d == 0,
+        "token block of {} floats is not a multiple of {d} channels",
+        xs.len()
+    );
+    Ok(xs.len() / d)
+}
 
 /// Backend-agnostic streaming session: the contract the serve layer
 /// programs against. One token in, one prediction out, plus the two
@@ -47,6 +64,31 @@ pub trait StreamSession {
     fn state_bytes(&self) -> usize;
     /// Number of tokens folded in so far.
     fn tokens_seen(&self) -> usize;
+    /// Channel width of the tokens this session consumes.
+    fn channels(&self) -> usize;
+
+    /// Feed a flat (n, channels) token block in order, appending each
+    /// step's output to `out` (also (n, channels) flat) — the `steps`
+    /// wire op's entry point, amortizing one executor round-trip over n
+    /// tokens. The default loops [`step`](Self::step); implementations
+    /// may batch.
+    fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let d = self.channels();
+        if check_token_block(d, xs)? == 0 {
+            return Ok(());
+        }
+        for x in xs.chunks_exact(d) {
+            out.extend(self.step(x)?);
+        }
+        Ok(())
+    }
+
+    /// Downcast hook for the executor's cross-session batcher
+    /// ([`step_many_batched`]): native Aaren sessions opt in, everything
+    /// else stays on the per-session [`step_many`](Self::step_many) path.
+    fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
+        None
+    }
 }
 
 /// Rust-native Aaren streaming session: the O(1)-state fallback. Holds a
@@ -92,16 +134,39 @@ impl NativeAarenSession {
         (2 + self.acc.w.len()) * std::mem::size_of::<f32>()
     }
 
+    /// The attention score of token `x` against this session's query.
+    #[inline]
+    fn score(&self, x: &[f32]) -> f32 {
+        self.q.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f32>() * self.scale
+    }
+
     /// Feed one token (used as both key and value); returns the prefix
     /// attention output so far. O(1) work and memory per step.
     pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         if x.len() != self.q.len() {
             bail!("token has {} channels, session expects {}", x.len(), self.q.len());
         }
-        let s = self.q.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f32>() * self.scale;
-        fold_token(&mut self.acc, s, x);
+        fold_token(&mut self.acc, self.score(x), x);
         self.t += 1;
         Ok(self.acc.output())
+    }
+
+    /// Feed a flat (n, channels) token block; outputs are appended to
+    /// `out` with one reservation — no per-step `Vec` on the hot path.
+    pub fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let d = self.q.len();
+        if check_token_block(d, xs)? == 0 {
+            return Ok(());
+        }
+        out.reserve(xs.len());
+        for x in xs.chunks_exact(d) {
+            fold_token(&mut self.acc, self.score(x), x);
+            self.t += 1;
+            let start = out.len();
+            out.resize(start + d, 0.0);
+            self.acc.output_into(&mut out[start..]);
+        }
+        Ok(())
     }
 }
 
@@ -117,6 +182,88 @@ impl StreamSession for NativeAarenSession {
     fn tokens_seen(&self) -> usize {
         NativeAarenSession::tokens_seen(self)
     }
+
+    fn channels(&self) -> usize {
+        NativeAarenSession::channels(self)
+    }
+
+    fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        NativeAarenSession::step_many(self, xs, out)
+    }
+
+    fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
+        Some(self)
+    }
+}
+
+/// One batched drain unit: a native Aaren session plus its pending flat
+/// (n, channels) token block.
+pub type PendingLane<'a> = (&'a mut NativeAarenSession, &'a [f32]);
+
+/// Advance several native Aaren sessions through their pending token
+/// blocks as lane-parallel rounds over one shared [`BatchScanBuffer`]
+/// (the serve executor's per-drain coalescing engine): the sessions'
+/// accumulators are gathered into B adjacent lanes of `scratch`, round r
+/// folds token r of every lane that still has one — one linear walk over
+/// the flat (B, d) row block per round, straight from the request
+/// slices, no token copies — and the advanced states are scattered back.
+/// Outputs for lane b are appended to `outs[b]` as a flat
+/// (n_b, channels) block.
+///
+/// Bitwise identical to calling [`NativeAarenSession::step_many`] on
+/// each session in turn: batching amortizes memory traffic and the
+/// executor round-trip, it never changes numerics.
+pub fn step_many_batched(
+    lanes: &mut [PendingLane<'_>],
+    scratch: &mut BatchScanBuffer,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    assert_eq!(lanes.len(), outs.len(), "one output sink per lane");
+    if lanes.is_empty() {
+        return Ok(());
+    }
+    let nb = lanes.len();
+    let d = lanes[0].0.channels();
+    let mut counts = Vec::with_capacity(nb);
+    for (s, xs) in lanes.iter() {
+        ensure!(s.channels() == d, "mixed channel widths in one batch");
+        counts.push(check_token_block(d, xs)?);
+    }
+
+    // gather: one accumulator lane per session in the reused scratch
+    scratch.reset(nb, d);
+    scratch.push_identity_row();
+    for (b, (s, _)) in lanes.iter().enumerate() {
+        scratch.set_row(0, b, s.acc.m, s.acc.u, &s.acc.w);
+    }
+
+    let max_n = counts.iter().copied().max().unwrap_or(0);
+    for r in 0..max_n {
+        // round r: one walk over the adjacent accumulator lanes, folding
+        // straight from each request's token slice (lanes whose block is
+        // exhausted are skipped)
+        for (b, (s, xs)) in lanes.iter().enumerate() {
+            if counts[b] <= r {
+                continue;
+            }
+            let x = &xs[r * d..(r + 1) * d];
+            scratch.fold_lane(b, s.score(x), x);
+            let out = &mut outs[b];
+            let start = out.len();
+            out.resize(start + d, 0.0);
+            scratch.lane_output_into(0, b, &mut out[start..]);
+        }
+    }
+
+    // scatter the advanced accumulators back into their sessions
+    for (b, (s, _)) in lanes.iter_mut().enumerate() {
+        let (m, u, w) = scratch.row(0, b);
+        s.acc.m = m;
+        s.acc.u = u;
+        s.acc.w.copy_from_slice(w);
+        s.t += counts[b];
+    }
+    Ok(())
 }
 
 /// Rust-native Transformer-with-KV-cache baseline: caches every (k, v)
@@ -204,6 +351,10 @@ impl StreamSession for NativeTfSession {
 
     fn tokens_seen(&self) -> usize {
         NativeTfSession::tokens_seen(self)
+    }
+
+    fn channels(&self) -> usize {
+        NativeTfSession::channels(self)
     }
 }
 
@@ -459,6 +610,10 @@ mod hlo {
         fn tokens_seen(&self) -> usize {
             self.inner.tokens_seen() as usize
         }
+
+        fn channels(&self) -> usize {
+            self.model.channels
+        }
     }
 
     /// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
@@ -579,6 +734,102 @@ mod tests {
     fn native_sessions_reject_wrong_channel_count() {
         assert!(NativeAarenSession::new(3).step(&[1.0]).is_err());
         assert!(NativeTfSession::new(3).step(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn step_many_matches_individual_steps() {
+        // both the aaren fast path and the tf trait-default loop must be
+        // indistinguishable from stepping token by token
+        prop::check("step_many == step loop", 24, |rng| {
+            let (n, d) = (1 + rng.below(20), 1 + rng.below(6));
+            let xs: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let sessions: [fn(usize) -> Box<dyn StreamSession>; 2] = [
+                |d| Box::new(NativeAarenSession::new(d)),
+                |d| Box::new(NativeTfSession::new(d)),
+            ];
+            for make in sessions {
+                let mut one = make(d);
+                let mut many = make(d);
+                let mut want = Vec::new();
+                for x in xs.chunks_exact(d) {
+                    want.extend(one.step(x).map_err(|e| e.to_string())?);
+                }
+                let mut got = Vec::new();
+                many.step_many(&xs, &mut got).map_err(|e| e.to_string())?;
+                prop::assert_close(&got, &want, 0.0)?;
+                if many.tokens_seen() != n || many.state_bytes() != one.state_bytes() {
+                    return Err("t / state_bytes diverged".to_string());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn step_many_rejects_ragged_blocks() {
+        let mut s = NativeAarenSession::new(3);
+        let mut out = Vec::new();
+        assert!(s.step_many(&[1.0, 2.0], &mut out).is_err());
+        assert_eq!(s.tokens_seen(), 0, "a rejected block must not advance the stream");
+        assert!(s.step_many(&[], &mut out).is_ok());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn step_many_batched_is_bitwise_equal_to_sequential_step_many() {
+        // the executor's coalescing engine: random lane counts, random
+        // (possibly zero, possibly ragged-across-lanes) token counts
+        prop::check("batched drain == per-session step_many", 24, |rng| {
+            let nb = 1 + rng.below(6);
+            let d = 1 + rng.below(8);
+            let blocks: Vec<Vec<f32>> = (0..nb)
+                .map(|_| {
+                    let n = rng.below(9);
+                    (0..n * d).map(|_| rng.gaussian() as f32).collect()
+                })
+                .collect();
+            let mut batched: Vec<NativeAarenSession> =
+                (0..nb).map(|_| NativeAarenSession::new(d)).collect();
+            let mut sequential: Vec<NativeAarenSession> =
+                (0..nb).map(|_| NativeAarenSession::new(d)).collect();
+            // pre-warm both sides identically so the gather starts from a
+            // non-identity state
+            for (a, b) in batched.iter_mut().zip(sequential.iter_mut()) {
+                let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                a.step(&x).map_err(|e| e.to_string())?;
+                b.step(&x).map_err(|e| e.to_string())?;
+            }
+            let mut lanes: Vec<PendingLane<'_>> = batched
+                .iter_mut()
+                .zip(blocks.iter())
+                .map(|(s, xs)| (s, xs.as_slice()))
+                .collect();
+            let mut scratch = BatchScanBuffer::new(0, 0);
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); nb];
+            step_many_batched(&mut lanes, &mut scratch, &mut outs)
+                .map_err(|e| e.to_string())?;
+            for b in 0..nb {
+                let mut want = Vec::new();
+                sequential[b]
+                    .step_many(&blocks[b], &mut want)
+                    .map_err(|e| e.to_string())?;
+                prop::assert_close(&outs[b], &want, 0.0)
+                    .map_err(|e| format!("lane {b}: {e}"))?;
+                if batched[b].tokens_seen() != sequential[b].tokens_seen() {
+                    return Err(format!("lane {b}: t diverged"));
+                }
+                let (ba, sa) = (&batched[b].acc, &sequential[b].acc);
+                if ba.m.to_bits() != sa.m.to_bits() || ba.u.to_bits() != sa.u.to_bits() {
+                    return Err(format!("lane {b}: accumulator m/u diverged"));
+                }
+                for (x, y) in ba.w.iter().zip(sa.w.iter()) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("lane {b}: accumulator w diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -202,6 +202,7 @@ fn session_manager_protocol_end_to_end() {
         addr: "127.0.0.1:0".to_string(),
         channels: 8,
         shards: 1,
+        session_ttl: None,
         artifacts: Some(dir),
     };
     let server = Server::bind(&cfg).unwrap();

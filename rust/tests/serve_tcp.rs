@@ -10,17 +10,26 @@ use aaren::util::json::Json;
 
 type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
 
-fn start(channels: usize, shards: usize) -> (std::net::SocketAddr, ServerHandle) {
+fn start_with_ttl(
+    channels: usize,
+    shards: usize,
+    session_ttl: Option<std::time::Duration>,
+) -> (std::net::SocketAddr, ServerHandle) {
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         channels,
         shards,
+        session_ttl,
         artifacts: None,
     };
     let server = Server::bind(&cfg).expect("bind loopback");
     let addr = server.local_addr().expect("local addr");
     let handle = std::thread::spawn(move || server.run());
     (addr, handle)
+}
+
+fn start(channels: usize, shards: usize) -> (std::net::SocketAddr, ServerHandle) {
+    start_with_ttl(channels, shards, None)
 }
 
 fn step_line(id: usize, x: &[f32]) -> String {
@@ -99,6 +108,116 @@ fn stats_aggregate_across_shards_and_close_frees_sessions() {
     let r = other.call(&step_line(ids[3], &[0.0, 0.0, 0.0, 0.0])).unwrap();
     assert_eq!(r.usize_field("t").unwrap(), 1);
     other.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+fn steps_line(id: usize, tokens: &[&[f32]]) -> String {
+    let rows: Vec<String> = tokens
+        .iter()
+        .map(|x| {
+            let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", xs.join(","))
+        })
+        .collect();
+    format!(r#"{{"op":"steps","id":{id},"xs":[{}]}}"#, rows.join(","))
+}
+
+#[test]
+fn steps_block_matches_individual_step_calls() {
+    // satellite property: a `steps` block over TCP is indistinguishable
+    // from the same tokens sent as N individual `step` calls — outputs,
+    // t and state_bytes all line up, for both session kinds.
+    let (addr, server) = start(3, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let tokens: Vec<Vec<f32>> = (0..12)
+        .map(|i| vec![0.25 * i as f32 - 1.0, (i % 3) as f32, -0.5 * i as f32])
+        .collect();
+    for kind in ["aaren", "tf"] {
+        let one = client
+            .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        let block = client
+            .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        let mut want = Vec::new();
+        let mut want_bytes = 0;
+        for x in &tokens {
+            let r = client.call(&step_line(one, x)).unwrap();
+            let y: Vec<f64> = r
+                .get("y")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect();
+            want.push(y);
+            want_bytes = r.usize_field("state_bytes").unwrap();
+        }
+        let refs: Vec<&[f32]> = tokens.iter().map(|x| x.as_slice()).collect();
+        let r = client.call(&steps_line(block, &refs)).unwrap();
+        let got: Vec<Vec<f64>> = r
+            .get("ys")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+            .collect();
+        assert_eq!(got, want, "kind {kind}: batched outputs diverge from per-step outputs");
+        assert_eq!(r.usize_field("t").unwrap(), tokens.len(), "kind {kind}");
+        assert_eq!(r.usize_field("state_bytes").unwrap(), want_bytes, "kind {kind}");
+    }
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn steps_errors_are_replies_and_empty_blocks_are_noops() {
+    let (addr, server) = start(2, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    // wrong width: error reply, session unharmed
+    let r = client.call_raw(&steps_line(id, &[&[1.0, 2.0][..], &[3.0][..]])).unwrap();
+    assert!(r.get("error").is_some(), "ragged rows must be rejected");
+    let r = client.call_raw(&steps_line(id, &[&[1.0][..], &[2.0][..]])).unwrap();
+    assert!(r.get("error").is_some(), "width-1 rows on a 2-channel session must be rejected");
+    // an empty block is a no-op that still gets a well-formed reply
+    let r = client.call(&steps_line(id, &[])).unwrap();
+    assert_eq!(r.get("ys").and_then(Json::as_arr).unwrap().len(), 0);
+    assert_eq!(r.usize_field("t").unwrap(), 0);
+    // the session still works afterwards
+    let r = client.call(&step_line(id, &[0.5, -0.5])).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 1);
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn idle_sessions_are_evicted_after_the_ttl() {
+    // ROADMAP PR-2 follow-up: a client that disconnects without `close`
+    // must not leak its sessions forever once a TTL is configured.
+    let ttl = std::time::Duration::from_millis(500);
+    let (addr, server) = start_with_ttl(2, 2, Some(ttl));
+    {
+        let mut doomed = Client::connect(&addr).unwrap();
+        doomed.call(r#"{"op":"create","kind":"aaren"}"#).unwrap();
+        doomed.call(r#"{"op":"create","kind":"tf"}"#).unwrap();
+        let stats = doomed.call(r#"{"op":"stats"}"#).unwrap();
+        assert_eq!(stats.usize_field("sessions").unwrap(), 2);
+        // client drops without close
+    }
+    std::thread::sleep(ttl + std::time::Duration::from_millis(600));
+    let mut client = Client::connect(&addr).unwrap();
+    // the stats fan-out drains every shard, triggering the sweep; the
+    // first reply may still count pre-sweep sessions, so read twice
+    client.call(r#"{"op":"stats"}"#).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 0, "idle sessions must be swept");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
 }
 
