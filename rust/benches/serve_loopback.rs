@@ -9,8 +9,11 @@
 //! single-client per-step baseline) so the serving perf trajectory is
 //! tracked across PRs alongside `BENCH_scan.json`. The acceptance bar
 //! for the batched path is `batched_steps_b16 ≥ 3×` the per-step
-//! baseline. Pass `--quick` (CI) for a shorter run; AAREN_TOKENS /
-//! AAREN_CLIENTS override the workload size.
+//! baseline. Also records the mixed aaren/tf coalescing scenario
+//! (`mixed_kinds_steps_b16_*`) and the persistence tier's
+//! snapshot→restore→close wire round-trip latency
+//! (`snapshot_restore_roundtrip`). Pass `--quick` (CI) for a shorter
+//! run; AAREN_TOKENS / AAREN_CLIENTS override the workload size.
 
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -18,13 +21,19 @@ use std::time::Instant;
 use aaren::serve::server::{Client, ServeConfig, Server};
 use aaren::util::bench::{write_records, BenchRecord};
 
-/// Stream `tokens` tokens through one fresh aaren session and return
+/// Stream `tokens` tokens through one fresh session of `kind` and return
 /// tokens/sec. `batch <= 1` uses one `step` request per token; larger
 /// batches send `steps` blocks of up to `batch` tokens per round-trip.
-fn stream_one(addr: &SocketAddr, step_body: &str, tokens: usize, batch: usize) -> f64 {
+fn stream_one_kind(
+    addr: &SocketAddr,
+    kind: &str,
+    step_body: &str,
+    tokens: usize,
+    batch: usize,
+) -> f64 {
     let mut client = Client::connect(addr).expect("connect");
     let id = client
-        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
         .expect("create")
         .usize_field("id")
         .expect("id");
@@ -57,9 +66,16 @@ fn stream_one(addr: &SocketAddr, step_body: &str, tokens: usize, batch: usize) -
     rate
 }
 
-/// `clients` concurrent `stream_one`s; returns aggregate tokens/sec.
-fn stream_many(
+fn stream_one(addr: &SocketAddr, step_body: &str, tokens: usize, batch: usize) -> f64 {
+    stream_one_kind(addr, "aaren", step_body, tokens, batch)
+}
+
+/// `clients` concurrent streams; returns aggregate tokens/sec. `kinds`
+/// is cycled across the clients (the mixed aaren/tf coalescing scenario
+/// drives both session families through one executor drain).
+fn stream_many_kinds(
     addr: &SocketAddr,
+    kinds: &[&str],
     step_body: &str,
     tokens: usize,
     batch: usize,
@@ -67,16 +83,57 @@ fn stream_many(
 ) -> f64 {
     let t0 = Instant::now();
     let handles: Vec<_> = (0..clients)
-        .map(|_| {
+        .map(|c| {
             let body = step_body.to_string();
+            let kind = kinds[c % kinds.len()].to_string();
             let addr = *addr;
-            std::thread::spawn(move || stream_one(&addr, &body, tokens, batch))
+            std::thread::spawn(move || stream_one_kind(&addr, &kind, &body, tokens, batch))
         })
         .collect();
     for h in handles {
         h.join().expect("client thread");
     }
     (clients * tokens) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn stream_many(
+    addr: &SocketAddr,
+    step_body: &str,
+    tokens: usize,
+    batch: usize,
+    clients: usize,
+) -> f64 {
+    stream_many_kinds(addr, &["aaren"], step_body, tokens, batch, clients)
+}
+
+/// One snapshot → restore → close round-trip over the wire: the
+/// spill/restore latency record. Returns round-trips/sec.
+fn snapshot_restore_roundtrips(addr: &SocketAddr, step_body: &str, iters: usize) -> f64 {
+    let mut client = Client::connect(addr).expect("connect");
+    let id = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .expect("create")
+        .usize_field("id")
+        .expect("id");
+    // a warm stream so the blob captures non-trivial state
+    for _ in 0..8 {
+        client.call(&format!(r#"{{"op":"step","id":{id},"x":[{step_body}]}}"#)).expect("step");
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let snap = client
+            .call(&format!(r#"{{"op":"snapshot","id":{id}}}"#))
+            .expect("snapshot");
+        let blob = snap.str_field("state").expect("state");
+        let restored = client
+            .call(&format!(r#"{{"op":"restore","state":"{blob}"}}"#))
+            .expect("restore");
+        let twin = restored.usize_field("id").expect("restored id");
+        client.call(&format!(r#"{{"op":"close","id":{twin}}}"#)).expect("close");
+    }
+    let rate = iters as f64 / t0.elapsed().as_secs_f64();
+    let _ = client.call(&format!(r#"{{"op":"close","id":{id}}}"#));
+    rate
 }
 
 fn main() {
@@ -98,6 +155,8 @@ fn main() {
         channels,
         shards: clients,
         session_ttl: None,
+        spill_dir: None,
+        max_resident_sessions: None,
         artifacts: None,
     };
     let server = Server::bind(&cfg).expect("bind");
@@ -152,6 +211,32 @@ fn main() {
         rate,
         base_rate,
     );
+
+    // phase 5: mixed aaren/tf clients — the coalescing engine splits the
+    // drain into the batched aaren lane fold and per-session tf paths,
+    // so this tracks the mixed-kind drain overhead (ROADMAP follow-up)
+    let rate = stream_many_kinds(&addr, &["aaren", "tf"], &step_body, tokens, BATCH, clients);
+    println!(
+        "serve_loopback: mixed a/tf b={BATCH} {clients} clients  {rate:>12.0} tokens/s aggregate"
+    );
+    record(
+        &mut records,
+        &format!("mixed_kinds_steps_b16_{clients}clients"),
+        clients * tokens,
+        rate,
+        base_rate,
+    );
+
+    // phase 6: snapshot → restore → close wire round-trips — the
+    // spill/restore latency trail for the persistence tier
+    let iters = if quick { 50 } else { 300 };
+    let rate = snapshot_restore_roundtrips(&addr, &step_body, iters);
+    println!(
+        "serve_loopback: snapshot+restore            {rate:>12.0} round-trips/s \
+         ({:.1} us/round-trip)",
+        1e6 / rate
+    );
+    record(&mut records, "snapshot_restore_roundtrip", iters, rate, 0.0);
 
     let mut shutdown = Client::connect(&addr).expect("connect");
     let _ = shutdown.call(r#"{"op":"shutdown"}"#);

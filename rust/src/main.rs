@@ -9,7 +9,12 @@
 //!   serve   --addr host:port   streaming inference server (line-JSON protocol)
 //!           --channels N --shards N  native session width / executor pool size
 //!           --session-ttl-secs N     evict sessions idle longer than N seconds
+//!           --spill-dir DIR          spill evicted sessions to disk instead of dropping
+//!           --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)
 //!           --smoke            loopback create/step/steps/stats round-trip, then exit
+//!   state   export --addr H:P --id N --out FILE   snapshot a live session to a file
+//!           import --addr H:P --file FILE         restore a snapshot as a new session
+//!           inspect --file FILE                   decode a snapshot offline
 //!   bench   fig5 [+ table1..table4|params|all with pjrt]
 //!   check                      verify artifacts load + run (pjrt)
 //!   train   --domain …         train one model/dataset cell (pjrt)
@@ -47,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "serve" => serve_cmd(args),
+        "state" => state_cmd(args),
         "bench" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             bench_cmd(which, args)
@@ -78,18 +84,99 @@ fn serve_cmd(args: &Args) -> Result<()> {
         None
     };
     let ttl_secs = args.u64("session-ttl-secs", 0);
+    let max_resident = args.usize("max-resident-sessions", 0);
     let cfg = ServeConfig {
         addr: args.str("addr", &defaults.addr),
         channels: args.usize("channels", defaults.channels),
         shards: args.usize("shards", defaults.shards),
         // 0 (the default) keeps sessions until an explicit close
         session_ttl: (ttl_secs > 0).then(|| std::time::Duration::from_secs(ttl_secs)),
+        spill_dir: args.flags.get("spill-dir").map(PathBuf::from),
+        // 0 (the default) leaves resident count unbounded
+        max_resident_sessions: (max_resident > 0).then_some(max_resident),
         artifacts,
     };
+    if cfg.max_resident_sessions.is_some() && cfg.spill_dir.is_none() {
+        anyhow::bail!(
+            "--max-resident-sessions needs --spill-dir (spilled sessions must go somewhere)"
+        );
+    }
     if args.bool("smoke") {
         return server::run_smoke(&cfg);
     }
     server::serve(&cfg)
+}
+
+/// `aaren state export|import|inspect` — offline snapshot handling over
+/// the `snapshot`/`restore` wire ops and the `persist::codec` framing.
+fn state_cmd(args: &Args) -> Result<()> {
+    use aaren::persist::codec;
+    use aaren::serve::server::Client;
+    use aaren::util::b64;
+
+    let action = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match action {
+        "export" => {
+            let id = args.usize("id", 0);
+            anyhow::ensure!(id > 0, "state export needs --id N (a live session id)");
+            let addr: std::net::SocketAddr =
+                args.str("addr", "127.0.0.1:7878").parse()?;
+            let mut client = Client::connect(&addr)?;
+            let reply = client.call(&format!(r#"{{"op":"snapshot","id":{id}}}"#))?;
+            let blob = b64::decode(reply.str_field("state")?)?;
+            let out = args.str("out", &format!("aaren-session-{id}.snap"));
+            std::fs::write(&out, &blob)?;
+            println!(
+                "exported session {id} ({} at t={}, {} channels, {} bytes) -> {out}",
+                reply.str_field("kind")?,
+                reply.usize_field("t")?,
+                reply.usize_field("channels")?,
+                blob.len()
+            );
+            Ok(())
+        }
+        "import" => {
+            let file = args.str("file", "");
+            anyhow::ensure!(!file.is_empty(), "state import needs --file SNAPSHOT");
+            let blob = std::fs::read(&file)?;
+            // validate locally first: a corrupt file should fail here,
+            // not as a confusing server-side reply
+            codec::meta(&blob)?;
+            let addr: std::net::SocketAddr =
+                args.str("addr", "127.0.0.1:7878").parse()?;
+            let mut client = Client::connect(&addr)?;
+            let line = format!(r#"{{"op":"restore","state":"{}"}}"#, b64::encode(&blob));
+            let reply = client.call(&line)?;
+            println!(
+                "imported {file} as session {} ({} at t={}, {} channels)",
+                reply.usize_field("id")?,
+                reply.str_field("kind")?,
+                reply.usize_field("t")?,
+                reply.usize_field("channels")?
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let file = args.str("file", "");
+            anyhow::ensure!(!file.is_empty(), "state inspect needs --file SNAPSHOT");
+            let blob = std::fs::read(&file)?;
+            let meta = codec::meta(&blob)?;
+            println!(
+                "{file}: {} session snapshot, codec v{}, {} channels, t={}, {} state floats, \
+                 {} bytes, crc ok",
+                meta.backend.kind(),
+                codec::VERSION,
+                meta.channels,
+                meta.tokens_seen,
+                meta.state_len,
+                blob.len()
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown state action {other:?} (export|import|inspect); run `aaren help`"
+        ),
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -130,10 +217,14 @@ fn help() {
          --channels N   native session width (default 8)\n                        \
          --shards N     native executor pool size (default: cores, max 8)\n                        \
          --session-ttl-secs N  evict sessions idle > N seconds (default: never)\n                        \
+         --spill-dir DIR       spill evicted sessions to disk, restore on touch\n                        \
+         --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)\n                        \
          --smoke        loopback self-test, then exit\n                        \
-         ops: create/step/steps/close/stats/shutdown — steps batches\n                        \
-         {{\"op\":\"steps\",\"id\":I,\"xs\":[[...];n]}} into one round-trip\n                        \
+         ops: create/step/steps/snapshot/restore/close/stats/shutdown\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \
+         state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
+         state import --addr H:P --file F           restore a snapshot as a new session\n  \
+         state inspect --file F                     decode a snapshot offline\n  \
          bench fig5            streaming memory/time shape (rust-native sessions)\n\n\
          commands needing --features pjrt + compiled artifacts:\n  \
          check                 smoke-run every artifact family\n  \

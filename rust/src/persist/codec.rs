@@ -1,0 +1,296 @@
+//! Versioned binary codec for [`crate::serve::StreamSession`] state.
+//!
+//! The paper's constant-memory claim makes a live session a small flat
+//! blob; this codec is the ONE wire/disk framing for that blob, shared by
+//! the executor spill tier, the `snapshot`/`restore` wire ops and the
+//! `aaren state` CLI. Layout (all integers little-endian):
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic  "AAS1"
+//!   4       2     version (u16)            — currently 1
+//!   6       1     backend tag (u8)         — 0 = aaren, 1 = tf
+//!   7       1     reserved (must be 0)
+//!   8       4     channels (u32)
+//!   12      8     tokens_seen (u64)
+//!   20      4     state length (u32)       — COUNT of f32s, not bytes
+//!   24      4·n   state payload            — raw little-endian f32 bits
+//!   24+4·n  4     crc32 (IEEE) of bytes [0, 24+4·n)
+//! ```
+//!
+//! The payload is raw f32 **bit patterns** — encode → decode is bitwise
+//! exact (NaNs, −0.0 and subnormals included), which is what makes a
+//! restored session resume with outputs bitwise identical to a
+//! never-snapshotted twin.
+//!
+//! # Version policy
+//!
+//! `VERSION` is bumped on ANY layout change; decoders reject unknown
+//! versions (and unknown backend tags) outright rather than guessing —
+//! migration across versions is an explicit offline conversion, never a
+//! silent reinterpretation. The magic makes a truncated/foreign file fail
+//! fast; the trailing CRC catches payload corruption that the header
+//! checks cannot.
+
+use anyhow::{bail, ensure, Result};
+
+/// File/wire magic: Attention-As-an-rnn Session state, layout family 1.
+pub const MAGIC: [u8; 4] = *b"AAS1";
+
+/// Current codec version; bumped on any layout change.
+pub const VERSION: u16 = 1;
+
+/// Fixed header length in bytes (everything before the payload).
+pub const HEADER_LEN: usize = 24;
+
+/// Which session family a snapshot captures. The tag is part of the wire
+/// format — variants must keep their discriminants forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendTag {
+    /// `NativeAarenSession`: q, then the (m, u, w) accumulator.
+    Aaren = 0,
+    /// `NativeTfSession`: the live k rows then the live v rows.
+    Tf = 1,
+}
+
+impl BackendTag {
+    pub fn from_u8(tag: u8) -> Result<BackendTag> {
+        match tag {
+            0 => Ok(BackendTag::Aaren),
+            1 => Ok(BackendTag::Tf),
+            other => bail!("unknown session backend tag {other}"),
+        }
+    }
+
+    /// The wire `kind` string this tag corresponds to.
+    pub fn kind(self) -> &'static str {
+        match self {
+            BackendTag::Aaren => "aaren",
+            BackendTag::Tf => "tf",
+        }
+    }
+}
+
+/// A decoded session snapshot: the session-family tag, its shape
+/// metadata and the flat f32 state the owning session type knows how to
+/// reinterpret (`export_state` / `import_state`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub backend: BackendTag,
+    pub channels: usize,
+    pub tokens_seen: u64,
+    pub state: Vec<f32>,
+}
+
+/// Snapshot metadata without the payload — what `snapshot` replies and
+/// `aaren state inspect` print, decodable from the header alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Meta {
+    pub backend: BackendTag,
+    pub channels: usize,
+    pub tokens_seen: u64,
+    /// payload length in f32 elements
+    pub state_len: usize,
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/xorout 0xFFFFFFFF) — the classic
+/// zlib polynomial, computed bitwise (blobs are small; no table needed).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Encode a snapshot into the versioned length-prefixed framing above.
+pub fn encode(snap: &Snapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + snap.state.len() * 4 + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(snap.backend as u8);
+    out.push(0); // reserved
+    out.extend_from_slice(&(snap.channels as u32).to_le_bytes());
+    out.extend_from_slice(&snap.tokens_seen.to_le_bytes());
+    out.extend_from_slice(&(snap.state.len() as u32).to_le_bytes());
+    for &x in &snap.state {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Validate the header + CRC and return the metadata. Rejects truncated
+/// blobs, foreign magic, unknown versions/tags, length mismatches and
+/// payload corruption — everything `decode` would reject, without
+/// materializing the payload.
+pub fn meta(blob: &[u8]) -> Result<Meta> {
+    ensure!(
+        blob.len() >= HEADER_LEN + 4,
+        "snapshot blob of {} bytes is shorter than the {}-byte header + crc",
+        blob.len(),
+        HEADER_LEN
+    );
+    ensure!(blob[0..4] == MAGIC, "bad snapshot magic (not an aaren session blob)");
+    let version = u16::from_le_bytes([blob[4], blob[5]]);
+    ensure!(
+        version == VERSION,
+        "unsupported snapshot version {version} (this build reads version {VERSION})"
+    );
+    let backend = BackendTag::from_u8(blob[6])?;
+    ensure!(blob[7] == 0, "nonzero reserved byte in snapshot header");
+    let channels = le_u32(&blob[8..12]) as usize;
+    let tokens_seen = u64::from_le_bytes(blob[12..20].try_into().expect("length checked"));
+    let state_len = le_u32(&blob[20..24]) as usize;
+    let want = HEADER_LEN + state_len * 4 + 4;
+    ensure!(
+        blob.len() == want,
+        "snapshot blob is {} bytes, header promises {want}",
+        blob.len()
+    );
+    let crc_stored = le_u32(&blob[blob.len() - 4..]);
+    let crc_actual = crc32(&blob[..blob.len() - 4]);
+    ensure!(
+        crc_stored == crc_actual,
+        "snapshot crc mismatch (stored {crc_stored:08x}, computed {crc_actual:08x}) — blob is corrupt"
+    );
+    Ok(Meta { backend, channels, tokens_seen, state_len })
+}
+
+/// Decode a blob produced by [`encode`]. Bitwise inverse of `encode`:
+/// the returned f32s carry exactly the bit patterns that were encoded.
+pub fn decode(blob: &[u8]) -> Result<Snapshot> {
+    let meta = meta(blob)?;
+    let mut state = Vec::with_capacity(meta.state_len);
+    for chunk in blob[HEADER_LEN..HEADER_LEN + meta.state_len * 4].chunks_exact(4) {
+        state.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(Snapshot {
+        backend: meta.backend,
+        channels: meta.channels,
+        tokens_seen: meta.tokens_seen,
+        state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_snapshot(rng: &mut Rng) -> Snapshot {
+        let channels = rng.below(16);
+        let state_len = rng.below(64);
+        Snapshot {
+            backend: if rng.below(2) == 0 { BackendTag::Aaren } else { BackendTag::Tf },
+            channels,
+            tokens_seen: rng.below(1 << 40) as u64,
+            // arbitrary BIT PATTERNS, not arbitrary values: NaNs, infs,
+            // -0.0 and subnormals must all survive the round-trip
+            state: (0..state_len).map(|_| f32::from_bits(rng.below(1 << 32) as u32)).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_bit() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let snap = random_snapshot(&mut rng);
+            let blob = encode(&snap);
+            let back = decode(&blob).unwrap();
+            assert_eq!(back.backend, snap.backend);
+            assert_eq!(back.channels, snap.channels);
+            assert_eq!(back.tokens_seen, snap.tokens_seen);
+            assert_eq!(back.state.len(), snap.state.len());
+            for (a, b) in back.state.iter().zip(snap.state.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "f32 bit pattern changed in roundtrip");
+            }
+        }
+    }
+
+    #[test]
+    fn meta_matches_decode() {
+        let mut rng = Rng::new(8);
+        let snap = random_snapshot(&mut rng);
+        let blob = encode(&snap);
+        let m = meta(&blob).unwrap();
+        assert_eq!(m.backend, snap.backend);
+        assert_eq!(m.channels, snap.channels);
+        assert_eq!(m.tokens_seen, snap.tokens_seen);
+        assert_eq!(m.state_len, snap.state.len());
+    }
+
+    #[test]
+    fn rejects_truncated_blobs() {
+        let blob = encode(&Snapshot {
+            backend: BackendTag::Aaren,
+            channels: 4,
+            tokens_seen: 9,
+            state: vec![1.0; 10],
+        });
+        for cut in [0, 3, HEADER_LEN - 1, HEADER_LEN + 5, blob.len() - 1] {
+            assert!(decode(&blob[..cut]).is_err(), "truncation to {cut} bytes must be rejected");
+        }
+        // ...and an over-long blob too
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+    }
+
+    #[test]
+    fn rejects_corruption_anywhere() {
+        let blob = encode(&Snapshot {
+            backend: BackendTag::Tf,
+            channels: 3,
+            tokens_seen: 17,
+            state: (0..12).map(|i| i as f32 * 0.5).collect(),
+        });
+        // flip one bit at every byte position: header corruption trips a
+        // header check, payload corruption trips the crc — never silence
+        for i in 0..blob.len() {
+            let mut bad = blob.clone();
+            bad[i] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flipped byte {i} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_tag() {
+        let blob = encode(&Snapshot {
+            backend: BackendTag::Aaren,
+            channels: 2,
+            tokens_seen: 1,
+            state: vec![0.5, -0.5],
+        });
+        let refresh_crc = |mut b: Vec<u8>| -> Vec<u8> {
+            let n = b.len();
+            let crc = crc32(&b[..n - 4]);
+            b[n - 4..].copy_from_slice(&crc.to_le_bytes());
+            b
+        };
+        let mut wrong_version = blob.clone();
+        wrong_version[4] = 99;
+        let err = decode(&refresh_crc(wrong_version)).unwrap_err();
+        assert!(format!("{err}").contains("version"), "got: {err}");
+        let mut wrong_tag = blob.clone();
+        wrong_tag[6] = 7;
+        let err = decode(&refresh_crc(wrong_tag)).unwrap_err();
+        assert!(format!("{err}").contains("backend tag"), "got: {err}");
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic zlib check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

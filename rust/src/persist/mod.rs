@@ -1,0 +1,35 @@
+//! Session state persistence — the paper's constant-memory guarantee
+//! turned into an operational capability.
+//!
+//! §3.3's point is that an Aaren stream's entire live state is a small
+//! fixed-size blob (one (m, u, w) accumulator plus the query); even the
+//! tf baseline's KV cache is a flat, self-describing buffer. This module
+//! makes that blob a first-class artifact:
+//!
+//! * [`codec`] — the ONE versioned, length-prefixed, CRC-checked binary
+//!   framing for session state (magic + version + backend tag + channels
+//!   + tokens_seen + raw little-endian f32 payload). Encode → decode is
+//!   bitwise exact, so a restored session resumes with outputs bitwise
+//!   identical to a never-snapshotted twin.
+//! * [`store`] — [`SnapshotStore`]: where spilled sessions live while
+//!   not resident ([`MemStore`] in RAM, [`DirStore`] as atomic
+//!   write-then-rename files, integrity-checked on load).
+//!
+//! Three consumers share these pieces (see `crate::serve`):
+//!
+//! * the **executor spill tier** — with `--spill-dir`, the TTL sweep
+//!   snapshots idle native sessions to the store instead of destroying
+//!   them, and `--max-resident-sessions` LRU-spills the coldest resident
+//!   sessions, so resident count is bounded independent of total session
+//!   count; a touched session is restored lazily on its next request;
+//! * the **wire ops** `snapshot` / `restore` — a client can pull a
+//!   session's state as a base64 blob and recreate it on another server
+//!   (client-driven migration across shards/hosts, crash recovery);
+//! * the **CLI** `aaren state export|import|inspect` — offline snapshot
+//!   handling.
+
+pub mod codec;
+pub mod store;
+
+pub use codec::{BackendTag, Meta, Snapshot};
+pub use store::{DirStore, MemStore, SnapshotStore};

@@ -1,0 +1,301 @@
+//! Snapshot storage behind the executor spill tier: where evicted
+//! sessions' codec blobs live while they are not resident in RAM.
+//!
+//! [`SnapshotStore`] is the narrow contract the serve executors program
+//! against; two implementations ship:
+//!
+//! * [`MemStore`] — a HashMap. Spill-to-memory sounds pointless until you
+//!   remember an Aaren blob is ~40 bytes while a resident tf session can
+//!   hold megabytes of KV cache; it is also the deterministic store the
+//!   tests and the LRU-cap logic run against.
+//! * [`DirStore`] — one file per session (`sess-<id>.snap`) under a spill
+//!   directory. Writes go to `sess-<id>.snap.tmp` then `rename(2)` into
+//!   place, so a crash mid-write can never leave a half-written blob
+//!   under the live name; loads verify the codec framing + CRC and
+//!   refuse corrupt files instead of resurrecting garbage state.
+//!
+//! Sharding: every executor shard opens the SAME directory with its own
+//! `(shard, nshards)` partition, indexing only ids it routes
+//! (`id % nshards == shard`). File names embed the id, ids are unique
+//! across shards, so shards never contend on a file, and a restart with
+//! a different shard count simply re-partitions the same files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::persist::codec;
+
+/// Blob storage for spilled sessions, keyed by session id. Blobs are
+/// `persist::codec` framings; implementations may verify integrity on
+/// load and must never return a corrupt blob as if it were valid.
+pub trait SnapshotStore: Send {
+    /// Persist `blob` under `id`, replacing any previous snapshot.
+    fn put(&mut self, id: u64, blob: &[u8]) -> Result<()>;
+    /// Load the snapshot for `id`; `None` if absent. Corrupt stored data
+    /// is an `Err`, not a `None` — the caller must be able to tell "never
+    /// spilled" from "spilled and damaged".
+    fn get(&mut self, id: u64) -> Result<Option<Vec<u8>>>;
+    /// Drop the snapshot for `id`; returns whether one existed.
+    fn remove(&mut self, id: u64) -> Result<bool>;
+    /// Whether a snapshot for `id` exists.
+    fn contains(&self, id: u64) -> bool;
+    /// Number of snapshots held.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// All held ids (unordered).
+    fn ids(&self) -> Vec<u64>;
+}
+
+/// In-memory store: the deterministic test double and the zero-IO tier.
+#[derive(Default)]
+pub struct MemStore {
+    blobs: HashMap<u64, Vec<u8>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl SnapshotStore for MemStore {
+    fn put(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        self.blobs.insert(id, blob.to_vec());
+        Ok(())
+    }
+
+    fn get(&mut self, id: u64) -> Result<Option<Vec<u8>>> {
+        Ok(self.blobs.get(&id).cloned())
+    }
+
+    fn remove(&mut self, id: u64) -> Result<bool> {
+        Ok(self.blobs.remove(&id).is_some())
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.blobs.contains_key(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.blobs.len()
+    }
+
+    fn ids(&self) -> Vec<u64> {
+        self.blobs.keys().copied().collect()
+    }
+}
+
+const SNAP_PREFIX: &str = "sess-";
+const SNAP_SUFFIX: &str = ".snap";
+
+fn id_of_file(name: &str) -> Option<u64> {
+    name.strip_prefix(SNAP_PREFIX)?.strip_suffix(SNAP_SUFFIX)?.parse().ok()
+}
+
+/// Directory-backed store: `sess-<id>.snap` files, written atomically
+/// (tmp + rename) and CRC-verified on load via the codec framing.
+pub struct DirStore {
+    dir: PathBuf,
+    /// ids this partition owns, mirrored from the directory at open time
+    /// and kept in sync by put/remove — `contains`/`len` never touch the
+    /// filesystem on the executor hot path.
+    index: std::collections::HashSet<u64>,
+}
+
+impl DirStore {
+    /// Open (creating if needed) a store over `dir`, indexing every
+    /// snapshot present.
+    pub fn open(dir: &Path) -> Result<DirStore> {
+        Self::open_partition(dir, 0, 1)
+    }
+
+    /// Open `dir` indexing only ids with `id % nshards == shard` — the
+    /// form each executor shard uses so per-shard spill counts do not
+    /// multiply by the shard count.
+    pub fn open_partition(dir: &Path, shard: u64, nshards: u64) -> Result<DirStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let nshards = nshards.max(1);
+        let mut index = std::collections::HashSet::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading spill dir {}", dir.display()))?
+        {
+            let entry = entry?;
+            if let Some(id) = entry.file_name().to_str().and_then(id_of_file) {
+                if id % nshards == shard {
+                    index.insert(id);
+                }
+            }
+        }
+        Ok(DirStore { dir: dir.to_path_buf(), index })
+    }
+
+    fn path_of(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{SNAP_PREFIX}{id}{SNAP_SUFFIX}"))
+    }
+}
+
+impl SnapshotStore for DirStore {
+    fn put(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        let live = self.path_of(id);
+        // write-then-rename: the live name only ever points at a complete
+        // blob, whatever happens mid-write
+        let tmp = self.dir.join(format!("{SNAP_PREFIX}{id}{SNAP_SUFFIX}.tmp"));
+        std::fs::write(&tmp, blob)
+            .with_context(|| format!("writing spill tmp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &live)
+            .with_context(|| format!("publishing spill file {}", live.display()))?;
+        self.index.insert(id);
+        Ok(())
+    }
+
+    fn get(&mut self, id: u64) -> Result<Option<Vec<u8>>> {
+        if !self.index.contains(&id) {
+            return Ok(None);
+        }
+        let path = self.path_of(id);
+        let blob = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.index.remove(&id);
+                return Ok(None);
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        // integrity gate: a damaged file is an error, never a session
+        codec::meta(&blob).with_context(|| format!("verifying {}", path.display()))?;
+        Ok(Some(blob))
+    }
+
+    fn remove(&mut self, id: u64) -> Result<bool> {
+        let existed = self.index.remove(&id);
+        match std::fs::remove_file(self.path_of(id)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(existed),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.index.contains(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn ids(&self) -> Vec<u64> {
+        self.index.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::codec::{encode, BackendTag, Snapshot};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Unique per-test scratch directory (std has no tempdir crate).
+    pub(crate) fn scratch_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "aaren-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn blob(tokens: u64) -> Vec<u8> {
+        encode(&Snapshot {
+            backend: BackendTag::Aaren,
+            channels: 2,
+            tokens_seen: tokens,
+            state: vec![1.0, 2.0, 0.5, -0.25],
+        })
+    }
+
+    fn exercise(store: &mut dyn SnapshotStore) {
+        assert!(store.is_empty());
+        assert_eq!(store.get(1).unwrap(), None);
+        store.put(1, &blob(5)).unwrap();
+        store.put(9, &blob(7)).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.contains(1) && store.contains(9) && !store.contains(2));
+        assert_eq!(store.get(1).unwrap().unwrap(), blob(5));
+        // overwrite replaces
+        store.put(1, &blob(6)).unwrap();
+        assert_eq!(store.get(1).unwrap().unwrap(), blob(6));
+        let mut ids = store.ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 9]);
+        assert!(store.remove(1).unwrap());
+        assert!(!store.remove(1).unwrap());
+        assert_eq!(store.get(1).unwrap(), None);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn mem_store_contract() {
+        exercise(&mut MemStore::new());
+    }
+
+    #[test]
+    fn dir_store_contract_and_reopen() {
+        let dir = scratch_dir("dirstore");
+        {
+            let mut store = DirStore::open(&dir).unwrap();
+            exercise(&mut store);
+        }
+        // reopen: the surviving id (9) is re-indexed from disk
+        let mut store = DirStore::open(&dir).unwrap();
+        assert_eq!(store.ids(), vec![9]);
+        assert_eq!(store.get(9).unwrap().unwrap(), blob(7));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_store_partitions_split_ids() {
+        let dir = scratch_dir("dirstore-part");
+        {
+            let mut store = DirStore::open(&dir).unwrap();
+            for id in [1u64, 2, 3, 4, 5, 6] {
+                store.put(id, &blob(id)).unwrap();
+            }
+        }
+        let even = DirStore::open_partition(&dir, 0, 2).unwrap();
+        let odd = DirStore::open_partition(&dir, 1, 2).unwrap();
+        let mut e = even.ids();
+        let mut o = odd.ids();
+        e.sort_unstable();
+        o.sort_unstable();
+        assert_eq!(e, vec![2, 4, 6]);
+        assert_eq!(o, vec![1, 3, 5]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_store_rejects_corrupt_files_and_ignores_tmp_and_foreign() {
+        let dir = scratch_dir("dirstore-corrupt");
+        let mut store = DirStore::open(&dir).unwrap();
+        store.put(3, &blob(3)).unwrap();
+        // corrupt the live file in place
+        let path = dir.join("sess-3.snap");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 6] ^= 0xFF; // payload corruption, caught by the crc
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.get(3).unwrap_err().to_string().contains("sess-3.snap"));
+        // leftover tmp files and foreign names are not indexed on open
+        std::fs::write(dir.join("sess-8.snap.tmp"), b"half").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"hi").unwrap();
+        let reopened = DirStore::open(&dir).unwrap();
+        assert_eq!(reopened.ids(), vec![3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

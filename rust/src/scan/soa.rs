@@ -138,6 +138,26 @@ impl ScanBuffer {
         out
     }
 
+    /// Borrow the raw SoA state as three flat slices (m, u, w) — the view
+    /// a persistence codec serializes: `persist::codec` payloads are raw
+    /// f32 bit patterns, so exposing the buffers directly (rather than
+    /// per-row copies) keeps snapshotting a pair of memcpys.
+    pub fn state_views(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.m, &self.u, &self.w)
+    }
+
+    /// Rebuild a buffer from raw state slices, the inverse of
+    /// [`state_views`](Self::state_views). Lengths must describe the same
+    /// `n` for dimension `d` (`w.len() == m.len() * d`); the f32s are
+    /// adopted bit-for-bit, so `from_state(d, state_views(..))` is a
+    /// bitwise round-trip.
+    pub fn from_state(d: usize, m: &[f32], u: &[f32], w: &[f32]) -> Option<ScanBuffer> {
+        if m.len() != u.len() || w.len() != m.len() * d {
+            return None;
+        }
+        Some(ScanBuffer { d, m: m.to_vec(), u: u.to_vec(), w: w.to_vec() })
+    }
+
     /// Build from owned tuples (interop / tests). All tuples must share
     /// one dimension; an empty slice yields an empty d = 0 buffer.
     pub fn from_leaves(leaves: &[Muw]) -> ScanBuffer {
@@ -222,6 +242,31 @@ mod tests {
         for (x, y) in got.w.iter().zip(want.w.iter()) {
             assert!((x - y).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn state_views_roundtrip_is_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let d = 3;
+        let mut buf = ScanBuffer::with_capacity(d, 5);
+        for _ in 0..5 {
+            // arbitrary bit patterns, -0.0 and NaN included: the state
+            // view must round-trip bits, not values
+            let bits = |rng: &mut crate::util::rng::Rng| f32::from_bits(rng.below(1 << 32) as u32);
+            let v: Vec<f32> = (0..d).map(|_| bits(&mut rng)).collect();
+            buf.push_tuple(bits(&mut rng), bits(&mut rng), &v);
+        }
+        let (m, u, w) = buf.state_views();
+        let back = ScanBuffer::from_state(d, m, u, w).unwrap();
+        assert_eq!(back.len(), buf.len());
+        for (a, b) in back.m.iter().chain(&back.u).chain(&back.w).zip(
+            buf.m.iter().chain(&buf.u).chain(&buf.w),
+        ) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // mismatched lengths are refused, not truncated
+        assert!(ScanBuffer::from_state(d, m, u, &w[..w.len() - 1]).is_none());
+        assert!(ScanBuffer::from_state(d, &m[..m.len() - 1], u, w).is_none());
     }
 
     #[test]

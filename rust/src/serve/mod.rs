@@ -20,11 +20,14 @@
 //! One JSON object per line, one reply line per request, over plain TCP:
 //!
 //! ```text
-//! -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
+//! -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"][,"id":N]} <- {"id":N}
 //! -> {"op":"step","id":N,"x":[f32;channels]}       <- {"y":[...],"state_bytes":B,"t":T}
 //! -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
+//!                                        (partial lines first when n > 512)
+//! -> {"op":"snapshot","id":N}   <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
+//! -> {"op":"restore","state":"<base64>"}           <- {"id":M,"kind":K,"channels":D,"t":T}
 //! -> {"op":"close","id":N}                         <- {"ok":true}
-//! -> {"op":"stats"}                                <- {"sessions":K,"total_state_bytes":B}
+//! -> {"op":"stats"}                 <- {"sessions":K,"total_state_bytes":B,"spilled":S}
 //! -> {"op":"shutdown"}                             <- {"ok":true}
 //! ```
 //!
@@ -34,23 +37,50 @@
 //!   executor tier (`"native"` is the default; `"hlo"` needs a `pjrt`
 //!   build started with `--artifacts`). The reply's `id` routes every
 //!   later request — ids are pinned to one executor shard, so a
-//!   session's requests always serialize in order.
+//!   session's requests always serialize in order. An optional explicit
+//!   `id` (native tier only) claims that id instead of an assigned one;
+//!   an id that already exists — resident OR spilled — is refused with a
+//!   structured `{"error":"session N already exists"}` reply, never
+//!   silently clobbered.
 //! * `step` — fold one token (used as key and value); the reply carries
 //!   the step's output `y`, the session's current `state_bytes` (the
 //!   Figure-5 observable) and `t`, the number of tokens folded so far.
 //!   Token values must be finite in f32; anything else is rejected
 //!   rather than poisoning the (m, u, w) state.
-//! * `steps` — the batch form of `step`: n tokens in one message, n
-//!   outputs in one reply, amortizing the TCP + executor round-trip
-//!   (see `benches/serve_loopback.rs` for the measured effect). `t` and
-//!   `state_bytes` describe the session after the whole block. Rows
-//!   must share one width.
-//! * `close` — free the session. Sessions can also expire: with
+//! * `steps` — the batch form of `step`: n tokens in one message,
+//!   amortizing the TCP + executor round-trip (see
+//!   `benches/serve_loopback.rs` for the measured effect). Rows must
+//!   share one width, and n is capped at
+//!   [`server::MAX_STEPS_TOKENS`] (absurd blocks get a clean error, not
+//!   an allocation attempt). Up to
+//!   [`server::STEPS_REPLY_BLOCK`] tokens the reply is one line; above
+//!   it the outputs STREAM back in fixed-size blocks — every line but
+//!   the last carries `"partial":true`, each line's `ys`/`t`/
+//!   `state_bytes` describe the stream after that block, and reply
+//!   memory is bounded by the block size instead of n. An error line is
+//!   always final (the stream keeps the prefix that executed, exactly
+//!   like a mid-block `step` failure). Blocks are separate executor
+//!   dispatches, so another connection's ops on the same session may
+//!   interleave between them — same-session cross-connection use
+//!   already required client-side coordination.
+//! * `snapshot` — serialize the session's full live state through the
+//!   versioned `persist::codec` framing; the reply carries the blob
+//!   (base64) plus its metadata. Works on resident and spilled sessions
+//!   alike (a spilled one is answered from the store without restoring
+//!   it). Restoring the blob yields a session whose outputs continue
+//!   bitwise where this one's stream stood.
+//! * `restore` — create a NEW session (fresh id, native tier) from a
+//!   `snapshot` blob — the client-driven migration path: snapshot on
+//!   server A, restore on server B, keep streaming. Corrupt, truncated
+//!   or wrong-version blobs are refused by the codec's magic/version/CRC
+//!   checks.
+//! * `close` — free the session (resident or spilled; a spilled
+//!   session's snapshot file is deleted). Sessions can also expire: with
 //!   `--session-ttl-secs N` (ServeConfig::session_ttl), executor drains
-//!   sweep out sessions idle longer than the TTL, so disconnected
-//!   clients cannot leak state.
-//! * `stats` — live session count and total state bytes, aggregated
-//!   across every executor shard.
+//!   sweep sessions idle longer than the TTL — DESTROYING them without a
+//!   spill tier, SPILLING them with one (see below).
+//! * `stats` — resident session count, their total state bytes, and the
+//!   spilled-session count, aggregated across every executor shard.
 //! * `shutdown` — stop all executors and the accept loop. Executors
 //!   acknowledge with a first-class `Response::ShuttingDown` reply (the
 //!   wire sees `{"ok":true}`); requests that race a shutdown fail with
@@ -59,6 +89,20 @@
 //! Any request-level failure (unknown op, bad JSON, unknown session,
 //! width mismatch) is replied as `{"error":"…"}` on the same
 //! connection, which stays usable.
+//!
+//! # Session persistence (spill tier)
+//!
+//! With `--spill-dir DIR` (ServeConfig::spill_dir), TTL eviction spills
+//! idle native sessions into `persist::DirStore` snapshot files instead
+//! of dropping them, and the next `step`/`steps` touching a spilled id
+//! transparently restores it on its owning shard. With
+//! `--max-resident-sessions N` the coldest resident sessions are
+//! LRU-spilled after each drain, bounding resident count independent of
+//! total session count — the paper's fixed-bytes-per-stream guarantee
+//! (§3.3) turned into a more-sessions-than-RAM capability. Spilled
+//! sessions survive a server restart (ids are re-seeded past surviving
+//! snapshots). Spill/restore round-trips are bitwise exact; HLO-tier
+//! sessions cannot snapshot and keep plain TTL eviction.
 //!
 //! # Coalescing
 //!
@@ -79,7 +123,9 @@
 pub mod server;
 pub mod session;
 
-pub use server::{Client, ServeConfig, Server};
+pub use server::{
+    Client, ServeConfig, Server, SessionFactory, SpillTier, MAX_STEPS_TOKENS, STEPS_REPLY_BLOCK,
+};
 pub use session::{
     step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession, TF_BUCKETS,
 };

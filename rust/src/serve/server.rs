@@ -2,11 +2,15 @@
 //! objects — the rust-native serving stack, no XLA required.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"]} <- {"id":N}
+//!   -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"][,"id":N]} <- {"id":N}
 //!   -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
 //!   -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
+//!      (n > STEPS_REPLY_BLOCK streams several reply lines, all but the
+//!       last carrying "partial":true)
+//!   -> {"op":"snapshot","id":N}                  <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
+//!   -> {"op":"restore","state":"<base64>"}       <- {"id":M,"kind":K,"channels":D,"t":T}
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
-//!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B}
+//!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
 //!
 //! Architecture: connection handler threads parse requests and hand them
@@ -26,9 +30,21 @@
 //! paying a map lookup + accumulator walk per request, and a `steps`
 //! block of n tokens costs one executor round-trip instead of n. The
 //! drain is also where idle sessions are swept: with a session TTL
-//! configured (`--session-ttl-secs`), sessions idle past it are dropped,
+//! configured (`--session-ttl-secs`), sessions idle past it are evicted,
 //! so a client that disconnected without `close` cannot leak its
 //! sessions forever.
+//!
+//! With a SPILL TIER configured (`--spill-dir`), eviction stops being
+//! destruction: the sweep snapshots each idle native session through the
+//! `persist::codec` framing into a [`SnapshotStore`] and drops only the
+//! resident copy; the session's next `step`/`steps`/`snapshot` restores
+//! it lazily on its owning shard, resuming the stream bitwise where it
+//! left off. `--max-resident-sessions` additionally LRU-spills the
+//! coldest resident sessions after each drain, so a shard's resident
+//! count is bounded independent of how many sessions exist in total —
+//! the paper's constant-bytes-per-stream claim turned into a
+//! more-sessions-than-RAM serving capability. Sessions whose backend
+//! cannot snapshot (the compiled-HLO tier) fall back to plain eviction.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -40,11 +56,25 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::persist::codec;
+use crate::persist::store::{DirStore, SnapshotStore};
 use crate::scan::BatchScanBuffer;
 use crate::serve::session::{
     step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession,
 };
+use crate::util::b64;
 use crate::util::json::Json;
+
+/// Hard ceiling on the token count of one `steps` request: an absurd `n`
+/// is refused with a clean error reply at parse time, before any
+/// session-width allocation is attempted.
+pub const MAX_STEPS_TOKENS: usize = 1 << 20;
+
+/// `steps` replies are streamed in blocks of at most this many tokens:
+/// a request with n > STEPS_REPLY_BLOCK produces several reply lines
+/// (each but the last tagged `"partial":true`), so reply memory is
+/// bounded by the block size instead of n.
+pub const STEPS_REPLY_BLOCK: usize = 512;
 
 /// A request as an executor sees it (ids are assigned by the router
 /// before dispatch, so `Create` already carries one).
@@ -54,6 +84,12 @@ pub enum Request {
     /// `n` tokens for one session as a flat (n, channels) block — one
     /// round-trip, n outputs.
     Steps { id: u64, xs: Vec<f32>, n: usize },
+    /// Serialize the session's live state as a codec blob (resident or
+    /// spilled — a spilled session is answered from the store without
+    /// restoring it).
+    Snapshot { id: u64 },
+    /// Create a session at `id` from a codec blob (the migration path).
+    Restore { id: u64, blob: Vec<u8> },
     Close { id: u64 },
     Stats,
     Shutdown,
@@ -65,7 +101,7 @@ pub enum Response {
     /// The wire-level reply body.
     Value(Json),
     /// Per-shard stats, aggregated by the router before hitting the wire.
-    Stats { sessions: usize, state_bytes: usize },
+    Stats { sessions: usize, state_bytes: usize, spilled: usize },
     /// The executor acknowledges shutdown and exits its loop.
     ShuttingDown,
 }
@@ -96,6 +132,17 @@ const HLO_ID_BASE: u64 = 1 << 32;
 /// its own factory (native widths vs loaded HLO models).
 pub trait SessionFactory {
     fn create(&mut self, kind: &str) -> Result<Box<dyn StreamSession>>;
+
+    /// Rebuild a session from a `persist::codec` blob — the object-safe
+    /// restore hook pairing `StreamSession::snapshot` (a trait method
+    /// could not return `Self` behind `dyn`). Backs both the lazy
+    /// un-spill on a session's next touch and the `restore` wire op. The
+    /// default refuses: backends without snapshot support can't restore
+    /// either.
+    fn restore(&mut self, blob: &[u8]) -> Result<Box<dyn StreamSession>> {
+        let _ = blob;
+        Err(anyhow!("this backend cannot restore sessions from snapshots"))
+    }
 }
 
 /// Factory for the rust-native tier: sessions over `channels`-dim tokens.
@@ -111,6 +158,26 @@ impl SessionFactory for NativeFactory {
             other => Err(anyhow!("unknown kind {other:?} (aaren|tf)")),
         }
     }
+
+    fn restore(&mut self, blob: &[u8]) -> Result<Box<dyn StreamSession>> {
+        // snapshots are self-describing: a blob restored here keeps ITS
+        // channel width even if it differs from this server's --channels
+        // (that is what makes cross-server migration work)
+        let snap = codec::decode(blob)?;
+        Ok(match snap.backend {
+            codec::BackendTag::Aaren => Box::new(NativeAarenSession::import_state(&snap)?),
+            codec::BackendTag::Tf => Box::new(NativeTfSession::import_state(&snap)?),
+        })
+    }
+}
+
+/// The executor-side spill tier: where evicted sessions go instead of
+/// dying, plus the optional resident-count cap.
+pub struct SpillTier {
+    pub store: Box<dyn SnapshotStore>,
+    /// After each drain, LRU-spill resident sessions beyond this count;
+    /// `None` spills only on TTL expiry.
+    pub max_resident: Option<usize>,
 }
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
@@ -135,6 +202,48 @@ struct PendingSteps {
     reply: mpsc::Sender<Reply>,
 }
 
+/// Move one session out of the resident map — into the spill store when
+/// one is configured and the session can snapshot, otherwise dropping it
+/// (the pre-spill TTL behaviour, still what the HLO tier gets).
+fn evict_session(sessions: &mut HashMap<u64, Held>, spill: Option<&mut SpillTier>, id: u64) {
+    let Some(held) = sessions.remove(&id) else {
+        return;
+    };
+    if let Some(tier) = spill {
+        match held.session.snapshot().and_then(|blob| tier.store.put(id, &blob)) {
+            Ok(()) => {}
+            Err(e) => eprintln!("[serve] session {id} could not spill, dropping: {e:#}"),
+        }
+    }
+}
+
+/// Make `id` resident if it can be: `Ok(true)` when the session is in
+/// the map (already, or lazily restored from the spill store — the
+/// restored copy becomes authoritative and leaves the store), `Ok(false)`
+/// when it simply does not exist, `Err` when a spilled blob exists but is
+/// corrupt or unrestorable (the caller's reply, never a silent drop).
+fn ensure_resident<F: SessionFactory>(
+    sessions: &mut HashMap<u64, Held>,
+    spill: &mut Option<SpillTier>,
+    factory: &mut F,
+    id: u64,
+    now: Instant,
+) -> Result<bool> {
+    if sessions.contains_key(&id) {
+        return Ok(true);
+    }
+    let Some(tier) = spill.as_mut() else {
+        return Ok(false);
+    };
+    let Some(blob) = tier.store.get(id)? else {
+        return Ok(false);
+    };
+    let session = factory.restore(&blob)?;
+    tier.store.remove(id)?;
+    sessions.insert(id, Held { session, last_used: now });
+    Ok(true)
+}
+
 /// One executor shard: owns a private id → session map and serves its
 /// channel until a `Shutdown` request arrives (acknowledged with
 /// [`Response::ShuttingDown`]).
@@ -142,13 +251,17 @@ struct PendingSteps {
 /// Each iteration DRAINS the queue: every request already waiting is
 /// pulled in one go, maximal runs of `step`/`steps` are executed as one
 /// coalesced batch ([`flush_steps`]) and — with `session_ttl` set —
-/// sessions idle past the TTL are swept before the drain is served.
-/// Request order is preserved: a `close` (or any other op) between two
-/// step runs splits them, so a step never observes a later op's effect.
+/// sessions idle past the TTL are swept before the drain is served
+/// (spilled to `spill`'s store when one is configured, dropped
+/// otherwise). Request order is preserved: a `close` (or any other op)
+/// between two step runs splits them, so a step never observes a later
+/// op's effect. After the drain, the spill tier's `max_resident` cap is
+/// enforced by LRU-spilling the coldest resident sessions.
 pub fn run_executor<F: SessionFactory>(
     mut factory: F,
     rx: ReqRx,
     session_ttl: Option<Duration>,
+    mut spill: Option<SpillTier>,
 ) {
     let mut sessions: HashMap<u64, Held> = HashMap::new();
     let mut scratch = BatchScanBuffer::new(0, 0);
@@ -179,6 +292,7 @@ pub fn run_executor<F: SessionFactory>(
             for (req, _) in &batch {
                 if let Request::Step { id, .. }
                 | Request::Steps { id, .. }
+                | Request::Snapshot { id }
                 | Request::Close { id } = req
                 {
                     if let Some(held) = sessions.get_mut(id) {
@@ -187,8 +301,16 @@ pub fn run_executor<F: SessionFactory>(
                 }
             }
             // the drain is the sweep point; idle shards wake on the
-            // recv_timeout above so disconnected clients still get reaped
-            sessions.retain(|_, held| now.duration_since(held.last_used) <= ttl);
+            // recv_timeout above so disconnected clients still get
+            // reaped. With a spill tier, expiry means spill, not death.
+            let expired: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, held)| now.duration_since(held.last_used) > ttl)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in expired {
+                evict_session(&mut sessions, spill.as_mut(), id);
+            }
         }
         let mut pending: Vec<PendingSteps> = Vec::new();
         for (req, reply) in batch {
@@ -202,19 +324,79 @@ pub fn run_executor<F: SessionFactory>(
                 other => {
                     // anything that is not a step splits the batch: flush
                     // what came before it so ordering is preserved
-                    flush_steps(&mut sessions, &mut pending, &mut scratch, now);
+                    flush_steps(
+                        &mut sessions,
+                        &mut pending,
+                        &mut scratch,
+                        &mut factory,
+                        &mut spill,
+                        now,
+                    );
                     let resp: Reply = match other {
-                        Request::Create { id, kind } => factory.create(&kind).map(|session| {
-                            sessions.insert(id, Held { session, last_used: now });
-                            Response::Value(obj(vec![("id", Json::Num(id as f64))]))
-                        }),
-                        Request::Close { id } => sessions
-                            .remove(&id)
-                            .map(|_| Response::Value(obj(vec![("ok", Json::Bool(true))])))
-                            .ok_or_else(|| anyhow!("no session {id}")),
+                        Request::Create { id, kind } => {
+                            // with a spill tier an id can be alive while
+                            // not resident — clobbering it here would
+                            // silently destroy a stream, so duplicates
+                            // are a structured error instead
+                            if sessions.contains_key(&id)
+                                || spill.as_ref().is_some_and(|t| t.store.contains(id))
+                            {
+                                Err(anyhow!("session {id} already exists"))
+                            } else {
+                                factory.create(&kind).map(|session| {
+                                    sessions.insert(id, Held { session, last_used: now });
+                                    Response::Value(obj(vec![("id", Json::Num(id as f64))]))
+                                })
+                            }
+                        }
+                        Request::Snapshot { id } => match sessions.get(&id) {
+                            Some(held) => held.session.snapshot().and_then(snapshot_reply),
+                            // a spilled session is served straight from
+                            // the store — no need to make it resident
+                            // just to read its state
+                            None => match spill.as_mut().map(|t| t.store.get(id)) {
+                                Some(Ok(Some(blob))) => snapshot_reply(blob),
+                                Some(Err(e)) => Err(e),
+                                Some(Ok(None)) | None => Err(anyhow!("no session {id}")),
+                            },
+                        },
+                        Request::Restore { id, blob } => {
+                            if sessions.contains_key(&id)
+                                || spill.as_ref().is_some_and(|t| t.store.contains(id))
+                            {
+                                Err(anyhow!("session {id} already exists"))
+                            } else {
+                                codec::meta(&blob).and_then(|meta| {
+                                    let session = factory.restore(&blob)?;
+                                    sessions.insert(id, Held { session, last_used: now });
+                                    Ok(Response::Value(obj(vec![
+                                        ("id", Json::Num(id as f64)),
+                                        ("kind", Json::Str(meta.backend.kind().to_string())),
+                                        ("channels", Json::Num(meta.channels as f64)),
+                                        ("t", Json::Num(meta.tokens_seen as f64)),
+                                    ])))
+                                })
+                            }
+                        }
+                        Request::Close { id } => {
+                            if sessions.remove(&id).is_some() {
+                                Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
+                            } else {
+                                // a spilled session closes by deleting
+                                // its snapshot
+                                match spill.as_mut().map(|t| t.store.remove(id)) {
+                                    Some(Ok(true)) => {
+                                        Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
+                                    }
+                                    Some(Err(e)) => Err(e),
+                                    Some(Ok(false)) | None => Err(anyhow!("no session {id}")),
+                                }
+                            }
+                        }
                         Request::Stats => Ok(Response::Stats {
                             sessions: sessions.len(),
                             state_bytes: sessions.values().map(|h| h.session.state_bytes()).sum(),
+                            spilled: spill.as_ref().map_or(0, |t| t.store.len()),
                         }),
                         Request::Shutdown => Ok(Response::ShuttingDown),
                         Request::Step { .. } | Request::Steps { .. } => {
@@ -229,8 +411,36 @@ pub fn run_executor<F: SessionFactory>(
                 }
             }
         }
-        flush_steps(&mut sessions, &mut pending, &mut scratch, now);
+        flush_steps(&mut sessions, &mut pending, &mut scratch, &mut factory, &mut spill, now);
+        // resident-count cap: LRU-spill the coldest sessions until the
+        // shard is back under it. Just-touched sessions carry `now` and
+        // are spilled last, so the cap cannot starve the live working set
+        // of this drain (they may still spill when the cap is smaller
+        // than the drain's distinct-session count).
+        if let Some(cap) = spill.as_ref().and_then(|t| t.max_resident) {
+            while sessions.len() > cap {
+                let coldest = sessions
+                    .iter()
+                    .min_by_key(|(_, held)| held.last_used)
+                    .map(|(&id, _)| id)
+                    .expect("resident count exceeds the cap, so the map is nonempty");
+                evict_session(&mut sessions, spill.as_mut(), coldest);
+            }
+        }
     }
+}
+
+/// The `snapshot` op's reply body for one codec blob: the base64 state
+/// plus the header metadata a client needs to route/inspect it.
+fn snapshot_reply(blob: Vec<u8>) -> Result<Response> {
+    let meta = codec::meta(&blob)?;
+    Ok(Response::Value(obj(vec![
+        ("state", Json::Str(b64::encode(&blob))),
+        ("kind", Json::Str(meta.backend.kind().to_string())),
+        ("channels", Json::Num(meta.channels as f64)),
+        ("t", Json::Num(meta.tokens_seen as f64)),
+        ("bytes", Json::Num(blob.len() as f64)),
+    ])))
 }
 
 /// One session's share of a drain: its concatenated pending tokens and
@@ -248,10 +458,14 @@ struct SessionRun {
 /// TOGETHER as lanes of the shared scratch [`BatchScanBuffer`] — one
 /// flat fold per token round across all of them — while other backends
 /// (tf KV cache, compiled HLO) take their per-session `step_many` path.
-fn flush_steps(
+/// A session that was spilled to the store is transparently restored
+/// here, on its owning shard, before its first request of the drain.
+fn flush_steps<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     pending: &mut Vec<PendingSteps>,
     scratch: &mut BatchScanBuffer,
+    factory: &mut F,
+    spill: &mut Option<SpillTier>,
     now: Instant,
 ) {
     if pending.is_empty() {
@@ -264,10 +478,18 @@ fn flush_steps(
     let mut run_of: HashMap<u64, usize> = HashMap::new();
     let mut replies: Vec<Option<Reply>> = (0..work.len()).map(|_| None).collect();
     for (wi, p) in work.iter().enumerate() {
-        let Some(held) = sessions.get_mut(&p.id) else {
-            replies[wi] = Some(Err(anyhow!("no session {}", p.id)));
-            continue;
-        };
+        match ensure_resident(sessions, spill, factory, p.id, now) {
+            Ok(true) => {}
+            Ok(false) => {
+                replies[wi] = Some(Err(anyhow!("no session {}", p.id)));
+                continue;
+            }
+            Err(e) => {
+                replies[wi] = Some(Err(e));
+                continue;
+            }
+        }
+        let held = sessions.get_mut(&p.id).expect("ensure_resident said resident");
         held.last_used = now;
         let d = held.session.channels();
         if p.xs.len() != p.n * d {
@@ -445,6 +667,15 @@ pub struct ServeConfig {
     /// evict sessions idle longer than this (swept on executor drains);
     /// `None` keeps sessions until an explicit `close`
     pub session_ttl: Option<Duration>,
+    /// spill directory for evicted native sessions: with this set, TTL
+    /// expiry and the resident cap SPILL sessions (atomic snapshot
+    /// files, restored lazily on next touch) instead of destroying them,
+    /// and spilled sessions survive server restarts
+    pub spill_dir: Option<std::path::PathBuf>,
+    /// cap on resident native sessions across the whole pool (split
+    /// evenly over the shards); requires `spill_dir`. `None` leaves
+    /// resident count unbounded
+    pub max_resident_sessions: Option<usize>,
     /// artifacts dir enabling the compiled-HLO backend (`pjrt` builds
     /// only; ignored otherwise)
     pub artifacts: Option<std::path::PathBuf>,
@@ -457,6 +688,8 @@ impl Default for ServeConfig {
             channels: 8,
             shards: std::thread::available_parallelism().map(|t| t.get().min(8)).unwrap_or(4),
             session_ttl: None,
+            spill_dir: None,
+            max_resident_sessions: None,
             artifacts: None,
         }
     }
@@ -482,14 +715,39 @@ impl Router {
     /// over it.
     pub fn start(cfg: &ServeConfig) -> Result<Router> {
         let nshards = cfg.shards.max(1);
+        // seed the id counter past any sessions already spilled on disk,
+        // so a restarted server can never hand out an id that would
+        // collide with (and be refused by) a surviving snapshot
+        let mut first_native_id = 1u64;
+        if let Some(dir) = &cfg.spill_dir {
+            // foreign snapshot files beyond the native namespace are
+            // ignored here: seeding past HLO_ID_BASE would make every
+            // future create fail as exhausted
+            let max = DirStore::open(dir)?.ids().into_iter().filter(|&id| id < HLO_ID_BASE).max();
+            if let Some(max) = max {
+                first_native_id = max + 1;
+            }
+        }
+        // the global resident cap is split evenly across the shards —
+        // each shard enforces its share locally, so the pool-wide
+        // resident count stays within ~cap (rounded up per shard)
+        let per_shard_cap =
+            cfg.max_resident_sessions.map(|cap| cap.div_ceil(nshards).max(1));
         let mut shards = Vec::with_capacity(nshards);
         for s in 0..nshards {
             let (tx, rx) = mpsc::channel();
             let channels = cfg.channels;
             let ttl = cfg.session_ttl;
+            let spill = match &cfg.spill_dir {
+                Some(dir) => Some(SpillTier {
+                    store: Box::new(DirStore::open_partition(dir, s as u64, nshards as u64)?),
+                    max_resident: per_shard_cap,
+                }),
+                None => None,
+            };
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
-                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl))?;
+                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl, spill))?;
             shards.push(tx);
         }
         #[cfg(feature = "pjrt")]
@@ -499,8 +757,11 @@ impl Router {
                 let dir = dir.clone();
                 let ttl = cfg.session_ttl;
                 std::thread::Builder::new().name("serve-exec-hlo".to_string()).spawn(
+                    // no spill tier: HLO sessions cannot snapshot (their
+                    // state is device literals), so TTL expiry keeps its
+                    // plain-eviction behaviour on this executor
                     move || match hlo_backend::HloFactory::new(&dir) {
-                        Ok(factory) => run_executor(factory, rx, ttl),
+                        Ok(factory) => run_executor(factory, rx, ttl, None),
                         // dropping rx makes every later hlo request fail
                         // with "executor thread gone" instead of hanging
                         Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
@@ -515,7 +776,7 @@ impl Router {
         Ok(Router {
             shards,
             hlo,
-            next_native_id: AtomicU64::new(1),
+            next_native_id: AtomicU64::new(first_native_id),
             next_hlo_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         })
@@ -529,6 +790,11 @@ impl Router {
         match backend {
             Backend::Native => {
                 let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
+                // an id at or past HLO_ID_BASE would route to the HLO
+                // executor on every later request and be unreachable —
+                // refuse loudly instead (only hit after an explicit id
+                // claimed the top of the namespace)
+                ensure!(id < HLO_ID_BASE, "native session id space exhausted");
                 Ok((&self.shards[(id as usize) % self.shards.len()], id))
             }
             Backend::Hlo => {
@@ -560,11 +826,47 @@ impl Router {
     /// spans shards (`stats`, `shutdown`).
     pub fn dispatch(&self, op: WireOp) -> Result<Json> {
         match op {
-            WireOp::Create { kind, backend } => {
-                let (tx, id) = self.create_target(backend)?;
+            WireOp::Create { kind, backend, id } => {
+                let (tx, id) = match id {
+                    // client-chosen id (session-naming conventions,
+                    // re-adopting a migrated id): routed like any other,
+                    // refused by the executor if it already exists
+                    Some(id) => {
+                        ensure!(
+                            backend == Backend::Native,
+                            "explicit session ids are only supported on the native backend"
+                        );
+                        ensure!(
+                            id >= 1 && id < HLO_ID_BASE,
+                            "explicit id {id} is outside the native id range [1, {HLO_ID_BASE})"
+                        );
+                        // keep auto-assigned ids from ever landing on it
+                        self.next_native_id.fetch_max(id + 1, Ordering::Relaxed);
+                        (&self.shards[(id as usize) % self.shards.len()], id)
+                    }
+                    None => self.create_target(backend)?,
+                };
                 match call_on(tx, Request::Create { id, kind })? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to create"),
+                }
+            }
+            WireOp::Snapshot { id } => {
+                match call_on(self.route(id)?, Request::Snapshot { id })? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to snapshot"),
+                }
+            }
+            WireOp::Restore { blob } => {
+                // restored sessions always land on the native tier with a
+                // fresh id (the blob is self-describing; the id in force
+                // on the exporting server has no meaning here)
+                let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
+                ensure!(id < HLO_ID_BASE, "native session id space exhausted");
+                let tx = &self.shards[(id as usize) % self.shards.len()];
+                match call_on(tx, Request::Restore { id, blob })? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to restore"),
                 }
             }
             WireOp::Step { id, x } => match call_on(self.route(id)?, Request::Step { id, x })? {
@@ -582,20 +884,22 @@ impl Router {
                 _ => bail!("unexpected reply to close"),
             },
             WireOp::Stats => {
-                let (mut count, mut bytes) = (0usize, 0usize);
+                let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
                 for tx in self.targets() {
                     // a dead executor contributes nothing instead of
                     // failing the whole aggregate
-                    if let Ok(Response::Stats { sessions, state_bytes }) =
+                    if let Ok(Response::Stats { sessions, state_bytes, spilled }) =
                         call_on(tx, Request::Stats)
                     {
                         count += sessions;
                         bytes += state_bytes;
+                        on_disk += spilled;
                     }
                 }
                 Ok(obj(vec![
                     ("sessions", Json::Num(count as f64)),
                     ("total_state_bytes", Json::Num(bytes as f64)),
+                    ("spilled", Json::Num(on_disk as f64)),
                 ]))
             }
             WireOp::Shutdown => {
@@ -611,9 +915,11 @@ impl Router {
 
 /// A request as it arrives on the wire, before the router assigns ids.
 pub enum WireOp {
-    Create { kind: String, backend: Backend },
+    Create { kind: String, backend: Backend, id: Option<u64> },
     Step { id: u64, x: Vec<f32> },
     Steps { id: u64, xs: Vec<f32>, n: usize },
+    Snapshot { id: u64 },
+    Restore { blob: Vec<u8> },
     Close { id: u64 },
     Stats,
     Shutdown,
@@ -628,7 +934,19 @@ fn parse_request(line: &str) -> Result<WireOp> {
                 Some("hlo") => Backend::Hlo,
                 Some(other) => bail!("unknown backend {other:?} (native|hlo)"),
             };
-            Ok(WireOp::Create { kind: j.str_field("kind")?.to_string(), backend })
+            let id = match j.get("id") {
+                None => None,
+                Some(v) => Some(
+                    v.as_usize().ok_or_else(|| anyhow!("create id must be a number"))? as u64,
+                ),
+            };
+            Ok(WireOp::Create { kind: j.str_field("kind")?.to_string(), backend, id })
+        }
+        "snapshot" => Ok(WireOp::Snapshot { id: j.usize_field("id")? as u64 }),
+        "restore" => {
+            let blob = b64::decode(j.str_field("state")?)
+                .map_err(|e| anyhow!("restore state is not valid base64: {e:#}"))?;
+            Ok(WireOp::Restore { blob })
         }
         "step" => {
             let id = j.usize_field("id")? as u64;
@@ -649,11 +967,18 @@ fn parse_request(line: &str) -> Result<WireOp> {
             Ok(WireOp::Step { id, x })
         }
         "steps" => {
-            // n tokens in one message, n outputs in one reply — the
-            // round-trip-amortizing batch form of `step`
+            // n tokens in one message, the outputs streamed back in
+            // blocks of at most STEPS_REPLY_BLOCK tokens per reply line
             let id = j.usize_field("id")? as u64;
             let rows = j.get("xs").and_then(Json::as_arr).ok_or_else(|| anyhow!("missing xs"))?;
             let n = rows.len();
+            // absurd block sizes are refused here, before the token
+            // floats (or any reply buffer) are allocated
+            ensure!(
+                n <= MAX_STEPS_TOKENS,
+                "steps block of {n} tokens exceeds the {MAX_STEPS_TOKENS}-token limit — \
+                 split the stream into smaller requests"
+            );
             let mut xs = Vec::new();
             let mut width: Option<usize> = None;
             for (r, row) in rows.iter().enumerate() {
@@ -686,6 +1011,58 @@ fn parse_request(line: &str) -> Result<WireOp> {
     }
 }
 
+/// Serve one `steps` request whose reply would exceed the block bound:
+/// the token block is executed in STEPS_REPLY_BLOCK-token slices, each
+/// answered by its own reply line — all but the last carrying
+/// `"partial":true` — so reply memory is bounded by the block size, not
+/// by n. For the sending connection the semantics match one giant
+/// reply: the same tokens advance the stream in order, each line's
+/// `t`/`state_bytes` describe the stream after its slice, and an error
+/// line (always final) leaves the stream advanced by the slices that
+/// executed, exactly like a mid-block failure of a plain `steps` call.
+/// One atomicity caveat: the slices are separate executor dispatches,
+/// so ANOTHER connection's op on the same session (close, snapshot,
+/// more steps) may land between slices — a concurrent close turns the
+/// remainder into the error line, and a concurrent snapshot can observe
+/// the stream mid-request. Clients sharing one session across
+/// connections already needed external coordination; this widens the
+/// window, it does not create it. Returns false if the connection died
+/// mid-stream.
+fn stream_steps_blocks(
+    writer: &mut TcpStream,
+    router: &Router,
+    id: u64,
+    xs: &[f32],
+    n: usize,
+) -> bool {
+    let d = xs.len() / n.max(1);
+    let mut off = 0usize;
+    while off < n {
+        let take = STEPS_REPLY_BLOCK.min(n - off);
+        let block = xs[off * d..(off + take) * d].to_vec();
+        let resp = router.dispatch(WireOp::Steps { id, xs: block, n: take });
+        off += take;
+        let failed = resp.is_err();
+        let body = match resp {
+            Ok(Json::Obj(mut fields)) => {
+                if off < n {
+                    fields.insert("partial".to_string(), Json::Bool(true));
+                }
+                Json::Obj(fields).to_string()
+            }
+            Ok(other) => other.to_string(),
+            Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        };
+        if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            return false;
+        }
+        if failed {
+            break; // the error line is final; remaining slices are not sent
+        }
+    }
+    true
+}
+
 fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -700,13 +1077,25 @@ fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>
         if line.trim().is_empty() {
             continue;
         }
-        let resp = parse_request(&line).and_then(|op| router.dispatch(op));
-        let body = match resp {
-            Ok(j) => j.to_string(),
-            Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
-        };
-        if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-            break;
+        match parse_request(&line) {
+            // a steps block too large for one bounded reply streams back
+            // in partial lines instead of materializing a giant one
+            Ok(WireOp::Steps { id, xs, n }) if n > STEPS_REPLY_BLOCK => {
+                if !stream_steps_blocks(&mut writer, router, id, &xs, n) {
+                    break;
+                }
+            }
+            parsed => {
+                let resp = parsed.and_then(|op| router.dispatch(op));
+                let body = match resp {
+                    Ok(j) => j.to_string(),
+                    Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+                };
+                if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
         }
         if router.is_shutdown() {
             break;
@@ -772,9 +1161,16 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         Some(d) => format!("session ttl {}s", d.as_secs()),
         None => "no session ttl".to_string(),
     };
+    let spill = match &cfg.spill_dir {
+        Some(dir) => match cfg.max_resident_sessions {
+            Some(cap) => format!("spill dir {} (max {cap} resident)", dir.display()),
+            None => format!("spill dir {}", dir.display()),
+        },
+        None => "no spill tier".to_string(),
+    };
     println!(
-        "[serve] listening on {} ({} native executor shard(s); {ttl}; line-delimited JSON; \
-         ops: create/step/steps/close/stats/shutdown)",
+        "[serve] listening on {} ({} native executor shard(s); {ttl}; {spill}; \
+         line-delimited JSON; ops: create/step/steps/snapshot/restore/close/stats/shutdown)",
         server.local_addr()?,
         cfg.shards.max(1)
     );
@@ -816,6 +1212,32 @@ impl Client {
             bail!("server closed the connection");
         }
         Json::parse(buf.trim()).map_err(|e| anyhow!("bad reply {buf:?}: {e}"))
+    }
+
+    /// Send one request and read reply lines until the final one (the
+    /// first without `"partial":true`) — how a large `steps` block is
+    /// consumed. Returns every reply object in order; an error reply
+    /// (always final) becomes `Err` after any partial replies were
+    /// already folded in by the caller's stream position.
+    pub fn call_streamed(&mut self, line: &str) -> Result<Vec<Json>> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut replies = Vec::new();
+        loop {
+            let mut buf = String::new();
+            if self.reader.read_line(&mut buf)? == 0 {
+                bail!("server closed the connection");
+            }
+            let j = Json::parse(buf.trim()).map_err(|e| anyhow!("bad reply {buf:?}: {e}"))?;
+            if let Some(e) = j.get("error").and_then(Json::as_str) {
+                bail!("server error: {e}");
+            }
+            let partial = matches!(j.get("partial"), Some(Json::Bool(true)));
+            replies.push(j);
+            if !partial {
+                return Ok(replies);
+            }
+        }
     }
 }
 
@@ -935,6 +1357,14 @@ mod tests {
     /// plus the `try_recv` drain serves them as ONE coalesced batch —
     /// the deterministic way to exercise the batched path.
     fn run_drained(requests: Vec<Request>, ttl: Option<Duration>) -> Vec<mpsc::Receiver<Reply>> {
+        run_drained_spill(requests, ttl, None)
+    }
+
+    fn run_drained_spill(
+        requests: Vec<Request>,
+        ttl: Option<Duration>,
+        spill: Option<SpillTier>,
+    ) -> Vec<mpsc::Receiver<Reply>> {
         let (tx, rx) = mpsc::channel();
         let mut receivers = Vec::new();
         for req in requests {
@@ -943,7 +1373,7 @@ mod tests {
             receivers.push(rrx);
         }
         drop(tx);
-        run_executor(NativeFactory { channels: 2 }, rx, ttl);
+        run_executor(NativeFactory { channels: 2 }, rx, ttl, spill);
         receivers
     }
 
@@ -1040,7 +1470,7 @@ mod tests {
         let ttl = Duration::from_millis(1000);
         let (tx, rx) = mpsc::channel();
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl))
+            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), None)
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1068,12 +1498,230 @@ mod tests {
         exec.join().unwrap();
     }
 
+    fn mem_spill(max_resident: Option<usize>) -> Option<SpillTier> {
+        Some(SpillTier { store: Box::new(crate::persist::MemStore::new()), max_resident })
+    }
+
+    #[test]
+    fn duplicate_create_is_a_structured_error() {
+        // a `create` landing on a live id must refuse, not clobber: the
+        // original session keeps its stream position
+        let x = vec![0.5f32, -1.0];
+        let replies = run_drained(
+            vec![
+                Request::Create { id: 7, kind: "aaren".into() },
+                Request::Step { id: 7, x: x.clone() },
+                Request::Create { id: 7, kind: "tf".into() }, // duplicate
+                Request::Step { id: 7, x: x.clone() },        // stream continues at t=2
+                Request::Shutdown,
+            ],
+            None,
+        );
+        value_reply(&replies[0]);
+        assert_eq!(value_reply(&replies[1]).usize_field("t").unwrap(), 1);
+        let err = match replies[2].recv().unwrap() {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("duplicate create must be refused"),
+        };
+        assert!(err.contains("already exists"), "got: {err}");
+        assert_eq!(value_reply(&replies[3]).usize_field("t").unwrap(), 2, "state was clobbered");
+    }
+
+    #[test]
+    fn ttl_sweep_spills_and_touch_restores() {
+        // generous ttl (vs the instants between adjacent calls) so a CI
+        // scheduler stall cannot spill a session the test expects
+        // resident; the sleeps below are >2x the ttl so the sweeps the
+        // test DOES expect are just as robust
+        let ttl = Duration::from_millis(800);
+        let (tx, rx) = mpsc::channel();
+        let exec = std::thread::spawn(move || {
+            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), mem_spill(None))
+        });
+        let call = |req: Request| -> Reply {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx.recv().unwrap()
+        };
+        call(Request::Create { id: 1, kind: "aaren".into() }).unwrap();
+        call(Request::Step { id: 1, x: vec![0.5, -0.25] }).unwrap();
+        // idle past the ttl: the sweep must SPILL, not destroy
+        std::thread::sleep(Duration::from_millis(2000));
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, spilled, .. } => {
+                assert_eq!(sessions, 0, "idle session should no longer be resident");
+                assert_eq!(spilled, 1, "idle session should be in the spill store");
+            }
+            _ => panic!("non-stats reply"),
+        }
+        // duplicate create against the SPILLED id must also refuse
+        assert!(call(Request::Create { id: 1, kind: "aaren".into() }).is_err());
+        // the next touch restores it with its stream position intact
+        match call(Request::Step { id: 1, x: vec![0.5, -0.25] }).unwrap() {
+            Response::Value(j) => assert_eq!(j.usize_field("t").unwrap(), 2),
+            _ => panic!("non-value reply"),
+        }
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, spilled, .. } => {
+                assert_eq!((sessions, spilled), (1, 0), "restore must leave the store");
+            }
+            _ => panic!("non-stats reply"),
+        }
+        // close of a spilled session deletes the snapshot
+        std::thread::sleep(Duration::from_millis(2000));
+        assert!(call(Request::Close { id: 1 }).is_ok());
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, spilled, .. } => assert_eq!((sessions, spilled), (0, 0)),
+            _ => panic!("non-stats reply"),
+        }
+        let _ = call(Request::Shutdown);
+        exec.join().unwrap();
+    }
+
+    #[test]
+    fn snapshot_and_restore_ops_work_inside_a_drain() {
+        // snapshot a live session mid-drain, then restore the same blob
+        // under a new id: the twin continues from the captured t
+        let x = vec![1.0f32, 0.25];
+        let first = run_drained(
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Step { id: 1, x: x.clone() },
+                Request::Snapshot { id: 1 },
+                Request::Shutdown,
+            ],
+            None,
+        );
+        value_reply(&first[0]);
+        value_reply(&first[1]);
+        let snap = value_reply(&first[2]);
+        assert_eq!(snap.str_field("kind").unwrap(), "aaren");
+        assert_eq!(snap.usize_field("t").unwrap(), 1);
+        assert_eq!(snap.usize_field("channels").unwrap(), 2);
+        let blob = b64::decode(snap.str_field("state").unwrap()).unwrap();
+        assert_eq!(snap.usize_field("bytes").unwrap(), blob.len());
+
+        let second = run_drained(
+            vec![
+                Request::Restore { id: 9, blob },
+                Request::Step { id: 9, x: x.clone() },
+                Request::Snapshot { id: 99 }, // unknown session
+                Request::Shutdown,
+            ],
+            None,
+        );
+        let restored = value_reply(&second[0]);
+        assert_eq!(restored.usize_field("id").unwrap(), 9);
+        assert_eq!(restored.usize_field("t").unwrap(), 1);
+        assert_eq!(value_reply(&second[1]).usize_field("t").unwrap(), 2);
+        assert!(second[2].recv().unwrap().is_err());
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_blobs() {
+        let mut session = NativeAarenSession::new(2);
+        session.step(&[0.5, 0.5]).unwrap();
+        let mut blob = StreamSession::snapshot(&session).unwrap();
+        let n = blob.len();
+        blob[n - 6] ^= 0xFF;
+        let replies = run_drained(
+            vec![Request::Restore { id: 5, blob }, Request::Shutdown],
+            None,
+        );
+        let err = match replies[0].recv().unwrap() {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("corrupt blob must be refused"),
+        };
+        assert!(err.contains("crc") || err.contains("corrupt"), "got: {err}");
+    }
+
+    #[test]
+    fn lru_cap_enforced_between_drains() {
+        let (tx, rx) = mpsc::channel();
+        let exec = std::thread::spawn(move || {
+            run_executor(NativeFactory { channels: 2 }, rx, None, mem_spill(Some(1)))
+        });
+        let call = |req: Request| -> Reply {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx.recv().unwrap()
+        };
+        for id in 1..=3u64 {
+            call(Request::Create { id, kind: "aaren".into() }).unwrap();
+            // separate calls = separate drains, so the cap runs after each
+        }
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, spilled, .. } => {
+                assert_eq!(sessions, 1, "cap must keep exactly one resident");
+                assert_eq!(spilled, 2, "the two coldest must be spilled");
+            }
+            _ => panic!("non-stats reply"),
+        }
+        // every session still serves; restoring one spills another
+        for id in 1..=3u64 {
+            match call(Request::Step { id, x: vec![0.1, 0.2] }).unwrap() {
+                Response::Value(j) => assert_eq!(j.usize_field("t").unwrap(), 1),
+                _ => panic!("non-value reply"),
+            }
+        }
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, spilled, .. } => assert_eq!((sessions, spilled), (1, 2)),
+            _ => panic!("non-stats reply"),
+        }
+        let _ = call(Request::Shutdown);
+        exec.join().unwrap();
+    }
+
+    #[test]
+    fn parses_persistence_requests() {
+        match parse_request(r#"{"op":"create","kind":"aaren","id":42}"#).unwrap() {
+            WireOp::Create { id, .. } => assert_eq!(id, Some(42)),
+            _ => panic!("wrong variant"),
+        }
+        assert!(parse_request(r#"{"op":"create","kind":"aaren","id":"x"}"#).is_err());
+        match parse_request(r#"{"op":"snapshot","id":3}"#).unwrap() {
+            WireOp::Snapshot { id } => assert_eq!(id, 3),
+            _ => panic!("wrong variant"),
+        }
+        // restore round-trips a real codec blob through base64
+        let blob = codec::encode(&codec::Snapshot {
+            backend: codec::BackendTag::Aaren,
+            channels: 2,
+            tokens_seen: 4,
+            state: vec![0.0; 6],
+        });
+        let line = format!(r#"{{"op":"restore","state":"{}"}}"#, b64::encode(&blob));
+        match parse_request(&line).unwrap() {
+            WireOp::Restore { blob: got } => assert_eq!(got, blob),
+            _ => panic!("wrong variant"),
+        }
+        assert!(parse_request(r#"{"op":"restore","state":"!!!"}"#).is_err());
+        assert!(parse_request(r#"{"op":"restore"}"#).is_err());
+    }
+
+    #[test]
+    fn absurd_steps_blocks_are_rejected_at_parse() {
+        // one token over the limit: rejected before any float conversion
+        let rows = "[],".repeat(MAX_STEPS_TOKENS).trim_end_matches(',').to_string() + ",[]";
+        let line = format!(r#"{{"op":"steps","id":1,"xs":[{rows}]}}"#);
+        let err = parse_request(&line).unwrap_err();
+        assert!(format!("{err}").contains("token limit"), "got: {err}");
+        // exactly at the limit parses fine (empty rows: zero width)
+        let rows = "[],".repeat(MAX_STEPS_TOKENS).trim_end_matches(',').to_string();
+        let line = format!(r#"{{"op":"steps","id":1,"xs":[{rows}]}}"#);
+        match parse_request(&line).unwrap() {
+            WireOp::Steps { n, .. } => assert_eq!(n, MAX_STEPS_TOKENS),
+            _ => panic!("wrong variant"),
+        }
+    }
+
     #[test]
     fn parses_protocol_requests() {
         match parse_request(r#"{"op":"create","kind":"aaren"}"#).unwrap() {
-            WireOp::Create { kind, backend } => {
+            WireOp::Create { kind, backend, id } => {
                 assert_eq!(kind, "aaren");
                 assert_eq!(backend, Backend::Native);
+                assert_eq!(id, None);
             }
             _ => panic!("wrong variant"),
         }
@@ -1111,6 +1759,8 @@ mod tests {
             channels: 4,
             shards,
             session_ttl: None,
+            spill_dir: None,
+            max_resident_sessions: None,
             artifacts: None,
         };
         Router::start(&cfg).unwrap()
@@ -1122,7 +1772,11 @@ mod tests {
         let mut ids = Vec::new();
         for _ in 0..5 {
             let r = router
-                .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Native })
+                .dispatch(WireOp::Create {
+                    kind: "aaren".into(),
+                    backend: Backend::Native,
+                    id: None,
+                })
                 .unwrap();
             ids.push(r.usize_field("id").unwrap() as u64);
         }
@@ -1146,10 +1800,46 @@ mod tests {
     }
 
     #[test]
+    fn native_id_space_exhaustion_is_loud_not_misrouted() {
+        // regression: an explicit id at the top of the native namespace
+        // used to push the auto-id counter into the HLO range, where the
+        // next created session routed to the (absent) HLO executor on
+        // every later request and became unreachable
+        let router = test_router(1);
+        let top = HLO_ID_BASE - 1;
+        let r = router
+            .dispatch(WireOp::Create {
+                kind: "aaren".into(),
+                backend: Backend::Native,
+                id: Some(top),
+            })
+            .unwrap();
+        assert_eq!(r.usize_field("id").unwrap() as u64, top);
+        // the claimed session itself is fully reachable
+        let r = router.dispatch(WireOp::Step { id: top, x: vec![0.5; 4] }).unwrap();
+        assert_eq!(r.usize_field("t").unwrap(), 1);
+        // the namespace is exhausted: plain creates now fail loudly
+        // instead of minting unreachable ids
+        let err = router
+            .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Native, id: None })
+            .unwrap_err();
+        assert!(format!("{err}").contains("exhausted"), "got: {err}");
+        // ids at or past the HLO base are refused outright
+        assert!(router
+            .dispatch(WireOp::Create {
+                kind: "aaren".into(),
+                backend: Backend::Native,
+                id: Some(HLO_ID_BASE),
+            })
+            .is_err());
+        router.dispatch(WireOp::Shutdown).unwrap();
+    }
+
+    #[test]
     fn hlo_backend_unavailable_without_artifacts() {
         let router = test_router(1);
         let err = router
-            .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Hlo })
+            .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Hlo, id: None })
             .unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("pjrt") || msg.contains("artifacts"), "got: {msg}");
@@ -1160,11 +1850,11 @@ mod tests {
     fn unknown_kind_is_reported_not_fatal() {
         let router = test_router(1);
         assert!(router
-            .dispatch(WireOp::Create { kind: "mamba".into(), backend: Backend::Native })
+            .dispatch(WireOp::Create { kind: "mamba".into(), backend: Backend::Native, id: None })
             .is_err());
         // the executor is still alive and serving
         let r = router
-            .dispatch(WireOp::Create { kind: "tf".into(), backend: Backend::Native })
+            .dispatch(WireOp::Create { kind: "tf".into(), backend: Backend::Native, id: None })
             .unwrap();
         assert!(r.usize_field("id").unwrap() >= 1);
         router.dispatch(WireOp::Shutdown).unwrap();

@@ -26,6 +26,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::attention;
+use crate::persist::codec::{self, BackendTag, Snapshot};
 use crate::scan::{fold_token, BatchScanBuffer, Muw};
 
 /// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
@@ -89,6 +90,17 @@ pub trait StreamSession {
     fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
         None
     }
+
+    /// Serialize this session's full live state as a `persist::codec`
+    /// blob — the spill tier's eviction path and the `snapshot` wire op.
+    /// Restoring the blob (via `SessionFactory::restore`, the object-safe
+    /// factory hook) yields a session whose future outputs are bitwise
+    /// identical to this one's. The default refuses: backends whose state
+    /// lives off-host (compiled-HLO device literals) don't snapshot yet,
+    /// and the TTL sweep falls back to plain eviction for them.
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        bail!("this session backend does not support snapshots")
+    }
 }
 
 /// Rust-native Aaren streaming session: the O(1)-state fallback. Holds a
@@ -151,6 +163,53 @@ impl NativeAarenSession {
         Ok(self.acc.output())
     }
 
+    /// Export the session's complete state as a codec [`Snapshot`]:
+    /// payload = q (d floats) then the (m, u, w) accumulator (1 + 1 + d
+    /// floats). `scale` is derived from d and `tokens_seen` travels in
+    /// the header, so this is the WHOLE session — 2·d + 2 floats,
+    /// constant in stream length, exactly the paper's §3.3 claim.
+    pub fn export_state(&self) -> Snapshot {
+        let d = self.q.len();
+        let mut state = Vec::with_capacity(2 * d + 2);
+        state.extend_from_slice(&self.q);
+        state.push(self.acc.m);
+        state.push(self.acc.u);
+        state.extend_from_slice(&self.acc.w);
+        Snapshot {
+            backend: BackendTag::Aaren,
+            channels: d,
+            tokens_seen: self.t as u64,
+            state,
+        }
+    }
+
+    /// Rebuild a session from [`export_state`](Self::export_state)'s
+    /// snapshot. Bitwise inverse: every f32 (query, accumulator) is
+    /// adopted exactly, so the restored session's outputs continue the
+    /// stream bit-for-bit.
+    pub fn import_state(snap: &Snapshot) -> Result<NativeAarenSession> {
+        ensure!(snap.backend == BackendTag::Aaren, "snapshot holds a {:?} session", snap.backend);
+        let d = snap.channels;
+        ensure!(
+            snap.state.len() == 2 * d + 2,
+            "aaren snapshot payload has {} floats, {d} channels need {}",
+            snap.state.len(),
+            2 * d + 2
+        );
+        let q = snap.state[..d].to_vec();
+        let acc = Muw {
+            m: snap.state[d],
+            u: snap.state[d + 1],
+            w: snap.state[d + 2..].to_vec(),
+        };
+        Ok(NativeAarenSession {
+            q,
+            acc,
+            scale: 1.0 / (d.max(1) as f32).sqrt(),
+            t: usize::try_from(snap.tokens_seen)?,
+        })
+    }
+
     /// Feed a flat (n, channels) token block; outputs are appended to
     /// `out` with one reservation — no per-step `Vec` on the hot path.
     pub fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
@@ -193,6 +252,10 @@ impl StreamSession for NativeAarenSession {
 
     fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
         Some(self)
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        Ok(codec::encode(&self.export_state()))
     }
 }
 
@@ -310,6 +373,65 @@ impl NativeTfSession {
         2 * self.cap_tokens * self.channels * std::mem::size_of::<f32>()
     }
 
+    /// The cache capacity a session that has folded `t` tokens holds:
+    /// the smallest rung of the `TF_BUCKETS`-then-doubling ladder ≥ t
+    /// (growth happens at step time when t reaches the current rung, so
+    /// t == rung means the growth is still pending). Restores re-derive
+    /// capacity with this instead of persisting it, keeping the codec
+    /// payload pure content and the `state_bytes` observable identical
+    /// between a restored session and a never-evicted twin.
+    fn cap_for_tokens(t: usize) -> usize {
+        let mut cap = TF_BUCKETS[0];
+        while cap < t {
+            cap = TF_BUCKETS
+                .iter()
+                .copied()
+                .find(|&b| b > cap)
+                .unwrap_or(2 * cap);
+        }
+        cap
+    }
+
+    /// Export the full live state: payload = the t·d live k rows then the
+    /// t·d live v rows (contents only — reserved-but-unused cache
+    /// capacity is re-derived on import).
+    pub fn export_state(&self) -> Snapshot {
+        let mut state = Vec::with_capacity(self.k.len() + self.v.len());
+        state.extend_from_slice(&self.k);
+        state.extend_from_slice(&self.v);
+        Snapshot {
+            backend: BackendTag::Tf,
+            channels: self.channels,
+            tokens_seen: self.t as u64,
+            state,
+        }
+    }
+
+    /// Rebuild from [`export_state`](Self::export_state)'s snapshot;
+    /// bitwise inverse (outputs depend only on the k/v contents, which
+    /// are adopted bit-for-bit).
+    pub fn import_state(snap: &Snapshot) -> Result<NativeTfSession> {
+        ensure!(snap.backend == BackendTag::Tf, "snapshot holds a {:?} session", snap.backend);
+        let d = snap.channels;
+        let t = usize::try_from(snap.tokens_seen)?;
+        let rows = t
+            .checked_mul(d)
+            .filter(|&n| n.checked_mul(2) == Some(snap.state.len()))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "tf snapshot payload has {} floats, t={t} × {d} channels need {}",
+                    snap.state.len(),
+                    2usize.saturating_mul(t.saturating_mul(d))
+                )
+            })?;
+        let cap_tokens = Self::cap_for_tokens(t);
+        let mut k = Vec::with_capacity(cap_tokens * d);
+        k.extend_from_slice(&snap.state[..rows]);
+        let mut v = Vec::with_capacity(cap_tokens * d);
+        v.extend_from_slice(&snap.state[rows..]);
+        Ok(NativeTfSession { channels: d, k, v, cap_tokens, t })
+    }
+
     pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         if x.len() != self.channels {
             bail!("token has {} channels, session expects {}", x.len(), self.channels);
@@ -355,6 +477,10 @@ impl StreamSession for NativeTfSession {
 
     fn channels(&self) -> usize {
         NativeTfSession::channels(self)
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        Ok(codec::encode(&self.export_state()))
     }
 }
 
@@ -830,6 +956,95 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise_for_both_kinds() {
+        // the persistence tentpole's core property, at the session layer:
+        // snapshot → codec blob → restore, then feed both twins the same
+        // tail — every output f32 must be bit-identical, as must t and
+        // state_bytes, at every step
+        prop::check("snapshot/restore == uninterrupted stream", 24, |rng| {
+            let d = 1 + rng.below(8);
+            let warm = rng.below(48);
+            let tail = 1 + rng.below(24);
+            let makes: [fn(usize) -> Box<dyn StreamSession>; 2] = [
+                |d| Box::new(NativeAarenSession::new(d)),
+                |d| Box::new(NativeTfSession::new(d)),
+            ];
+            for make in makes {
+                let mut original = make(d);
+                for _ in 0..warm {
+                    let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                    original.step(&x).map_err(|e| e.to_string())?;
+                }
+                let blob = original.snapshot().map_err(|e| e.to_string())?;
+                let snap = codec::decode(&blob).map_err(|e| e.to_string())?;
+                let mut restored: Box<dyn StreamSession> = match snap.backend {
+                    BackendTag::Aaren => Box::new(
+                        NativeAarenSession::import_state(&snap).map_err(|e| e.to_string())?,
+                    ),
+                    BackendTag::Tf => Box::new(
+                        NativeTfSession::import_state(&snap).map_err(|e| e.to_string())?,
+                    ),
+                };
+                if restored.tokens_seen() != original.tokens_seen()
+                    || restored.state_bytes() != original.state_bytes()
+                    || restored.channels() != d
+                {
+                    return Err("restored observables diverged".to_string());
+                }
+                for s in 0..tail {
+                    let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                    let a = original.step(&x).map_err(|e| e.to_string())?;
+                    let b = restored.step(&x).map_err(|e| e.to_string())?;
+                    for (i, (ya, yb)) in a.iter().zip(b.iter()).enumerate() {
+                        if ya.to_bits() != yb.to_bits() {
+                            return Err(format!("tail step {s}, channel {i}: bits diverged"));
+                        }
+                    }
+                    if restored.state_bytes() != original.state_bytes() {
+                        return Err(format!("tail step {s}: state_bytes diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn import_rejects_mismatched_snapshots() {
+        let mut aaren = NativeAarenSession::new(3);
+        aaren.step(&[0.5, -0.5, 1.0]).unwrap();
+        let mut snap = aaren.export_state();
+        // wrong backend for the importer
+        assert!(NativeTfSession::import_state(&snap).is_err());
+        // payload length inconsistent with channels
+        snap.state.pop();
+        assert!(NativeAarenSession::import_state(&snap).is_err());
+        // tf payload inconsistent with tokens_seen
+        let mut tf = NativeTfSession::new(2);
+        tf.step(&[1.0, 2.0]).unwrap();
+        let mut snap = tf.export_state();
+        snap.tokens_seen = 5;
+        assert!(NativeTfSession::import_state(&snap).is_err());
+    }
+
+    #[test]
+    fn tf_cap_rederivation_matches_live_growth() {
+        // drive a live session across every rung of the ladder and the
+        // first geometric doublings; the restore-time capacity rule must
+        // reproduce the live capacity exactly at every t
+        let mut live = NativeTfSession::new(1);
+        assert_eq!(NativeTfSession::cap_for_tokens(0), live.cap_tokens);
+        for t in 1..=(4 * TF_BUCKETS[TF_BUCKETS.len() - 1] + 3) {
+            live.step(&[0.5]).unwrap();
+            assert_eq!(
+                NativeTfSession::cap_for_tokens(t),
+                live.cap_tokens,
+                "capacity diverged at t={t}"
+            );
+        }
     }
 
     #[test]

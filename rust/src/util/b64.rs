@@ -1,0 +1,110 @@
+//! Standard base64 (RFC 4648, padded) — the wire encoding for session
+//! snapshot blobs. The offline crate set has no base64 crate, so the
+//! codec is implemented in-tree like the JSON substrate.
+
+use anyhow::{bail, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        let sextets = [(n >> 18) & 63, (n >> 12) & 63, (n >> 6) & 63, n & 63];
+        for (i, s) in sextets.into_iter().enumerate() {
+            if i <= chunk.len() {
+                out.push(ALPHABET[s as usize] as char);
+            } else {
+                out.push('=');
+            }
+        }
+    }
+    out
+}
+
+/// Decode padded base64 (whitespace is not tolerated — blobs travel as
+/// single JSON string fields).
+pub fn decode(text: &str) -> Result<Vec<u8>> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        bail!("base64 length {} is not a multiple of 4", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (ci, chunk) in bytes.chunks(4).enumerate() {
+        let mut n = 0u32;
+        let mut pad = 0usize;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = match c {
+                b'A'..=b'Z' => c - b'A',
+                b'a'..=b'z' => c - b'a' + 26,
+                b'0'..=b'9' => c - b'0' + 52,
+                b'+' => 62,
+                b'/' => 63,
+                b'=' if i >= 2 => {
+                    pad += 1;
+                    0
+                }
+                other => bail!("invalid base64 byte {:?} at offset {}", other as char, ci * 4 + i),
+            };
+            if pad > 0 && c != b'=' {
+                bail!("base64 data after padding at offset {}", ci * 4 + i);
+            }
+            n = (n << 6) | u32::from(v);
+        }
+        if pad > 0 && ci != bytes.len() / 4 - 1 {
+            bail!("base64 padding before the final group");
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_vectors() {
+        // RFC 4648 §10 test vectors
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let n = rng.below(120);
+            let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode("Zg=").is_err()); // bad length
+        assert!(decode("Zm=v").is_err()); // data after padding
+        assert!(decode("Zg==Zg==").is_err()); // padding before final group
+        assert!(decode("Z!==").is_err()); // bad alphabet
+        assert!(decode("=g==").is_err()); // padding in the first two slots
+    }
+}

@@ -3,6 +3,7 @@
 //! `xla` crate's transitive closure, so these are implemented in-tree
 //! (see DESIGN.md §Substrates).
 
+pub mod b64;
 pub mod bench;
 pub mod cli;
 pub mod json;

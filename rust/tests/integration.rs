@@ -203,6 +203,8 @@ fn session_manager_protocol_end_to_end() {
         channels: 8,
         shards: 1,
         session_ttl: None,
+        spill_dir: None,
+        max_resident_sessions: None,
         artifacts: Some(dir),
     };
     let server = Server::bind(&cfg).unwrap();

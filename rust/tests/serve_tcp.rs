@@ -10,26 +10,50 @@ use aaren::util::json::Json;
 
 type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
 
-fn start_with_ttl(
-    channels: usize,
-    shards: usize,
-    session_ttl: Option<std::time::Duration>,
-) -> (std::net::SocketAddr, ServerHandle) {
-    let cfg = ServeConfig {
+fn base_cfg(channels: usize, shards: usize) -> ServeConfig {
+    ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         channels,
         shards,
-        session_ttl,
+        session_ttl: None,
+        spill_dir: None,
+        max_resident_sessions: None,
         artifacts: None,
-    };
-    let server = Server::bind(&cfg).expect("bind loopback");
+    }
+}
+
+fn start_cfg(cfg: &ServeConfig) -> (std::net::SocketAddr, ServerHandle) {
+    let server = Server::bind(cfg).expect("bind loopback");
     let addr = server.local_addr().expect("local addr");
     let handle = std::thread::spawn(move || server.run());
     (addr, handle)
 }
 
+fn start_with_ttl(
+    channels: usize,
+    shards: usize,
+    session_ttl: Option<std::time::Duration>,
+) -> (std::net::SocketAddr, ServerHandle) {
+    let mut cfg = base_cfg(channels, shards);
+    cfg.session_ttl = session_ttl;
+    start_cfg(&cfg)
+}
+
 fn start(channels: usize, shards: usize) -> (std::net::SocketAddr, ServerHandle) {
     start_with_ttl(channels, shards, None)
+}
+
+/// Unique scratch dir for spill-tier tests (std has no tempdir crate).
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "aaren-tcp-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
 }
 
 fn step_line(id: usize, x: &[f32]) -> String {
@@ -217,6 +241,333 @@ fn idle_sessions_are_evicted_after_the_ttl() {
     client.call(r#"{"op":"stats"}"#).unwrap();
     let stats = client.call(r#"{"op":"stats"}"#).unwrap();
     assert_eq!(stats.usize_field("sessions").unwrap(), 0, "idle sessions must be swept");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// Exactly-representable tokens: every value is a small dyadic rational,
+/// so JSON f64 → f32 → printed f64 round-trips are lossless and output
+/// comparisons can demand BIT equality, not closeness.
+fn dyadic_token(i: usize, channels: usize) -> Vec<f32> {
+    (0..channels).map(|c| ((i * 7 + c * 3) % 13) as f32 * 0.25 - 1.5).collect()
+}
+
+fn ys_as_f64(reply: &Json) -> Vec<Vec<f64>> {
+    reply
+        .get("ys")
+        .and_then(Json::as_arr)
+        .expect("ys")
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+        .collect()
+}
+
+fn as_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|x| *x as f64).collect()
+}
+
+/// Drive a local reference session through the same tokens the server
+/// saw and return the expected outputs (exact, as f64 rows).
+fn control_outputs(kind: &str, channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    use aaren::serve::{NativeAarenSession, NativeTfSession, StreamSession};
+    let mut session: Box<dyn StreamSession> = match kind {
+        "aaren" => Box::new(NativeAarenSession::new(channels)),
+        _ => Box::new(NativeTfSession::new(channels)),
+    };
+    tokens.iter().map(|x| as_f64(&session.step(x).unwrap())).collect()
+}
+
+#[test]
+fn snapshot_restore_roundtrip_is_bitwise_on_one_server() {
+    // snapshot a live stream, restore it as a second session on the same
+    // server, then feed both the same tail: every output must be
+    // bit-identical, and t must continue from the snapshot point
+    let channels = 4;
+    let (addr, server) = start(channels, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let warm: Vec<Vec<f32>> = (0..9).map(|i| dyadic_token(i, channels)).collect();
+    for x in &warm {
+        client.call(&step_line(id, x)).unwrap();
+    }
+    let snap = client.call(&format!(r#"{{"op":"snapshot","id":{id}}}"#)).unwrap();
+    assert_eq!(snap.str_field("kind").unwrap(), "aaren");
+    assert_eq!(snap.usize_field("t").unwrap(), warm.len());
+    assert_eq!(snap.usize_field("channels").unwrap(), channels);
+    let blob = snap.str_field("state").unwrap().to_string();
+
+    let restored = client
+        .call(&format!(r#"{{"op":"restore","state":"{blob}"}}"#))
+        .unwrap();
+    let twin = restored.usize_field("id").unwrap();
+    assert_ne!(twin, id, "restore must create a NEW session");
+    assert_eq!(restored.usize_field("t").unwrap(), warm.len());
+    assert_eq!(restored.str_field("kind").unwrap(), "aaren");
+
+    for (i, x) in (0..7).map(|i| (i, dyadic_token(100 + i, channels))) {
+        let a = client.call(&step_line(id, &x)).unwrap();
+        let b = client.call(&step_line(twin, &x)).unwrap();
+        assert_eq!(
+            a.get("y").unwrap().to_string(),
+            b.get("y").unwrap().to_string(),
+            "tail step {i}: restored twin diverged"
+        );
+        assert_eq!(a.usize_field("t").unwrap(), b.usize_field("t").unwrap());
+        assert_eq!(
+            a.usize_field("state_bytes").unwrap(),
+            b.usize_field("state_bytes").unwrap()
+        );
+    }
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn ttl_spill_then_touch_resumes_bitwise() {
+    // the tentpole acceptance: a session spilled to disk by the TTL sweep
+    // and then touched again must resume with outputs bitwise identical
+    // to a never-evicted twin fed the same token stream (the local
+    // control session), for BOTH native kinds
+    let channels = 3;
+    let ttl = std::time::Duration::from_millis(300);
+    let spill = scratch_dir("spill-touch");
+    let mut cfg = base_cfg(channels, 2);
+    cfg.session_ttl = Some(ttl);
+    cfg.spill_dir = Some(spill.clone());
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+
+    let head: Vec<Vec<f32>> = (0..11).map(|i| dyadic_token(i, channels)).collect();
+    let tail: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(50 + i, channels)).collect();
+    let mut ids = Vec::new();
+    for kind in ["aaren", "tf"] {
+        let id = client
+            .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+        client.call(&steps_line(id, &refs)).unwrap();
+        ids.push((kind, id));
+    }
+    // idle past the TTL: the sweep must spill both sessions to disk
+    std::thread::sleep(ttl + std::time::Duration::from_millis(700));
+    client.call(r#"{"op":"stats"}"#).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 0, "idle sessions still resident");
+    assert_eq!(stats.usize_field("spilled").unwrap(), 2, "sessions destroyed, not spilled");
+
+    // touching a spilled session restores it transparently — and the
+    // resumed stream is bitwise the control's
+    for (kind, id) in ids {
+        let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+        let want = control_outputs(kind, channels, &all);
+        let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+        let reply = client.call(&steps_line(id, &refs)).unwrap();
+        assert_eq!(
+            reply.usize_field("t").unwrap(),
+            all.len(),
+            "kind {kind}: t must resume where the stream left off"
+        );
+        assert_eq!(
+            ys_as_f64(&reply),
+            want[head.len()..].to_vec(),
+            "kind {kind}: resumed outputs diverged from the never-evicted control"
+        );
+    }
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn spilled_sessions_survive_a_server_restart() {
+    let channels = 2;
+    let spill = scratch_dir("spill-restart");
+    let mut cfg = base_cfg(channels, 2);
+    cfg.session_ttl = Some(std::time::Duration::from_millis(200));
+    cfg.spill_dir = Some(spill.clone());
+
+    let head: Vec<Vec<f32>> = (0..5).map(|i| dyadic_token(i, channels)).collect();
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+    client.call(&steps_line(id, &refs)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(900));
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("spilled").unwrap(), 1);
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+
+    // a fresh server over the same spill dir adopts the snapshot: the
+    // session resumes, and new ids never collide with the surviving one
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("spilled").unwrap(), 1, "snapshot not adopted after restart");
+    let fresh =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    assert!(fresh > id, "id counter must be seeded past surviving snapshots");
+    let tail: Vec<Vec<f32>> = (0..4).map(|i| dyadic_token(30 + i, channels)).collect();
+    let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+    let want = control_outputs("aaren", channels, &all);
+    let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+    let reply = client.call(&steps_line(id, &refs)).unwrap();
+    assert_eq!(reply.usize_field("t").unwrap(), all.len());
+    assert_eq!(ys_as_f64(&reply), want[head.len()..].to_vec());
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}
+
+/// Kill-on-drop wrapper so a failing assertion can't leak a spawned
+/// server process.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn snapshot_migrates_across_two_server_processes() {
+    // the migration acceptance path, with REAL process isolation: spawn
+    // the aaren binary twice, snapshot a stream on server A, restore it
+    // on server B, and check B continues bitwise where A stood
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    let channels = 4;
+    let spawn_server = || {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_aaren"))
+            .args(["serve", "--addr", "127.0.0.1:0", "--channels", "4", "--shards", "2"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn aaren serve");
+        let mut banner = String::new();
+        std::io::BufReader::new(child.stdout.take().expect("stdout piped"))
+            .read_line(&mut banner)
+            .expect("read listen banner");
+        let addr = banner
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("no address in banner {banner:?}"))
+            .parse::<std::net::SocketAddr>()
+            .expect("parse listen address");
+        (ChildGuard(child), addr)
+    };
+
+    let head: Vec<Vec<f32>> = (0..10).map(|i| dyadic_token(i, channels)).collect();
+    let tail: Vec<Vec<f32>> = (0..6).map(|i| dyadic_token(200 + i, channels)).collect();
+    let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+    let want = control_outputs("aaren", channels, &all);
+
+    // server process A: stream the head, snapshot, shut down
+    let (proc_a, addr_a) = spawn_server();
+    let mut client = Client::connect(&addr_a).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+    client.call(&steps_line(id, &refs)).unwrap();
+    let snap = client.call(&format!(r#"{{"op":"snapshot","id":{id}}}"#)).unwrap();
+    let blob = snap.str_field("state").unwrap().to_string();
+    assert_eq!(snap.usize_field("t").unwrap(), head.len());
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    drop(proc_a); // server A is gone; only the blob survives
+
+    // server process B: restore the blob, stream the tail
+    let (proc_b, addr_b) = spawn_server();
+    let mut client = Client::connect(&addr_b).unwrap();
+    let restored = client
+        .call(&format!(r#"{{"op":"restore","state":"{blob}"}}"#))
+        .unwrap();
+    let twin = restored.usize_field("id").unwrap();
+    assert_eq!(restored.usize_field("t").unwrap(), head.len());
+    let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+    let reply = client.call(&steps_line(twin, &refs)).unwrap();
+    assert_eq!(reply.usize_field("t").unwrap(), all.len());
+    assert_eq!(
+        ys_as_f64(&reply),
+        want[head.len()..].to_vec(),
+        "migrated stream diverged from the uninterrupted control"
+    );
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    drop(proc_b);
+}
+
+#[test]
+fn duplicate_create_id_is_rejected_over_tcp() {
+    let (addr, server) = start(2, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let r = client.call(r#"{"op":"create","kind":"aaren","id":5}"#).unwrap();
+    assert_eq!(r.usize_field("id").unwrap(), 5);
+    client.call(&step_line(5, &[0.5, 0.25])).unwrap();
+    // same id again: structured error, live state untouched
+    let r = client.call_raw(r#"{"op":"create","kind":"tf","id":5}"#).unwrap();
+    let err = r.str_field("error").unwrap();
+    assert!(err.contains("already exists"), "got: {err}");
+    let r = client.call(&step_line(5, &[0.5, 0.25])).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 2, "duplicate create clobbered the session");
+    // auto-assigned ids skip past claimed ones instead of colliding
+    let fresh = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
+    assert!(fresh > 5, "auto id {fresh} collides with the claimed range");
+    // explicit ids are a native-tier feature
+    let r = client.call_raw(r#"{"op":"create","kind":"aaren","backend":"hlo","id":7}"#).unwrap();
+    assert!(r.get("error").is_some());
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn large_steps_blocks_stream_partial_replies() {
+    // satellite: a steps block beyond STEPS_REPLY_BLOCK is answered in
+    // fixed-size partial reply lines, not one giant materialized reply —
+    // and the streamed outputs are exactly the per-step control's
+    use aaren::serve::STEPS_REPLY_BLOCK;
+    let channels = 2;
+    let (addr, server) = start(channels, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let n = 2 * STEPS_REPLY_BLOCK + 176;
+    let tokens: Vec<Vec<f32>> = (0..n).map(|i| dyadic_token(i, channels)).collect();
+    let refs: Vec<&[f32]> = tokens.iter().map(|x| x.as_slice()).collect();
+    let replies = client.call_streamed(&steps_line(id, &refs)).unwrap();
+    assert_eq!(replies.len(), 3, "expected two partial lines plus the final one");
+    let want = control_outputs("aaren", channels, &tokens);
+    let mut off = 0usize;
+    for (li, reply) in replies.iter().enumerate() {
+        let last = li == replies.len() - 1;
+        assert_eq!(
+            matches!(reply.get("partial"), Some(Json::Bool(true))),
+            !last,
+            "line {li}: wrong partial flag"
+        );
+        let ys = ys_as_f64(reply);
+        assert!(ys.len() <= STEPS_REPLY_BLOCK, "line {li}: reply block exceeds the bound");
+        assert_eq!(
+            ys,
+            want[off..off + ys.len()].to_vec(),
+            "line {li}: streamed outputs diverged from per-step control"
+        );
+        off += ys.len();
+        assert_eq!(reply.usize_field("t").unwrap(), off, "line {li}: t mid-stream");
+    }
+    assert_eq!(off, n, "streamed lines must cover every token exactly once");
+    // the session advanced exactly n tokens, once
+    let r = client.call(&step_line(id, &dyadic_token(999, channels))).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), n + 1);
     client.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
 }
