@@ -12,8 +12,13 @@
 //! baseline. Also records the mixed aaren/tf coalescing scenario
 //! (`mixed_kinds_steps_b16_*`) and the persistence tier's
 //! snapshot→restore→close wire round-trip latency
-//! (`snapshot_restore_roundtrip`). Pass `--quick` (CI) for a shorter
-//! run; AAREN_TOKENS / AAREN_CLIENTS override the workload size.
+//! (`snapshot_restore_roundtrip`), and the resident-lane executor work:
+//! a second server runs with `resident_lanes: false` (the PR 4
+//! gather/scatter drain) and the `resident_vs_scatter_*` records carry
+//! the resident/scatter throughput ratio in `speedup_vs_sequential` —
+//! the acceptance bar is ratio ≥ 1 at b=16. Pass `--quick` (CI) for a
+//! shorter run; AAREN_TOKENS / AAREN_CLIENTS override the workload
+//! size.
 
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -157,6 +162,7 @@ fn main() {
         session_ttl: None,
         spill_dir: None,
         max_resident_sessions: None,
+        resident_lanes: true,
         artifacts: None,
     };
     let server = Server::bind(&cfg).expect("bind");
@@ -184,14 +190,14 @@ fn main() {
 
     // phase 2: single client, BATCH tokens per round-trip (the `steps`
     // op) — the acceptance scenario: >= 3x the per-step baseline
-    let rate = stream_one(&addr, &step_body, tokens, BATCH);
-    let speedup = rate / base_rate;
+    let resident_b16_1 = stream_one(&addr, &step_body, tokens, BATCH);
+    let speedup = resident_b16_1 / base_rate;
     println!(
-        "serve_loopback: steps b={BATCH}      1 client   {rate:>12.0} tokens/s  ({speedup:.1}x \
-         per-step{})",
+        "serve_loopback: steps b={BATCH}      1 client   {resident_b16_1:>12.0} tokens/s  \
+         ({speedup:.1}x per-step{})",
         if speedup >= 3.0 { "" } else { "  ** below the 3x acceptance bar **" }
     );
-    record(&mut records, "batched_steps_b16_1client", tokens, rate, base_rate);
+    record(&mut records, "batched_steps_b16_1client", tokens, resident_b16_1, base_rate);
 
     // phase 3: concurrent clients, per-step, one session each — shard
     // fan-out plus drain coalescing across sessions
@@ -200,15 +206,16 @@ fn main() {
     record(&mut records, &format!("per_step_{clients}clients"), clients * tokens, rate, base_rate);
 
     // phase 4: concurrent clients, batched steps
-    let rate = stream_many(&addr, &step_body, tokens, BATCH, clients);
+    let resident_b16_n = stream_many(&addr, &step_body, tokens, BATCH, clients);
     println!(
-        "serve_loopback: steps b={BATCH}      {clients} clients  {rate:>12.0} tokens/s aggregate"
+        "serve_loopback: steps b={BATCH}      {clients} clients  {resident_b16_n:>12.0} tokens/s \
+         aggregate"
     );
     record(
         &mut records,
         &format!("batched_steps_b16_{clients}clients"),
         clients * tokens,
-        rate,
+        resident_b16_n,
         base_rate,
     );
 
@@ -239,6 +246,57 @@ fn main() {
     record(&mut records, "snapshot_restore_roundtrip", iters, rate, 0.0);
 
     let mut shutdown = Client::connect(&addr).expect("connect");
+    let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+
+    // phase 7: resident lanes vs the PR 4 gather/scatter drain — a
+    // second server runs with resident_lanes disabled and re-measures
+    // the batched scenarios; the resident_vs_scatter records carry
+    // resident_rate / scatter_rate in speedup_vs_sequential (acceptance:
+    // >= 1, residency must not lose to per-drain state copies)
+    let mut scatter_cfg = cfg.clone();
+    scatter_cfg.resident_lanes = false;
+    let scatter_server = Server::bind(&scatter_cfg).expect("bind scatter");
+    let scatter_addr = scatter_server.local_addr().expect("addr");
+    std::thread::spawn(move || scatter_server.run());
+
+    let scatter_b16_1 = stream_one(&scatter_addr, &step_body, tokens, BATCH);
+    let ratio1 = resident_b16_1 / scatter_b16_1;
+    println!(
+        "serve_loopback: scatter b={BATCH}    1 client   {scatter_b16_1:>12.0} tokens/s  \
+         (resident/scatter {ratio1:.2}x{})",
+        if ratio1 >= 1.0 { "" } else { "  ** resident below the scatter baseline **" }
+    );
+    record(&mut records, "scatter_steps_b16_1client", tokens, scatter_b16_1, base_rate);
+    records.push(BenchRecord {
+        name: "resident_vs_scatter_steps_b16_1client".to_string(),
+        n: tokens,
+        d: channels,
+        ns_per_iter: 1e9 / resident_b16_1,
+        speedup_vs_sequential: ratio1,
+    });
+
+    let scatter_b16_n = stream_many(&scatter_addr, &step_body, tokens, BATCH, clients);
+    let ratio_n = resident_b16_n / scatter_b16_n;
+    println!(
+        "serve_loopback: scatter b={BATCH}    {clients} clients  {scatter_b16_n:>12.0} tokens/s \
+         aggregate  (resident/scatter {ratio_n:.2}x)"
+    );
+    record(
+        &mut records,
+        &format!("scatter_steps_b16_{clients}clients"),
+        clients * tokens,
+        scatter_b16_n,
+        base_rate,
+    );
+    records.push(BenchRecord {
+        name: format!("resident_vs_scatter_steps_b16_{clients}clients"),
+        n: clients * tokens,
+        d: channels,
+        ns_per_iter: 1e9 / resident_b16_n,
+        speedup_vs_sequential: ratio_n,
+    });
+
+    let mut shutdown = Client::connect(&scatter_addr).expect("connect");
     let _ = shutdown.call(r#"{"op":"shutdown"}"#);
 
     let out = std::path::Path::new("BENCH_serve.json");

@@ -11,9 +11,10 @@
 //!           --session-ttl-secs N     evict sessions idle longer than N seconds
 //!           --spill-dir DIR          spill evicted sessions to disk instead of dropping
 //!           --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)
+//!           --scatter-drain          disable resident lanes (gather/scatter drains)
 //!           --smoke            loopback create/step/steps/stats round-trip, then exit
 //!   state   export --addr H:P --id N --out FILE   snapshot a live session to a file
-//!           import --addr H:P --file FILE         restore a snapshot as a new session
+//!           import --addr H:P --file FILE [--id N]  restore a snapshot as a new session
 //!           inspect --file FILE                   decode a snapshot offline
 //!   bench   fig5 [+ table1..table4|params|all with pjrt]
 //!   check                      verify artifacts load + run (pjrt)
@@ -94,6 +95,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
         spill_dir: args.flags.get("spill-dir").map(PathBuf::from),
         // 0 (the default) leaves resident count unbounded
         max_resident_sessions: (max_resident > 0).then_some(max_resident),
+        // escape hatch: fall back to the PR 3 gather/scatter drain
+        // (kept for A/B benchmarking; resident lanes are the default)
+        resident_lanes: !args.bool("scatter-drain"),
         artifacts,
     };
     if cfg.max_resident_sessions.is_some() && cfg.spill_dir.is_none() {
@@ -145,7 +149,23 @@ fn state_cmd(args: &Args) -> Result<()> {
             let addr: std::net::SocketAddr =
                 args.str("addr", "127.0.0.1:7878").parse()?;
             let mut client = Client::connect(&addr)?;
-            let line = format!(r#"{{"op":"restore","state":"{}"}}"#, b64::encode(&blob));
+            // --id N asks the server to restore AT that id (refused if it
+            // already exists); without it the server assigns a fresh one.
+            // Parsed strictly: a malformed or zero --id must fail here,
+            // not silently degrade into a fresh-id import
+            let line = match args.flags.get("id") {
+                None => format!(r#"{{"op":"restore","state":"{}"}}"#, b64::encode(&blob)),
+                Some(raw) => {
+                    let id: u64 = raw
+                        .parse()
+                        .ok()
+                        .filter(|&id| id >= 1)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--id must be a positive integer, got {raw:?}")
+                        })?;
+                    format!(r#"{{"op":"restore","state":"{}","id":{id}}}"#, b64::encode(&blob))
+                }
+            };
             let reply = client.call(&line)?;
             println!(
                 "imported {file} as session {} ({} at t={}, {} channels)",
@@ -219,11 +239,12 @@ fn help() {
          --session-ttl-secs N  evict sessions idle > N seconds (default: never)\n                        \
          --spill-dir DIR       spill evicted sessions to disk, restore on touch\n                        \
          --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)\n                        \
+         --scatter-drain       disable resident lanes (PR 3 gather/scatter drains)\n                        \
          --smoke        loopback self-test, then exit\n                        \
          ops: create/step/steps/snapshot/restore/close/stats/shutdown\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \
          state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
-         state import --addr H:P --file F           restore a snapshot as a new session\n  \
+         state import --addr H:P --file F [--id N]  restore a snapshot as a new session\n  \
          state inspect --file F                     decode a snapshot offline\n  \
          bench fig5            streaming memory/time shape (rust-native sessions)\n\n\
          commands needing --features pjrt + compiled artifacts:\n  \

@@ -30,6 +30,17 @@ use crate::persist::codec;
 /// Blob storage for spilled sessions, keyed by session id. Blobs are
 /// `persist::codec` framings; implementations may verify integrity on
 /// load and must never return a corrupt blob as if it were valid.
+///
+/// ```
+/// use aaren::persist::{MemStore, SnapshotStore};
+///
+/// let mut store = MemStore::new();
+/// store.put(7, b"blob").unwrap();
+/// assert_eq!(store.get(7).unwrap().as_deref(), Some(&b"blob"[..]));
+/// assert!(store.contains(7));
+/// assert!(store.remove(7).unwrap());
+/// assert!(store.get(7).unwrap().is_none());
+/// ```
 pub trait SnapshotStore: Send {
     /// Persist `blob` under `id`, replacing any previous snapshot.
     fn put(&mut self, id: u64, blob: &[u8]) -> Result<()>;

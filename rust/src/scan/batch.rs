@@ -40,6 +40,20 @@ use crate::scan::soa::ScanBuffer;
 
 /// B independent (m, u, w) lanes of shared dim `d` in one flat, reusable
 /// time-major SoA allocation.
+///
+/// ```
+/// use aaren::scan::BatchScanBuffer;
+///
+/// let mut batch = BatchScanBuffer::new(2, 1); // B = 2 lanes, d = 1
+/// batch.push_leaf_lane(0, 0.0, &[2.0]); // step 0: lane 0…
+/// batch.push_leaf_lane(1, 0.0, &[6.0]); // …then lane 1 (round-robin)
+/// batch.push_leaf_lane(0, 0.0, &[4.0]); // step 1
+/// batch.push_leaf_lane(1, 0.0, &[0.0]);
+/// batch.scan_inplace(); // both lanes prefix-scanned in one walk
+/// let mut out = [0.0f32; 2];
+/// batch.outputs_into(1, &mut out); // (B, d) outputs at step 1
+/// assert_eq!(out, [3.0, 3.0]); // per-lane running means
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct BatchScanBuffer {
     lanes: usize,
@@ -199,6 +213,71 @@ impl BatchScanBuffer {
         }
     }
 
+    /// Append one lane (initialised to the identity in any committed row
+    /// block) and return its index — the growth path of the resident-lane
+    /// executor ([`LaneSet`]). Only meaningful while the buffer holds at
+    /// most ONE time step: with a single row block the time-major layout
+    /// degenerates to lane-major, so growth is a push instead of a
+    /// restride.
+    pub fn grow_lane(&mut self) -> usize {
+        assert_eq!(self.staged, 0, "cannot grow lanes mid-way through a staged step");
+        let had_row = self.steps() == 1;
+        assert!(self.steps() <= 1, "lane growth needs at most one committed row block");
+        let lane = self.lanes;
+        self.lanes += 1;
+        if had_row {
+            self.m.push(MASK_FILL);
+            self.u.push(0.0);
+            self.w.resize(self.w.len() + self.d, 0.0);
+        }
+        lane
+    }
+
+    /// Overwrite lane `dst` of the single row block with lane `src` — the
+    /// move primitive of [`LaneSet::compact`].
+    pub fn copy_lane(&mut self, src: usize, dst: usize) {
+        assert_eq!(self.steps(), 1, "lane copies operate on the single-row-block form");
+        if src == dst {
+            return;
+        }
+        self.m[dst] = self.m[src];
+        self.u[dst] = self.u[src];
+        let d = self.d;
+        let (lo, hi) = (src.min(dst), src.max(dst));
+        let (left, right) = self.w.split_at_mut(hi * d);
+        let (a, b) = (&mut left[lo * d..(lo + 1) * d], &mut right[..d]);
+        if src < dst {
+            b.copy_from_slice(a);
+        } else {
+            a.copy_from_slice(b);
+        }
+    }
+
+    /// Reset lane `lane` of the single row block to the ⊕ identity
+    /// (m = MASK_FILL, u = 0, w = 0) — a released lane must read as
+    /// neutral until it is reused.
+    pub fn clear_lane(&mut self, lane: usize) {
+        assert_eq!(self.steps(), 1, "lane clears operate on the single-row-block form");
+        self.m[lane] = MASK_FILL;
+        self.u[lane] = 0.0;
+        self.w[lane * self.d..(lane + 1) * self.d].fill(0.0);
+    }
+
+    /// Shrink to the first `n` lanes — the tail-trim of
+    /// [`LaneSet::compact`]. Only valid while at most one row block is
+    /// committed.
+    pub fn truncate_lanes(&mut self, n: usize) {
+        assert_eq!(self.staged, 0, "cannot truncate lanes mid-way through a staged step");
+        assert!(self.steps() <= 1, "lane truncation needs at most one committed row block");
+        assert!(n <= self.lanes, "cannot truncate {} lanes to {n}", self.lanes);
+        if self.steps() == 1 {
+            self.m.truncate(n);
+            self.u.truncate(n);
+            self.w.truncate(n * self.d);
+        }
+        self.lanes = n;
+    }
+
     /// Copy lane `lane` out as a single-sequence [`ScanBuffer`]
     /// (tests / interop with the single-lane strategies).
     pub fn lane_buffer(&self, lane: usize) -> ScanBuffer {
@@ -348,6 +427,179 @@ fn block_views<'a>(
         views.push((mh, uh, wh));
     }
     views
+}
+
+/// Long-lived lane allocator over a single-row-block [`BatchScanBuffer`]
+/// — the storage an executor shard keeps its **resident** Aaren sessions
+/// in (see `crate::serve`). Each live session owns one lane holding its
+/// (m, u, w) accumulator; `steps` work folds tokens into the lane **in
+/// place**, so a drain never gathers or scatters session state.
+///
+/// Lifecycle: [`alloc`](LaneSet::alloc) hands out a stable lane id
+/// (reusing released lanes LIFO before growing the buffer),
+/// [`release`](LaneSet::release) clears a lane back to the ⊕ identity
+/// and recycles it, and [`compact`](LaneSet::compact) moves the highest
+/// live lanes into released holes and trims the tail — returning the
+/// (old, new) moves so the owner can re-point its sessions.
+///
+/// ```
+/// use aaren::scan::LaneSet;
+///
+/// let mut lanes = LaneSet::new(2);
+/// let a = lanes.alloc();
+/// let b = lanes.alloc();
+/// lanes.fold(a, 0.0, &[1.0, 3.0]); // lane a folds a token…
+/// let mut out = [0.0f32; 2];
+/// lanes.output_into(a, &mut out);
+/// assert_eq!(out, [1.0, 3.0]);
+/// lanes.output_into(b, &mut out); // …lane b is untouched (identity)
+/// assert_eq!(out, [0.0, 0.0]);
+/// lanes.release(a);
+/// assert_eq!(lanes.alloc(), a, "released lanes are reused");
+/// ```
+#[derive(Debug)]
+pub struct LaneSet {
+    buf: BatchScanBuffer,
+    /// released lane indices, reused LIFO by `alloc`
+    free: Vec<usize>,
+}
+
+impl LaneSet {
+    /// Empty set for lanes of value-dimension `d`.
+    pub fn new(d: usize) -> LaneSet {
+        LaneSet { buf: BatchScanBuffer::new(0, d), free: Vec::new() }
+    }
+
+    /// Value dimension of every lane.
+    pub fn dim(&self) -> usize {
+        self.buf.dim()
+    }
+
+    /// Total lanes currently allocated in the buffer (live + released).
+    pub fn lanes(&self) -> usize {
+        self.buf.lanes()
+    }
+
+    /// Lanes currently owned by a session.
+    pub fn live(&self) -> usize {
+        self.buf.lanes() - self.free.len()
+    }
+
+    /// Released-but-not-yet-compacted lanes.
+    pub fn frag(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Re-dimension an EMPTY set (no live lanes) for a different `d`,
+    /// keeping the allocations — how a shard whose sessions all closed
+    /// adopts a stream of a new channel width.
+    pub fn reset_dim(&mut self, d: usize) {
+        assert_eq!(self.live(), 0, "cannot re-dimension a set with live lanes");
+        self.buf.reset(0, d);
+        self.free.clear();
+    }
+
+    /// Claim a lane, initialised to the ⊕ identity: a released lane if
+    /// one is free (LIFO), a freshly grown one otherwise. The returned id
+    /// is stable until `release` or a `compact` move.
+    pub fn alloc(&mut self) -> usize {
+        if let Some(lane) = self.free.pop() {
+            return lane; // cleared back to the identity on release
+        }
+        let lane = self.buf.grow_lane();
+        if self.buf.steps() == 0 {
+            self.buf.push_identity_row();
+        }
+        lane
+    }
+
+    /// Return `lane` to the pool: its state is cleared to the identity
+    /// and the id becomes reusable. Trailing released lanes are trimmed
+    /// immediately (no remap needed); interior holes wait for `compact`.
+    pub fn release(&mut self, lane: usize) {
+        debug_assert!(!self.free.contains(&lane), "double release of lane {lane}");
+        self.buf.clear_lane(lane);
+        if lane + 1 == self.buf.lanes() {
+            // cheap tail trim: drop the released lane and any released
+            // run directly below it
+            let mut top = lane;
+            loop {
+                self.buf.truncate_lanes(top);
+                match self.free.iter().position(|&f| f + 1 == top) {
+                    Some(i) => {
+                        self.free.swap_remove(i);
+                        top -= 1;
+                    }
+                    None => break,
+                }
+            }
+        } else {
+            self.free.push(lane);
+        }
+    }
+
+    /// Fold the leaf (s, 1, x) into `lane` in place — the resident
+    /// serving hot path; bitwise identical to `ops::fold_token` on that
+    /// lane's accumulator alone.
+    pub fn fold(&mut self, lane: usize, s: f32, x: &[f32]) {
+        self.buf.fold_lane(lane, s, x);
+    }
+
+    /// The attention output `lane`'s accumulator represents (w / u, zeros
+    /// for the u == 0 identity).
+    pub fn output_into(&self, lane: usize, out: &mut [f32]) {
+        self.buf.lane_output_into(0, lane, out);
+    }
+
+    /// Borrow `lane`'s accumulator as (m, u, w-row) — what a resident
+    /// session's snapshot serializes, straight from the lane.
+    pub fn row(&self, lane: usize) -> (f32, f32, &[f32]) {
+        self.buf.row(0, lane)
+    }
+
+    /// Overwrite `lane`'s accumulator — the restore path (a snapshot's
+    /// (m, u, w) adopted bit-for-bit into a fresh lane).
+    pub fn set_row(&mut self, lane: usize, m: f32, u: f32, w: &[f32]) {
+        self.buf.set_row(0, lane, m, u, w);
+    }
+
+    /// Close interior holes: the highest live lanes move down into
+    /// released slots, the tail is trimmed to exactly [`live`](Self::live)
+    /// lanes, and the performed moves are returned as (old, new) pairs so
+    /// the owner can re-point its sessions. States move bit-for-bit; no
+    /// accumulator is recomputed.
+    pub fn compact(&mut self) -> Vec<(usize, usize)> {
+        if self.free.is_empty() {
+            return Vec::new();
+        }
+        let live = self.live();
+        let mut holes: Vec<usize> = self.free.iter().copied().filter(|&f| f < live).collect();
+        holes.sort_unstable();
+        // O(1) membership for the source scan below: a linear `contains`
+        // per probed lane would go quadratic after a mass release
+        let freed: std::collections::HashSet<usize> = self.free.iter().copied().collect();
+        let mut moves = Vec::with_capacity(holes.len());
+        let mut src = self.buf.lanes();
+        for hole in holes {
+            // the highest not-yet-moved live lane fills the lowest hole
+            loop {
+                src -= 1;
+                if !freed.contains(&src) {
+                    break;
+                }
+            }
+            self.buf.copy_lane(src, hole);
+            moves.push((src, hole));
+        }
+        self.buf.truncate_lanes(live);
+        self.free.clear();
+        moves
+    }
+
+    /// The underlying single-row-block buffer (tests / diagnostics).
+    pub fn buffer(&self) -> &BatchScanBuffer {
+        &self.buf
+    }
 }
 
 #[cfg(test)]
@@ -556,5 +808,202 @@ mod tests {
         buf.scan_inplace();
         buf.scan_chunked(4);
         assert_eq!(buf.steps(), 0);
+    }
+
+    #[test]
+    fn grow_copy_truncate_lane_primitives() {
+        let mut buf = BatchScanBuffer::new(0, 2);
+        assert_eq!(buf.grow_lane(), 0);
+        buf.push_identity_row();
+        assert_eq!(buf.grow_lane(), 1);
+        assert_eq!(buf.grow_lane(), 2);
+        assert_eq!((buf.lanes(), buf.steps()), (3, 1));
+        buf.set_row(0, 0, 1.5, 2.0, &[4.0, -6.0]);
+        // grown lanes read as identities
+        assert_eq!(buf.row(0, 1), (MASK_FILL, 0.0, &[0.0, 0.0][..]));
+        buf.copy_lane(0, 2);
+        assert_eq!(buf.row(0, 2), (1.5, 2.0, &[4.0, -6.0][..]));
+        buf.copy_lane(2, 1); // backwards copy
+        assert_eq!(buf.row(0, 1), (1.5, 2.0, &[4.0, -6.0][..]));
+        buf.clear_lane(0);
+        assert_eq!(buf.row(0, 0), (MASK_FILL, 0.0, &[0.0, 0.0][..]));
+        buf.truncate_lanes(1);
+        assert_eq!((buf.lanes(), buf.steps()), (1, 1));
+        assert_eq!(buf.row(0, 0), (MASK_FILL, 0.0, &[0.0, 0.0][..]));
+    }
+
+    #[test]
+    fn lane_set_allocates_reuses_and_trims() {
+        let mut lanes = LaneSet::new(1);
+        let (a, b, c) = (lanes.alloc(), lanes.alloc(), lanes.alloc());
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!((lanes.live(), lanes.lanes()), (3, 3));
+        // interior release: the lane becomes a reusable hole
+        lanes.release(b);
+        assert_eq!((lanes.live(), lanes.frag()), (2, 1));
+        assert_eq!(lanes.alloc(), b, "released interior lanes are reused LIFO");
+        // tail release trims the buffer, no hole left behind
+        lanes.release(c);
+        assert_eq!((lanes.live(), lanes.lanes(), lanes.frag()), (2, 2, 0));
+        // releasing the rest trims all the way to empty…
+        lanes.release(b);
+        lanes.release(a);
+        assert_eq!((lanes.live(), lanes.lanes(), lanes.frag()), (0, 0, 0));
+        // …and the set keeps working afterwards
+        let d = lanes.alloc();
+        lanes.fold(d, 0.0, &[2.0]);
+        let mut out = [0.0f32];
+        lanes.output_into(d, &mut out);
+        assert_eq!(out, [2.0]);
+    }
+
+    #[test]
+    fn lane_set_release_trims_released_runs_below_the_tail() {
+        let mut lanes = LaneSet::new(1);
+        for _ in 0..4 {
+            lanes.alloc();
+        }
+        lanes.release(2);
+        lanes.release(1);
+        assert_eq!((lanes.lanes(), lanes.frag()), (4, 2));
+        // releasing the tail lane absorbs the released run 1..=2 too
+        lanes.release(3);
+        assert_eq!((lanes.lanes(), lanes.live(), lanes.frag()), (1, 1, 0));
+    }
+
+    #[test]
+    fn compact_moves_high_lanes_into_holes_bitwise() {
+        let mut lanes = LaneSet::new(2);
+        for _ in 0..5 {
+            lanes.alloc();
+        }
+        for lane in 0..5 {
+            lanes.set_row(lane, lane as f32, 1.0 + lane as f32, &[2.0 * lane as f32, -1.0]);
+        }
+        lanes.release(1);
+        lanes.release(3);
+        let moves = lanes.compact();
+        assert_eq!(moves, vec![(4, 1)], "one interior hole is fillable from above");
+        assert_eq!((lanes.lanes(), lanes.live(), lanes.frag()), (3, 3, 0));
+        assert_eq!(lanes.row(0), (0.0, 1.0, &[0.0, -1.0][..]));
+        assert_eq!(lanes.row(1), (4.0, 5.0, &[8.0, -1.0][..]), "lane 4 moved into the hole");
+        assert_eq!(lanes.row(2), (2.0, 3.0, &[4.0, -1.0][..]));
+        // a full set compacts to nothing
+        assert!(lanes.compact().is_empty());
+    }
+
+    #[test]
+    fn reset_dim_requires_an_empty_set() {
+        let mut lanes = LaneSet::new(3);
+        let a = lanes.alloc();
+        lanes.release(a);
+        lanes.reset_dim(5);
+        assert_eq!((lanes.dim(), lanes.lanes()), (5, 0));
+        let b = lanes.alloc();
+        lanes.fold(b, 1.0, &[0.5; 5]);
+        let mut out = [0.0f32; 5];
+        lanes.output_into(b, &mut out);
+        assert_eq!(out, [0.5; 5]);
+    }
+
+    /// The satellite property: an arbitrary interleaving of lane
+    /// alloc / fold / release / spill-restore / compact must leave every
+    /// surviving lane's accumulator BITWISE identical to (a) a fold_token
+    /// chain over that stream's tokens and (b) the last row of a fresh
+    /// single-lane [`ScanBuffer`] replay of the same leaves.
+    #[test]
+    fn lane_lifecycle_stays_bitwise_equal_to_single_lane_replay() {
+        struct Stream {
+            lane: usize,
+            history: Vec<(f32, Vec<f32>)>,
+        }
+        prop::check("lane lifecycle == single-lane replay (bitwise)", 32, |rng| {
+            let d = 1 + rng.below(6);
+            let mut lanes = LaneSet::new(d);
+            let mut streams: Vec<Stream> = Vec::new();
+            let ops = 30 + rng.below(60);
+            for _ in 0..ops {
+                match rng.below(10) {
+                    // create (always possible)
+                    0 | 1 => streams.push(Stream { lane: lanes.alloc(), history: Vec::new() }),
+                    // close a random stream
+                    2 if !streams.is_empty() => {
+                        let s = streams.swap_remove(rng.below(streams.len()));
+                        lanes.release(s.lane);
+                    }
+                    // spill + restore: state leaves the lane bit-for-bit
+                    // and re-enters a freshly allocated one
+                    3 if !streams.is_empty() => {
+                        let s = &mut streams[rng.below(streams.len())];
+                        let (m, u, w) = lanes.row(s.lane);
+                        let (m, u, w) = (m, u, w.to_vec());
+                        lanes.release(s.lane);
+                        s.lane = lanes.alloc();
+                        lanes.set_row(s.lane, m, u, &w);
+                    }
+                    // compact + remap
+                    4 => {
+                        let moves = lanes.compact();
+                        for (old, new) in moves {
+                            for s in streams.iter_mut() {
+                                if s.lane == old {
+                                    s.lane = new;
+                                }
+                            }
+                        }
+                    }
+                    // fold a token into a random stream
+                    _ if !streams.is_empty() => {
+                        let s = &mut streams[rng.below(streams.len())];
+                        let score = rng.range(-30.0, 30.0) as f32;
+                        let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                        lanes.fold(s.lane, score, &v);
+                        s.history.push((score, v));
+                    }
+                    _ => {}
+                }
+            }
+            if lanes.live() != streams.len() {
+                return Err(format!(
+                    "{} live lanes for {} streams",
+                    lanes.live(),
+                    streams.len()
+                ));
+            }
+            for (si, s) in streams.iter().enumerate() {
+                let (gm, gu, gw) = lanes.row(s.lane);
+                // oracle (a): the O(1) streaming fold
+                let mut acc = Muw::identity(d);
+                for (score, v) in &s.history {
+                    fold_token(&mut acc, *score, v);
+                }
+                // oracle (b): a fresh single-lane ScanBuffer replay
+                let mut replay = ScanBuffer::with_capacity(d, s.history.len());
+                for (score, v) in &s.history {
+                    replay.push_leaf(*score, v);
+                }
+                sequential_inplace(&mut replay);
+                let (rm, ru, rw) = if replay.is_empty() {
+                    (MASK_FILL, 0.0, vec![0.0; d])
+                } else {
+                    let (m, u, w) = replay.row(replay.len() - 1);
+                    (m, u, w.to_vec())
+                };
+                for (tag, (wm, wu, ww)) in [
+                    ("fold_token", (acc.m, acc.u, acc.w.as_slice())),
+                    ("ScanBuffer replay", (rm, ru, rw.as_slice())),
+                ] {
+                    if gm.to_bits() != wm.to_bits() || gu.to_bits() != wu.to_bits() {
+                        return Err(format!("stream {si} vs {tag}: m/u diverged"));
+                    }
+                    for (i, (x, y)) in gw.iter().zip(ww.iter()).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("stream {si} vs {tag}: w[{i}] {x} vs {y}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -52,13 +52,19 @@
 //! once, per lane bitwise equal to the single-lane strategies here. The
 //! ⊕ inner loops of every path — single-lane and batch — share the
 //! fixed-width, bounds-check-free `axpby` kernels in [`ops`].
+//!
+//! [`batch::LaneSet`] layers a lane **lifecycle** on top of a
+//! single-row-block `BatchScanBuffer`: stable lane ids with a free-list
+//! (alloc / release / compact-with-remap), so long-lived streaming
+//! sessions can live *inside* the batch buffer and fold tokens in place —
+//! the storage behind `crate::serve`'s resident-lane executors.
 
 pub mod batch;
 pub mod ops;
 pub mod pool;
 pub mod soa;
 
-pub use batch::BatchScanBuffer;
+pub use batch::{BatchScanBuffer, LaneSet};
 pub use ops::{
     combine, combine_into, combine_rows, fold_row, fold_token, scan_rows_inplace, Muw, MASK_FILL,
 };

@@ -21,6 +21,20 @@
 use crate::scan::ops::{axpby_inplace, Muw, MASK_FILL};
 
 /// A sequence of (m, u, w) scan elements in flat SoA layout.
+///
+/// Push one leaf per token, run any `crate::scan` strategy over the
+/// buffer, read outputs back:
+///
+/// ```
+/// use aaren::scan::{sequential, ScanBuffer};
+///
+/// let mut buf = ScanBuffer::new(1);
+/// buf.push_leaf(0.0, &[1.0]); // (score, value) leaf per token…
+/// buf.push_leaf(0.0, &[3.0]);
+/// let scanned = sequential(&buf); // …inclusive ⊕ prefix scan
+/// // equal scores ⇒ outputs are running means of the values
+/// assert_eq!(scanned.outputs(), vec![1.0, 2.0]);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScanBuffer {
     d: usize,

@@ -25,7 +25,7 @@
 //! -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
 //!                                        (partial lines first when n > 512)
 //! -> {"op":"snapshot","id":N}   <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
-//! -> {"op":"restore","state":"<base64>"}           <- {"id":M,"kind":K,"channels":D,"t":T}
+//! -> {"op":"restore","state":"<base64>"[,"id":M]}  <- {"id":M,"kind":K,"channels":D,"t":T}
 //! -> {"op":"close","id":N}                         <- {"ok":true}
 //! -> {"op":"stats"}                 <- {"sessions":K,"total_state_bytes":B,"spilled":S}
 //! -> {"op":"shutdown"}                             <- {"ok":true}
@@ -69,11 +69,15 @@
 //!   alike (a spilled one is answered from the store without restoring
 //!   it). Restoring the blob yields a session whose outputs continue
 //!   bitwise where this one's stream stood.
-//! * `restore` — create a NEW session (fresh id, native tier) from a
-//!   `snapshot` blob — the client-driven migration path: snapshot on
-//!   server A, restore on server B, keep streaming. Corrupt, truncated
-//!   or wrong-version blobs are refused by the codec's magic/version/CRC
-//!   checks.
+//! * `restore` — create a NEW session (native tier) from a `snapshot`
+//!   blob — the client-driven migration path: snapshot on server A,
+//!   restore on server B, keep streaming. By default the server assigns
+//!   a fresh id; an optional explicit `id` claims that id instead (a
+//!   migration that keeps its session naming), refused with a structured
+//!   `{"error":"session N already exists"}` when the id is already live
+//!   — resident or spilled — exactly like a duplicate `create`. Corrupt,
+//!   truncated or wrong-version blobs are refused by the codec's
+//!   magic/version/CRC checks.
 //! * `close` — free the session (resident or spilled; a spilled
 //!   session's snapshot file is deleted). Sessions can also expire: with
 //!   `--session-ttl-secs N` (ServeConfig::session_ttl), executor drains
@@ -104,15 +108,28 @@
 //! snapshots). Spill/restore round-trips are bitwise exact; HLO-tier
 //! sessions cannot snapshot and keep plain TTL eviction.
 //!
-//! # Coalescing
+//! # Coalescing and resident lanes
 //!
 //! Executor shards drain their whole queue per iteration and serve every
-//! pending `step`/`steps` as one batch: all native Aaren sessions with
-//! pending tokens advance together as lanes of a single flat
-//! [`crate::scan::BatchScanBuffer`] fold per token round
-//! ([`session::step_many_batched`]), instead of paying a map lookup and
-//! accumulator walk per request. Numerics are unchanged — batched
-//! outputs and `t` are bitwise those of sequential per-request stepping.
+//! pending `step`/`steps` as one batch. Native Aaren sessions are
+//! **resident**: each shard owns a long-lived
+//! [`crate::scan::LaneSet`] (a single-row-block
+//! [`crate::scan::BatchScanBuffer`] with a lane free-list), every
+//! session's (m, u, w) accumulator lives in a stable lane of it, and
+//! drain work folds tokens into the lanes in place
+//! ([`session::step_many_resident`]) — the buffer owns the state, the
+//! session is a lane view, and a drain copies **no** accumulator state
+//! in or out (the gather/scatter overhead of the PR 3 design). Lanes are
+//! released on close/evict/spill and compacted (with the moved sessions
+//! re-pointed) once released lanes outnumber both the live count and a
+//! floor of 8 (hysteresis for small shards).
+//! `ServeConfig::resident_lanes = false` (CLI `--scatter-drain`) keeps
+//! the old gather/scatter batching ([`session::step_many_batched`]) for
+//! A/B benchmarking — `BENCH_serve.json`'s `resident_vs_scatter`
+//! records track the two against each other. Numerics are unchanged
+//! either way — batched outputs and `t` are bitwise those of sequential
+//! per-request stepping, and both drain engines are bitwise equal to
+//! each other.
 //! One observable coarsens: when several requests for the SAME session
 //! land in one drain, each reply's `state_bytes` reflects the session
 //! after the whole drain (per-request `t` stays exact). A request that
@@ -127,7 +144,8 @@ pub use server::{
     Client, ServeConfig, Server, SessionFactory, SpillTier, MAX_STEPS_TOKENS, STEPS_REPLY_BLOCK,
 };
 pub use session::{
-    step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession, TF_BUCKETS,
+    step_many_batched, step_many_resident, NativeAarenSession, NativeTfSession, PendingLane,
+    ResidentAarenSession, ResidentLane, StreamSession, TF_BUCKETS,
 };
 
 #[cfg(feature = "pjrt")]

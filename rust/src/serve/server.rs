@@ -8,7 +8,7 @@
 //!      (n > STEPS_REPLY_BLOCK streams several reply lines, all but the
 //!       last carrying "partial":true)
 //!   -> {"op":"snapshot","id":N}                  <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
-//!   -> {"op":"restore","state":"<base64>"}       <- {"id":M,"kind":K,"channels":D,"t":T}
+//!   -> {"op":"restore","state":"<base64>"[,"id":M]} <- {"id":M,"kind":K,"channels":D,"t":T}
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
 //!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
@@ -24,15 +24,23 @@
 //! id's namespace encodes the route, so no shared routing table exists.
 //!
 //! Executors COALESCE: each iteration drains its whole request queue and
-//! serves every pending `step`/`steps` in one pass — native Aaren
-//! sessions advance together as lanes of one shared
-//! [`BatchScanBuffer`] fold (`session::step_many_batched`) instead of
-//! paying a map lookup + accumulator walk per request, and a `steps`
-//! block of n tokens costs one executor round-trip instead of n. The
-//! drain is also where idle sessions are swept: with a session TTL
-//! configured (`--session-ttl-secs`), sessions idle past it are evicted,
-//! so a client that disconnected without `close` cannot leak its
-//! sessions forever.
+//! serves every pending `step`/`steps` in one pass, and a `steps` block
+//! of n tokens costs one executor round-trip instead of n. Native Aaren
+//! sessions are **resident**: each shard owns one long-lived
+//! [`LaneSet`] (a single-row-block [`BatchScanBuffer`] with a lane
+//! free-list), every session holds a stable lane in it, and drain work
+//! folds tokens into the lanes IN PLACE (`session::step_many_resident`)
+//! — no per-drain export/import of (m, u, w) state. Lanes are released
+//! on close/evict/spill and the set compacts itself (moving high lanes
+//! into holes, re-pointing the moved sessions) when fragmentation
+//! exceeds the live count. `ServeConfig::resident_lanes = false` falls
+//! back to the PR 3 gather/scatter batching
+//! (`session::step_many_batched`) — kept for A/B benchmarking
+//! (`resident_vs_scatter` in `BENCH_serve.json`) and as an escape
+//! hatch. The drain is also where idle sessions are swept: with a
+//! session TTL configured (`--session-ttl-secs`), sessions idle past it
+//! are evicted, so a client that disconnected without `close` cannot
+//! leak its sessions forever.
 //!
 //! With a SPILL TIER configured (`--spill-dir`), eviction stops being
 //! destruction: the sweep snapshots each idle native session through the
@@ -58,9 +66,10 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::persist::codec;
 use crate::persist::store::{DirStore, SnapshotStore};
-use crate::scan::BatchScanBuffer;
+use crate::scan::{BatchScanBuffer, LaneSet};
 use crate::serve::session::{
-    step_many_batched, NativeAarenSession, NativeTfSession, PendingLane, StreamSession,
+    step_many_batched, step_many_resident, NativeAarenSession, NativeTfSession, PendingLane,
+    ResidentAarenSession, ResidentLane, StreamSession,
 };
 use crate::util::b64;
 use crate::util::json::Json;
@@ -184,11 +193,102 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
+/// How an executor holds one session: native Aaren sessions normally
+/// live as **resident lane views** over the shard's [`LaneSet`] (their
+/// accumulator is a lane of the shard buffer, advanced in place); every
+/// other backend — tf KV caches, compiled HLO, plus foreign-width or
+/// scatter-mode Aaren — stays a self-contained trait object.
+enum SessionSlot {
+    Resident(ResidentAarenSession),
+    Boxed(Box<dyn StreamSession>),
+}
+
+impl SessionSlot {
+    fn channels(&self) -> usize {
+        match self {
+            SessionSlot::Resident(r) => r.channels(),
+            SessionSlot::Boxed(s) => s.channels(),
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        match self {
+            SessionSlot::Resident(r) => r.state_bytes(),
+            SessionSlot::Boxed(s) => s.state_bytes(),
+        }
+    }
+
+    fn tokens_seen(&self) -> usize {
+        match self {
+            SessionSlot::Resident(r) => r.tokens_seen(),
+            SessionSlot::Boxed(s) => s.tokens_seen(),
+        }
+    }
+
+    /// The session's full state as a codec blob; a resident session
+    /// serializes straight from its lane, so the blob is byte-identical
+    /// to its boxed twin's.
+    fn snapshot(&self, lanes: &LaneSet) -> Result<Vec<u8>> {
+        match self {
+            SessionSlot::Resident(r) => r.snapshot(lanes),
+            SessionSlot::Boxed(s) => s.snapshot(),
+        }
+    }
+
+    /// Drop the session, returning its lane to the shard set if it held
+    /// one — the close/evict/spill terminal step.
+    fn release(self, lanes: &mut LaneSet) {
+        match self {
+            SessionSlot::Resident(r) => r.release(lanes),
+            SessionSlot::Boxed(_) => {}
+        }
+    }
+}
+
 /// A session an executor owns, plus the idle timestamp the TTL sweep
 /// reads.
 struct Held {
-    session: Box<dyn StreamSession>,
+    slot: SessionSlot,
     last_used: Instant,
+}
+
+/// Whether a native Aaren session of width `d` can become resident in
+/// `lanes`: an idle set (no live lanes) is re-dimensioned to fit; a
+/// populated set must match. A mismatch (a restored blob whose channel
+/// width differs from this server's) keeps that session boxed instead.
+fn lanes_fit(lanes: &mut LaneSet, d: usize) -> bool {
+    if lanes.live() == 0 && lanes.dim() != d {
+        lanes.reset_dim(d);
+    }
+    lanes.dim() == d
+}
+
+/// Wrap a freshly created/restored session for the map: native Aaren
+/// sessions are adopted into a lane of the shard [`LaneSet`] (when
+/// `resident` mode is on and the width fits), everything else stays
+/// boxed.
+fn hold(
+    mut session: Box<dyn StreamSession>,
+    resident: bool,
+    lanes: &mut LaneSet,
+    now: Instant,
+) -> Held {
+    let adopt_width = match session.as_native_aaren() {
+        Some(native) if resident => Some(native.channels()),
+        _ => None,
+    };
+    let slot = match adopt_width {
+        Some(d) => {
+            if lanes_fit(lanes, d) {
+                let native = session.as_native_aaren().expect("downcast checked above");
+                SessionSlot::Resident(ResidentAarenSession::adopt(native, lanes))
+            } else {
+                SessionSlot::Boxed(session)
+            }
+        }
+        None => SessionSlot::Boxed(session),
+    };
+    Held { slot, last_used: now }
 }
 
 /// One queued step-shaped request inside a drain: the flat token block,
@@ -204,17 +304,24 @@ struct PendingSteps {
 
 /// Move one session out of the resident map — into the spill store when
 /// one is configured and the session can snapshot, otherwise dropping it
-/// (the pre-spill TTL behaviour, still what the HLO tier gets).
-fn evict_session(sessions: &mut HashMap<u64, Held>, spill: Option<&mut SpillTier>, id: u64) {
+/// (the pre-spill TTL behaviour, still what the HLO tier gets). Either
+/// way its lane, if it held one, returns to the shard set.
+fn evict_session(
+    sessions: &mut HashMap<u64, Held>,
+    lanes: &mut LaneSet,
+    spill: Option<&mut SpillTier>,
+    id: u64,
+) {
     let Some(held) = sessions.remove(&id) else {
         return;
     };
     if let Some(tier) = spill {
-        match held.session.snapshot().and_then(|blob| tier.store.put(id, &blob)) {
+        match held.slot.snapshot(lanes).and_then(|blob| tier.store.put(id, &blob)) {
             Ok(()) => {}
             Err(e) => eprintln!("[serve] session {id} could not spill, dropping: {e:#}"),
         }
     }
+    held.slot.release(lanes);
 }
 
 /// Make `id` resident if it can be: `Ok(true)` when the session is in
@@ -226,6 +333,8 @@ fn ensure_resident<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     spill: &mut Option<SpillTier>,
     factory: &mut F,
+    resident: bool,
+    lanes: &mut LaneSet,
     id: u64,
     now: Instant,
 ) -> Result<bool> {
@@ -240,13 +349,16 @@ fn ensure_resident<F: SessionFactory>(
     };
     let session = factory.restore(&blob)?;
     tier.store.remove(id)?;
-    sessions.insert(id, Held { session, last_used: now });
+    sessions.insert(id, hold(session, resident, lanes, now));
     Ok(true)
 }
 
-/// One executor shard: owns a private id → session map and serves its
+/// One executor shard: owns a private id → session map plus the shard
+/// [`LaneSet`] its resident Aaren sessions live in, and serves its
 /// channel until a `Shutdown` request arrives (acknowledged with
-/// [`Response::ShuttingDown`]).
+/// [`Response::ShuttingDown`]; with a spill tier configured, every
+/// session that can snapshot is spilled to the store first, so a
+/// graceful shutdown loses no stream).
 ///
 /// Each iteration DRAINS the queue: every request already waiting is
 /// pulled in one go, maximal runs of `step`/`steps` are executed as one
@@ -256,15 +368,23 @@ fn ensure_resident<F: SessionFactory>(
 /// otherwise). Request order is preserved: a `close` (or any other op)
 /// between two step runs splits them, so a step never observes a later
 /// op's effect. After the drain, the spill tier's `max_resident` cap is
-/// enforced by LRU-spilling the coldest resident sessions.
+/// enforced by LRU-spilling the coldest resident sessions, and the lane
+/// set compacts itself when released lanes outnumber both the live
+/// count and a floor of 8 (hysteresis for small shards).
+///
+/// `resident = false` disables lane residency: native Aaren sessions
+/// stay boxed and drains use the PR 3 gather/scatter batching — the A/B
+/// baseline the `resident_vs_scatter` bench records compare against.
 pub fn run_executor<F: SessionFactory>(
     mut factory: F,
     rx: ReqRx,
     session_ttl: Option<Duration>,
     mut spill: Option<SpillTier>,
+    resident: bool,
 ) {
     let mut sessions: HashMap<u64, Held> = HashMap::new();
     let mut scratch = BatchScanBuffer::new(0, 0);
+    let mut lanes = LaneSet::new(0);
     'serve: loop {
         // with a TTL configured, an idle shard must still wake up to
         // sweep: bound the blocking wait so sessions of disconnected
@@ -309,7 +429,7 @@ pub fn run_executor<F: SessionFactory>(
                 .map(|(&id, _)| id)
                 .collect();
             for id in expired {
-                evict_session(&mut sessions, spill.as_mut(), id);
+                evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
             }
         }
         let mut pending: Vec<PendingSteps> = Vec::new();
@@ -328,8 +448,10 @@ pub fn run_executor<F: SessionFactory>(
                         &mut sessions,
                         &mut pending,
                         &mut scratch,
+                        &mut lanes,
                         &mut factory,
                         &mut spill,
+                        resident,
                         now,
                     );
                     let resp: Reply = match other {
@@ -344,13 +466,13 @@ pub fn run_executor<F: SessionFactory>(
                                 Err(anyhow!("session {id} already exists"))
                             } else {
                                 factory.create(&kind).map(|session| {
-                                    sessions.insert(id, Held { session, last_used: now });
+                                    sessions.insert(id, hold(session, resident, &mut lanes, now));
                                     Response::Value(obj(vec![("id", Json::Num(id as f64))]))
                                 })
                             }
                         }
                         Request::Snapshot { id } => match sessions.get(&id) {
-                            Some(held) => held.session.snapshot().and_then(snapshot_reply),
+                            Some(held) => held.slot.snapshot(&lanes).and_then(snapshot_reply),
                             // a spilled session is served straight from
                             // the store — no need to make it resident
                             // just to read its state
@@ -368,7 +490,7 @@ pub fn run_executor<F: SessionFactory>(
                             } else {
                                 codec::meta(&blob).and_then(|meta| {
                                     let session = factory.restore(&blob)?;
-                                    sessions.insert(id, Held { session, last_used: now });
+                                    sessions.insert(id, hold(session, resident, &mut lanes, now));
                                     Ok(Response::Value(obj(vec![
                                         ("id", Json::Num(id as f64)),
                                         ("kind", Json::Str(meta.backend.kind().to_string())),
@@ -379,7 +501,8 @@ pub fn run_executor<F: SessionFactory>(
                             }
                         }
                         Request::Close { id } => {
-                            if sessions.remove(&id).is_some() {
+                            if let Some(held) = sessions.remove(&id) {
+                                held.slot.release(&mut lanes);
                                 Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
                             } else {
                                 // a spilled session closes by deleting
@@ -395,10 +518,24 @@ pub fn run_executor<F: SessionFactory>(
                         }
                         Request::Stats => Ok(Response::Stats {
                             sessions: sessions.len(),
-                            state_bytes: sessions.values().map(|h| h.session.state_bytes()).sum(),
+                            state_bytes: sessions.values().map(|h| h.slot.state_bytes()).sum(),
                             spilled: spill.as_ref().map_or(0, |t| t.store.len()),
                         }),
-                        Request::Shutdown => Ok(Response::ShuttingDown),
+                        Request::Shutdown => {
+                            // graceful shutdown: with a spill tier, every
+                            // resident session that can snapshot is
+                            // spilled before the executor exits — a
+                            // restart over the same --spill-dir resumes
+                            // each stream where it stood, instead of
+                            // dropping whatever was resident
+                            if spill.is_some() {
+                                let ids: Vec<u64> = sessions.keys().copied().collect();
+                                for id in ids {
+                                    evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
+                                }
+                            }
+                            Ok(Response::ShuttingDown)
+                        }
                         Request::Step { .. } | Request::Steps { .. } => {
                             unreachable!("step-shaped requests are queued above")
                         }
@@ -411,7 +548,16 @@ pub fn run_executor<F: SessionFactory>(
                 }
             }
         }
-        flush_steps(&mut sessions, &mut pending, &mut scratch, &mut factory, &mut spill, now);
+        flush_steps(
+            &mut sessions,
+            &mut pending,
+            &mut scratch,
+            &mut lanes,
+            &mut factory,
+            &mut spill,
+            resident,
+            now,
+        );
         // resident-count cap: LRU-spill the coldest sessions until the
         // shard is back under it. Just-touched sessions carry `now` and
         // are spilled last, so the cap cannot starve the live working set
@@ -424,7 +570,24 @@ pub fn run_executor<F: SessionFactory>(
                     .min_by_key(|(_, held)| held.last_used)
                     .map(|(&id, _)| id)
                     .expect("resident count exceeds the cap, so the map is nonempty");
-                evict_session(&mut sessions, spill.as_mut(), coldest);
+                evict_session(&mut sessions, &mut lanes, spill.as_mut(), coldest);
+            }
+        }
+        // lane hygiene: the set compacts once released lanes outnumber
+        // BOTH the live count and a small floor (8 — hysteresis so tiny
+        // shards don't churn); moved sessions are re-pointed at their
+        // new lanes in one pass (states move bit-for-bit, nothing is
+        // recomputed)
+        if lanes.frag() > lanes.live().max(8) {
+            let moves: HashMap<usize, usize> = lanes.compact().into_iter().collect();
+            if !moves.is_empty() {
+                for held in sessions.values_mut() {
+                    if let SessionSlot::Resident(r) = &mut held.slot {
+                        if let Some(&new) = moves.get(&r.lane()) {
+                            r.set_lane(new);
+                        }
+                    }
+                }
             }
         }
     }
@@ -454,18 +617,24 @@ struct SessionRun {
 
 /// Execute every queued step-shaped request of a drain as one coalesced
 /// batch and reply to each. Requests are grouped per session (order
-/// preserved within a session); native Aaren sessions then advance
-/// TOGETHER as lanes of the shared scratch [`BatchScanBuffer`] — one
-/// flat fold per token round across all of them — while other backends
-/// (tf KV cache, compiled HLO) take their per-session `step_many` path.
-/// A session that was spilled to the store is transparently restored
-/// here, on its owning shard, before its first request of the drain.
+/// preserved within a session); **resident** Aaren sessions then advance
+/// together by folding tokens straight into their lanes of the shard
+/// [`LaneSet`] ([`step_many_resident`] — no state is copied in or out),
+/// boxed Aaren sessions (scatter mode, foreign widths) take the PR 3
+/// gather/scatter batch over the scratch [`BatchScanBuffer`], and other
+/// backends (tf KV cache, compiled HLO) take their per-session
+/// `step_many` path. A session that was spilled to the store is
+/// transparently restored here, on its owning shard, before its first
+/// request of the drain.
+#[allow(clippy::too_many_arguments)]
 fn flush_steps<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     pending: &mut Vec<PendingSteps>,
     scratch: &mut BatchScanBuffer,
+    lanes: &mut LaneSet,
     factory: &mut F,
     spill: &mut Option<SpillTier>,
+    resident: bool,
     now: Instant,
 ) {
     if pending.is_empty() {
@@ -478,7 +647,7 @@ fn flush_steps<F: SessionFactory>(
     let mut run_of: HashMap<u64, usize> = HashMap::new();
     let mut replies: Vec<Option<Reply>> = (0..work.len()).map(|_| None).collect();
     for (wi, p) in work.iter().enumerate() {
-        match ensure_resident(sessions, spill, factory, p.id, now) {
+        match ensure_resident(sessions, spill, factory, resident, lanes, p.id, now) {
             Ok(true) => {}
             Ok(false) => {
                 replies[wi] = Some(Err(anyhow!("no session {}", p.id)));
@@ -491,7 +660,7 @@ fn flush_steps<F: SessionFactory>(
         }
         let held = sessions.get_mut(&p.id).expect("ensure_resident said resident");
         held.last_used = now;
-        let d = held.session.channels();
+        let d = held.slot.channels();
         if p.xs.len() != p.n * d {
             replies[wi] = Some(Err(anyhow!(
                 "token block has {} floats, session {} expects {} × {d} channels",
@@ -533,40 +702,112 @@ fn flush_steps<F: SessionFactory>(
         })
         .collect();
 
-    // execute: split runs into the aaren lane batch and the rest
+    // execute: split runs into the resident lane batch (states advance
+    // in place in the shard LaneSet), the boxed-aaren gather/scatter
+    // batch (scatter mode / foreign widths) and the per-session rest
     let mut outs: Vec<Vec<f32>> = (0..runs.len()).map(|_| Vec::new()).collect();
     let mut run_err: Vec<Option<anyhow::Error>> = (0..runs.len()).map(|_| None).collect();
+    let mut res_runs: Vec<usize> = Vec::new();
+    let mut res_held: Vec<Held> = Vec::new();
     let mut batch_runs: Vec<usize> = Vec::new();
     let mut batch_held: Vec<Held> = Vec::new();
+    enum Path {
+        Resident,
+        Scatter,
+        Direct,
+    }
     for (ri, run) in runs.iter().enumerate() {
-        let is_aaren = match sessions.get_mut(&run.id) {
-            Some(held) => held.session.as_native_aaren().is_some(),
+        let path = match sessions.get_mut(&run.id) {
+            Some(held) => match &mut held.slot {
+                SessionSlot::Resident(_) => Path::Resident,
+                // (not a match guard: the downcast needs &mut self)
+                SessionSlot::Boxed(s) => {
+                    if s.as_native_aaren().is_some() {
+                        Path::Scatter
+                    } else {
+                        Path::Direct
+                    }
+                }
+            },
             None => {
                 run_err[ri] = Some(anyhow!("no session {}", run.id));
                 continue;
             }
         };
-        if is_aaren {
-            // pull it out of the map so every batched session can be
+        match path {
+            // pull batched sessions out of the map so several can be
             // borrowed mutably at once; reinserted below
-            batch_runs.push(ri);
-            batch_held.push(sessions.remove(&run.id).expect("session checked above"));
-        } else if let Some(held) = sessions.get_mut(&run.id) {
-            if let Err(e) = held.session.step_many(token_views[ri], &mut outs[ri]) {
-                run_err[ri] = Some(e);
+            Path::Resident => {
+                res_runs.push(ri);
+                res_held.push(sessions.remove(&run.id).expect("session checked above"));
+            }
+            Path::Scatter => {
+                batch_runs.push(ri);
+                batch_held.push(sessions.remove(&run.id).expect("session checked above"));
+            }
+            Path::Direct => {
+                if let Some(held) = sessions.get_mut(&run.id) {
+                    if let SessionSlot::Boxed(s) = &mut held.slot {
+                        if let Err(e) = s.step_many(token_views[ri], &mut outs[ri]) {
+                            run_err[ri] = Some(e);
+                        }
+                    }
+                }
             }
         }
     }
+    if !res_held.is_empty() {
+        // the resident drain: every token folds straight into its
+        // session's lane — zero state copies per drain
+        let mut units: Vec<ResidentLane<'_>> = Vec::with_capacity(res_held.len());
+        for (k, held) in res_held.iter_mut().enumerate() {
+            let SessionSlot::Resident(r) = &mut held.slot else {
+                unreachable!("partitioned as resident above")
+            };
+            units.push((r, token_views[res_runs[k]]));
+        }
+        let mut unit_outs: Vec<Vec<f32>> = (0..res_runs.len()).map(|_| Vec::new()).collect();
+        match step_many_resident(&mut units, lanes, &mut unit_outs) {
+            Ok(()) => {
+                drop(units);
+                for (k, out) in unit_outs.into_iter().enumerate() {
+                    outs[res_runs[k]] = out;
+                }
+            }
+            Err(e) => {
+                // validation refused the batch before touching any lane
+                // (cannot happen after the per-request checks above):
+                // fall back to advancing each session on its own
+                drop(units);
+                eprintln!("[serve] resident fold rejected ({e:#}); using per-session path");
+                for (k, held) in res_held.iter_mut().enumerate() {
+                    let ri = res_runs[k];
+                    let SessionSlot::Resident(r) = &mut held.slot else {
+                        unreachable!("partitioned as resident above")
+                    };
+                    if let Err(e2) = r.step_many(lanes, token_views[ri], &mut outs[ri]) {
+                        run_err[ri] = Some(e2);
+                    }
+                }
+            }
+        }
+        for (&ri, held) in res_runs.iter().zip(res_held.into_iter()) {
+            sessions.insert(runs[ri].id, held);
+        }
+    }
     if !batch_held.is_empty() {
-        let mut lanes: Vec<PendingLane<'_>> = Vec::with_capacity(batch_held.len());
+        let mut units: Vec<PendingLane<'_>> = Vec::with_capacity(batch_held.len());
         for (k, held) in batch_held.iter_mut().enumerate() {
-            let aaren = held.session.as_native_aaren().expect("checked above");
-            lanes.push((aaren, token_views[batch_runs[k]]));
+            let SessionSlot::Boxed(s) = &mut held.slot else {
+                unreachable!("partitioned as boxed above")
+            };
+            let aaren = s.as_native_aaren().expect("checked above");
+            units.push((aaren, token_views[batch_runs[k]]));
         }
         let mut lane_outs: Vec<Vec<f32>> = (0..batch_runs.len()).map(|_| Vec::new()).collect();
-        match step_many_batched(&mut lanes, scratch, &mut lane_outs) {
+        match step_many_batched(&mut units, scratch, &mut lane_outs) {
             Ok(()) => {
-                drop(lanes);
+                drop(units);
                 for (k, out) in lane_outs.into_iter().enumerate() {
                     outs[batch_runs[k]] = out;
                 }
@@ -575,11 +816,14 @@ fn flush_steps<F: SessionFactory>(
                 // validation refused the batch before touching any state
                 // (cannot happen after the per-request checks above):
                 // fall back to advancing each session on its own
-                drop(lanes);
+                drop(units);
                 eprintln!("[serve] batched fold rejected ({e:#}); using per-session path");
                 for (k, held) in batch_held.iter_mut().enumerate() {
                     let ri = batch_runs[k];
-                    if let Err(e2) = held.session.step_many(token_views[ri], &mut outs[ri]) {
+                    let SessionSlot::Boxed(s) = &mut held.slot else {
+                        unreachable!("partitioned as boxed above")
+                    };
+                    if let Err(e2) = s.step_many(token_views[ri], &mut outs[ri]) {
                         run_err[ri] = Some(e2);
                     }
                 }
@@ -594,7 +838,7 @@ fn flush_steps<F: SessionFactory>(
     for (ri, run) in runs.iter().enumerate() {
         let d = run.d;
         let (state_bytes, t_after) = match sessions.get(&run.id) {
-            Some(h) => (h.session.state_bytes(), h.session.tokens_seen()),
+            Some(h) => (h.slot.state_bytes(), h.slot.tokens_seen()),
             None => (0, 0),
         };
         // tokens of this run that actually executed: all of them on
@@ -676,6 +920,12 @@ pub struct ServeConfig {
     /// evenly over the shards); requires `spill_dir`. `None` leaves
     /// resident count unbounded
     pub max_resident_sessions: Option<usize>,
+    /// keep native Aaren sessions resident in each shard's [`LaneSet`]
+    /// (the default): drains fold tokens into their lanes in place.
+    /// `false` restores the PR 3 gather/scatter batching — the
+    /// `resident_vs_scatter` bench baseline and a debugging escape hatch
+    /// (`--scatter-drain`)
+    pub resident_lanes: bool,
     /// artifacts dir enabling the compiled-HLO backend (`pjrt` builds
     /// only; ignored otherwise)
     pub artifacts: Option<std::path::PathBuf>,
@@ -690,6 +940,7 @@ impl Default for ServeConfig {
             session_ttl: None,
             spill_dir: None,
             max_resident_sessions: None,
+            resident_lanes: true,
             artifacts: None,
         }
     }
@@ -738,6 +989,7 @@ impl Router {
             let (tx, rx) = mpsc::channel();
             let channels = cfg.channels;
             let ttl = cfg.session_ttl;
+            let resident = cfg.resident_lanes;
             let spill = match &cfg.spill_dir {
                 Some(dir) => Some(SpillTier {
                     store: Box::new(DirStore::open_partition(dir, s as u64, nshards as u64)?),
@@ -747,7 +999,7 @@ impl Router {
             };
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
-                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl, spill))?;
+                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl, spill, resident))?;
             shards.push(tx);
         }
         #[cfg(feature = "pjrt")]
@@ -761,7 +1013,10 @@ impl Router {
                     // state is device literals), so TTL expiry keeps its
                     // plain-eviction behaviour on this executor
                     move || match hlo_backend::HloFactory::new(&dir) {
-                        Ok(factory) => run_executor(factory, rx, ttl, None),
+                        // resident lanes are a native-Aaren feature; the
+                        // HLO tier's sessions never downcast, so the flag
+                        // is moot here
+                        Ok(factory) => run_executor(factory, rx, ttl, None, false),
                         // dropping rx makes every later hlo request fail
                         // with "executor thread gone" instead of hanging
                         Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
@@ -857,12 +1112,31 @@ impl Router {
                     _ => bail!("unexpected reply to snapshot"),
                 }
             }
-            WireOp::Restore { blob } => {
-                // restored sessions always land on the native tier with a
-                // fresh id (the blob is self-describing; the id in force
-                // on the exporting server has no meaning here)
-                let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
-                ensure!(id < HLO_ID_BASE, "native session id space exhausted");
+            WireOp::Restore { blob, id } => {
+                // restored sessions land on the native tier — with a
+                // fresh id by default (the blob is self-describing; the
+                // id in force on the exporting server has no meaning
+                // here), or at an explicit client-chosen target id (a
+                // migration that keeps its session naming). A target id
+                // that already exists — resident or spilled — is refused
+                // by the executor with a structured "already exists"
+                // error, exactly like a duplicate `create`.
+                let id = match id {
+                    Some(id) => {
+                        ensure!(
+                            id >= 1 && id < HLO_ID_BASE,
+                            "explicit id {id} is outside the native id range [1, {HLO_ID_BASE})"
+                        );
+                        // keep auto-assigned ids from ever landing on it
+                        self.next_native_id.fetch_max(id + 1, Ordering::Relaxed);
+                        id
+                    }
+                    None => {
+                        let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
+                        ensure!(id < HLO_ID_BASE, "native session id space exhausted");
+                        id
+                    }
+                };
                 let tx = &self.shards[(id as usize) % self.shards.len()];
                 match call_on(tx, Request::Restore { id, blob })? {
                     Response::Value(j) => Ok(j),
@@ -919,7 +1193,7 @@ pub enum WireOp {
     Step { id: u64, x: Vec<f32> },
     Steps { id: u64, xs: Vec<f32>, n: usize },
     Snapshot { id: u64 },
-    Restore { blob: Vec<u8> },
+    Restore { blob: Vec<u8>, id: Option<u64> },
     Close { id: u64 },
     Stats,
     Shutdown,
@@ -946,7 +1220,13 @@ fn parse_request(line: &str) -> Result<WireOp> {
         "restore" => {
             let blob = b64::decode(j.str_field("state")?)
                 .map_err(|e| anyhow!("restore state is not valid base64: {e:#}"))?;
-            Ok(WireOp::Restore { blob })
+            let id = match j.get("id") {
+                None => None,
+                Some(v) => Some(
+                    v.as_usize().ok_or_else(|| anyhow!("restore id must be a number"))? as u64,
+                ),
+            };
+            Ok(WireOp::Restore { blob, id })
         }
         "step" => {
             let id = j.usize_field("id")? as u64;
@@ -1355,15 +1635,17 @@ mod tests {
 
     /// Queue envelopes up front, then run the executor: the first `recv`
     /// plus the `try_recv` drain serves them as ONE coalesced batch —
-    /// the deterministic way to exercise the batched path.
+    /// the deterministic way to exercise the batched path. Runs the
+    /// default resident-lane mode.
     fn run_drained(requests: Vec<Request>, ttl: Option<Duration>) -> Vec<mpsc::Receiver<Reply>> {
-        run_drained_spill(requests, ttl, None)
+        run_drained_mode(requests, ttl, None, true)
     }
 
-    fn run_drained_spill(
+    fn run_drained_mode(
         requests: Vec<Request>,
         ttl: Option<Duration>,
         spill: Option<SpillTier>,
+        resident: bool,
     ) -> Vec<mpsc::Receiver<Reply>> {
         let (tx, rx) = mpsc::channel();
         let mut receivers = Vec::new();
@@ -1373,7 +1655,7 @@ mod tests {
             receivers.push(rrx);
         }
         drop(tx);
-        run_executor(NativeFactory { channels: 2 }, rx, ttl, spill);
+        run_executor(NativeFactory { channels: 2 }, rx, ttl, spill, resident);
         receivers
     }
 
@@ -1470,7 +1752,7 @@ mod tests {
         let ttl = Duration::from_millis(1000);
         let (tx, rx) = mpsc::channel();
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), None)
+            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), None, true)
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1536,7 +1818,7 @@ mod tests {
         let ttl = Duration::from_millis(800);
         let (tx, rx) = mpsc::channel();
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), mem_spill(None))
+            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), mem_spill(None), true)
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1639,7 +1921,7 @@ mod tests {
     fn lru_cap_enforced_between_drains() {
         let (tx, rx) = mpsc::channel();
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, None, mem_spill(Some(1)))
+            run_executor(NativeFactory { channels: 2 }, rx, None, mem_spill(Some(1)), true)
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1673,6 +1955,174 @@ mod tests {
     }
 
     #[test]
+    fn scatter_mode_drain_is_indistinguishable_from_resident_mode() {
+        // the A/B guarantee behind `resident_vs_scatter`: the same drain,
+        // served with resident lanes and with the PR 3 gather/scatter
+        // path, must produce byte-identical reply bodies
+        let x1 = vec![0.5f32, -1.0];
+        let x2 = vec![2.0f32, 0.25];
+        let requests = || {
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Create { id: 2, kind: "aaren".into() },
+                Request::Create { id: 3, kind: "tf".into() },
+                Request::Step { id: 1, x: x1.clone() },
+                Request::Steps { id: 2, xs: [x1.clone(), x2.clone()].concat(), n: 2 },
+                Request::Steps { id: 3, xs: x2.clone(), n: 1 },
+                Request::Step { id: 2, x: x2.clone() },
+                Request::Snapshot { id: 1 },
+                Request::Close { id: 2 },
+                Request::Shutdown,
+            ]
+        };
+        let resident = run_drained_mode(requests(), None, None, true);
+        let scatter = run_drained_mode(requests(), None, None, false);
+        for (i, (a, b)) in resident.iter().zip(scatter.iter()).enumerate() {
+            match (a.recv().unwrap(), b.recv().unwrap()) {
+                (Ok(Response::Value(ja)), Ok(Response::Value(jb))) => {
+                    assert_eq!(ja.to_string(), jb.to_string(), "reply {i} diverged across modes");
+                }
+                (Ok(Response::ShuttingDown), Ok(Response::ShuttingDown)) => {}
+                (ra, rb) => {
+                    assert_eq!(ra.is_err(), rb.is_err(), "reply {i} kind diverged across modes");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_churn_compacts_and_surviving_sessions_keep_streaming() {
+        // create 12 resident sessions, close the 10 interior ones (the
+        // shard's lane set compacts once released lanes outnumber both
+        // the live count and the floor of 8), then keep streaming the survivors and a newcomer: the
+        // remapped lanes must carry their streams forward intact
+        let (tx, rx) = mpsc::channel();
+        let exec = std::thread::spawn(move || {
+            run_executor(NativeFactory { channels: 2 }, rx, None, None, true)
+        });
+        let call = |req: Request| -> Reply {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx.recv().unwrap()
+        };
+        for id in 1..=12u64 {
+            call(Request::Create { id, kind: "aaren".into() }).unwrap();
+            call(Request::Step { id, x: vec![0.5, -0.25] }).unwrap();
+        }
+        for id in 2..=11u64 {
+            call(Request::Close { id }).unwrap();
+        }
+        for id in [1u64, 12] {
+            match call(Request::Step { id, x: vec![1.5, 0.75] }).unwrap() {
+                Response::Value(j) => {
+                    assert_eq!(j.usize_field("t").unwrap(), 2, "session {id} lost its stream");
+                }
+                _ => panic!("non-value reply"),
+            }
+        }
+        // a fresh session lands on a compacted (small) lane set and works
+        call(Request::Create { id: 20, kind: "aaren".into() }).unwrap();
+        match call(Request::Step { id: 20, x: vec![0.0, 1.0] }).unwrap() {
+            Response::Value(j) => assert_eq!(j.usize_field("t").unwrap(), 1),
+            _ => panic!("non-value reply"),
+        }
+        let _ = call(Request::Shutdown);
+        exec.join().unwrap();
+    }
+
+    #[test]
+    fn graceful_shutdown_spills_resident_sessions_to_the_store() {
+        // ROADMAP PR 4 follow-up: a shutdown with a spill tier configured
+        // must spill what is resident instead of dropping it
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "aaren-shutdown-spill-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Some(SpillTier {
+            store: Box::new(crate::persist::DirStore::open(&dir).unwrap()),
+            max_resident: None,
+        });
+        let x = vec![0.5f32, -0.25];
+        let replies = run_drained_mode(
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Create { id: 2, kind: "tf".into() },
+                Request::Step { id: 1, x: x.clone() },
+                Request::Step { id: 2, x: x.clone() },
+                Request::Shutdown,
+            ],
+            None,
+            spill,
+            true,
+        );
+        for rrx in &replies[..4] {
+            value_reply(rrx);
+        }
+        assert!(matches!(replies[4].recv().unwrap(), Ok(Response::ShuttingDown)));
+        // both sessions survived shutdown as snapshots, streams intact
+        let mut store = crate::persist::DirStore::open(&dir).unwrap();
+        let mut kinds = Vec::new();
+        for id in [1u64, 2] {
+            let blob = store.get(id).unwrap().unwrap_or_else(|| panic!("session {id} dropped"));
+            let meta = codec::meta(&blob).unwrap();
+            assert_eq!(meta.tokens_seen, 1, "session {id} lost stream position");
+            kinds.push(meta.backend.kind().to_string());
+        }
+        kinds.sort();
+        assert_eq!(kinds, ["aaren", "tf"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_accepts_an_explicit_target_id_and_refuses_collisions() {
+        // ROADMAP PR 4 follow-up: `restore` can claim a client-chosen id;
+        // a collision is a structured error, not a clobber
+        let mut session = NativeAarenSession::new(4);
+        session.step(&[0.5, 0.25, -0.5, 1.0]).unwrap();
+        let blob = StreamSession::snapshot(&session).unwrap();
+        let router = test_router(2);
+        let r = router
+            .dispatch(WireOp::Restore { blob: blob.clone(), id: Some(7) })
+            .unwrap();
+        assert_eq!(r.usize_field("id").unwrap(), 7);
+        assert_eq!(r.usize_field("t").unwrap(), 1);
+        // the claimed session serves at its id
+        let r = router.dispatch(WireOp::Step { id: 7, x: vec![0.5; 4] }).unwrap();
+        assert_eq!(r.usize_field("t").unwrap(), 2);
+        // restoring onto the same id again is refused
+        let err = router
+            .dispatch(WireOp::Restore { blob: blob.clone(), id: Some(7) })
+            .unwrap_err();
+        assert!(format!("{err}").contains("already exists"), "got: {err}");
+        // ...and so is a create naming it
+        let err = router
+            .dispatch(WireOp::Create {
+                kind: "aaren".into(),
+                backend: Backend::Native,
+                id: Some(7),
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("already exists"), "got: {err}");
+        // out-of-range target ids are refused at the router
+        assert!(router.dispatch(WireOp::Restore { blob: blob.clone(), id: Some(0) }).is_err());
+        assert!(router
+            .dispatch(WireOp::Restore { blob, id: Some(HLO_ID_BASE) })
+            .is_err());
+        // auto-assigned ids skip past the claimed one
+        let fresh = router
+            .dispatch(WireOp::Create { kind: "aaren".into(), backend: Backend::Native, id: None })
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        assert!(fresh > 7, "auto id {fresh} collides with the claimed range");
+        router.dispatch(WireOp::Shutdown).unwrap();
+    }
+
+    #[test]
     fn parses_persistence_requests() {
         match parse_request(r#"{"op":"create","kind":"aaren","id":42}"#).unwrap() {
             WireOp::Create { id, .. } => assert_eq!(id, Some(42)),
@@ -1692,9 +2142,21 @@ mod tests {
         });
         let line = format!(r#"{{"op":"restore","state":"{}"}}"#, b64::encode(&blob));
         match parse_request(&line).unwrap() {
-            WireOp::Restore { blob: got } => assert_eq!(got, blob),
+            WireOp::Restore { blob: got, id } => {
+                assert_eq!(got, blob);
+                assert_eq!(id, None);
+            }
             _ => panic!("wrong variant"),
         }
+        // restore with an explicit target id (the migration-keeps-its-id
+        // path)
+        let line = format!(r#"{{"op":"restore","state":"{}","id":31}}"#, b64::encode(&blob));
+        match parse_request(&line).unwrap() {
+            WireOp::Restore { id, .. } => assert_eq!(id, Some(31)),
+            _ => panic!("wrong variant"),
+        }
+        let line = format!(r#"{{"op":"restore","state":"{}","id":"x"}}"#, b64::encode(&blob));
+        assert!(parse_request(&line).is_err());
         assert!(parse_request(r#"{"op":"restore","state":"!!!"}"#).is_err());
         assert!(parse_request(r#"{"op":"restore"}"#).is_err());
     }
@@ -1761,6 +2223,7 @@ mod tests {
             session_ttl: None,
             spill_dir: None,
             max_resident_sessions: None,
+            resident_lanes: true,
             artifacts: None,
         };
         Router::start(&cfg).unwrap()

@@ -27,7 +27,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::attention;
 use crate::persist::codec::{self, BackendTag, Snapshot};
-use crate::scan::{fold_token, BatchScanBuffer, Muw};
+use crate::scan::{fold_token, BatchScanBuffer, LaneSet, Muw};
 
 /// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
 /// Transformer baselines).
@@ -325,6 +325,215 @@ pub fn step_many_batched(
         s.acc.u = u;
         s.acc.w.copy_from_slice(w);
         s.t += counts[b];
+    }
+    Ok(())
+}
+
+/// A native Aaren session whose accumulator lives **inside** its executor
+/// shard's [`LaneSet`] instead of in the session struct — the
+/// resident-lane serving mode. The session keeps only what is private to
+/// the stream (query, scale, token count) plus its lane id; `steps` work
+/// folds tokens into the lane in place, so a drain performs **zero**
+/// gather/scatter of (m, u, w) state (the copy overhead of the PR 3
+/// batched path). Every method that touches the accumulator takes the
+/// owning `LaneSet` explicitly — the buffer owns the state, the session
+/// is a view.
+///
+/// Numerics and observables are those of [`NativeAarenSession`] exactly:
+/// the lane fold is bitwise `fold_token`, `state_bytes` reports the same
+/// constant (2 + d) · 4 bytes, and
+/// [`export_state`](Self::export_state) emits a byte-identical
+/// `persist::codec` payload (q, then m, u, w read straight from the
+/// lane), so spill blobs and `snapshot` replies cannot tell the two
+/// representations apart.
+pub struct ResidentAarenSession {
+    q: Vec<f32>,
+    scale: f32,
+    t: usize,
+    lane: usize,
+}
+
+impl ResidentAarenSession {
+    /// Move a boxed-style native session's accumulator into a freshly
+    /// allocated lane of `lanes` and return the resident view. The
+    /// native session is left empty (its query is taken); drop it.
+    pub fn adopt(native: &mut NativeAarenSession, lanes: &mut LaneSet) -> ResidentAarenSession {
+        assert_eq!(
+            native.channels(),
+            lanes.dim(),
+            "lane width must match the adopted session's channels"
+        );
+        let lane = lanes.alloc();
+        lanes.set_row(lane, native.acc.m, native.acc.u, &native.acc.w);
+        ResidentAarenSession {
+            q: std::mem::take(&mut native.q),
+            scale: native.scale,
+            t: native.t,
+            lane,
+        }
+    }
+
+    /// Rebuild a resident session from a codec [`Snapshot`] (the
+    /// spill-restore and `restore`-wire paths), adopting every f32 of the
+    /// payload bit-for-bit into a fresh lane — the exact inverse of
+    /// [`export_state`](Self::export_state), and interchangeable with
+    /// [`NativeAarenSession::import_state`].
+    pub fn from_snapshot(snap: &Snapshot, lanes: &mut LaneSet) -> Result<ResidentAarenSession> {
+        ensure!(
+            snap.channels == lanes.dim(),
+            "snapshot is {}-channel, lane set is {}",
+            snap.channels,
+            lanes.dim()
+        );
+        // ONE validation/derivation path for aaren snapshots: decode
+        // through `import_state` (every fallible check happens there,
+        // before any lane is touched), then move the accumulator into a
+        // lane — so this can never diverge from the boxed restore path
+        let mut native = NativeAarenSession::import_state(snap)?;
+        Ok(ResidentAarenSession::adopt(&mut native, lanes))
+    }
+
+    /// The lane this session's accumulator occupies in its shard's set.
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
+    /// Re-point the session after a [`LaneSet::compact`] move.
+    pub fn set_lane(&mut self, lane: usize) {
+        self.lane = lane;
+    }
+
+    /// Give the lane back to the set — the close/evict path. Consumes the
+    /// session: a released view must not be touchable afterwards.
+    pub fn release(self, lanes: &mut LaneSet) {
+        lanes.release(self.lane);
+    }
+
+    pub fn channels(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn tokens_seen(&self) -> usize {
+        self.t
+    }
+
+    /// Same constant as [`NativeAarenSession::state_bytes`]: the (m, u)
+    /// scalars plus the d-dim w row, wherever they live.
+    pub fn state_bytes(&self) -> usize {
+        (2 + self.q.len()) * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn score(&self, x: &[f32]) -> f32 {
+        self.q.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f32>() * self.scale
+    }
+
+    /// Feed one token, folding straight into the resident lane.
+    pub fn step(&mut self, lanes: &mut LaneSet, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.q.len() {
+            bail!("token has {} channels, session expects {}", x.len(), self.q.len());
+        }
+        lanes.fold(self.lane, self.score(x), x);
+        self.t += 1;
+        let mut out = vec![0.0; self.q.len()];
+        lanes.output_into(self.lane, &mut out);
+        Ok(out)
+    }
+
+    /// Feed a flat (n, channels) token block, appending outputs to `out`
+    /// — bitwise [`NativeAarenSession::step_many`], minus the per-drain
+    /// state copies.
+    pub fn step_many(&mut self, lanes: &mut LaneSet, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let d = self.q.len();
+        if check_token_block(d, xs)? == 0 {
+            return Ok(());
+        }
+        out.reserve(xs.len());
+        for x in xs.chunks_exact(d) {
+            lanes.fold(self.lane, self.score(x), x);
+            self.t += 1;
+            let start = out.len();
+            out.resize(start + d, 0.0);
+            lanes.output_into(self.lane, &mut out[start..]);
+        }
+        Ok(())
+    }
+
+    /// Export the full session state as a codec [`Snapshot`], reading the
+    /// accumulator straight from the lane: payload = q, then (m, u, w) —
+    /// byte-identical to [`NativeAarenSession::export_state`] for the
+    /// same stream.
+    pub fn export_state(&self, lanes: &LaneSet) -> Snapshot {
+        let d = self.q.len();
+        let (m, u, w) = lanes.row(self.lane);
+        let mut state = Vec::with_capacity(2 * d + 2);
+        state.extend_from_slice(&self.q);
+        state.push(m);
+        state.push(u);
+        state.extend_from_slice(w);
+        Snapshot {
+            backend: BackendTag::Aaren,
+            channels: d,
+            tokens_seen: self.t as u64,
+            state,
+        }
+    }
+
+    /// [`export_state`](Self::export_state) through the codec framing —
+    /// the blob the spill tier stores and the `snapshot` wire op returns.
+    pub fn snapshot(&self, lanes: &LaneSet) -> Result<Vec<u8>> {
+        Ok(codec::encode(&self.export_state(lanes)))
+    }
+}
+
+/// One resident drain unit: a resident session plus its pending flat
+/// (n, channels) token block.
+pub type ResidentLane<'a> = (&'a mut ResidentAarenSession, &'a [f32]);
+
+/// Advance several resident sessions through their pending token blocks
+/// as lane-parallel rounds over their OWN shard [`LaneSet`] — the
+/// resident executor's drain engine. Round r folds token r of every
+/// session that still has one, walking the adjacent accumulator lanes in
+/// place; there is no gather before and no scatter after, which is the
+/// whole point of residency. Outputs for unit b are appended to
+/// `outs[b]` as a flat (n_b, channels) block.
+///
+/// Bitwise identical to calling [`ResidentAarenSession::step_many`] per
+/// session (each fold touches only its own lane), and therefore to the
+/// PR 3 gather/scatter path [`step_many_batched`] too.
+pub fn step_many_resident(
+    batch: &mut [ResidentLane<'_>],
+    lanes: &mut LaneSet,
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    assert_eq!(batch.len(), outs.len(), "one output sink per drain unit");
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let d = lanes.dim();
+    let mut counts = Vec::with_capacity(batch.len());
+    for (s, xs) in batch.iter() {
+        ensure!(
+            s.channels() == d,
+            "resident session has {} channels, lane set holds {d}",
+            s.channels()
+        );
+        counts.push(check_token_block(d, xs)?);
+    }
+    let max_n = counts.iter().copied().max().unwrap_or(0);
+    for r in 0..max_n {
+        for (b, (s, xs)) in batch.iter_mut().enumerate() {
+            if counts[b] <= r {
+                continue;
+            }
+            let x = &xs[r * d..(r + 1) * d];
+            lanes.fold(s.lane, s.score(x), x);
+            s.t += 1;
+            let out = &mut outs[b];
+            let start = out.len();
+            out.resize(start + d, 0.0);
+            lanes.output_into(s.lane, &mut out[start..]);
+        }
     }
     Ok(())
 }
@@ -1059,5 +1268,152 @@ mod tests {
             }
             assert!(s.state_bytes() > 0);
         }
+    }
+
+    #[test]
+    fn resident_session_is_bitwise_equal_to_its_boxed_twin() {
+        // the tentpole invariant at the session layer: adopting a session
+        // into a lane, streaming, and reading outputs/observables must be
+        // indistinguishable — bit for bit — from the self-contained form
+        prop::check("resident == boxed (bitwise)", 24, |rng| {
+            let d = 1 + rng.below(8);
+            let warm = rng.below(20);
+            let n = 1 + rng.below(30);
+            let mut boxed = NativeAarenSession::new(d);
+            let mut seed = NativeAarenSession::new(d);
+            for _ in 0..warm {
+                let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                boxed.step(&x).map_err(|e| e.to_string())?;
+                seed.step(&x).map_err(|e| e.to_string())?;
+            }
+            let mut lanes = LaneSet::new(d);
+            let mut resident = ResidentAarenSession::adopt(&mut seed, &mut lanes);
+            if resident.state_bytes() != boxed.state_bytes()
+                || resident.tokens_seen() != boxed.tokens_seen()
+                || resident.channels() != d
+            {
+                return Err("adopted observables diverged".to_string());
+            }
+            let xs: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+            let (mut want, mut got) = (Vec::new(), Vec::new());
+            boxed.step_many(&xs, &mut want).map_err(|e| e.to_string())?;
+            resident.step_many(&mut lanes, &xs, &mut got).map_err(|e| e.to_string())?;
+            prop::assert_close(&got, &want, 0.0)?;
+            if resident.tokens_seen() != boxed.tokens_seen() {
+                return Err("t diverged".to_string());
+            }
+            // the spill blob must be byte-identical too
+            let a = StreamSession::snapshot(&boxed).map_err(|e| e.to_string())?;
+            let b = resident.snapshot(&lanes).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err("snapshot blobs diverged".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resident_restore_resumes_bitwise_and_reuses_lanes() {
+        // spill → restore through the codec blob, into a RE-USED lane (a
+        // prior session released it), then stream the tail: bitwise the
+        // uninterrupted control's outputs
+        let d = 3;
+        let mut rng = Rng::new(21);
+        let mut lanes = LaneSet::new(d);
+        // occupy two lanes, then free lane 0 so the restore lands on it
+        let mut pad0 = NativeAarenSession::new(d);
+        let mut pad1 = NativeAarenSession::new(d);
+        let pad0 = ResidentAarenSession::adopt(&mut pad0, &mut lanes);
+        let _pad1 = ResidentAarenSession::adopt(&mut pad1, &mut lanes);
+        let freed = pad0.lane();
+        pad0.release(&mut lanes);
+
+        let mut control = NativeAarenSession::new(d);
+        let mut seed = NativeAarenSession::new(d);
+        for _ in 0..13 {
+            let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            control.step(&x).unwrap();
+            seed.step(&x).unwrap();
+        }
+        let blob = StreamSession::snapshot(&seed).unwrap();
+        let snap = codec::decode(&blob).unwrap();
+        let mut restored = ResidentAarenSession::from_snapshot(&snap, &mut lanes).unwrap();
+        assert_eq!(restored.lane(), freed, "restore must reuse the released lane");
+        assert_eq!(restored.tokens_seen(), control.tokens_seen());
+        for _ in 0..9 {
+            let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let a = control.step(&x).unwrap();
+            let b = restored.step(&mut lanes, &x).unwrap();
+            for (ya, yb) in a.iter().zip(b.iter()) {
+                assert_eq!(ya.to_bits(), yb.to_bits(), "restored resident stream diverged");
+            }
+        }
+        // wrong-width snapshots are refused before any lane is touched
+        let mut narrow = LaneSet::new(d + 1);
+        assert!(ResidentAarenSession::from_snapshot(&snap, &mut narrow).is_err());
+        assert_eq!(narrow.live(), 0);
+    }
+
+    #[test]
+    fn step_many_resident_is_bitwise_equal_to_sequential_step_many() {
+        // the resident drain engine vs per-session streaming: random lane
+        // counts, ragged (possibly empty) token blocks
+        prop::check("resident drain == per-session step_many", 24, |rng| {
+            let nb = 1 + rng.below(6);
+            let d = 1 + rng.below(8);
+            let blocks: Vec<Vec<f32>> = (0..nb)
+                .map(|_| {
+                    let n = rng.below(9);
+                    (0..n * d).map(|_| rng.gaussian() as f32).collect()
+                })
+                .collect();
+            let mut lanes_a = LaneSet::new(d);
+            let mut lanes_b = LaneSet::new(d);
+            let mut batched: Vec<ResidentAarenSession> = Vec::new();
+            let mut sequential: Vec<ResidentAarenSession> = Vec::new();
+            for _ in 0..nb {
+                // pre-warm both sides identically so drains start from a
+                // non-identity state
+                let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                let mut seed_a = NativeAarenSession::new(d);
+                let mut seed_b = NativeAarenSession::new(d);
+                let mut a = ResidentAarenSession::adopt(&mut seed_a, &mut lanes_a);
+                let mut b = ResidentAarenSession::adopt(&mut seed_b, &mut lanes_b);
+                a.step(&mut lanes_a, &x).map_err(|e| e.to_string())?;
+                b.step(&mut lanes_b, &x).map_err(|e| e.to_string())?;
+                batched.push(a);
+                sequential.push(b);
+            }
+            let mut units: Vec<ResidentLane<'_>> = batched
+                .iter_mut()
+                .zip(blocks.iter())
+                .map(|(s, xs)| (s, xs.as_slice()))
+                .collect();
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); nb];
+            step_many_resident(&mut units, &mut lanes_a, &mut outs)
+                .map_err(|e| e.to_string())?;
+            for b in 0..nb {
+                let mut want = Vec::new();
+                sequential[b]
+                    .step_many(&mut lanes_b, &blocks[b], &mut want)
+                    .map_err(|e| e.to_string())?;
+                prop::assert_close(&outs[b], &want, 0.0)
+                    .map_err(|e| format!("unit {b}: {e}"))?;
+                if batched[b].tokens_seen() != sequential[b].tokens_seen() {
+                    return Err(format!("unit {b}: t diverged"));
+                }
+                let (am, au, aw) = lanes_a.row(batched[b].lane());
+                let (bm, bu, bw) = lanes_b.row(sequential[b].lane());
+                if am.to_bits() != bm.to_bits() || au.to_bits() != bu.to_bits() {
+                    return Err(format!("unit {b}: lane m/u diverged"));
+                }
+                for (x, y) in aw.iter().zip(bw.iter()) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("unit {b}: lane w diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

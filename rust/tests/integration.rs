@@ -205,6 +205,7 @@ fn session_manager_protocol_end_to_end() {
         session_ttl: None,
         spill_dir: None,
         max_resident_sessions: None,
+        resident_lanes: true,
         artifacts: Some(dir),
     };
     let server = Server::bind(&cfg).unwrap();

@@ -18,6 +18,7 @@ fn base_cfg(channels: usize, shards: usize) -> ServeConfig {
         session_ttl: None,
         spill_dir: None,
         max_resident_sessions: None,
+        resident_lanes: true,
         artifacts: None,
     }
 }
@@ -568,6 +569,160 @@ fn large_steps_blocks_stream_partial_replies() {
     // the session advanced exactly n tokens, once
     let r = client.call(&step_line(id, &dyadic_token(999, channels))).unwrap();
     assert_eq!(r.usize_field("t").unwrap(), n + 1);
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn resident_lane_churn_with_spill_and_restore_stays_bitwise() {
+    // the resident-lane tentpole end to end: sessions churn lanes
+    // (create / close / create reuses freed lanes), idle past the TTL
+    // (spilling lane state through the codec), and resume on touch —
+    // every surviving stream must stay bitwise the never-evicted
+    // control's. One shard so every session shares one LaneSet.
+    let channels = 3;
+    let ttl = std::time::Duration::from_millis(400);
+    let spill = scratch_dir("lane-churn");
+    let mut cfg = base_cfg(channels, 1);
+    cfg.session_ttl = Some(ttl);
+    cfg.spill_dir = Some(spill.clone());
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+
+    // three sessions fill lanes 0..2; each streams a distinct head
+    let mut ids = Vec::new();
+    for k in 0..3usize {
+        let id = client
+            .call(r#"{"op":"create","kind":"aaren"}"#)
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        let head: Vec<Vec<f32>> = (0..5 + k).map(|i| dyadic_token(10 * k + i, channels)).collect();
+        let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+        client.call(&steps_line(id, &refs)).unwrap();
+        ids.push((id, head));
+    }
+    // close the middle session: its lane becomes a reusable hole…
+    let (closed, _) = ids.remove(1);
+    client.call(&format!(r#"{{"op":"close","id":{closed}}}"#)).unwrap();
+    // …which the next create claims
+    let reused = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
+    let head: Vec<Vec<f32>> = (0..7).map(|i| dyadic_token(40 + i, channels)).collect();
+    let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+    client.call(&steps_line(reused, &refs)).unwrap();
+    ids.push((reused, head));
+
+    // idle past the TTL: every resident lane spills to disk
+    std::thread::sleep(ttl + std::time::Duration::from_millis(700));
+    client.call(r#"{"op":"stats"}"#).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 0, "sessions still resident");
+    assert_eq!(stats.usize_field("spilled").unwrap(), 3, "lane states not spilled");
+
+    // touch restores each into a fresh lane, bitwise where it left off
+    for (id, head) in &ids {
+        let tail: Vec<Vec<f32>> = (0..6).map(|i| dyadic_token(70 + i, channels)).collect();
+        let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+        let want = control_outputs("aaren", channels, &all);
+        let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+        let reply = client.call(&steps_line(*id, &refs)).unwrap();
+        assert_eq!(reply.usize_field("t").unwrap(), all.len(), "session {id}: t diverged");
+        assert_eq!(
+            ys_as_f64(&reply),
+            want[head.len()..].to_vec(),
+            "session {id}: resumed lane stream diverged from the control"
+        );
+    }
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn graceful_shutdown_spills_sessions_and_a_restart_resumes_them() {
+    // ROADMAP PR 4 follow-up: with --spill-dir, `shutdown` must spill
+    // what is resident (no TTL involved) so a restarted server resumes
+    // every stream bitwise
+    let channels = 2;
+    let spill = scratch_dir("shutdown-spill");
+    let mut cfg = base_cfg(channels, 2);
+    cfg.spill_dir = Some(spill.clone());
+
+    let head: Vec<Vec<f32>> = (0..6).map(|i| dyadic_token(i, channels)).collect();
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+    client.call(&steps_line(id, &refs)).unwrap();
+    // shutdown immediately: the session is resident, never TTL-swept
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(
+        stats.usize_field("spilled").unwrap(),
+        1,
+        "graceful shutdown dropped the resident session instead of spilling it"
+    );
+    let tail: Vec<Vec<f32>> = (0..5).map(|i| dyadic_token(20 + i, channels)).collect();
+    let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+    let want = control_outputs("aaren", channels, &all);
+    let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+    let reply = client.call(&steps_line(id, &refs)).unwrap();
+    assert_eq!(reply.usize_field("t").unwrap(), all.len());
+    assert_eq!(
+        ys_as_f64(&reply),
+        want[head.len()..].to_vec(),
+        "stream across a graceful shutdown diverged from the control"
+    );
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn restore_with_an_explicit_target_id_over_tcp() {
+    let channels = 2;
+    let (addr, server) = start(channels, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let id =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    for i in 0..4 {
+        client.call(&step_line(id, &dyadic_token(i, channels))).unwrap();
+    }
+    let snap = client.call(&format!(r#"{{"op":"snapshot","id":{id}}}"#)).unwrap();
+    let blob = snap.str_field("state").unwrap().to_string();
+    // restore AT a chosen id: the twin adopts it and serves there
+    let restored = client
+        .call(&format!(r#"{{"op":"restore","state":"{blob}","id":77}}"#))
+        .unwrap();
+    assert_eq!(restored.usize_field("id").unwrap(), 77);
+    assert_eq!(restored.usize_field("t").unwrap(), 4);
+    let r = client.call(&step_line(77, &dyadic_token(9, channels))).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 5);
+    // a second restore at the same id is a structured collision error
+    let r = client
+        .call_raw(&format!(r#"{{"op":"restore","state":"{blob}","id":77}}"#))
+        .unwrap();
+    let err = r.str_field("error").unwrap();
+    assert!(err.contains("already exists"), "got: {err}");
+    // the original target keeps its stream position
+    let r = client.call(&step_line(77, &dyadic_token(10, channels))).unwrap();
+    assert_eq!(r.usize_field("t").unwrap(), 6, "collision clobbered the target session");
+    // auto ids skip past the claimed one
+    let fresh = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
+    assert!(fresh > 77, "auto id {fresh} collides with the claimed range");
     client.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
 }
