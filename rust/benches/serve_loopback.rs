@@ -16,9 +16,13 @@
 //! a second server runs with `resident_lanes: false` (the PR 4
 //! gather/scatter drain) and the `resident_vs_scatter_*` records carry
 //! the resident/scatter throughput ratio in `speedup_vs_sequential` —
-//! the acceptance bar is ratio ≥ 1 at b=16. Pass `--quick` (CI) for a
-//! shorter run; AAREN_TOKENS / AAREN_CLIENTS override the workload
-//! size.
+//! the acceptance bar is ratio ≥ 1 at b=16. The `overload_shed_b16`
+//! record runs 16 clients into a one-shard server with a 2-deep queue:
+//! its `ns_per_iter` is delivered throughput under admission control
+//! and its `speedup_vs_sequential` field carries the shed rate
+//! (structured `overloaded` replies per delivered token) instead of a
+//! speedup. Pass `--quick` (CI) for a shorter run; AAREN_TOKENS /
+//! AAREN_CLIENTS override the workload size.
 
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -111,6 +115,41 @@ fn stream_many(
     stream_many_kinds(addr, &["aaren"], step_body, tokens, batch, clients)
 }
 
+/// Stream through a deliberately overloaded server (tiny queue depth),
+/// backing off briefly and retrying whenever admission control sheds a
+/// request with a structured `overloaded` reply. Returns the shed count
+/// — the overload_shed_b16 record's proof that backpressure engaged.
+fn stream_one_shedding(addr: &SocketAddr, step_body: &str, tokens: usize, batch: usize) -> u64 {
+    use aaren::serve::wire_error;
+    let mut client = Client::connect(addr).expect("connect");
+    let mut sheds = 0u64;
+    let mut call = |client: &mut Client, line: &str| loop {
+        let reply = client.call_raw(line).expect("transport");
+        match wire_error(&reply) {
+            None => break reply,
+            Some((kind, _)) if kind == "overloaded" => {
+                sheds += 1;
+                // a short fixed backoff instead of the server's
+                // retry_after_ms hint: the bench wants sustained
+                // pressure, not a polite client
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Some((kind, msg)) => panic!("server error ({kind}): {msg}"),
+        }
+    };
+    let id = call(&mut client, r#"{"op":"create","kind":"aaren"}"#).usize_field("id").expect("id");
+    let row = format!("[{step_body}]");
+    let mut sent = 0usize;
+    while sent < tokens {
+        let take = batch.min(tokens - sent);
+        let xs = vec![row.as_str(); take].join(",");
+        call(&mut client, &format!(r#"{{"op":"steps","id":{id},"xs":[{xs}]}}"#));
+        sent += take;
+    }
+    let _ = client.call(&format!(r#"{{"op":"close","id":{id}}}"#));
+    sheds
+}
+
 /// One snapshot → restore → close round-trip over the wire: the
 /// spill/restore latency record. Returns round-trips/sec.
 fn snapshot_restore_roundtrips(addr: &SocketAddr, step_body: &str, iters: usize) -> f64 {
@@ -159,11 +198,7 @@ fn main() {
         addr: "127.0.0.1:0".to_string(),
         channels,
         shards: clients,
-        session_ttl: None,
-        spill_dir: None,
-        max_resident_sessions: None,
-        resident_lanes: true,
-        artifacts: None,
+        ..ServeConfig::default()
     };
     let server = Server::bind(&cfg).expect("bind");
     let addr = server.local_addr().expect("addr");
@@ -297,6 +332,52 @@ fn main() {
     });
 
     let mut shutdown = Client::connect(&scatter_addr).expect("connect");
+    let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+
+    // phase 8: overload shedding under admission control — one shard
+    // with a 2-deep queue against 16 clients, every shed answered with a
+    // structured `overloaded` + retry. ns_per_iter tracks delivered
+    // throughput under pressure; speedup_vs_sequential is OVERLOADED
+    // here: it carries the shed rate (sheds per delivered token), the
+    // number that must stay >0 for the record to prove backpressure ran
+    let shed_cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels,
+        shards: 1,
+        queue_depth: 2,
+        ..ServeConfig::default()
+    };
+    let shed_server = Server::bind(&shed_cfg).expect("bind shed");
+    let shed_addr = shed_server.local_addr().expect("addr");
+    std::thread::spawn(move || shed_server.run());
+
+    let shed_clients = 16usize;
+    let shed_tokens = (tokens / 4).max(BATCH);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..shed_clients)
+        .map(|_| {
+            let body = step_body.clone();
+            let addr = shed_addr;
+            std::thread::spawn(move || stream_one_shedding(&addr, &body, shed_tokens, BATCH))
+        })
+        .collect();
+    let sheds: u64 = handles.into_iter().map(|h| h.join().expect("shed client")).sum();
+    let delivered = (shed_clients * shed_tokens) as f64;
+    let shed_rate = delivered / t0.elapsed().as_secs_f64();
+    println!(
+        "serve_loopback: shed  b={BATCH}     {shed_clients} clients  {shed_rate:>12.0} tokens/s \
+         aggregate  ({sheds} overloaded sheds, queue depth {})",
+        shed_cfg.queue_depth
+    );
+    records.push(BenchRecord {
+        name: "overload_shed_b16".to_string(),
+        n: shed_clients * shed_tokens,
+        d: channels,
+        ns_per_iter: 1e9 / shed_rate,
+        speedup_vs_sequential: sheds as f64 / delivered,
+    });
+
+    let mut shutdown = Client::connect(&shed_addr).expect("connect");
     let _ = shutdown.call(r#"{"op":"shutdown"}"#);
 
     let out = std::path::Path::new("BENCH_serve.json");

@@ -1,0 +1,456 @@
+//! Fault containment primitives for the serving stack: the structured
+//! error taxonomy every wire reply uses, and the deterministic
+//! fault-injection harness the chaos tests drive.
+//!
+//! # Structured errors
+//!
+//! [`Kinded`] is the machine-readable classification a serving error
+//! carries through `anyhow`: the wire layer renders any reply error as
+//! `{"error":{"kind":K,"message":M[,"retry_after_ms":R]}}`, where `K`
+//! defaults to `"error"` unless a [`Kinded`] is found in the error chain.
+//! The kinds the stack emits:
+//!
+//! * [`KIND_QUARANTINED`] — the session panicked or poisoned its state
+//!   (non-finite outputs) and was isolated; `close` frees the id.
+//! * [`KIND_OVERLOADED`] — admission control shed the request (full
+//!   executor queue or the `--max-conns` cap); `retry_after_ms` is the
+//!   client's backoff hint.
+//! * [`KIND_CORRUPT_SNAPSHOT`] — a spilled blob failed its integrity
+//!   check; the blob is quarantined on disk, the id tombstoned.
+//! * [`KIND_FRAME_TOO_LARGE`] — a request line exceeded
+//!   `--max-frame-bytes`; the connection is closed after the reply.
+//! * [`KIND_NO_SESSION`] — the id names no live or spilled session.
+//!
+//! # Fault injection
+//!
+//! A [`FaultPlan`] is a seeded description of what to break and how
+//! often: IO errors and torn (truncated-but-reported-ok) writes at the
+//! snapshot store, forced or random panics in the executor step path,
+//! and injected delays. [`FaultPlan::site`] derives an independent
+//! deterministic [`FaultSite`] per consumer (per shard executor, per
+//! shard store), so cross-thread interleaving cannot perturb any site's
+//! decision sequence — the harness is replayable by seed.
+//! [`FaultingStore`] wraps any [`SnapshotStore`] with the IO fault
+//! sites; the executor rolls its step-panic site inside the same
+//! `catch_unwind` boundary a real bug would hit. Production servers
+//! simply run with no plan: every hook is `Option` and costs nothing
+//! when absent.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::Once;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::persist::store::SnapshotStore;
+use crate::util::rng::Rng;
+
+/// Error kind: the session was quarantined after a panic or poisoned
+/// (non-finite) output.
+pub const KIND_QUARANTINED: &str = "quarantined";
+/// Error kind: admission control shed the request; retry after the hint.
+pub const KIND_OVERLOADED: &str = "overloaded";
+/// Error kind: a stored snapshot failed its integrity check.
+pub const KIND_CORRUPT_SNAPSHOT: &str = "corrupt_snapshot";
+/// Error kind: a request frame exceeded the configured byte limit.
+pub const KIND_FRAME_TOO_LARGE: &str = "frame_too_large";
+/// Error kind: no session exists under the requested id.
+pub const KIND_NO_SESSION: &str = "no_session";
+/// The catch-all kind for errors carrying no [`Kinded`] classification.
+pub const KIND_ERROR: &str = "error";
+
+/// A classified serving error: the `kind` the wire reply's error object
+/// carries, the human-readable message, and (for overload shedding) a
+/// Retry-After-style hint in milliseconds.
+#[derive(Debug, Clone)]
+pub struct Kinded {
+    pub kind: &'static str,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+impl Kinded {
+    fn err(kind: &'static str, message: String, retry_after_ms: Option<u64>) -> anyhow::Error {
+        anyhow::Error::new(Kinded { kind, message, retry_after_ms })
+    }
+
+    pub fn quarantined(message: impl Into<String>) -> anyhow::Error {
+        Kinded::err(KIND_QUARANTINED, message.into(), None)
+    }
+
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> anyhow::Error {
+        Kinded::err(KIND_OVERLOADED, message.into(), Some(retry_after_ms))
+    }
+
+    pub fn corrupt_snapshot(message: impl Into<String>) -> anyhow::Error {
+        Kinded::err(KIND_CORRUPT_SNAPSHOT, message.into(), None)
+    }
+
+    pub fn frame_too_large(message: impl Into<String>) -> anyhow::Error {
+        Kinded::err(KIND_FRAME_TOO_LARGE, message.into(), None)
+    }
+
+    pub fn no_session(id: u64) -> anyhow::Error {
+        Kinded::err(KIND_NO_SESSION, format!("no session {id}"), None)
+    }
+
+    /// The classification of `err`, if any link of its chain carries one.
+    pub fn of(err: &anyhow::Error) -> Option<&Kinded> {
+        err.downcast_ref::<Kinded>()
+    }
+
+    /// The kind the wire layer reports for `err` ([`KIND_ERROR`] when
+    /// unclassified).
+    pub fn kind_of(err: &anyhow::Error) -> &'static str {
+        Kinded::of(err).map_or(KIND_ERROR, |k| k.kind)
+    }
+}
+
+impl fmt::Display for Kinded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Kinded {}
+
+/// Injected panics carry this payload prefix so the process-wide panic
+/// hook can stay quiet about them (they are expected test noise) while
+/// real panics keep their full report.
+pub const INJECTED_PANIC_PREFIX: &str = "injected fault:";
+
+/// Install (once) a panic hook that suppresses the default report for
+/// panics whose payload starts with [`INJECTED_PANIC_PREFIX`]. Real
+/// panics pass through to the previous hook untouched. Called by
+/// [`FaultPlan::site`] whenever the plan can inject panics.
+pub fn silence_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.starts_with(INJECTED_PANIC_PREFIX))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.starts_with(INJECTED_PANIC_PREFIX))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A seeded description of the faults to inject: rates in [0, 1] per
+/// opportunity, plus a set of session ids whose next step panics
+/// unconditionally (the deterministic trigger the isolation tests use).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// probability a store put/get fails with an injected IO error
+    pub io_error_rate: f64,
+    /// probability a store put writes a truncated blob yet reports Ok —
+    /// the lying-disk scenario the corrupt-snapshot machinery must absorb
+    pub torn_write_rate: f64,
+    /// probability one session's drain work panics mid-step
+    pub step_panic_rate: f64,
+    /// probability an injected delay fires at a delay point
+    pub delay_rate: f64,
+    /// duration of one injected delay
+    pub delay: Duration,
+    /// session ids whose next step panics regardless of rates
+    pub panic_step_ids: BTreeSet<u64>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    pub fn io_errors(mut self, rate: f64) -> FaultPlan {
+        self.io_error_rate = rate;
+        self
+    }
+
+    pub fn torn_writes(mut self, rate: f64) -> FaultPlan {
+        self.torn_write_rate = rate;
+        self
+    }
+
+    pub fn step_panics(mut self, rate: f64) -> FaultPlan {
+        self.step_panic_rate = rate;
+        self
+    }
+
+    pub fn delays(mut self, rate: f64, delay: Duration) -> FaultPlan {
+        self.delay_rate = rate;
+        self.delay = delay;
+        self
+    }
+
+    /// Force the next step of session `id` to panic (consumed by the
+    /// first roll; rates keep applying afterwards).
+    pub fn panic_on_step(mut self, id: u64) -> FaultPlan {
+        self.panic_step_ids.insert(id);
+        self
+    }
+
+    /// Parse the `--fault-plan` CLI spec: comma-separated `key=value`
+    /// pairs from `seed=N`, `io=RATE`, `torn=RATE`, `panic=RATE`,
+    /// `delay=RATE`, `delay-ms=N`, `panic-id=N` (repeatable), e.g.
+    /// `seed=7,io=0.05,torn=0.1,delay=0.2,delay-ms=2`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault-plan entry {part:?} is not key=value"))?;
+            let rate = || -> Result<f64> {
+                let r: f64 = value.parse()?;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("fault-plan rate {key}={value} is outside [0, 1]");
+                }
+                Ok(r)
+            };
+            match key.trim() {
+                "seed" => plan.seed = value.parse()?,
+                "io" => plan.io_error_rate = rate()?,
+                "torn" => plan.torn_write_rate = rate()?,
+                "panic" => plan.step_panic_rate = rate()?,
+                "delay" => plan.delay_rate = rate()?,
+                "delay-ms" => plan.delay = Duration::from_millis(value.parse()?),
+                "panic-id" => {
+                    plan.panic_step_ids.insert(value.parse()?);
+                }
+                other => bail!(
+                    "unknown fault-plan key {other:?} \
+                     (seed|io|torn|panic|delay|delay-ms|panic-id)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether any fault can ever fire under this plan.
+    pub fn is_active(&self) -> bool {
+        self.io_error_rate > 0.0
+            || self.torn_write_rate > 0.0
+            || self.step_panic_rate > 0.0
+            || self.delay_rate > 0.0
+            || !self.panic_step_ids.is_empty()
+    }
+
+    /// Derive the independent deterministic fault site named `tag`: its
+    /// decision stream depends only on `(seed, tag)`, never on what other
+    /// sites (threads) rolled — the property that keeps a multi-threaded
+    /// chaos run replayable.
+    pub fn site(&self, tag: &str) -> FaultSite {
+        if self.step_panic_rate > 0.0 || !self.panic_step_ids.is_empty() {
+            silence_injected_panics();
+        }
+        // FNV-1a over the tag, folded into the seed
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in tag.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        FaultSite { plan: self.clone(), rng: Rng::new(self.seed ^ h) }
+    }
+}
+
+/// One consumer's view of a [`FaultPlan`]: the plan plus a private
+/// deterministic decision stream.
+#[derive(Debug, Clone)]
+pub struct FaultSite {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl FaultSite {
+    fn roll(&mut self, rate: f64) -> bool {
+        rate > 0.0 && self.rng.uniform() < rate
+    }
+
+    /// Roll the IO-error fault for the store operation named `what`.
+    pub fn maybe_io_error(&mut self, what: &str) -> Result<()> {
+        if self.roll(self.plan.io_error_rate) {
+            bail!("injected IO error during {what}");
+        }
+        Ok(())
+    }
+
+    /// Roll the torn-write fault: `Some(truncated)` means the store
+    /// should persist the truncation yet report success.
+    pub fn torn_write(&mut self, blob: &[u8]) -> Option<Vec<u8>> {
+        if self.roll(self.plan.torn_write_rate) {
+            Some(blob[..blob.len() / 2].to_vec())
+        } else {
+            None
+        }
+    }
+
+    /// Roll the injected-delay fault (sleeps inline when it fires).
+    pub fn maybe_delay(&mut self) {
+        if self.roll(self.plan.delay_rate) && !self.plan.delay.is_zero() {
+            std::thread::sleep(self.plan.delay);
+        }
+    }
+
+    /// Roll the step-panic fault for session `id`; a forced id
+    /// ([`FaultPlan::panic_on_step`]) fires once, rates fire forever.
+    /// Panics (with the [`INJECTED_PANIC_PREFIX`] payload) when the
+    /// fault fires — always call inside the isolation boundary.
+    pub fn maybe_step_panic(&mut self, id: u64) {
+        if self.plan.panic_step_ids.remove(&id) || self.roll(self.plan.step_panic_rate) {
+            panic!("{INJECTED_PANIC_PREFIX} step panic for session {id}");
+        }
+    }
+}
+
+/// A [`SnapshotStore`] wrapper that injects the plan's IO faults: puts
+/// and gets can fail with injected errors, and a torn put persists a
+/// truncated blob while reporting success — surfacing later as the
+/// corrupt-snapshot path, exactly like a lying disk.
+pub struct FaultingStore {
+    inner: Box<dyn SnapshotStore>,
+    site: FaultSite,
+}
+
+impl FaultingStore {
+    pub fn new(inner: Box<dyn SnapshotStore>, site: FaultSite) -> FaultingStore {
+        FaultingStore { inner, site }
+    }
+}
+
+impl SnapshotStore for FaultingStore {
+    fn put(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        self.site.maybe_delay();
+        self.site.maybe_io_error("spill put")?;
+        match self.site.torn_write(blob) {
+            Some(torn) => self.inner.put(id, &torn), // lies: Ok on damage
+            None => self.inner.put(id, blob),
+        }
+    }
+
+    fn get(&mut self, id: u64) -> Result<Option<Vec<u8>>> {
+        self.site.maybe_delay();
+        self.site.maybe_io_error("spill get")?;
+        self.inner.get(id)
+    }
+
+    fn remove(&mut self, id: u64) -> Result<bool> {
+        self.inner.remove(id)
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.inner.contains(id)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn ids(&self) -> Vec<u64> {
+        self.inner.ids()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::MemStore;
+
+    #[test]
+    fn kinded_errors_survive_context_chains() {
+        use anyhow::Context;
+        let e = Kinded::overloaded("queue full", 25).context("dispatching step");
+        let k = Kinded::of(&e).expect("kind lost through context");
+        assert_eq!(k.kind, KIND_OVERLOADED);
+        assert_eq!(k.retry_after_ms, Some(25));
+        assert_eq!(Kinded::kind_of(&e), KIND_OVERLOADED);
+        // unclassified errors report the catch-all kind
+        assert_eq!(Kinded::kind_of(&anyhow::anyhow!("plain")), KIND_ERROR);
+        // the message is the display, so wire replies stay readable
+        assert!(format!("{e:#}").contains("queue full"));
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_spec() {
+        let plan =
+            FaultPlan::parse("seed=7,io=0.05,torn=0.5,panic=0.01,delay=0.2,delay-ms=2,panic-id=9")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.io_error_rate, 0.05);
+        assert_eq!(plan.torn_write_rate, 0.5);
+        assert_eq!(plan.step_panic_rate, 0.01);
+        assert_eq!(plan.delay_rate, 0.2);
+        assert_eq!(plan.delay, Duration::from_millis(2));
+        assert!(plan.panic_step_ids.contains(&9));
+        assert!(plan.is_active());
+        assert!(!FaultPlan::parse("seed=3").unwrap().is_active());
+        assert!(FaultPlan::parse("io=2.0").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("io").is_err());
+    }
+
+    #[test]
+    fn sites_are_deterministic_and_independent() {
+        let plan = FaultPlan::new(42).io_errors(0.5);
+        let decisions = |tag: &str| -> Vec<bool> {
+            let mut site = plan.site(tag);
+            (0..64).map(|_| site.maybe_io_error("x").is_err()).collect()
+        };
+        // same (seed, tag) → same stream, replayed in any order
+        assert_eq!(decisions("store-0"), decisions("store-0"));
+        // different tags → different streams (the cross-thread
+        // independence that keeps multi-threaded chaos runs replayable)
+        assert_ne!(decisions("store-0"), decisions("store-1"));
+        let both = plan.io_error_rate;
+        assert!(both > 0.0, "plan must stay active for this test");
+    }
+
+    #[test]
+    fn forced_step_panic_fires_once_then_rates_apply() {
+        let plan = FaultPlan::new(1).panic_on_step(5);
+        let mut site = plan.site("exec");
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            site.maybe_step_panic(5)
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.starts_with(INJECTED_PANIC_PREFIX), "got: {msg}");
+        // consumed: the same id steps fine afterwards (rate is 0)
+        site.maybe_step_panic(5);
+        site.maybe_step_panic(6);
+    }
+
+    #[test]
+    fn faulting_store_tears_writes_but_reports_ok() {
+        // torn rate 1: every put persists half the blob and lies about it
+        let plan = FaultPlan::new(3).torn_writes(1.0);
+        let mut store = FaultingStore::new(Box::new(MemStore::new()), plan.site("store"));
+        let blob: Vec<u8> = (0..64).collect();
+        store.put(4, &blob).unwrap();
+        let stored = store.get(4).unwrap().expect("torn blob still stored");
+        assert_eq!(stored, &blob[..32], "torn write must persist the truncated prefix");
+        // plain forwarding still behaves like a store
+        assert!(store.contains(4));
+        assert_eq!(store.len(), 1);
+        assert!(store.remove(4).unwrap());
+        assert!(store.get(4).unwrap().is_none());
+    }
+
+    #[test]
+    fn io_error_rate_one_fails_every_op() {
+        let plan = FaultPlan::new(8).io_errors(1.0);
+        let mut store = FaultingStore::new(Box::new(MemStore::new()), plan.site("store"));
+        let err = store.put(1, b"blob").unwrap_err();
+        assert!(format!("{err}").contains("injected IO error"), "got: {err}");
+        assert!(store.get(1).is_err());
+    }
+}

@@ -38,6 +38,7 @@ pub mod bench_harness;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod metrics;
 pub mod persist;
 #[cfg(feature = "pjrt")]

@@ -86,6 +86,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
     };
     let ttl_secs = args.u64("session-ttl-secs", 0);
     let max_resident = args.usize("max-resident-sessions", 0);
+    let max_conns = args.usize("max-conns", 0);
+    let io_timeout_secs = args.u64("io-timeout-secs", 0);
+    // chaos testing only: a seeded fault-injection plan like
+    // "seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2,panic-id=3"
+    let fault = match args.flags.get("fault-plan") {
+        Some(spec) => Some(aaren::fault::FaultPlan::parse(spec)?),
+        None => None,
+    };
     let cfg = ServeConfig {
         addr: args.str("addr", &defaults.addr),
         channels: args.usize("channels", defaults.channels),
@@ -99,6 +107,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // (kept for A/B benchmarking; resident lanes are the default)
         resident_lanes: !args.bool("scatter-drain"),
         artifacts,
+        queue_depth: args.usize("queue-depth", defaults.queue_depth),
+        // 0 (the default) leaves admission unbounded
+        max_conns: (max_conns > 0).then_some(max_conns),
+        // 0 (the default) blocks forever, the pre-containment behaviour
+        io_timeout: (io_timeout_secs > 0)
+            .then(|| std::time::Duration::from_secs(io_timeout_secs)),
+        max_frame_bytes: args.usize("max-frame-bytes", defaults.max_frame_bytes),
+        fault,
     };
     if cfg.max_resident_sessions.is_some() && cfg.spill_dir.is_none() {
         anyhow::bail!(
@@ -240,6 +256,12 @@ fn help() {
          --spill-dir DIR       spill evicted sessions to disk, restore on touch\n                        \
          --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)\n                        \
          --scatter-drain       disable resident lanes (PR 3 gather/scatter drains)\n                        \
+         --queue-depth N       bound each shard's queue; full = overloaded reply (default 256)\n                        \
+         --max-conns N         cap concurrent connections (default: unbounded)\n                        \
+         --io-timeout-secs N   per-connection read/write timeout (default: none)\n                        \
+         --max-frame-bytes N   hard request-line size limit (default 16 MiB)\n                        \
+         --fault-plan SPEC     seeded fault injection (chaos testing), e.g.\n                        \
+                       seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2\n                        \
          --smoke        loopback self-test, then exit\n                        \
          ops: create/step/steps/snapshot/restore/close/stats/shutdown\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \

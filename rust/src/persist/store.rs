@@ -9,10 +9,17 @@
 //!   hold megabytes of KV cache; it is also the deterministic store the
 //!   tests and the LRU-cap logic run against.
 //! * [`DirStore`] — one file per session (`sess-<id>.snap`) under a spill
-//!   directory. Writes go to `sess-<id>.snap.tmp` then `rename(2)` into
-//!   place, so a crash mid-write can never leave a half-written blob
-//!   under the live name; loads verify the codec framing + CRC and
-//!   refuse corrupt files instead of resurrecting garbage state.
+//!   directory. Writes go to `sess-<id>.snap.tmp` (fsync'd), then
+//!   `rename(2)` into place, then the DIRECTORY is fsync'd — a crash or
+//!   power cut at any point leaves either the old complete blob or the
+//!   new one under the live name, never a torn file, and a published
+//!   rename is durable. Loads verify the codec framing + CRC; a corrupt
+//!   file is QUARANTINED (renamed to `sess-<id>.snap.corrupt`, kept for
+//!   forensics, dropped from the index) and reported as a structured
+//!   `corrupt_snapshot` error — one structured failure, never a
+//!   resurrected-garbage session and never a permanently wedged id.
+//!   Opening a store sweeps stale `.tmp` files a crashed save left in
+//!   its partition.
 //!
 //! Sharding: every executor shard opens the SAME directory with its own
 //! `(shard, nshards)` partition, indexing only ids it routes
@@ -25,6 +32,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::fault::Kinded;
 use crate::persist::codec;
 
 /// Blob storage for spilled sessions, keyed by session id. Blobs are
@@ -102,6 +110,8 @@ impl SnapshotStore for MemStore {
 
 const SNAP_PREFIX: &str = "sess-";
 const SNAP_SUFFIX: &str = ".snap";
+const TMP_SUFFIX: &str = ".tmp";
+const CORRUPT_SUFFIX: &str = ".corrupt";
 
 fn id_of_file(name: &str) -> Option<u64> {
     name.strip_prefix(SNAP_PREFIX)?.strip_suffix(SNAP_SUFFIX)?.parse().ok()
@@ -136,7 +146,20 @@ impl DirStore {
             .with_context(|| format!("reading spill dir {}", dir.display()))?
         {
             let entry = entry?;
-            if let Some(id) = entry.file_name().to_str().and_then(id_of_file) {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            // a `.tmp` is a save that crashed before publishing: its live
+            // name (if any) still holds the last complete blob, so the
+            // leftover is pure disk leak — swept here, by the partition
+            // that owns the id (foreign-partition tmps belong to another
+            // shard's sweep)
+            if let Some(id) = name.strip_suffix(TMP_SUFFIX).and_then(id_of_file) {
+                if id % nshards == shard {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+                continue;
+            }
+            if let Some(id) = id_of_file(name) {
                 if id % nshards == shard {
                     index.insert(id);
                 }
@@ -152,14 +175,28 @@ impl DirStore {
 
 impl SnapshotStore for DirStore {
     fn put(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        use std::io::Write as _;
         let live = self.path_of(id);
-        // write-then-rename: the live name only ever points at a complete
-        // blob, whatever happens mid-write
-        let tmp = self.dir.join(format!("{SNAP_PREFIX}{id}{SNAP_SUFFIX}.tmp"));
-        std::fs::write(&tmp, blob)
-            .with_context(|| format!("writing spill tmp {}", tmp.display()))?;
+        // crash-safe publish: write + fsync the tmp so its bytes are on
+        // disk BEFORE the rename can make them visible, rename into the
+        // live name, then fsync the directory so the rename itself
+        // survives a power cut — at every point the live name holds
+        // either the previous complete blob or the new one, never a torn
+        // file
+        let tmp = self.dir.join(format!("{SNAP_PREFIX}{id}{SNAP_SUFFIX}{TMP_SUFFIX}"));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating spill tmp {}", tmp.display()))?;
+            f.write_all(blob)
+                .with_context(|| format!("writing spill tmp {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing spill tmp {}", tmp.display()))?;
+        }
         std::fs::rename(&tmp, &live)
             .with_context(|| format!("publishing spill file {}", live.display()))?;
+        std::fs::File::open(&self.dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("syncing spill dir {}", self.dir.display()))?;
         self.index.insert(id);
         Ok(())
     }
@@ -177,8 +214,24 @@ impl SnapshotStore for DirStore {
             }
             Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
         };
-        // integrity gate: a damaged file is an error, never a session
-        codec::meta(&blob).with_context(|| format!("verifying {}", path.display()))?;
+        // integrity gate: a damaged file is an error, never a session —
+        // and the error is terminal for the FILE, not for the id: the
+        // blob is quarantined to `.corrupt` (kept for forensics) and
+        // dropped from the index, so the caller gets ONE structured
+        // corrupt_snapshot failure instead of a restore that fails
+        // forever
+        if let Err(e) = codec::meta(&blob) {
+            self.index.remove(&id);
+            let corrupt = self.dir.join(format!("{SNAP_PREFIX}{id}{SNAP_SUFFIX}{CORRUPT_SUFFIX}"));
+            let note = match std::fs::rename(&path, &corrupt) {
+                Ok(()) => format!(" (quarantined to {})", corrupt.display()),
+                Err(_) => String::new(),
+            };
+            return Err(Kinded::corrupt_snapshot(format!(
+                "snapshot {} failed verification: {e:#}{note}",
+                path.display()
+            )));
+        }
         Ok(Some(blob))
     }
 
@@ -291,7 +344,7 @@ mod tests {
     }
 
     #[test]
-    fn dir_store_rejects_corrupt_files_and_ignores_tmp_and_foreign() {
+    fn dir_store_quarantines_corrupt_files_with_a_structured_error() {
         let dir = scratch_dir("dirstore-corrupt");
         let mut store = DirStore::open(&dir).unwrap();
         store.put(3, &blob(3)).unwrap();
@@ -301,12 +354,62 @@ mod tests {
         let n = bytes.len();
         bytes[n - 6] ^= 0xFF; // payload corruption, caught by the crc
         std::fs::write(&path, &bytes).unwrap();
-        assert!(store.get(3).unwrap_err().to_string().contains("sess-3.snap"));
-        // leftover tmp files and foreign names are not indexed on open
-        std::fs::write(dir.join("sess-8.snap.tmp"), b"half").unwrap();
+        let err = store.get(3).unwrap_err();
+        assert!(err.to_string().contains("sess-3.snap"), "got: {err}");
+        assert_eq!(
+            crate::fault::Kinded::kind_of(&err),
+            crate::fault::KIND_CORRUPT_SNAPSHOT,
+            "corruption must carry its structured kind"
+        );
+        // the damaged file moved aside (forensics), the id is free again:
+        // one structured failure, not a permanently wedged restore
+        assert!(!path.exists(), "corrupt file must leave the live name");
+        assert!(dir.join("sess-3.snap.corrupt").exists(), "quarantine file missing");
+        assert!(!store.contains(3));
+        assert_eq!(store.get(3).unwrap(), None, "after quarantine the id reads as absent");
+        // foreign names are not indexed on reopen; the quarantined blob
+        // stays out of the index too
         std::fs::write(dir.join("notes.txt"), b"hi").unwrap();
         let reopened = DirStore::open(&dir).unwrap();
-        assert_eq!(reopened.ids(), vec![3]);
+        assert_eq!(reopened.ids(), Vec::<u64>::new());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_sweeps_stale_tmp_files_in_its_partition_only() {
+        let dir = scratch_dir("dirstore-tmpsweep");
+        {
+            let mut store = DirStore::open(&dir).unwrap();
+            store.put(4, &blob(4)).unwrap();
+        }
+        // a crashed save leaves `.tmp` files behind; ids 8 (even) and 5
+        // (odd) let the partition split show
+        std::fs::write(dir.join("sess-8.snap.tmp"), b"half").unwrap();
+        std::fs::write(dir.join("sess-5.snap.tmp"), b"half").unwrap();
+        let even = DirStore::open_partition(&dir, 0, 2).unwrap();
+        assert_eq!(even.ids(), vec![4], "tmp files must not be indexed");
+        assert!(!dir.join("sess-8.snap.tmp").exists(), "own-partition tmp must be swept");
+        assert!(dir.join("sess-5.snap.tmp").exists(), "foreign-partition tmp is not ours");
+        let _ = DirStore::open_partition(&dir, 1, 2).unwrap();
+        assert!(!dir.join("sess-5.snap.tmp").exists(), "owning partition sweeps its tmp");
+        // the published blob is untouched by the sweeps
+        let mut store = DirStore::open(&dir).unwrap();
+        assert_eq!(store.get(4).unwrap().unwrap(), blob(4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_leaves_no_tmp_behind() {
+        let dir = scratch_dir("dirstore-fsync");
+        let mut store = DirStore::open(&dir).unwrap();
+        store.put(2, &blob(1)).unwrap();
+        store.put(2, &blob(2)).unwrap(); // overwrite takes the same path
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["sess-2.snap".to_string()]);
+        assert_eq!(store.get(2).unwrap().unwrap(), blob(2));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

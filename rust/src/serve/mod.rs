@@ -84,15 +84,62 @@
 //!   sweep sessions idle longer than the TTL — DESTROYING them without a
 //!   spill tier, SPILLING them with one (see below).
 //! * `stats` — resident session count, their total state bytes, and the
-//!   spilled-session count, aggregated across every executor shard.
+//!   spilled-session count, aggregated across every executor shard, plus
+//!   the containment counters (all cumulative since server start):
+//!   `quarantined` (sessions condemned by a panic, poisoned output or
+//!   corrupt snapshot), `corrupt_snapshots` (spilled blobs that failed
+//!   verification), `overloaded_rejects` (requests/connections shed by
+//!   backpressure or the connection cap) and `accept_errors`.
 //! * `shutdown` — stop all executors and the accept loop. Executors
 //!   acknowledge with a first-class `Response::ShuttingDown` reply (the
 //!   wire sees `{"ok":true}`); requests that race a shutdown fail with
 //!   an error rather than hanging.
 //!
-//! Any request-level failure (unknown op, bad JSON, unknown session,
-//! width mismatch) is replied as `{"error":"…"}` on the same
-//! connection, which stays usable.
+//! # Errors and fault containment
+//!
+//! Any failure is replied as a structured object on the same connection:
+//!
+//! ```text
+//! {"error":{"kind":K,"message":M[,"retry_after_ms":N]}}
+//! ```
+//!
+//! `kind` lets clients branch without parsing prose:
+//!
+//! * `"quarantined"` — the session was condemned (its step work
+//!   panicked, it produced a non-finite output, or its spilled snapshot
+//!   was corrupt). Its lane/state is gone; every later op on the id
+//!   returns this kind until `close` frees the id for reuse. Other
+//!   sessions on the same shard are unaffected — this is the panic
+//!   isolation boundary.
+//! * `"overloaded"` — the target shard's bounded queue
+//!   (`--queue-depth`) was full, or the server is at `--max-conns`
+//!   concurrent connections (in that case the error is the connection's
+//!   only line before close). Carries `retry_after_ms`, a back-off hint
+//!   ([`server::RETRY_AFTER_MS`]). The request did NOT execute; resend
+//!   after the hint.
+//! * `"corrupt_snapshot"` — a spilled blob failed the codec's
+//!   magic/version/CRC verification. `DirStore` quarantines the file
+//!   aside as `sess-<id>.snap.corrupt` for post-mortem and the id is
+//!   tombstoned as `"quarantined"` thereafter; `close` heals the id.
+//! * `"frame_too_large"` — the request line crossed `--max-frame-bytes`
+//!   (default 16 MiB). The rest of the frame is unread so there is no
+//!   way back to a frame boundary: the error line is final and the
+//!   connection closes. Other connections are unaffected.
+//! * `"no_session"` — the id names nothing resident or spilled.
+//! * `"error"` — everything else (bad JSON, unknown op, width mismatch,
+//!   duplicate create, …). The connection stays usable.
+//!
+//! Connection hygiene: `--io-timeout-secs` bounds every per-connection
+//! read/write so a stalled peer releases its handler thread, and the
+//! accept loop backs off (and counts `accept_errors`) on accept
+//! failures such as EMFILE instead of busy-spinning. Crash safety:
+//! `DirStore` writes spill files tmp-then-rename with file AND directory
+//! `sync_all`, sweeps stale `.tmp` files at startup, and a kill at any
+//! point leaves every snapshot either absent or bitwise complete — the
+//! chaos suite (`tests/chaos.rs`) kills a loaded server and asserts
+//! every stream resumes bitwise from spill or gets a structured error.
+//! Deterministic fault injection for that suite is wired through
+//! `--fault-plan` / [`crate::fault::FaultPlan`].
 //!
 //! # Session persistence (spill tier)
 //!
@@ -117,19 +164,22 @@
 //! [`crate::scan::BatchScanBuffer`] with a lane free-list), every
 //! session's (m, u, w) accumulator lives in a stable lane of it, and
 //! drain work folds tokens into the lanes in place
-//! ([`session::step_many_resident`]) — the buffer owns the state, the
-//! session is a lane view, and a drain copies **no** accumulator state
-//! in or out (the gather/scatter overhead of the PR 3 design). Lanes are
-//! released on close/evict/spill and compacted (with the moved sessions
-//! re-pointed) once released lanes outnumber both the live count and a
-//! floor of 8 (hysteresis for small shards).
+//! ([`ResidentAarenSession::step_many`], one isolated `catch_unwind`
+//! unit per session so a panic condemns only its own session) — the
+//! buffer owns the state, the session is a lane view, and a drain copies
+//! **no** accumulator state in or out (the gather/scatter overhead of
+//! the PR 3 design). Lanes are released on close/evict/spill/quarantine
+//! and compacted (with the moved sessions re-pointed) once released
+//! lanes outnumber both the live count and a floor of 8 (hysteresis for
+//! small shards).
 //! `ServeConfig::resident_lanes = false` (CLI `--scatter-drain`) keeps
-//! the old gather/scatter batching ([`session::step_many_batched`]) for
-//! A/B benchmarking — `BENCH_serve.json`'s `resident_vs_scatter`
-//! records track the two against each other. Numerics are unchanged
-//! either way — batched outputs and `t` are bitwise those of sequential
-//! per-request stepping, and both drain engines are bitwise equal to
-//! each other.
+//! the PR 3 self-contained sessions (no lane residency) for A/B
+//! benchmarking — `BENCH_serve.json`'s `resident_vs_scatter` records
+//! track the two against each other, and the round-major batch engines
+//! ([`session::step_many_resident`] / [`session::step_many_batched`])
+//! remain exported for the benches. Numerics are unchanged either way —
+//! batched outputs and `t` are bitwise those of sequential per-request
+//! stepping, and both drain modes are bitwise equal to each other.
 //! One observable coarsens: when several requests for the SAME session
 //! land in one drain, each reply's `state_bytes` reflects the session
 //! after the whole drain (per-request `t` stays exact). A request that
@@ -141,7 +191,8 @@ pub mod server;
 pub mod session;
 
 pub use server::{
-    Client, ServeConfig, Server, SessionFactory, SpillTier, MAX_STEPS_TOKENS, STEPS_REPLY_BLOCK,
+    wire_error, Client, ExecutorOpts, ServeConfig, ServeStats, Server, SessionFactory, SpillTier,
+    MAX_STEPS_TOKENS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
 };
 pub use session::{
     step_many_batched, step_many_resident, NativeAarenSession, NativeTfSession, PendingLane,

@@ -10,8 +10,16 @@
 //!   -> {"op":"snapshot","id":N}                  <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
 //!   -> {"op":"restore","state":"<base64>"[,"id":M]} <- {"id":M,"kind":K,"channels":D,"t":T}
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
-//!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S}
+//!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S,
+//!                                                    "quarantined":Q,"corrupt_snapshots":C,
+//!                                                    "overloaded_rejects":O,"accept_errors":A}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
+//!
+//! Error replies are structured:
+//!   {"error":{"kind":K,"message":M[,"retry_after_ms":N]}}
+//! with kind ∈ {"quarantined","overloaded","corrupt_snapshot",
+//! "frame_too_large","no_session","error"}; `retry_after_ms` rides on
+//! `overloaded` only. See `serve/mod.rs` for the full wire contract.
 //!
 //! Architecture: connection handler threads parse requests and hand them
 //! to a [`Router`], which forwards each to an executor over an mpsc
@@ -29,15 +37,16 @@
 //! sessions are **resident**: each shard owns one long-lived
 //! [`LaneSet`] (a single-row-block [`BatchScanBuffer`] with a lane
 //! free-list), every session holds a stable lane in it, and drain work
-//! folds tokens into the lanes IN PLACE (`session::step_many_resident`)
-//! — no per-drain export/import of (m, u, w) state. Lanes are released
-//! on close/evict/spill and the set compacts itself (moving high lanes
-//! into holes, re-pointing the moved sessions) when fragmentation
-//! exceeds the live count. `ServeConfig::resident_lanes = false` falls
-//! back to the PR 3 gather/scatter batching
-//! (`session::step_many_batched`) — kept for A/B benchmarking
-//! (`resident_vs_scatter` in `BENCH_serve.json`) and as an escape
-//! hatch. The drain is also where idle sessions are swept: with a
+//! folds tokens into the lanes IN PLACE
+//! ([`ResidentAarenSession::step_many`], one isolated unit per session —
+//! see FAULT CONTAINMENT below) — no per-drain export/import of
+//! (m, u, w) state. Lanes are released on close/evict/spill/quarantine
+//! and the set compacts itself (moving high lanes into holes,
+//! re-pointing the moved sessions) when fragmentation exceeds the live
+//! count. `ServeConfig::resident_lanes = false` falls back to the PR 3
+//! gather/scatter sessions (self-contained state, no lane residency) —
+//! the `resident_vs_scatter` A/B baseline in `BENCH_serve.json` and an
+//! escape hatch. The drain is also where idle sessions are swept: with a
 //! session TTL configured (`--session-ttl-secs`), sessions idle past it
 //! are evicted, so a client that disconnected without `close` cannot
 //! leak its sessions forever.
@@ -53,23 +62,53 @@
 //! the paper's constant-bytes-per-stream claim turned into a
 //! more-sessions-than-RAM serving capability. Sessions whose backend
 //! cannot snapshot (the compiled-HLO tier) fall back to plain eviction.
+//!
+//! FAULT CONTAINMENT (see `ARCHITECTURE.md` § Failure modes):
+//!
+//! * Each session's drain work runs under `catch_unwind`; a panic — or a
+//!   non-finite (poisoned) output — QUARANTINES that session alone: its
+//!   lane is released, later ops on the id get a structured
+//!   `quarantined` error, and `close` frees the id. The shard thread and
+//!   every other resident session keep serving. This is why the drain
+//!   executes per session ([`ResidentAarenSession::step_many`] straight
+//!   on the shard [`LaneSet`] — still zero state copies, and bitwise
+//!   identical to the round-major batch engines since each fold touches
+//!   only its own lane) instead of one fused multi-session fold: a
+//!   mid-batch panic in a fused fold could not be attributed to the one
+//!   session that caused it.
+//! * Executor queues are BOUNDED (`ServeConfig::queue_depth`): a full
+//!   queue sheds data-plane requests with a structured `overloaded`
+//!   reply carrying a `retry_after_ms` hint, instead of queueing without
+//!   limit. `--max-conns` caps concurrent connections at the accept
+//!   loop, per-connection IO timeouts (`--io-timeout-secs`) unwedge
+//!   stalled peers, and `--max-frame-bytes` bounds a single request
+//!   line.
+//! * A spilled blob that fails its integrity check is quarantined by the
+//!   store (`.snap.corrupt`), counted, and reported as a structured
+//!   `corrupt_snapshot` error — the id is tombstoned, not wedged.
+//! * `--fault-plan` threads a seeded [`FaultPlan`] through the spill
+//!   stores and the executor step path (injected IO errors, torn writes,
+//!   delays, forced panics) — the deterministic chaos harness
+//!   `tests/chaos.rs` drives.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::fault::{
+    FaultPlan, FaultSite, FaultingStore, Kinded, KIND_CORRUPT_SNAPSHOT, KIND_QUARANTINED,
+};
 use crate::persist::codec;
 use crate::persist::store::{DirStore, SnapshotStore};
-use crate::scan::{BatchScanBuffer, LaneSet};
+use crate::scan::LaneSet;
 use crate::serve::session::{
-    step_many_batched, step_many_resident, NativeAarenSession, NativeTfSession, PendingLane,
-    ResidentAarenSession, ResidentLane, StreamSession,
+    NativeAarenSession, NativeTfSession, ResidentAarenSession, StreamSession,
 };
 use crate::util::b64;
 use crate::util::json::Json;
@@ -84,6 +123,24 @@ pub const MAX_STEPS_TOKENS: usize = 1 << 20;
 /// (each but the last tagged `"partial":true`), so reply memory is
 /// bounded by the block size instead of n.
 pub const STEPS_REPLY_BLOCK: usize = 512;
+
+/// The `retry_after_ms` hint attached to `overloaded` replies — long
+/// enough for a drain to free queue slots, short enough that a backing-off
+/// client barely notices.
+pub const RETRY_AFTER_MS: u64 = 25;
+
+/// Default hard cap on one request frame (line) in bytes; see
+/// `ServeConfig::max_frame_bytes`.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 24;
+
+/// Default bound on each executor shard's request queue; see
+/// `ServeConfig::queue_depth`.
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// How long the accept loop sleeps after an `accept(2)` error (EMFILE
+/// and friends) so it degrades to slow accepting instead of busy-spinning
+/// a core while the condition persists.
+const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(50);
 
 /// A request as an executor sees it (ids are assigned by the router
 /// before dispatch, so `Create` already carries one).
@@ -110,16 +167,28 @@ pub enum Response {
     /// The wire-level reply body.
     Value(Json),
     /// Per-shard stats, aggregated by the router before hitting the wire.
-    Stats { sessions: usize, state_bytes: usize, spilled: usize },
+    /// `quarantined` and `corrupt_snapshots` are CUMULATIVE totals since
+    /// the executor started (a closed quarantined id stays counted).
+    Stats {
+        sessions: usize,
+        state_bytes: usize,
+        spilled: usize,
+        quarantined: usize,
+        corrupt_snapshots: usize,
+    },
     /// The executor acknowledges shutdown and exits its loop.
     ShuttingDown,
 }
 
 pub type Reply = Result<Response>;
 
-/// A request plus the channel its reply goes back on.
+/// A request plus the channel its reply goes back on. Executor queues
+/// are BOUNDED (`ServeConfig::queue_depth`): the router data-plane path
+/// uses `try_send` and sheds with a structured `overloaded` reply when
+/// the queue is full, so a stalled shard back-pressures its clients
+/// instead of buffering unboundedly.
 pub type Envelope = (Request, mpsc::Sender<Reply>);
-pub type ReqTx = mpsc::Sender<Envelope>;
+pub type ReqTx = mpsc::SyncSender<Envelope>;
 pub type ReqRx = mpsc::Receiver<Envelope>;
 
 /// Which executor family a `create` lands on.
@@ -191,6 +260,36 @@ pub struct SpillTier {
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// The wire shape of an error reply:
+/// `{"error":{"kind":K,"message":M[,"retry_after_ms":N]}}`. The kind is
+/// the [`Kinded`] tag when the error carries one (`quarantined`,
+/// `overloaded`, `corrupt_snapshot`, `frame_too_large`, `no_session`)
+/// and the generic `"error"` otherwise, so clients can branch on kind
+/// without parsing prose.
+fn error_body(e: &anyhow::Error) -> Json {
+    let mut fields = vec![
+        ("kind", Json::Str(Kinded::kind_of(e).to_string())),
+        ("message", Json::Str(format!("{e:#}"))),
+    ];
+    if let Some(ms) = Kinded::of(e).and_then(|k| k.retry_after_ms) {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    obj(vec![("error", obj(fields))])
+}
+
+/// Pull `(kind, message)` out of a reply object if it is an error —
+/// handles both the structured object form and the legacy plain-string
+/// form (pre-containment servers / hand-rolled tests).
+pub fn wire_error(reply: &Json) -> Option<(String, String)> {
+    let e = reply.get("error")?;
+    if let Some(msg) = e.as_str() {
+        return Some(("error".to_string(), msg.to_string()));
+    }
+    let kind = e.get("kind").and_then(Json::as_str).unwrap_or("error").to_string();
+    let msg = e.get("message").and_then(Json::as_str).unwrap_or_default().to_string();
+    Some((kind, msg))
 }
 
 /// How an executor holds one session: native Aaren sessions normally
@@ -302,6 +401,64 @@ struct PendingSteps {
     reply: mpsc::Sender<Reply>,
 }
 
+/// Per-shard fault-containment state: the quarantine tombstones plus the
+/// cumulative counters `stats` reports.
+///
+/// A tombstoned id answers every op except `close` with a structured
+/// `quarantined` error — the session's state is suspect (a panic may
+/// have left a partial fold) so it is neither served nor spilled.
+/// `close` drops the tombstone (and any stale spilled blob), freeing the
+/// id for reuse; the TTL sweep also expires tombstones so an abandoned
+/// quarantined id does not leak forever.
+struct Containment {
+    tombstones: HashMap<u64, (String, Instant)>,
+    /// sessions ever quarantined on this shard (cumulative)
+    quarantined_total: usize,
+    /// spilled blobs that failed verification on this shard (cumulative)
+    corrupt_snapshots: usize,
+}
+
+impl Containment {
+    fn new() -> Containment {
+        Containment { tombstones: HashMap::new(), quarantined_total: 0, corrupt_snapshots: 0 }
+    }
+
+    fn quarantine(&mut self, id: u64, reason: String, now: Instant) {
+        if self.tombstones.insert(id, (reason, now)).is_none() {
+            self.quarantined_total += 1;
+        }
+    }
+
+    /// The structured error a tombstoned id's ops get, `None` when live.
+    fn error_for(&self, id: u64) -> Option<anyhow::Error> {
+        self.tombstones.get(&id).map(|(reason, _)| {
+            Kinded::quarantined(format!("session {id} is quarantined: {reason}"))
+        })
+    }
+}
+
+/// Run one session's drain work under panic isolation: a panic — whether
+/// a real bug or an injected fault — comes back as a `quarantined`-kinded
+/// error instead of unwinding (and killing) the shard thread. The
+/// `AssertUnwindSafe` is justified by what the caller does on `Err`: the
+/// session whose work panicked is REMOVED and tombstoned, never observed
+/// again, and its lane is released (the `LaneSet` free-list itself is
+/// only mutated on alloc/release, not mid-fold, so a mid-fold panic
+/// leaves other lanes untouched).
+fn isolate<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(Kinded::quarantined(format!("step work panicked: {msg}")))
+        }
+    }
+}
+
 /// Move one session out of the resident map — into the spill store when
 /// one is configured and the session can snapshot, otherwise dropping it
 /// (the pre-spill TTL behaviour, still what the HLO tier gets). Either
@@ -324,33 +481,99 @@ fn evict_session(
     held.slot.release(lanes);
 }
 
-/// Make `id` resident if it can be: `Ok(true)` when the session is in
-/// the map (already, or lazily restored from the spill store — the
-/// restored copy becomes authoritative and leaves the store), `Ok(false)`
-/// when it simply does not exist, `Err` when a spilled blob exists but is
-/// corrupt or unrestorable (the caller's reply, never a silent drop).
+/// What [`ensure_resident`] found for an id.
+enum Presence {
+    /// The session is in the map (already, or lazily restored from the
+    /// spill store — the restored copy becomes authoritative and leaves
+    /// the store).
+    Ready,
+    /// No such session exists, live or spilled.
+    Missing,
+    /// A spilled blob exists but could not become a session — the
+    /// caller's reply, never a silent drop. Corruption (a blob failing
+    /// verification or decode) additionally tombstones the id and drops
+    /// the damaged blob, so the failure is structured and SINGULAR:
+    /// the id answers `quarantined` afterwards until closed, instead of
+    /// failing the same way on every touch forever. Transient failures
+    /// (an injected or real IO error on the read path) do NOT
+    /// quarantine — a retry may succeed.
+    Failed(anyhow::Error),
+}
+
+/// Make `id` resident if it can be; see [`Presence`].
 fn ensure_resident<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     spill: &mut Option<SpillTier>,
     factory: &mut F,
     resident: bool,
     lanes: &mut LaneSet,
+    containment: &mut Containment,
     id: u64,
     now: Instant,
-) -> Result<bool> {
+) -> Presence {
     if sessions.contains_key(&id) {
-        return Ok(true);
+        return Presence::Ready;
     }
     let Some(tier) = spill.as_mut() else {
-        return Ok(false);
+        return Presence::Missing;
     };
-    let Some(blob) = tier.store.get(id)? else {
-        return Ok(false);
+    let blob = match tier.store.get(id) {
+        Ok(Some(blob)) => blob,
+        Ok(None) => return Presence::Missing,
+        Err(e) => {
+            if Kinded::of(&e).is_some_and(|k| k.kind == KIND_CORRUPT_SNAPSHOT) {
+                // the store already quarantined the damaged file itself
+                containment.corrupt_snapshots += 1;
+                containment.quarantine(id, "spilled snapshot failed verification".into(), now);
+            }
+            return Presence::Failed(e);
+        }
     };
-    let session = factory.restore(&blob)?;
-    tier.store.remove(id)?;
-    sessions.insert(id, hold(session, resident, lanes, now));
-    Ok(true)
+    match factory.restore(&blob) {
+        Ok(session) => {
+            if let Err(e) = tier.store.remove(id) {
+                // the restored copy is authoritative; a blob the store
+                // failed to delete must not resurrect as a stale twin
+                // after this copy advances, so refuse to serve instead
+                return Presence::Failed(e.context(format!(
+                    "session {id} restored but its spilled blob could not be retired"
+                )));
+            }
+            sessions.insert(id, hold(session, resident, lanes, now));
+            Presence::Ready
+        }
+        Err(e) => {
+            // an undecodable blob through a store that does not verify
+            // (MemStore, a torn write the disk lied about): same
+            // containment as store-level corruption — count, drop the
+            // damaged blob, tombstone the id
+            let _ = tier.store.remove(id);
+            containment.corrupt_snapshots += 1;
+            containment.quarantine(id, format!("spilled snapshot failed to restore: {e:#}"), now);
+            Presence::Failed(Kinded::corrupt_snapshot(format!(
+                "session {id} snapshot is corrupt: {e:#}"
+            )))
+        }
+    }
+}
+
+/// How one executor shard runs; everything [`run_executor`] needs beyond
+/// its factory and queue.
+pub struct ExecutorOpts {
+    /// evict (or spill) sessions idle longer than this
+    pub session_ttl: Option<Duration>,
+    /// where evicted sessions go instead of dying
+    pub spill: Option<SpillTier>,
+    /// serve native Aaren sessions as resident lanes (the default)
+    pub resident: bool,
+    /// this shard's seeded fault-injection site (chaos runs only)
+    pub fault: Option<FaultSite>,
+}
+
+impl Default for ExecutorOpts {
+    fn default() -> ExecutorOpts {
+        ExecutorOpts { session_ttl: None, spill: None, resident: true, fault: None }
+    }
 }
 
 /// One executor shard: owns a private id → session map plus the shard
@@ -372,19 +595,22 @@ fn ensure_resident<F: SessionFactory>(
 /// set compacts itself when released lanes outnumber both the live
 /// count and a floor of 8 (hysteresis for small shards).
 ///
-/// `resident = false` disables lane residency: native Aaren sessions
-/// stay boxed and drains use the PR 3 gather/scatter batching — the A/B
-/// baseline the `resident_vs_scatter` bench records compare against.
-pub fn run_executor<F: SessionFactory>(
-    mut factory: F,
-    rx: ReqRx,
-    session_ttl: Option<Duration>,
-    mut spill: Option<SpillTier>,
-    resident: bool,
-) {
+/// `ExecutorOpts::resident = false` disables lane residency: native
+/// Aaren sessions stay boxed and advance through their own `step_many` —
+/// the A/B baseline the `resident_vs_scatter` bench records compare
+/// against.
+///
+/// FAULT CONTAINMENT: each session's step work runs under
+/// [`isolate`]; a panicking or output-poisoned (non-finite) session is
+/// quarantined — removed from the map, lane released, id tombstoned in
+/// [`Containment`] — and every other session keeps streaming. With
+/// `ExecutorOpts::fault` set, the seeded [`FaultSite`] injects step
+/// panics and delays at the same points a real fault would hit.
+pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: ExecutorOpts) {
+    let ExecutorOpts { session_ttl, mut spill, resident, mut fault } = opts;
     let mut sessions: HashMap<u64, Held> = HashMap::new();
-    let mut scratch = BatchScanBuffer::new(0, 0);
     let mut lanes = LaneSet::new(0);
+    let mut containment = Containment::new();
     'serve: loop {
         // with a TTL configured, an idle shard must still wake up to
         // sweep: bound the blocking wait so sessions of disconnected
@@ -431,6 +657,9 @@ pub fn run_executor<F: SessionFactory>(
             for id in expired {
                 evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
             }
+            // quarantine tombstones expire on the same clock, so an
+            // abandoned (never-closed) quarantined id cannot leak forever
+            containment.tombstones.retain(|_, entry| now.duration_since(entry.1) <= ttl);
         }
         let mut pending: Vec<PendingSteps> = Vec::new();
         for (req, reply) in batch {
@@ -447,10 +676,11 @@ pub fn run_executor<F: SessionFactory>(
                     flush_steps(
                         &mut sessions,
                         &mut pending,
-                        &mut scratch,
                         &mut lanes,
                         &mut factory,
                         &mut spill,
+                        &mut containment,
+                        &mut fault,
                         resident,
                         now,
                     );
@@ -459,8 +689,11 @@ pub fn run_executor<F: SessionFactory>(
                             // with a spill tier an id can be alive while
                             // not resident — clobbering it here would
                             // silently destroy a stream, so duplicates
-                            // are a structured error instead
-                            if sessions.contains_key(&id)
+                            // are a structured error instead; a
+                            // quarantined id is blocked until closed
+                            if let Some(e) = containment.error_for(id) {
+                                Err(e)
+                            } else if sessions.contains_key(&id)
                                 || spill.as_ref().is_some_and(|t| t.store.contains(id))
                             {
                                 Err(anyhow!("session {id} already exists"))
@@ -471,19 +704,41 @@ pub fn run_executor<F: SessionFactory>(
                                 })
                             }
                         }
-                        Request::Snapshot { id } => match sessions.get(&id) {
-                            Some(held) => held.slot.snapshot(&lanes).and_then(snapshot_reply),
-                            // a spilled session is served straight from
-                            // the store — no need to make it resident
-                            // just to read its state
-                            None => match spill.as_mut().map(|t| t.store.get(id)) {
-                                Some(Ok(Some(blob))) => snapshot_reply(blob),
-                                Some(Err(e)) => Err(e),
-                                Some(Ok(None)) | None => Err(anyhow!("no session {id}")),
-                            },
-                        },
+                        Request::Snapshot { id } => {
+                            if let Some(e) = containment.error_for(id) {
+                                Err(e)
+                            } else {
+                                match sessions.get(&id) {
+                                    Some(held) => {
+                                        held.slot.snapshot(&lanes).and_then(snapshot_reply)
+                                    }
+                                    // a spilled session is served straight
+                                    // from the store — no need to make it
+                                    // resident just to read its state
+                                    None => match spill.as_mut().map(|t| t.store.get(id)) {
+                                        Some(Ok(Some(blob))) => snapshot_reply(blob),
+                                        Some(Err(e)) => {
+                                            if Kinded::of(&e)
+                                                .is_some_and(|k| k.kind == KIND_CORRUPT_SNAPSHOT)
+                                            {
+                                                containment.corrupt_snapshots += 1;
+                                                containment.quarantine(
+                                                    id,
+                                                    "spilled snapshot failed verification".into(),
+                                                    now,
+                                                );
+                                            }
+                                            Err(e)
+                                        }
+                                        Some(Ok(None)) | None => Err(Kinded::no_session(id)),
+                                    },
+                                }
+                            }
+                        }
                         Request::Restore { id, blob } => {
-                            if sessions.contains_key(&id)
+                            if let Some(e) = containment.error_for(id) {
+                                Err(e)
+                            } else if sessions.contains_key(&id)
                                 || spill.as_ref().is_some_and(|t| t.store.contains(id))
                             {
                                 Err(anyhow!("session {id} already exists"))
@@ -501,7 +756,16 @@ pub fn run_executor<F: SessionFactory>(
                             }
                         }
                         Request::Close { id } => {
-                            if let Some(held) = sessions.remove(&id) {
+                            if containment.tombstones.remove(&id).is_some() {
+                                // closing a quarantined id clears its
+                                // tombstone and any stale spilled blob —
+                                // the id is reusable again (the
+                                // cumulative stats counter stays)
+                                if let Some(t) = spill.as_mut() {
+                                    let _ = t.store.remove(id);
+                                }
+                                Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
+                            } else if let Some(held) = sessions.remove(&id) {
                                 held.slot.release(&mut lanes);
                                 Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
                             } else {
@@ -512,7 +776,7 @@ pub fn run_executor<F: SessionFactory>(
                                         Ok(Response::Value(obj(vec![("ok", Json::Bool(true))])))
                                     }
                                     Some(Err(e)) => Err(e),
-                                    Some(Ok(false)) | None => Err(anyhow!("no session {id}")),
+                                    Some(Ok(false)) | None => Err(Kinded::no_session(id)),
                                 }
                             }
                         }
@@ -520,6 +784,8 @@ pub fn run_executor<F: SessionFactory>(
                             sessions: sessions.len(),
                             state_bytes: sessions.values().map(|h| h.slot.state_bytes()).sum(),
                             spilled: spill.as_ref().map_or(0, |t| t.store.len()),
+                            quarantined: containment.quarantined_total,
+                            corrupt_snapshots: containment.corrupt_snapshots,
                         }),
                         Request::Shutdown => {
                             // graceful shutdown: with a spill tier, every
@@ -551,10 +817,11 @@ pub fn run_executor<F: SessionFactory>(
         flush_steps(
             &mut sessions,
             &mut pending,
-            &mut scratch,
             &mut lanes,
             &mut factory,
             &mut spill,
+            &mut containment,
+            &mut fault,
             resident,
             now,
         );
@@ -617,23 +884,28 @@ struct SessionRun {
 
 /// Execute every queued step-shaped request of a drain as one coalesced
 /// batch and reply to each. Requests are grouped per session (order
-/// preserved within a session); **resident** Aaren sessions then advance
-/// together by folding tokens straight into their lanes of the shard
-/// [`LaneSet`] ([`step_many_resident`] — no state is copied in or out),
-/// boxed Aaren sessions (scatter mode, foreign widths) take the PR 3
-/// gather/scatter batch over the scratch [`BatchScanBuffer`], and other
-/// backends (tf KV cache, compiled HLO) take their per-session
-/// `step_many` path. A session that was spilled to the store is
-/// transparently restored here, on its owning shard, before its first
-/// request of the drain.
+/// preserved within a session); each session's run then executes as ONE
+/// unit under [`isolate`] — **resident** Aaren sessions fold tokens
+/// straight into their lanes of the shard [`LaneSet`]
+/// ([`ResidentAarenSession::step_many`], no state copied in or out, and
+/// bitwise identical to the round-major batch engines since every fold
+/// touches only its own lane), boxed sessions (scatter mode, foreign
+/// widths, tf KV cache, compiled HLO) take their own `step_many`.
+/// Per-session execution is what makes panic attribution exact: when a
+/// unit panics or emits a non-finite output, THAT session alone is
+/// quarantined (removed, lane released, outputs discarded) and every
+/// other unit of the drain completes untouched. A session that was
+/// spilled to the store is transparently restored here, on its owning
+/// shard, before its first request of the drain.
 #[allow(clippy::too_many_arguments)]
 fn flush_steps<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     pending: &mut Vec<PendingSteps>,
-    scratch: &mut BatchScanBuffer,
     lanes: &mut LaneSet,
     factory: &mut F,
     spill: &mut Option<SpillTier>,
+    containment: &mut Containment,
+    fault: &mut Option<FaultSite>,
     resident: bool,
     now: Instant,
 ) {
@@ -647,13 +919,17 @@ fn flush_steps<F: SessionFactory>(
     let mut run_of: HashMap<u64, usize> = HashMap::new();
     let mut replies: Vec<Option<Reply>> = (0..work.len()).map(|_| None).collect();
     for (wi, p) in work.iter().enumerate() {
-        match ensure_resident(sessions, spill, factory, resident, lanes, p.id, now) {
-            Ok(true) => {}
-            Ok(false) => {
-                replies[wi] = Some(Err(anyhow!("no session {}", p.id)));
+        if let Some(e) = containment.error_for(p.id) {
+            replies[wi] = Some(Err(e));
+            continue;
+        }
+        match ensure_resident(sessions, spill, factory, resident, lanes, containment, p.id, now) {
+            Presence::Ready => {}
+            Presence::Missing => {
+                replies[wi] = Some(Err(Kinded::no_session(p.id)));
                 continue;
             }
-            Err(e) => {
+            Presence::Failed(e) => {
                 replies[wi] = Some(Err(e));
                 continue;
             }
@@ -702,135 +978,69 @@ fn flush_steps<F: SessionFactory>(
         })
         .collect();
 
-    // execute: split runs into the resident lane batch (states advance
-    // in place in the shard LaneSet), the boxed-aaren gather/scatter
-    // batch (scatter mode / foreign widths) and the per-session rest
+    // execute: one isolated unit per session. Resident Aaren sessions
+    // still fold straight into their lanes (zero state copies per
+    // drain); boxed sessions (scatter mode, foreign widths, tf, HLO)
+    // advance through their own step_many. The per-session boundary is
+    // deliberate — it is the isolation domain: a panic or poisoned
+    // output condemns exactly the session that produced it.
     let mut outs: Vec<Vec<f32>> = (0..runs.len()).map(|_| Vec::new()).collect();
     let mut run_err: Vec<Option<anyhow::Error>> = (0..runs.len()).map(|_| None).collect();
-    let mut res_runs: Vec<usize> = Vec::new();
-    let mut res_held: Vec<Held> = Vec::new();
-    let mut batch_runs: Vec<usize> = Vec::new();
-    let mut batch_held: Vec<Held> = Vec::new();
-    enum Path {
-        Resident,
-        Scatter,
-        Direct,
-    }
     for (ri, run) in runs.iter().enumerate() {
-        let path = match sessions.get_mut(&run.id) {
-            Some(held) => match &mut held.slot {
-                SessionSlot::Resident(_) => Path::Resident,
-                // (not a match guard: the downcast needs &mut self)
-                SessionSlot::Boxed(s) => {
-                    if s.as_native_aaren().is_some() {
-                        Path::Scatter
-                    } else {
-                        Path::Direct
-                    }
-                }
-            },
-            None => {
-                run_err[ri] = Some(anyhow!("no session {}", run.id));
-                continue;
-            }
+        let Some(held) = sessions.get_mut(&run.id) else {
+            run_err[ri] = Some(Kinded::no_session(run.id));
+            continue;
         };
-        match path {
-            // pull batched sessions out of the map so several can be
-            // borrowed mutably at once; reinserted below
-            Path::Resident => {
-                res_runs.push(ri);
-                res_held.push(sessions.remove(&run.id).expect("session checked above"));
+        let xs = token_views[ri];
+        let out = &mut outs[ri];
+        let result = isolate(|| {
+            if let Some(site) = fault.as_mut() {
+                site.maybe_delay();
+                // inside the isolation boundary, exactly where a real
+                // bug would unwind from
+                site.maybe_step_panic(run.id);
             }
-            Path::Scatter => {
-                batch_runs.push(ri);
-                batch_held.push(sessions.remove(&run.id).expect("session checked above"));
+            match &mut held.slot {
+                SessionSlot::Resident(r) => r.step_many(lanes, xs, out),
+                SessionSlot::Boxed(s) => s.step_many(xs, out),
             }
-            Path::Direct => {
-                if let Some(held) = sessions.get_mut(&run.id) {
-                    if let SessionSlot::Boxed(s) = &mut held.slot {
-                        if let Err(e) = s.step_many(token_views[ri], &mut outs[ri]) {
-                            run_err[ri] = Some(e);
-                        }
+        });
+        // poison gate: parse already rejects non-finite INPUTS, so a
+        // non-finite OUTPUT means the session's accumulator state went
+        // bad (overflow, a backend bug) — every later step would be
+        // garbage, so contain it now
+        let poisoned = result.is_ok() && outs[ri].iter().any(|v| !v.is_finite());
+        match result {
+            Ok(()) if !poisoned => {}
+            verdict => {
+                let (quarantine, reason) = match verdict {
+                    Ok(()) => (true, format!("session {} produced non-finite outputs", run.id)),
+                    Err(ref e) if Kinded::of(e).is_some_and(|k| k.kind == KIND_QUARANTINED) => {
+                        (true, format!("{e:#}"))
                     }
+                    // ordinary validation errors (width mismatch, a tf
+                    // refusal) keep their existing semantics: the run
+                    // errors, the session lives on with the prefix that
+                    // executed
+                    Err(ref e) => (false, format!("{e:#}")),
+                };
+                if quarantine {
+                    // state is suspect (a panic may have fallen mid-fold,
+                    // poison is already in the accumulator): remove the
+                    // session, free its lane, discard its outputs, and
+                    // tombstone the id
+                    let held = sessions.remove(&run.id).expect("present above");
+                    held.slot.release(lanes);
+                    containment.quarantine(run.id, reason.clone(), now);
+                    outs[ri].clear();
+                    run_err[ri] = Some(Kinded::quarantined(format!(
+                        "session {} is quarantined: {reason}",
+                        run.id
+                    )));
+                } else {
+                    run_err[ri] = verdict.err();
                 }
             }
-        }
-    }
-    if !res_held.is_empty() {
-        // the resident drain: every token folds straight into its
-        // session's lane — zero state copies per drain
-        let mut units: Vec<ResidentLane<'_>> = Vec::with_capacity(res_held.len());
-        for (k, held) in res_held.iter_mut().enumerate() {
-            let SessionSlot::Resident(r) = &mut held.slot else {
-                unreachable!("partitioned as resident above")
-            };
-            units.push((r, token_views[res_runs[k]]));
-        }
-        let mut unit_outs: Vec<Vec<f32>> = (0..res_runs.len()).map(|_| Vec::new()).collect();
-        match step_many_resident(&mut units, lanes, &mut unit_outs) {
-            Ok(()) => {
-                drop(units);
-                for (k, out) in unit_outs.into_iter().enumerate() {
-                    outs[res_runs[k]] = out;
-                }
-            }
-            Err(e) => {
-                // validation refused the batch before touching any lane
-                // (cannot happen after the per-request checks above):
-                // fall back to advancing each session on its own
-                drop(units);
-                eprintln!("[serve] resident fold rejected ({e:#}); using per-session path");
-                for (k, held) in res_held.iter_mut().enumerate() {
-                    let ri = res_runs[k];
-                    let SessionSlot::Resident(r) = &mut held.slot else {
-                        unreachable!("partitioned as resident above")
-                    };
-                    if let Err(e2) = r.step_many(lanes, token_views[ri], &mut outs[ri]) {
-                        run_err[ri] = Some(e2);
-                    }
-                }
-            }
-        }
-        for (&ri, held) in res_runs.iter().zip(res_held.into_iter()) {
-            sessions.insert(runs[ri].id, held);
-        }
-    }
-    if !batch_held.is_empty() {
-        let mut units: Vec<PendingLane<'_>> = Vec::with_capacity(batch_held.len());
-        for (k, held) in batch_held.iter_mut().enumerate() {
-            let SessionSlot::Boxed(s) = &mut held.slot else {
-                unreachable!("partitioned as boxed above")
-            };
-            let aaren = s.as_native_aaren().expect("checked above");
-            units.push((aaren, token_views[batch_runs[k]]));
-        }
-        let mut lane_outs: Vec<Vec<f32>> = (0..batch_runs.len()).map(|_| Vec::new()).collect();
-        match step_many_batched(&mut units, scratch, &mut lane_outs) {
-            Ok(()) => {
-                drop(units);
-                for (k, out) in lane_outs.into_iter().enumerate() {
-                    outs[batch_runs[k]] = out;
-                }
-            }
-            Err(e) => {
-                // validation refused the batch before touching any state
-                // (cannot happen after the per-request checks above):
-                // fall back to advancing each session on its own
-                drop(units);
-                eprintln!("[serve] batched fold rejected ({e:#}); using per-session path");
-                for (k, held) in batch_held.iter_mut().enumerate() {
-                    let ri = batch_runs[k];
-                    let SessionSlot::Boxed(s) = &mut held.slot else {
-                        unreachable!("partitioned as boxed above")
-                    };
-                    if let Err(e2) = s.step_many(token_views[ri], &mut outs[ri]) {
-                        run_err[ri] = Some(e2);
-                    }
-                }
-            }
-        }
-        for (&ri, held) in batch_runs.iter().zip(batch_held.into_iter()) {
-            sessions.insert(runs[ri].id, held);
         }
     }
 
@@ -862,7 +1072,17 @@ fn flush_steps<F: SessionFactory>(
             let end = off + n;
             if end > ok_tokens {
                 let e = run_err[ri].as_ref().expect("successful runs execute every token");
-                replies[wi] = Some(Err(anyhow!("{e:#} (stream at t={t_after})")));
+                // stamp the stream's actual position without destroying
+                // the structured kind (clients branch on `quarantined`)
+                let stamped = format!("{e:#} (stream at t={t_after})");
+                replies[wi] = Some(Err(match Kinded::of(e) {
+                    Some(k) => anyhow::Error::new(Kinded {
+                        kind: k.kind,
+                        message: stamped,
+                        retry_after_ms: k.retry_after_ms,
+                    }),
+                    None => anyhow!("{stamped}"),
+                }));
                 off = end;
                 continue;
             }
@@ -929,6 +1149,27 @@ pub struct ServeConfig {
     /// artifacts dir enabling the compiled-HLO backend (`pjrt` builds
     /// only; ignored otherwise)
     pub artifacts: Option<std::path::PathBuf>,
+    /// bound on each executor shard's request queue: when a shard is
+    /// this far behind, further requests for it are refused with a
+    /// structured `overloaded` error (plus a retry hint) instead of
+    /// growing the queue without limit
+    pub queue_depth: usize,
+    /// accept-side cap on concurrent connections; over the cap the
+    /// server replies with one `overloaded` error line and closes.
+    /// `None` leaves admission unbounded
+    pub max_conns: Option<usize>,
+    /// per-connection read/write timeout, so an idle or wedged peer
+    /// releases its handler thread; `None` blocks forever (the
+    /// pre-containment behaviour)
+    pub io_timeout: Option<Duration>,
+    /// hard per-frame (line) size limit; an oversized frame gets a
+    /// structured `frame_too_large` error and the connection closes
+    pub max_frame_bytes: usize,
+    /// deterministic fault-injection plan (chaos testing only): seeds
+    /// injected IO errors / torn writes on the spill stores and delays
+    /// / panics on the executor step path. `None` (the default) injects
+    /// nothing
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServeConfig {
@@ -942,8 +1183,26 @@ impl Default for ServeConfig {
             max_resident_sessions: None,
             resident_lanes: true,
             artifacts: None,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            max_conns: None,
+            io_timeout: None,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            fault: None,
         }
     }
+}
+
+/// Containment counters kept outside the executors (connection- and
+/// admission-level events never reach a shard thread). Shared between
+/// the [`Server`] accept loop and the [`Router`], folded into `stats`.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// requests or connections refused because a queue (or the
+    /// connection cap) was full
+    pub overloaded_rejects: AtomicU64,
+    /// `accept()` failures (EMFILE, aborted handshakes) — each one also
+    /// costs the accept loop a backoff sleep
+    pub accept_errors: AtomicU64,
 }
 
 /// Routes wire requests to executor shards and aggregates fan-out ops.
@@ -953,11 +1212,33 @@ pub struct Router {
     next_native_id: AtomicU64,
     next_hlo_id: AtomicU64,
     shutdown: AtomicBool,
+    stats: Arc<ServeStats>,
 }
 
+/// Blocking send: waits for queue space. Reserved for the control ops
+/// (`stats`, `shutdown`) that must reach every shard even under load.
 fn call_on(tx: &ReqTx, req: Request) -> Reply {
     let (rtx, rrx) = mpsc::channel();
     tx.send((req, rtx)).map_err(|_| anyhow!("executor thread gone"))?;
+    rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+}
+
+/// Backpressured send: a full shard queue is refused on the spot with a
+/// structured `overloaded` error (and counted) instead of blocking the
+/// handler thread behind it. Session ops go through here.
+fn try_call_on(tx: &ReqTx, req: Request, stats: &ServeStats) -> Reply {
+    let (rtx, rrx) = mpsc::channel();
+    match tx.try_send((req, rtx)) {
+        Ok(()) => {}
+        Err(mpsc::TrySendError::Full(_)) => {
+            stats.overloaded_rejects.fetch_add(1, Ordering::Relaxed);
+            return Err(Kinded::overloaded(
+                "executor queue full — back off and retry",
+                RETRY_AFTER_MS,
+            ));
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => return Err(anyhow!("executor thread gone")),
+    }
     rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
 }
 
@@ -984,28 +1265,47 @@ impl Router {
         // resident count stays within ~cap (rounded up per shard)
         let per_shard_cap =
             cfg.max_resident_sessions.map(|cap| cap.div_ceil(nshards).max(1));
+        // only an *active* plan is threaded through (a parsed-but-empty
+        // plan injects nothing and would just slow the step path)
+        let fault_plan = cfg.fault.as_ref().filter(|p| p.is_active());
+        let queue_depth = cfg.queue_depth.max(1);
         let mut shards = Vec::with_capacity(nshards);
         for s in 0..nshards {
-            let (tx, rx) = mpsc::channel();
+            let (tx, rx) = mpsc::sync_channel(queue_depth);
             let channels = cfg.channels;
-            let ttl = cfg.session_ttl;
             let resident = cfg.resident_lanes;
             let spill = match &cfg.spill_dir {
-                Some(dir) => Some(SpillTier {
-                    store: Box::new(DirStore::open_partition(dir, s as u64, nshards as u64)?),
-                    max_resident: per_shard_cap,
-                }),
+                Some(dir) => {
+                    let store: Box<dyn SnapshotStore> =
+                        Box::new(DirStore::open_partition(dir, s as u64, nshards as u64)?);
+                    // each shard's store gets its own independently
+                    // seeded fault site, so injected IO errors on one
+                    // shard never perturb the others' sequences
+                    let store = match fault_plan {
+                        Some(plan) => {
+                            Box::new(FaultingStore::new(store, plan.site(&format!("store-{s}"))))
+                        }
+                        None => store,
+                    };
+                    Some(SpillTier { store, max_resident: per_shard_cap })
+                }
                 None => None,
+            };
+            let opts = ExecutorOpts {
+                session_ttl: cfg.session_ttl,
+                spill,
+                resident,
+                fault: fault_plan.map(|plan| plan.site(&format!("exec-{s}"))),
             };
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
-                .spawn(move || run_executor(NativeFactory { channels }, rx, ttl, spill, resident))?;
+                .spawn(move || run_executor(NativeFactory { channels }, rx, opts))?;
             shards.push(tx);
         }
         #[cfg(feature = "pjrt")]
         let hlo = match &cfg.artifacts {
             Some(dir) => {
-                let (tx, rx) = mpsc::channel();
+                let (tx, rx) = mpsc::sync_channel(queue_depth);
                 let dir = dir.clone();
                 let ttl = cfg.session_ttl;
                 std::thread::Builder::new().name("serve-exec-hlo".to_string()).spawn(
@@ -1016,7 +1316,14 @@ impl Router {
                         // resident lanes are a native-Aaren feature; the
                         // HLO tier's sessions never downcast, so the flag
                         // is moot here
-                        Ok(factory) => run_executor(factory, rx, ttl, None, false),
+                        Ok(factory) => {
+                            let opts = ExecutorOpts {
+                                session_ttl: ttl,
+                                resident: false,
+                                ..Default::default()
+                            };
+                            run_executor(factory, rx, opts)
+                        }
                         // dropping rx makes every later hlo request fail
                         // with "executor thread gone" instead of hanging
                         Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
@@ -1034,7 +1341,14 @@ impl Router {
             next_native_id: AtomicU64::new(first_native_id),
             next_hlo_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            stats: Arc::new(ServeStats::default()),
         })
+    }
+
+    /// The connection/admission counters this router folds into `stats`
+    /// replies. The accept loop shares this handle.
+    pub fn stats(&self) -> Arc<ServeStats> {
+        Arc::clone(&self.stats)
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -1101,13 +1415,13 @@ impl Router {
                     }
                     None => self.create_target(backend)?,
                 };
-                match call_on(tx, Request::Create { id, kind })? {
+                match try_call_on(tx, Request::Create { id, kind }, &self.stats)? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to create"),
                 }
             }
             WireOp::Snapshot { id } => {
-                match call_on(self.route(id)?, Request::Snapshot { id })? {
+                match try_call_on(self.route(id)?, Request::Snapshot { id }, &self.stats)? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to snapshot"),
                 }
@@ -1138,42 +1452,64 @@ impl Router {
                     }
                 };
                 let tx = &self.shards[(id as usize) % self.shards.len()];
-                match call_on(tx, Request::Restore { id, blob })? {
+                match try_call_on(tx, Request::Restore { id, blob }, &self.stats)? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to restore"),
                 }
             }
-            WireOp::Step { id, x } => match call_on(self.route(id)?, Request::Step { id, x })? {
-                Response::Value(j) => Ok(j),
-                _ => bail!("unexpected reply to step"),
-            },
+            WireOp::Step { id, x } => {
+                match try_call_on(self.route(id)?, Request::Step { id, x }, &self.stats)? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to step"),
+                }
+            }
             WireOp::Steps { id, xs, n } => {
-                match call_on(self.route(id)?, Request::Steps { id, xs, n })? {
+                match try_call_on(self.route(id)?, Request::Steps { id, xs, n }, &self.stats)? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to steps"),
                 }
             }
-            WireOp::Close { id } => match call_on(self.route(id)?, Request::Close { id })? {
-                Response::Value(j) => Ok(j),
-                _ => bail!("unexpected reply to close"),
-            },
+            WireOp::Close { id } => {
+                match try_call_on(self.route(id)?, Request::Close { id }, &self.stats)? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to close"),
+                }
+            }
             WireOp::Stats => {
                 let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
+                let (mut quarantined_total, mut corrupt_total) = (0usize, 0usize);
                 for tx in self.targets() {
                     // a dead executor contributes nothing instead of
                     // failing the whole aggregate
-                    if let Ok(Response::Stats { sessions, state_bytes, spilled }) =
-                        call_on(tx, Request::Stats)
+                    if let Ok(Response::Stats {
+                        sessions,
+                        state_bytes,
+                        spilled,
+                        quarantined,
+                        corrupt_snapshots,
+                    }) = call_on(tx, Request::Stats)
                     {
                         count += sessions;
                         bytes += state_bytes;
                         on_disk += spilled;
+                        quarantined_total += quarantined;
+                        corrupt_total += corrupt_snapshots;
                     }
                 }
                 Ok(obj(vec![
                     ("sessions", Json::Num(count as f64)),
                     ("total_state_bytes", Json::Num(bytes as f64)),
                     ("spilled", Json::Num(on_disk as f64)),
+                    ("quarantined", Json::Num(quarantined_total as f64)),
+                    ("corrupt_snapshots", Json::Num(corrupt_total as f64)),
+                    (
+                        "overloaded_rejects",
+                        Json::Num(self.stats.overloaded_rejects.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "accept_errors",
+                        Json::Num(self.stats.accept_errors.load(Ordering::Relaxed) as f64),
+                    ),
                 ]))
             }
             WireOp::Shutdown => {
@@ -1331,7 +1667,7 @@ fn stream_steps_blocks(
                 Json::Obj(fields).to_string()
             }
             Ok(other) => other.to_string(),
-            Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+            Err(e) => error_body(&e).to_string(),
         };
         if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
             return false;
@@ -1343,16 +1679,110 @@ fn stream_steps_blocks(
     true
 }
 
-fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>) {
+/// One frame off the wire, or the reason there isn't one.
+enum Frame {
+    Line(String),
+    /// the line crossed `max_frame_bytes` before its newline — the rest
+    /// of the frame is unread, so the connection cannot be resynced
+    TooLong,
+    Eof,
+}
+
+/// Read one newline-terminated frame with a hard byte cap. The cap is
+/// enforced *while reading*: an attacker streaming an endless line is
+/// cut off after `max` bytes instead of growing a String until OOM.
+fn read_frame(reader: &mut BufReader<TcpStream>, max: usize) -> Frame {
+    let mut line = Vec::new();
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(_) => return Frame::Eof, // includes read-timeout expiry
+        };
+        if buf.is_empty() {
+            // clean EOF; a non-empty unterminated tail is not a frame
+            return Frame::Eof;
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if line.len() + pos > max {
+                    return Frame::TooLong;
+                }
+                line.extend_from_slice(&buf[..pos]);
+                reader.consume(pos + 1);
+                return Frame::Line(String::from_utf8_lossy(&line).into_owned());
+            }
+            None => {
+                let n = buf.len();
+                if line.len() + n > max {
+                    return Frame::TooLong;
+                }
+                line.extend_from_slice(buf);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
+/// After a `TooLong` frame: consume up to the offending frame's newline
+/// (or a hard byte cap) before the connection closes. Closing with the
+/// tail still unread would turn the close into a TCP RST, which may
+/// discard the structured `frame_too_large` reply from the peer's
+/// receive queue before it reads it. The cap — together with the
+/// connection's read timeout — bounds how long an abusive peer can hold
+/// the handler thread; past it the socket closes RST and all.
+fn drain_frame_tail(reader: &mut BufReader<TcpStream>) {
+    let mut budget: usize = 1 << 20;
+    while budget > 0 {
+        let buf = match reader.fill_buf() {
+            Ok(b) if !b.is_empty() => b,
+            _ => return, // EOF, read error or timeout: nothing to drain
+        };
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                reader.consume((pos + 1).min(budget));
+                return;
+            }
+            None => {
+                let n = buf.len().min(budget);
+                reader.consume(n);
+                budget -= n;
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    wake_addr: Option<SocketAddr>,
+    max_frame_bytes: usize,
+    io_timeout: Option<Duration>,
+) {
+    // a peer that stops reading or writing releases this thread at the
+    // timeout instead of holding it (and its admission slot) forever
+    let _ = stream.set_read_timeout(io_timeout);
+    let _ = stream.set_write_timeout(io_timeout);
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_frame(&mut reader, max_frame_bytes) {
+            Frame::Line(l) => l,
+            Frame::Eof => break,
+            Frame::TooLong => {
+                // the oversized frame's tail is still in flight; there
+                // is no way back to a frame boundary, so reply and close
+                let e = Kinded::frame_too_large(format!(
+                    "request frame exceeds the {max_frame_bytes}-byte limit"
+                ));
+                let body = error_body(&e).to_string();
+                let _ = writer.write_all(body.as_bytes());
+                let _ = writer.write_all(b"\n");
+                drain_frame_tail(&mut reader);
+                break;
+            }
         };
         if line.trim().is_empty() {
             continue;
@@ -1369,7 +1799,7 @@ fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>
                 let resp = parsed.and_then(|op| router.dispatch(op));
                 let body = match resp {
                     Ok(j) => j.to_string(),
-                    Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+                    Err(e) => error_body(&e).to_string(),
                 };
                 if writer.write_all(body.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
                 {
@@ -1402,13 +1832,25 @@ fn handle_conn(stream: TcpStream, router: &Router, wake_addr: Option<SocketAddr>
 pub struct Server {
     listener: TcpListener,
     router: Arc<Router>,
+    stats: Arc<ServeStats>,
+    max_conns: Option<usize>,
+    max_frame_bytes: usize,
+    io_timeout: Option<Duration>,
 }
 
 impl Server {
     pub fn bind(cfg: &ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let router = Arc::new(Router::start(cfg)?);
-        Ok(Server { listener, router })
+        let stats = router.stats();
+        Ok(Server {
+            listener,
+            router,
+            stats,
+            max_conns: cfg.max_conns,
+            max_frame_bytes: cfg.max_frame_bytes.max(1),
+            io_timeout: cfg.io_timeout,
+        })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -1416,18 +1858,53 @@ impl Server {
     }
 
     /// Accept connections (one handler thread each) until shutdown.
+    /// Admission control happens here: over `max_conns` the peer gets
+    /// one structured `overloaded` line and is dropped; accept errors
+    /// (EMFILE et al.) are counted and backed off instead of busy-spun.
     pub fn run(&self) -> Result<()> {
         let wake_addr = self.listener.local_addr().ok();
+        let active = Arc::new(AtomicUsize::new(0));
         for stream in self.listener.incoming() {
             if self.router.is_shutdown() {
                 break;
             }
             match stream {
-                Ok(s) => {
+                Ok(mut s) => {
+                    if let Some(cap) = self.max_conns {
+                        // claim a slot up front — the CAS-free add is fine
+                        // because over-claims are immediately released
+                        if active.fetch_add(1, Ordering::AcqRel) >= cap {
+                            active.fetch_sub(1, Ordering::AcqRel);
+                            self.stats.overloaded_rejects.fetch_add(1, Ordering::Relaxed);
+                            let e = Kinded::overloaded(
+                                format!("server at its {cap}-connection limit"),
+                                RETRY_AFTER_MS,
+                            );
+                            // best-effort courtesy line; never let a
+                            // non-reading peer wedge the accept loop
+                            let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+                            let _ = s.write_all(error_body(&e).to_string().as_bytes());
+                            let _ = s.write_all(b"\n");
+                            continue;
+                        }
+                    } else {
+                        active.fetch_add(1, Ordering::AcqRel);
+                    }
                     let router = Arc::clone(&self.router);
-                    std::thread::spawn(move || handle_conn(s, &router, wake_addr));
+                    let active = Arc::clone(&active);
+                    let (max_frame, timeout) = (self.max_frame_bytes, self.io_timeout);
+                    std::thread::spawn(move || {
+                        handle_conn(s, &router, wake_addr, max_frame, timeout);
+                        active.fetch_sub(1, Ordering::AcqRel);
+                    });
                 }
-                Err(e) => eprintln!("[serve] accept error: {e}"),
+                Err(e) => {
+                    self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("[serve] accept error: {e}");
+                    // EMFILE and friends persist for a while: sleeping
+                    // beats spinning the core and flooding stderr
+                    std::thread::sleep(ACCEPT_ERROR_BACKOFF);
+                }
             }
         }
         Ok(())
@@ -1448,11 +1925,22 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
         },
         None => "no spill tier".to_string(),
     };
+    let conns = match cfg.max_conns {
+        Some(cap) => format!("max {cap} conns"),
+        None => "unbounded conns".to_string(),
+    };
+    let fault = match &cfg.fault {
+        Some(p) if p.is_active() => format!("; FAULT INJECTION ACTIVE (seed {})", p.seed),
+        _ => String::new(),
+    };
     println!(
-        "[serve] listening on {} ({} native executor shard(s); {ttl}; {spill}; \
-         line-delimited JSON; ops: create/step/steps/snapshot/restore/close/stats/shutdown)",
+        "[serve] listening on {} ({} native executor shard(s); {ttl}; {spill}; {conns}, \
+         queue depth {}, frame cap {} bytes{fault}; line-delimited JSON; \
+         ops: create/step/steps/snapshot/restore/close/stats/shutdown)",
         server.local_addr()?,
-        cfg.shards.max(1)
+        cfg.shards.max(1),
+        cfg.queue_depth.max(1),
+        cfg.max_frame_bytes.max(1)
     );
     server.run()
 }
@@ -1472,12 +1960,21 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
+    /// Bound every read/write on this connection — chaos tests use this
+    /// so a hung server fails an assertion instead of hanging the test.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
     /// Send one request line, read one reply line, parse it. Replies
-    /// carrying an `"error"` field become `Err`.
+    /// carrying an `"error"` field become `Err` as
+    /// `"server error ({kind}): {message}"`.
     pub fn call(&mut self, line: &str) -> Result<Json> {
         let reply = self.call_raw(line)?;
-        if let Some(e) = reply.get("error").and_then(Json::as_str) {
-            bail!("server error: {e}");
+        if let Some((kind, msg)) = wire_error(&reply) {
+            bail!("server error ({kind}): {msg}");
         }
         Ok(reply)
     }
@@ -1509,8 +2006,8 @@ impl Client {
                 bail!("server closed the connection");
             }
             let j = Json::parse(buf.trim()).map_err(|e| anyhow!("bad reply {buf:?}: {e}"))?;
-            if let Some(e) = j.get("error").and_then(Json::as_str) {
-                bail!("server error: {e}");
+            if let Some((kind, msg)) = wire_error(&j) {
+                bail!("server error ({kind}): {msg}");
             }
             let partial = matches!(j.get("partial"), Some(Json::Bool(true)));
             replies.push(j);
@@ -1647,7 +2144,18 @@ mod tests {
         spill: Option<SpillTier>,
         resident: bool,
     ) -> Vec<mpsc::Receiver<Reply>> {
-        let (tx, rx) = mpsc::channel();
+        run_drained_opts(
+            requests,
+            ExecutorOpts { session_ttl: ttl, spill, resident, ..Default::default() },
+        )
+    }
+
+    fn run_drained_opts(
+        requests: Vec<Request>,
+        opts: ExecutorOpts,
+    ) -> Vec<mpsc::Receiver<Reply>> {
+        // deep enough that a whole pre-queued test batch always fits
+        let (tx, rx) = mpsc::sync_channel(1024);
         let mut receivers = Vec::new();
         for req in requests {
             let (rtx, rrx) = mpsc::channel();
@@ -1655,7 +2163,7 @@ mod tests {
             receivers.push(rrx);
         }
         drop(tx);
-        run_executor(NativeFactory { channels: 2 }, rx, ttl, spill, resident);
+        run_executor(NativeFactory { channels: 2 }, rx, opts);
         receivers
     }
 
@@ -1750,9 +2258,13 @@ mod tests {
         // generous ttl-to-touch ratio (20x) so a CI scheduler stall
         // cannot spuriously evict the live session
         let ttl = Duration::from_millis(1000);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(64);
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), None, true)
+            run_executor(
+                NativeFactory { channels: 2 },
+                rx,
+                ExecutorOpts { session_ttl: Some(ttl), ..Default::default() },
+            )
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1816,9 +2328,17 @@ mod tests {
         // resident; the sleeps below are >2x the ttl so the sweeps the
         // test DOES expect are just as robust
         let ttl = Duration::from_millis(800);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(64);
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, Some(ttl), mem_spill(None), true)
+            run_executor(
+                NativeFactory { channels: 2 },
+                rx,
+                ExecutorOpts {
+                    session_ttl: Some(ttl),
+                    spill: mem_spill(None),
+                    ..Default::default()
+                },
+            )
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1919,9 +2439,13 @@ mod tests {
 
     #[test]
     fn lru_cap_enforced_between_drains() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(64);
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, None, mem_spill(Some(1)), true)
+            run_executor(
+                NativeFactory { channels: 2 },
+                rx,
+                ExecutorOpts { spill: mem_spill(Some(1)), ..Default::default() },
+            )
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -1996,9 +2520,9 @@ mod tests {
         // shard's lane set compacts once released lanes outnumber both
         // the live count and the floor of 8), then keep streaming the survivors and a newcomer: the
         // remapped lanes must carry their streams forward intact
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(64);
         let exec = std::thread::spawn(move || {
-            run_executor(NativeFactory { channels: 2 }, rx, None, None, true)
+            run_executor(NativeFactory { channels: 2 }, rx, ExecutorOpts::default())
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
@@ -2216,16 +2740,8 @@ mod tests {
     }
 
     fn test_router(shards: usize) -> Router {
-        let cfg = ServeConfig {
-            addr: String::new(),
-            channels: 4,
-            shards,
-            session_ttl: None,
-            spill_dir: None,
-            max_resident_sessions: None,
-            resident_lanes: true,
-            artifacts: None,
-        };
+        let cfg =
+            ServeConfig { addr: String::new(), channels: 4, shards, ..ServeConfig::default() };
         Router::start(&cfg).unwrap()
     }
 
@@ -2321,5 +2837,237 @@ mod tests {
             .unwrap();
         assert!(r.usize_field("id").unwrap() >= 1);
         router.dispatch(WireOp::Shutdown).unwrap();
+    }
+
+    fn kind_of_reply(r: Reply) -> (String, String) {
+        match r {
+            Err(e) => (Kinded::kind_of(&e).to_string(), format!("{e:#}")),
+            Ok(_) => panic!("expected an error reply"),
+        }
+    }
+
+    #[test]
+    fn forced_panic_quarantines_the_victim_and_spares_the_shard() {
+        // the tentpole guarantee: a panic inside one session's step work
+        // must not kill the shard thread or disturb the other resident
+        // sessions' streams
+        let x = vec![0.5f32, -0.25];
+        let fault = Some(FaultPlan::new(1).panic_on_step(2).site("exec-test"));
+        let replies = run_drained_opts(
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Create { id: 2, kind: "aaren".into() },
+                Request::Create { id: 3, kind: "tf".into() },
+                Request::Step { id: 1, x: x.clone() },
+                Request::Step { id: 2, x: x.clone() }, // panics inside the fold
+                Request::Step { id: 3, x: x.clone() },
+                Request::Stats,
+                Request::Step { id: 2, x: x.clone() }, // tombstoned now
+                Request::Close { id: 2 },              // clears the tombstone
+                Request::Create { id: 2, kind: "aaren".into() }, // id reusable
+                Request::Step { id: 2, x: x.clone() },
+                Request::Shutdown,
+            ],
+            ExecutorOpts { fault, ..Default::default() },
+        );
+        for rrx in &replies[..3] {
+            value_reply(rrx);
+        }
+        // the survivors' outputs are bitwise what plain sessions produce
+        let mut ref1 = NativeAarenSession::new(2);
+        let mut ref3 = NativeTfSession::new(2);
+        let as_f64 = |v: Vec<f32>| v.into_iter().map(|x| x as f64).collect::<Vec<_>>();
+        let y_of = |j: &Json| {
+            j.get("y")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect::<Vec<_>>()
+        };
+        let r = value_reply(&replies[3]);
+        assert_eq!(y_of(&r), as_f64(ref1.step(&x).unwrap()));
+        let (kind, msg) = kind_of_reply(replies[4].recv().unwrap());
+        assert_eq!(kind, KIND_QUARANTINED, "got: {msg}");
+        assert!(msg.contains("panicked"), "got: {msg}");
+        let r = value_reply(&replies[5]);
+        assert_eq!(y_of(&r), as_f64(ref3.step(&x).unwrap()));
+        match replies[6].recv().unwrap().unwrap() {
+            Response::Stats { sessions, quarantined, .. } => {
+                assert_eq!(sessions, 2, "victim must be gone, survivors resident");
+                assert_eq!(quarantined, 1);
+            }
+            _ => panic!("non-stats reply"),
+        }
+        let (kind, _) = kind_of_reply(replies[7].recv().unwrap());
+        assert_eq!(kind, KIND_QUARANTINED);
+        value_reply(&replies[8]); // close ok
+        value_reply(&replies[9]); // re-create ok
+        assert_eq!(value_reply(&replies[10]).usize_field("t").unwrap(), 1, "fresh stream");
+        assert!(matches!(replies[11].recv().unwrap(), Ok(Response::ShuttingDown)));
+    }
+
+    #[test]
+    fn mass_quarantine_releases_lanes_and_survivors_keep_streaming() {
+        // 10 of 12 resident sessions panic: their lanes must actually be
+        // released (the set compacts — same churn threshold as close) and
+        // the survivors plus a newcomer stream on the remapped lanes
+        let mut plan = FaultPlan::new(7);
+        for id in 2..=11u64 {
+            plan = plan.panic_on_step(id);
+        }
+        let (tx, rx) = mpsc::sync_channel(64);
+        let exec = std::thread::spawn(move || {
+            run_executor(
+                NativeFactory { channels: 2 },
+                rx,
+                ExecutorOpts { fault: Some(plan.site("exec-test")), ..Default::default() },
+            )
+        });
+        let call = |req: Request| -> Reply {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx.recv().unwrap()
+        };
+        for id in 1..=12u64 {
+            call(Request::Create { id, kind: "aaren".into() }).unwrap();
+        }
+        for id in 1..=12u64 {
+            let r = call(Request::Step { id, x: vec![0.5, -0.25] });
+            if (2..=11).contains(&id) {
+                let (kind, _) = kind_of_reply(r);
+                assert_eq!(kind, KIND_QUARANTINED, "session {id} should be quarantined");
+            } else {
+                r.unwrap();
+            }
+        }
+        // survivors carry their streams forward on compacted lanes
+        for id in [1u64, 12] {
+            match call(Request::Step { id, x: vec![1.5, 0.75] }).unwrap() {
+                Response::Value(j) => {
+                    assert_eq!(j.usize_field("t").unwrap(), 2, "session {id} lost its stream");
+                }
+                _ => panic!("non-value reply"),
+            }
+        }
+        call(Request::Create { id: 20, kind: "aaren".into() }).unwrap();
+        match call(Request::Step { id: 20, x: vec![0.0, 1.0] }).unwrap() {
+            Response::Value(j) => assert_eq!(j.usize_field("t").unwrap(), 1),
+            _ => panic!("non-value reply"),
+        }
+        match call(Request::Stats).unwrap() {
+            Response::Stats { sessions, quarantined, .. } => {
+                assert_eq!(sessions, 3);
+                assert_eq!(quarantined, 10);
+            }
+            _ => panic!("non-stats reply"),
+        }
+        let _ = call(Request::Shutdown);
+        exec.join().unwrap();
+    }
+
+    #[test]
+    fn poisoned_outputs_quarantine_the_session() {
+        // inputs are finite f32s (they pass the parse-time gate) but the
+        // accumulator overflows on the second fold: w doubles past
+        // f32::MAX, the output goes infinite, and the session must be
+        // contained rather than keep serving garbage
+        let hot = vec![3.0e38f32, 3.0e38];
+        let replies = run_drained_opts(
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Step { id: 1, x: hot.clone() }, // w = 3e38: finite, ok
+                Request::Stats,                          // drain boundary
+                Request::Step { id: 1, x: hot.clone() }, // w = 6e38 = inf
+                Request::Stats,
+                Request::Step { id: 1, x: vec![0.1, 0.2] }, // tombstoned
+                Request::Close { id: 1 },
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Step { id: 1, x: vec![0.1, 0.2] },
+                Request::Shutdown,
+            ],
+            ExecutorOpts::default(),
+        );
+        value_reply(&replies[0]);
+        assert_eq!(value_reply(&replies[1]).usize_field("t").unwrap(), 1);
+        replies[2].recv().unwrap().unwrap();
+        let (kind, msg) = kind_of_reply(replies[3].recv().unwrap());
+        assert_eq!(kind, KIND_QUARANTINED, "got: {msg}");
+        assert!(msg.contains("non-finite"), "got: {msg}");
+        match replies[4].recv().unwrap().unwrap() {
+            Response::Stats { sessions, quarantined, .. } => {
+                assert_eq!((sessions, quarantined), (0, 1));
+            }
+            _ => panic!("non-stats reply"),
+        }
+        let (kind, _) = kind_of_reply(replies[5].recv().unwrap());
+        assert_eq!(kind, KIND_QUARANTINED);
+        value_reply(&replies[6]);
+        value_reply(&replies[7]);
+        assert_eq!(value_reply(&replies[8]).usize_field("t").unwrap(), 1);
+        assert!(matches!(replies[9].recv().unwrap(), Ok(Response::ShuttingDown)));
+    }
+
+    #[test]
+    fn full_queue_is_refused_with_a_structured_overloaded_error() {
+        use crate::fault::KIND_OVERLOADED;
+        let (tx, rx) = mpsc::sync_channel(1);
+        let stats = ServeStats::default();
+        // wedge the queue: one envelope nobody drains
+        let (rtx, _rrx) = mpsc::channel();
+        tx.try_send((Request::Stats, rtx)).unwrap();
+        let err = try_call_on(&tx, Request::Stats, &stats).unwrap_err();
+        let k = Kinded::of(&err).expect("overload must carry a kind");
+        assert_eq!(k.kind, KIND_OVERLOADED);
+        assert_eq!(k.retry_after_ms, Some(RETRY_AFTER_MS));
+        assert_eq!(stats.overloaded_rejects.load(Ordering::Relaxed), 1);
+        // the wire body carries kind + retry hint
+        let body = error_body(&err);
+        let (kind, _) = wire_error(&body).unwrap();
+        assert_eq!(kind, KIND_OVERLOADED);
+        assert_eq!(
+            body.get("error").and_then(|e| e.get("retry_after_ms")).and_then(Json::as_f64),
+            Some(RETRY_AFTER_MS as f64)
+        );
+        // a dead executor is a plain error, not an overload
+        drop(rx);
+        let err = try_call_on(&tx, Request::Stats, &stats).unwrap_err();
+        assert!(Kinded::of(&err).is_none(), "got: {err:#}");
+        assert_eq!(stats.overloaded_rejects.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn corrupt_spill_blob_quarantines_with_a_structured_error() {
+        // a spilled blob that fails to decode must come back as a
+        // structured `corrupt_snapshot` error and tombstone the id —
+        // close then heals it (MemStore stands in for a torn DirStore
+        // file; DirStore's own quarantine path is covered in store.rs)
+        let mut store = crate::persist::MemStore::new();
+        store.put(5, b"definitely not a snapshot").unwrap();
+        let spill = Some(SpillTier { store: Box::new(store), max_resident: None });
+        let replies = run_drained_opts(
+            vec![
+                Request::Step { id: 5, x: vec![0.1, 0.2] },
+                Request::Stats,
+                Request::Close { id: 5 },
+                Request::Create { id: 5, kind: "aaren".into() },
+                Request::Step { id: 5, x: vec![0.1, 0.2] },
+                Request::Shutdown,
+            ],
+            ExecutorOpts { spill, ..Default::default() },
+        );
+        let (kind, msg) = kind_of_reply(replies[0].recv().unwrap());
+        assert_eq!(kind, KIND_CORRUPT_SNAPSHOT, "got: {msg}");
+        match replies[1].recv().unwrap().unwrap() {
+            Response::Stats { quarantined, corrupt_snapshots, spilled, .. } => {
+                assert_eq!((quarantined, corrupt_snapshots), (1, 1));
+                assert_eq!(spilled, 0, "the bad blob must be retired from the store");
+            }
+            _ => panic!("non-stats reply"),
+        }
+        value_reply(&replies[2]); // close clears the tombstone
+        value_reply(&replies[3]); // the id is usable again
+        assert_eq!(value_reply(&replies[4]).usize_field("t").unwrap(), 1);
+        assert!(matches!(replies[5].recv().unwrap(), Ok(Response::ShuttingDown)));
     }
 }

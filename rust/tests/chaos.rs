@@ -1,0 +1,366 @@
+//! Chaos suite: the fault-containment acceptance tests from the
+//! robustness issue, in the **default feature set** (no XLA).
+//!
+//! Two attack surfaces:
+//!
+//! * In-process, a server under a seeded [`FaultPlan`] (IO errors, torn
+//!   writes, forced panics, delays) serves concurrent streaming clients.
+//!   The contract under fire is a DICHOTOMY: every stream either
+//!   completes bitwise against an offline control, or ends in a
+//!   structured error kind — never a hang (client IO timeouts enforce
+//!   this) and never a silently wrong output.
+//! * Out-of-process, a spawned server is SIGKILLed mid-load and
+//!   restarted on the same spill directory. Sessions whose snapshots hit
+//!   disk resume bitwise; everything else answers with a structured
+//!   error. With torn writes injected under the kill, damaged blobs must
+//!   surface as `corrupt_snapshot` — not as wrong outputs.
+//!
+//! Fault decisions are drawn from per-site decision streams keyed on
+//! (seed, site tag), so the injected sequence at any one site is
+//! replayable even though thread interleaving decides which session
+//! lands on which roll. The assertions are therefore written against
+//! the containment contract, not against one interleaving.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use aaren::fault::{FaultPlan, KIND_CORRUPT_SNAPSHOT, KIND_NO_SESSION, KIND_QUARANTINED};
+use aaren::serve::server::{Client, ServeConfig, Server};
+use aaren::serve::{NativeAarenSession, StreamSession, RETRY_AFTER_MS};
+use aaren::util::json::Json;
+
+/// Exactly-representable token values (multiples of 0.25 in a small
+/// range) so JSON f64 → f32 → printed f64 round-trips are lossless and
+/// stream comparisons can demand BIT equality.
+fn dyadic_token(i: usize, channels: usize) -> Vec<f32> {
+    (0..channels).map(|c| ((i * 7 + c * 3) % 13) as f32 * 0.25 - 1.5).collect()
+}
+
+/// Offline control: the outputs an undisturbed Aaren stream over
+/// `tokens` must produce (exact, as f64 rows).
+fn control_outputs(channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    let mut session = NativeAarenSession::new(channels);
+    tokens
+        .iter()
+        .map(|x| session.step(x).unwrap().iter().map(|v| *v as f64).collect())
+        .collect()
+}
+
+fn step_line(id: u64, x: &[f32]) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}]}}"#, xs.join(","))
+}
+
+fn y_as_f64(reply: &Json) -> Vec<f64> {
+    reply
+        .get("y")
+        .and_then(Json::as_arr)
+        .expect("y")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+/// Unique scratch dir (std has no tempdir crate).
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "aaren-chaos-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// How one chaos stream ended.
+#[derive(Debug)]
+enum Outcome {
+    /// every token acked in order, every output bitwise == control
+    Complete,
+    /// a structured error ended the stream at this kind
+    Structured(String),
+}
+
+/// Drive session `id` through `tokens` one step at a time, retrying
+/// `overloaded` sheds after their hint and treating any other error
+/// reply as the stream's terminal, structured outcome. Panics on the
+/// two containment violations: a reply that is wrong (t out of order or
+/// outputs diverging from the control) and an unstructured transport
+/// failure (hang → IO timeout, closed connection, unparseable reply).
+fn drive_stream(
+    addr: &std::net::SocketAddr,
+    id: u64,
+    tokens: &[Vec<f32>],
+    want: &[Vec<f64>],
+    pause_every: usize,
+    pause: Duration,
+) -> Outcome {
+    let mut client = Client::connect(addr).unwrap();
+    client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
+    let r = client.call_raw(&format!(r#"{{"op":"create","kind":"aaren","id":{id}}}"#)).unwrap();
+    assert!(r.get("error").is_none(), "create {id} failed: {r:?}");
+    for (t, x) in tokens.iter().enumerate() {
+        if pause_every > 0 && t > 0 && t % pause_every == 0 {
+            std::thread::sleep(pause);
+        }
+        let reply = loop {
+            let r = client.call_raw(&step_line(id, x)).unwrap();
+            match aaren::serve::wire_error(&r) {
+                None => break Ok(r),
+                Some((kind, msg)) if kind == "overloaded" => {
+                    let hint = r.get("error").and_then(|e| e.usize_field("retry_after_ms").ok());
+                    assert_eq!(hint, Some(RETRY_AFTER_MS as usize), "no backoff hint: {msg}");
+                    std::thread::sleep(Duration::from_millis(RETRY_AFTER_MS));
+                }
+                Some((kind, msg)) => break Err((kind, msg)),
+            }
+        };
+        match reply {
+            Ok(r) => {
+                assert_eq!(
+                    r.usize_field("t").unwrap(),
+                    t + 1,
+                    "session {id} stream position silently diverged"
+                );
+                assert_eq!(
+                    y_as_f64(&r),
+                    want[t],
+                    "session {id} token {t} output diverged from the control"
+                );
+            }
+            Err((kind, _msg)) => return Outcome::Structured(kind),
+        }
+    }
+    Outcome::Complete
+}
+
+/// The in-process half of the acceptance criterion: a seeded fault plan
+/// (IO errors + torn spill writes + two forced panics + delays) under
+/// concurrent clients, TTL spills and an LRU resident cap. Every stream
+/// must complete bitwise or die structured; the forced panics must
+/// quarantine exactly their victims.
+#[test]
+fn seeded_chaos_streams_complete_bitwise_or_die_structured() {
+    let channels = 4;
+    let tokens: Vec<Vec<f32>> = (0..40).map(|i| dyadic_token(i, channels)).collect();
+    let want = control_outputs(channels, &tokens);
+
+    // rates are deliberately low: the forced panics guarantee faults
+    // fire, while innocents survive often enough that "at least one
+    // stream completes" cannot flake (each session crosses the
+    // spill/restore boundary a handful of times)
+    let dir = scratch_dir("seeded");
+    let plan = FaultPlan::new(0xC4A05)
+        .io_errors(0.01)
+        .torn_writes(0.05)
+        .delays(0.10, Duration::from_millis(1))
+        .panic_on_step(3)
+        .panic_on_step(8);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels,
+        shards: 2,
+        session_ttl: Some(Duration::from_millis(60)),
+        spill_dir: Some(dir.clone()),
+        max_resident_sessions: Some(8),
+        queue_depth: 8,
+        fault: Some(plan),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let run = std::thread::spawn(move || server.run());
+
+    // 12 sessions across 4 client threads; the pauses outlive the TTL so
+    // every stream crosses the spill/restore boundary repeatedly
+    let ids: Vec<u64> = (1..=12).collect();
+    let outcomes: Vec<(u64, Outcome)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ids
+            .chunks(3)
+            .map(|chunk| {
+                let (tokens, want) = (&tokens, &want);
+                scope.spawn(move || {
+                    chunk
+                        .iter()
+                        .map(|&id| {
+                            // a 150ms pause every 10 tokens: well past
+                            // the 60ms TTL, so the idle-wake sweep
+                            // spills the session mid-stream each time
+                            let out = drive_stream(
+                                &addr,
+                                id,
+                                tokens,
+                                want,
+                                10,
+                                Duration::from_millis(150),
+                            );
+                            (id, out)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    let structured_kinds: BTreeSet<&str> =
+        ["quarantined", "corrupt_snapshot", "no_session", "error"].into();
+    let mut completed = 0;
+    for (id, outcome) in &outcomes {
+        match outcome {
+            Outcome::Complete => completed += 1,
+            Outcome::Structured(kind) => assert!(
+                structured_kinds.contains(kind.as_str()),
+                "session {id} died with unexpected kind {kind:?}"
+            ),
+        }
+    }
+    // the forced panics condemn their victims — deterministically
+    for victim in [3u64, 8] {
+        let (_, outcome) = outcomes.iter().find(|(id, _)| *id == victim).unwrap();
+        assert!(
+            matches!(outcome, Outcome::Structured(k) if k == KIND_QUARANTINED),
+            "forced-panic victim {victim} should be quarantined, got {outcome:?}"
+        );
+    }
+    // the fault rates are low enough that losing every innocent stream
+    // has negligible probability — survivors prove the faults were
+    // CONTAINED, not just reported
+    assert!(completed >= 1, "no stream survived the chaos run: {outcomes:?}");
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert!(stats.usize_field("quarantined").unwrap() >= 2, "stats lost the quarantines");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    run.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill-on-drop wrapper so a failing assertion can't leak a spawned
+/// server process.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn the real binary and parse its listen banner.
+fn spawn_server(extra: &[&str]) -> (ChildGuard, std::net::SocketAddr) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_aaren"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--channels", "4"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn aaren serve");
+    let mut banner = String::new();
+    std::io::BufReader::new(child.stdout.take().expect("stdout piped"))
+        .read_line(&mut banner)
+        .expect("read listen banner");
+    let addr = banner
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner {banner:?}"))
+        .parse::<std::net::SocketAddr>()
+        .expect("parse listen address");
+    (ChildGuard(child), addr)
+}
+
+/// The out-of-process half: SIGKILL a loaded server, restart it on the
+/// same spill directory, and demand the dichotomy — a session either
+/// resumes BITWISE from its spilled snapshot or answers a structured
+/// error; no third outcome (hang, wrong output, clobbered id) exists.
+/// `fault` optionally injects torn spill writes under the kill, which
+/// must then surface as `corrupt_snapshot`, never as silent damage.
+fn kill_restart_dichotomy(tag: &str, fault: Option<&str>) {
+    let channels = 4;
+    let head: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(i, channels)).collect();
+    let all: Vec<Vec<f32>> = (0..9).map(|i| dyadic_token(i, channels)).collect();
+    let want = control_outputs(channels, &all);
+    let dir = scratch_dir(tag);
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    let mut args = vec!["--spill-dir", &dir_s, "--session-ttl-secs", "1", "--shards", "2"];
+    if let Some(spec) = fault {
+        args.extend_from_slice(&["--fault-plan", spec]);
+    }
+    let (child, addr) = spawn_server(&args);
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
+    let ids: Vec<u64> = (1..=6).collect();
+    for &id in &ids {
+        client.call(&format!(r#"{{"op":"create","kind":"aaren","id":{id}}}"#)).unwrap();
+        for x in &head {
+            client.call(&step_line(id, x)).unwrap();
+        }
+    }
+    // outlive the TTL so the sweep spills every session to disk, then
+    // put the server back under load and kill it with no warning
+    std::thread::sleep(Duration::from_millis(2500));
+    for &id in &ids[..2] {
+        // these touches restore ids 1–2 from disk mid-flight; their
+        // snapshots are retired, so after the kill they must be GONE
+        // (structured), not resurrected stale
+        let _ = client.call_raw(&step_line(id, &all[8]));
+    }
+    drop(child); // SIGKILL, mid-load — no graceful shutdown path runs
+
+    let (child, addr) = spawn_server(&args);
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut resumed = 0;
+    for &id in &ids {
+        let r = client.call_raw(&step_line(id, &all[8])).unwrap();
+        match aaren::serve::wire_error(&r) {
+            None => {
+                // resumed: it must stand EXACTLY where the spilled
+                // snapshot left it — head folded, token 8 just applied
+                assert_eq!(r.usize_field("t").unwrap(), 9, "session {id} resumed at wrong t");
+                assert_eq!(y_as_f64(&r), want[8], "session {id} resumed off the control");
+                resumed += 1;
+            }
+            Some((kind, msg)) => {
+                let kinds = [KIND_NO_SESSION, KIND_CORRUPT_SNAPSHOT, KIND_QUARANTINED];
+                assert!(
+                    kinds.contains(&kind.as_str()),
+                    "session {id} died unstructured: {kind} ({msg})"
+                );
+            }
+        }
+    }
+    if fault.is_none() {
+        // no injected damage: everything the sweep spilled and the load
+        // did not retire (ids 3–6) resumes bitwise
+        assert!(resumed >= 4, "only {resumed} of 4 spilled sessions resumed");
+    }
+    // fresh ids are seeded past every surviving snapshot, so recovery
+    // cannot clobber a spilled stream
+    let fresh =
+        client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    assert!(fresh as u64 > 6, "auto id {fresh} collides with recovered sessions");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    drop(child);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sigkill_under_load_spilled_sessions_resume_bitwise() {
+    kill_restart_dichotomy("kill", None);
+}
+
+#[test]
+fn sigkill_with_torn_spill_writes_stays_structured() {
+    // every other spill put persists a truncated blob and lies about it;
+    // after the restart those blobs MUST answer corrupt_snapshot (and
+    // the rest resume bitwise) — the lying-disk acceptance path
+    kill_restart_dichotomy("torn", Some("seed=11,torn=0.5"));
+}

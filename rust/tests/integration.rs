@@ -202,11 +202,8 @@ fn session_manager_protocol_end_to_end() {
         addr: "127.0.0.1:0".to_string(),
         channels: 8,
         shards: 1,
-        session_ttl: None,
-        spill_dir: None,
-        max_resident_sessions: None,
-        resident_lanes: true,
         artifacts: Some(dir),
+        ..ServeConfig::default()
     };
     let server = Server::bind(&cfg).unwrap();
     let addr = server.local_addr().unwrap();

@@ -5,7 +5,7 @@
 //! length and the tf KV session surviving past the largest cache bucket.
 
 use aaren::serve::server::{Client, ServeConfig, Server};
-use aaren::serve::TF_BUCKETS;
+use aaren::serve::{wire_error, TF_BUCKETS};
 use aaren::util::json::Json;
 
 type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
@@ -15,11 +15,7 @@ fn base_cfg(channels: usize, shards: usize) -> ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         channels,
         shards,
-        session_ttl: None,
-        spill_dir: None,
-        max_resident_sessions: None,
-        resident_lanes: true,
-        artifacts: None,
+        ..ServeConfig::default()
     }
 }
 
@@ -512,7 +508,7 @@ fn duplicate_create_id_is_rejected_over_tcp() {
     client.call(&step_line(5, &[0.5, 0.25])).unwrap();
     // same id again: structured error, live state untouched
     let r = client.call_raw(r#"{"op":"create","kind":"tf","id":5}"#).unwrap();
-    let err = r.str_field("error").unwrap();
+    let (_, err) = wire_error(&r).unwrap();
     assert!(err.contains("already exists"), "got: {err}");
     let r = client.call(&step_line(5, &[0.5, 0.25])).unwrap();
     assert_eq!(r.usize_field("t").unwrap(), 2, "duplicate create clobbered the session");
@@ -711,7 +707,7 @@ fn restore_with_an_explicit_target_id_over_tcp() {
     let r = client
         .call_raw(&format!(r#"{{"op":"restore","state":"{blob}","id":77}}"#))
         .unwrap();
-    let err = r.str_field("error").unwrap();
+    let (_, err) = wire_error(&r).unwrap();
     assert!(err.contains("already exists"), "got: {err}");
     // the original target keeps its stream position
     let r = client.call(&step_line(77, &dyadic_token(10, channels))).unwrap();
@@ -747,5 +743,61 @@ fn protocol_errors_are_replies_not_disconnects() {
     let r = client.call(&step_line(id, &[0.5, 0.5])).unwrap();
     assert_eq!(r.usize_field("t").unwrap(), 1);
     client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn oversized_frame_closes_only_the_offending_connection() {
+    let channels = 2;
+    let mut cfg = base_cfg(channels, 1);
+    cfg.max_frame_bytes = 1024;
+    let (addr, server) = start_cfg(&cfg);
+
+    // client A: a live stream that must survive B's abuse untouched
+    let tokens: Vec<Vec<f32>> = (0..12).map(|i| dyadic_token(i, channels)).collect();
+    let want = control_outputs("aaren", channels, &tokens);
+    let mut a = Client::connect(&addr).unwrap();
+    let id = a.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
+    for (t, x) in tokens.iter().take(6).enumerate() {
+        let r = a.call(&step_line(id, x)).unwrap();
+        assert_eq!(r.usize_field("t").unwrap(), t + 1);
+    }
+
+    // client B: one frame far past the cap, no newline needed to trip it
+    use std::io::{BufRead, BufReader, Write};
+    let mut b = std::net::TcpStream::connect(addr).unwrap();
+    b.write_all(&[b'x'; 8192]).unwrap();
+    b.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(b.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let r = Json::parse(line.trim()).unwrap();
+    let (kind, msg) = wire_error(&r).unwrap();
+    assert_eq!(kind, "frame_too_large", "got: {msg}");
+    assert!(msg.contains("1024"), "limit missing from message: {msg}");
+    // the error line is final: the offender's connection closes
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "offender must be disconnected");
+
+    // an in-cap frame on a fresh connection still gets a plain error reply
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c.call_raw("garbage that is not json").unwrap();
+    let (kind, _) = wire_error(&r).unwrap();
+    assert_eq!(kind, "error");
+
+    // client A's stream continues bitwise against the control
+    for (t, x) in tokens.iter().enumerate().skip(6) {
+        let r = a.call(&step_line(id, x)).unwrap();
+        assert_eq!(r.usize_field("t").unwrap(), t + 1);
+        let y: Vec<f64> = r
+            .get("y")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(y, want[t], "token {t} diverged after B's abuse");
+    }
+    a.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
 }
