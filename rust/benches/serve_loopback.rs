@@ -9,7 +9,11 @@
 //! single-client per-step baseline) so the serving perf trajectory is
 //! tracked across PRs alongside `BENCH_scan.json`. The acceptance bar
 //! for the batched path is `batched_steps_b16 ≥ 3×` the per-step
-//! baseline. Also records the mixed aaren/tf coalescing scenario
+//! baseline. The cross-backend A/B records (`aaren_steps_b16`,
+//! `mingru_steps_b16`, `avg_attn_steps_b16`) rerun the single-client
+//! batched scenario per fold kernel, with `speedup_vs_sequential`
+//! carrying the kernel/aaren throughput ratio (transport held
+//! constant). Also records the mixed aaren/tf coalescing scenario
 //! (`mixed_kinds_steps_b16_*`) and the persistence tier's
 //! snapshot→restore→close wire round-trip latency
 //! (`snapshot_restore_roundtrip`), and the resident-lane executor work:
@@ -233,6 +237,27 @@ fn main() {
         if speedup >= 3.0 { "" } else { "  ** below the 3x acceptance bar **" }
     );
     record(&mut records, "batched_steps_b16_1client", tokens, resident_b16_1, base_rate);
+
+    // phase 2b: cross-backend A/B — the same single-client batched
+    // scenario per fold kernel. speedup_vs_sequential carries the
+    // kernel_rate / aaren_rate ratio: the kernel's fold cost relative to
+    // the (m, u, w) fold with the transport held constant
+    record(&mut records, "aaren_steps_b16", tokens, resident_b16_1, resident_b16_1);
+    for kind in ["mingru", "avg_attn"] {
+        let rate = stream_one_kind(&addr, kind, &step_body, tokens, BATCH);
+        let ratio = rate / resident_b16_1;
+        println!(
+            "serve_loopback: {kind:<9} b={BATCH}   1 client   {rate:>12.0} tokens/s  \
+             ({ratio:.2}x aaren)"
+        );
+        records.push(BenchRecord {
+            name: format!("{kind}_steps_b16"),
+            n: tokens,
+            d: channels,
+            ns_per_iter: 1e9 / rate,
+            speedup_vs_sequential: ratio,
+        });
+    }
 
     // phase 3: concurrent clients, per-step, one session each — shard
     // fan-out plus drain coalescing across sessions

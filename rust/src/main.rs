@@ -264,7 +264,8 @@ fn help() {
                        seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2\n                        \
          --smoke        loopback self-test, then exit\n                        \
          ops: create/step/steps/snapshot/restore/close/stats/shutdown\n                        \
-         protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"tf\"[,\"backend\":\"native\"|\"hlo\"]}}\n  \
+         protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"mingru\"|\"minlstm\"|\"avg_attn\"|\"tf\"\n                        \
+                   [,\"backend\":\"native\"|\"hlo\"|<kernel>]}}\n  \
          state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
          state import --addr H:P --file F [--id N]  restore a snapshot as a new session\n  \
          state inspect --file F                     decode a snapshot offline\n  \

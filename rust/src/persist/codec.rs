@@ -8,20 +8,26 @@
 //! ```text
 //!   offset  size  field
 //!   0       4     magic  "AAS1"
-//!   4       2     version (u16)            — currently 1
-//!   6       1     backend tag (u8)         — 0 = aaren, 1 = tf
+//!   4       2     version (u16)            — 1 = raw, 2 = compressed
+//!   6       1     backend tag (u8)         — see BackendTag
 //!   7       1     reserved (must be 0)
 //!   8       4     channels (u32)
 //!   12      8     tokens_seen (u64)
 //!   20      4     state length (u32)       — COUNT of f32s, not bytes
-//!   24      4·n   state payload            — raw little-endian f32 bits
-//!   24+4·n  4     crc32 (IEEE) of bytes [0, 24+4·n)
+//!   24      …     state payload            — see below
+//!   end−4   4     crc32 (IEEE) of every byte before it
 //! ```
 //!
-//! The payload is raw f32 **bit patterns** — encode → decode is bitwise
-//! exact (NaNs, −0.0 and subnormals included), which is what makes a
-//! restored session resume with outputs bitwise identical to a
-//! never-snapshotted twin.
+//! **Version 1** payload: raw little-endian f32 bit patterns, 4·n bytes.
+//! **Version 2** payload: the same bit patterns XOR-delta'd against the
+//! previous f32 (lag-1) and LEB128-varint encoded — runs of repeated
+//! values (tf KV cache padding, zero-heavy states) shrink to one byte per
+//! f32. Both framings are **bitwise exact** on decode (NaNs, −0.0 and
+//! subnormals included), which is what makes a restored session resume
+//! with outputs bitwise identical to a never-snapshotted twin.
+//! [`encode`] always writes version 1 (so existing blob byte-equality
+//! guarantees hold); [`encode_auto`] writes version 2 only when it is
+//! strictly smaller. Decoders accept both.
 //!
 //! # Version policy
 //!
@@ -37,8 +43,12 @@ use anyhow::{bail, ensure, Result};
 /// File/wire magic: Attention-As-an-rnn Session state, layout family 1.
 pub const MAGIC: [u8; 4] = *b"AAS1";
 
-/// Current codec version; bumped on any layout change.
+/// Raw-payload codec version — what [`encode`] writes.
 pub const VERSION: u16 = 1;
+
+/// Compressed-payload codec version (XOR-delta + varint) — what
+/// [`encode_auto`] writes when it wins.
+pub const VERSION_COMPRESSED: u16 = 2;
 
 /// Fixed header length in bytes (everything before the payload).
 pub const HEADER_LEN: usize = 24;
@@ -47,10 +57,16 @@ pub const HEADER_LEN: usize = 24;
 /// format — variants must keep their discriminants forever.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendTag {
-    /// `NativeAarenSession`: q, then the (m, u, w) accumulator.
+    /// `NativeScanSession` on the Aaren kernel: q, then (m, u, w).
     Aaren = 0,
     /// `NativeTfSession`: the live k rows then the live v rows.
     Tf = 1,
+    /// `NativeScanSession` on the minGRU kernel: the (a, b) row.
+    MinGru = 2,
+    /// `NativeScanSession` on the minLSTM kernel: the (a, b) row.
+    MinLstm = 3,
+    /// `NativeScanSession` on the average-attention kernel: (n, sum).
+    AvgAttn = 4,
 }
 
 impl BackendTag {
@@ -58,6 +74,9 @@ impl BackendTag {
         match tag {
             0 => Ok(BackendTag::Aaren),
             1 => Ok(BackendTag::Tf),
+            2 => Ok(BackendTag::MinGru),
+            3 => Ok(BackendTag::MinLstm),
+            4 => Ok(BackendTag::AvgAttn),
             other => bail!("unknown session backend tag {other}"),
         }
     }
@@ -67,6 +86,9 @@ impl BackendTag {
         match self {
             BackendTag::Aaren => "aaren",
             BackendTag::Tf => "tf",
+            BackendTag::MinGru => "mingru",
+            BackendTag::MinLstm => "minlstm",
+            BackendTag::AvgAttn => "avg_attn",
         }
     }
 }
@@ -107,22 +129,94 @@ pub fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
-/// Encode a snapshot into the versioned length-prefixed framing above.
-pub fn encode(snap: &Snapshot) -> Vec<u8> {
-    let mut out = Vec::with_capacity(HEADER_LEN + snap.state.len() * 4 + 4);
+fn encode_with(snap: &Snapshot, version: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.push(snap.backend as u8);
     out.push(0); // reserved
     out.extend_from_slice(&(snap.channels as u32).to_le_bytes());
     out.extend_from_slice(&snap.tokens_seen.to_le_bytes());
     out.extend_from_slice(&(snap.state.len() as u32).to_le_bytes());
-    for &x in &snap.state {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    out.extend_from_slice(payload);
     let crc = crc32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
     out
+}
+
+/// Encode a snapshot into the version-1 (raw payload) framing. Stable:
+/// the bytes this produces for a given snapshot never change, which is
+/// what the resident==boxed and cross-process migration byte-equality
+/// guarantees lean on.
+pub fn encode(snap: &Snapshot) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(snap.state.len() * 4);
+    for &x in &snap.state {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+    encode_with(snap, VERSION, &payload)
+}
+
+/// LEB128 varint for one u32.
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Version-2 payload: each f32's bit pattern XORed with the previous
+/// one's (lag-1 delta, seed 0), varint encoded. Repeated values — the
+/// dominant redundancy in padded tf KV snapshots — cost one byte each.
+fn compress_state(state: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(state.len());
+    let mut prev = 0u32;
+    for &x in state {
+        let bits = x.to_bits();
+        push_varint(&mut out, bits ^ prev);
+        prev = bits;
+    }
+    out
+}
+
+/// Bitwise inverse of [`compress_state`]; must consume the payload
+/// exactly and yield exactly `state_len` f32s.
+fn decompress_state(payload: &[u8], state_len: usize) -> Result<Vec<f32>> {
+    let mut state = Vec::with_capacity(state_len.min(payload.len() + 1));
+    let mut prev = 0u32;
+    let mut i = 0;
+    for n in 0..state_len {
+        let mut v = 0u32;
+        let mut shift = 0u32;
+        loop {
+            ensure!(i < payload.len(), "compressed payload truncated at f32 {n}");
+            ensure!(shift < 32, "compressed payload varint overruns 32 bits at f32 {n}");
+            let b = payload[i];
+            i += 1;
+            v |= u32::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        prev ^= v;
+        state.push(f32::from_bits(prev));
+    }
+    ensure!(i == payload.len(), "compressed payload has trailing bytes");
+    Ok(state)
+}
+
+/// Encode with whichever framing is smaller: version 2 (compressed) when
+/// it beats the raw payload, else version 1 byte-identical to [`encode`].
+/// The spill tier uses this for tf KV snapshots, whose padded caches
+/// compress well; incompressible states pay zero size or decode cost.
+pub fn encode_auto(snap: &Snapshot) -> Vec<u8> {
+    let compressed = compress_state(&snap.state);
+    if compressed.len() < snap.state.len() * 4 {
+        encode_with(snap, VERSION_COMPRESSED, &compressed)
+    } else {
+        encode(snap)
+    }
 }
 
 fn le_u32(b: &[u8]) -> u32 {
@@ -143,20 +237,32 @@ pub fn meta(blob: &[u8]) -> Result<Meta> {
     ensure!(blob[0..4] == MAGIC, "bad snapshot magic (not an aaren session blob)");
     let version = u16::from_le_bytes([blob[4], blob[5]]);
     ensure!(
-        version == VERSION,
-        "unsupported snapshot version {version} (this build reads version {VERSION})"
+        version == VERSION || version == VERSION_COMPRESSED,
+        "unsupported snapshot version {version} (this build reads versions {VERSION} and {VERSION_COMPRESSED})"
     );
     let backend = BackendTag::from_u8(blob[6])?;
     ensure!(blob[7] == 0, "nonzero reserved byte in snapshot header");
     let channels = le_u32(&blob[8..12]) as usize;
     let tokens_seen = u64::from_le_bytes(blob[12..20].try_into().expect("length checked"));
     let state_len = le_u32(&blob[20..24]) as usize;
-    let want = HEADER_LEN + state_len * 4 + 4;
-    ensure!(
-        blob.len() == want,
-        "snapshot blob is {} bytes, header promises {want}",
-        blob.len()
-    );
+    if version == VERSION {
+        let want = HEADER_LEN + state_len * 4 + 4;
+        ensure!(
+            blob.len() == want,
+            "snapshot blob is {} bytes, header promises {want}",
+            blob.len()
+        );
+    } else {
+        // version 2: the payload is variable-length; an upper bound
+        // (5 varint bytes per f32) still catches grossly wrong headers,
+        // and decode enforces exact consumption
+        let payload = blob.len() - HEADER_LEN - 4;
+        ensure!(
+            payload <= state_len * 5,
+            "compressed snapshot payload of {payload} bytes exceeds the {} f32s promised",
+            state_len
+        );
+    }
     let crc_stored = le_u32(&blob[blob.len() - 4..]);
     let crc_actual = crc32(&blob[..blob.len() - 4]);
     ensure!(
@@ -166,14 +272,21 @@ pub fn meta(blob: &[u8]) -> Result<Meta> {
     Ok(Meta { backend, channels, tokens_seen, state_len })
 }
 
-/// Decode a blob produced by [`encode`]. Bitwise inverse of `encode`:
-/// the returned f32s carry exactly the bit patterns that were encoded.
+/// Decode a blob produced by [`encode`] or [`encode_auto`]. Bitwise
+/// inverse of both: the returned f32s carry exactly the bit patterns
+/// that were encoded, whichever payload framing carried them.
 pub fn decode(blob: &[u8]) -> Result<Snapshot> {
     let meta = meta(blob)?;
-    let mut state = Vec::with_capacity(meta.state_len);
-    for chunk in blob[HEADER_LEN..HEADER_LEN + meta.state_len * 4].chunks_exact(4) {
-        state.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
-    }
+    let payload = &blob[HEADER_LEN..blob.len() - 4];
+    let state = if u16::from_le_bytes([blob[4], blob[5]]) == VERSION {
+        let mut state = Vec::with_capacity(meta.state_len);
+        for chunk in payload.chunks_exact(4) {
+            state.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        state
+    } else {
+        decompress_state(payload, meta.state_len)?
+    };
     Ok(Snapshot {
         backend: meta.backend,
         channels: meta.channels,
@@ -292,5 +405,90 @@ mod tests {
         // the classic zlib check value
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_backend_tag_round_trips() {
+        for tag in
+            [BackendTag::Aaren, BackendTag::Tf, BackendTag::MinGru, BackendTag::MinLstm, BackendTag::AvgAttn]
+        {
+            assert_eq!(BackendTag::from_u8(tag as u8).unwrap(), tag);
+            let snap =
+                Snapshot { backend: tag, channels: 3, tokens_seen: 5, state: vec![0.25; 7] };
+            assert_eq!(decode(&encode(&snap)).unwrap().backend, tag);
+        }
+        assert!(BackendTag::from_u8(5).is_err());
+    }
+
+    #[test]
+    fn compressed_roundtrip_preserves_every_bit() {
+        // same property as the raw framing, through the XOR-delta +
+        // varint payload: arbitrary bit patterns survive exactly
+        let mut rng = Rng::new(21);
+        for _ in 0..100 {
+            let snap = random_snapshot(&mut rng);
+            let blob = encode_with(&snap, VERSION_COMPRESSED, &compress_state(&snap.state));
+            let back = decode(&blob).unwrap();
+            assert_eq!(back.backend, snap.backend);
+            assert_eq!(back.channels, snap.channels);
+            assert_eq!(back.tokens_seen, snap.tokens_seen);
+            assert_eq!(back.state.len(), snap.state.len());
+            for (a, b) in back.state.iter().zip(snap.state.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bit pattern changed in compressed roundtrip");
+            }
+            assert_eq!(meta(&blob).unwrap().state_len, snap.state.len());
+        }
+    }
+
+    #[test]
+    fn encode_auto_compresses_repetitive_states_and_falls_back_otherwise() {
+        // a padded-KV-shaped state (long runs of repeated values)
+        // shrinks; random bit patterns don't, and fall back to the raw
+        // framing byte-identically
+        let mut state = vec![0.0f32; 400];
+        state[..32].fill(1.5);
+        let snap = Snapshot { backend: BackendTag::Tf, channels: 8, tokens_seen: 4, state };
+        let auto = encode_auto(&snap);
+        let raw = encode(&snap);
+        assert!(auto.len() < raw.len() / 2, "{} vs {}", auto.len(), raw.len());
+        assert_eq!(decode(&auto).unwrap(), decode(&raw).unwrap());
+
+        let mut rng = Rng::new(33);
+        let noisy = Snapshot {
+            backend: BackendTag::Tf,
+            channels: 8,
+            tokens_seen: 4,
+            state: (0..100).map(|_| f32::from_bits(rng.below(1 << 32) as u32)).collect(),
+        };
+        assert_eq!(encode_auto(&noisy), encode(&noisy), "incompressible must stay raw");
+    }
+
+    #[test]
+    fn compressed_rejects_corruption_and_length_lies() {
+        let snap = Snapshot {
+            backend: BackendTag::Tf,
+            channels: 2,
+            tokens_seen: 3,
+            state: vec![0.5; 64],
+        };
+        let blob = encode_auto(&snap);
+        assert_eq!(u16::from_le_bytes([blob[4], blob[5]]), VERSION_COMPRESSED);
+        // flip one bit at every byte position — header checks or CRC
+        // must catch all of them
+        for i in 0..blob.len() {
+            let mut bad = blob.clone();
+            bad[i] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flipped byte {i} must be rejected");
+        }
+        // a payload that decodes to the wrong f32 count (CRC-valid) is
+        // still refused: state_len says 64, payload carries 63
+        let short = Snapshot { tokens_seen: 3, state: vec![0.5; 63], ..snap.clone() };
+        let mut lied = encode_with(&short, VERSION_COMPRESSED, &compress_state(&short.state));
+        lied[20..24].copy_from_slice(&64u32.to_le_bytes());
+        let n = lied.len();
+        let crc = crc32(&lied[..n - 4]);
+        lied[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode(&lied).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "got: {err}");
     }
 }

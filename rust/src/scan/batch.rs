@@ -33,7 +33,15 @@
 //! `ScanBuffer` strategies, so outputs are **bitwise equal** to scanning
 //! each lane on its own — the batch engine changes memory layout and
 //! parallelism, never numerics.
+//!
+//! [`LaneSet`] — the executor-resident lane allocator — layers on flat
+//! [`FoldKernel`] state rows instead: one homogeneous `(kernel, width)`
+//! set per map entry, each lane one kernel state row folded in place.
+//! For Aaren lanes its folds delegate to the same `ops::fold_token`
+//! float sequence, so the kernel-generic storage is bitwise identical to
+//! the pre-refactor (m, u, w) lanes.
 
+use crate::scan::kernel::{FoldKernel, KernelKind};
 use crate::scan::ops::{axpby_inplace, fold_row, MASK_FILL};
 use crate::scan::pool::ScanPool;
 use crate::scan::soa::ScanBuffer;
@@ -429,11 +437,13 @@ fn block_views<'a>(
     views
 }
 
-/// Long-lived lane allocator over a single-row-block [`BatchScanBuffer`]
-/// — the storage an executor shard keeps its **resident** Aaren sessions
-/// in (see `crate::serve`). Each live session owns one lane holding its
-/// (m, u, w) accumulator; `steps` work folds tokens into the lane **in
-/// place**, so a drain never gathers or scatters session state.
+/// Long-lived lane allocator over flat [`FoldKernel`] state rows — the
+/// storage an executor shard keeps its **resident** native sessions in
+/// (see `crate::serve`). Each live session owns one lane holding its
+/// kernel state row; `steps` work folds tokens into the lane **in
+/// place**, so a drain never gathers or scatters session state. A set is
+/// homogeneous: one kernel, one channel width (the executor keys its
+/// sets by `(KernelKind, width)`).
 ///
 /// Lifecycle: [`alloc`](LaneSet::alloc) hands out a stable lane id
 /// (reusing released lanes LIFO before growing the buffer),
@@ -445,7 +455,7 @@ fn block_views<'a>(
 /// ```
 /// use aaren::scan::LaneSet;
 ///
-/// let mut lanes = LaneSet::new(2);
+/// let mut lanes = LaneSet::new(2); // Aaren lanes, d = 2
 /// let a = lanes.alloc();
 /// let b = lanes.alloc();
 /// lanes.fold(a, 0.0, &[1.0, 3.0]); // lane a folds a token…
@@ -459,30 +469,57 @@ fn block_views<'a>(
 /// ```
 #[derive(Debug)]
 pub struct LaneSet {
-    buf: BatchScanBuffer,
+    kind: KernelKind,
+    /// channel width d of every lane's stream
+    d: usize,
+    /// f32s per state row (`kind.state_width(d)`)
+    width: usize,
+    /// total lanes allocated (live + released)
+    lanes: usize,
+    /// `lanes` state rows of `width` f32s, lane-major
+    rows: Vec<f32>,
     /// released lane indices, reused LIFO by `alloc`
     free: Vec<usize>,
 }
 
 impl LaneSet {
-    /// Empty set for lanes of value-dimension `d`.
+    /// Empty set of Aaren lanes for streams of channel width `d`.
     pub fn new(d: usize) -> LaneSet {
-        LaneSet { buf: BatchScanBuffer::new(0, d), free: Vec::new() }
+        LaneSet::new_kernel(KernelKind::Aaren, d)
     }
 
-    /// Value dimension of every lane.
+    /// Empty set of `kind` lanes for streams of channel width `d`.
+    pub fn new_kernel(kind: KernelKind, d: usize) -> LaneSet {
+        LaneSet { kind, d, width: kind.state_width(d), lanes: 0, rows: Vec::new(), free: Vec::new() }
+    }
+
+    fn k(&self) -> &'static dyn FoldKernel {
+        self.kind.kernel()
+    }
+
+    /// The kernel every lane of this set runs.
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// Channel width `d` of every lane's stream.
     pub fn dim(&self) -> usize {
-        self.buf.dim()
+        self.d
+    }
+
+    /// f32s per lane state row.
+    pub fn width(&self) -> usize {
+        self.width
     }
 
     /// Total lanes currently allocated in the buffer (live + released).
     pub fn lanes(&self) -> usize {
-        self.buf.lanes()
+        self.lanes
     }
 
     /// Lanes currently owned by a session.
     pub fn live(&self) -> usize {
-        self.buf.lanes() - self.free.len()
+        self.lanes - self.free.len()
     }
 
     /// Released-but-not-yet-compacted lanes.
@@ -491,12 +528,19 @@ impl LaneSet {
     }
 
     /// Re-dimension an EMPTY set (no live lanes) for a different `d`,
-    /// keeping the allocations — how a shard whose sessions all closed
-    /// adopts a stream of a new channel width.
+    /// keeping the allocation and kernel.
     pub fn reset_dim(&mut self, d: usize) {
         assert_eq!(self.live(), 0, "cannot re-dimension a set with live lanes");
-        self.buf.reset(0, d);
+        self.d = d;
+        self.width = self.kind.state_width(d);
+        self.lanes = 0;
+        self.rows.clear();
         self.free.clear();
+    }
+
+    fn clear_lane(&mut self, lane: usize) {
+        let (d, w) = (self.d, self.width);
+        self.k().identity_into(d, &mut self.rows[lane * w..(lane + 1) * w]);
     }
 
     /// Claim a lane, initialised to the ⊕ identity: a released lane if
@@ -506,10 +550,10 @@ impl LaneSet {
         if let Some(lane) = self.free.pop() {
             return lane; // cleared back to the identity on release
         }
-        let lane = self.buf.grow_lane();
-        if self.buf.steps() == 0 {
-            self.buf.push_identity_row();
-        }
+        let lane = self.lanes;
+        self.lanes += 1;
+        self.rows.resize(self.lanes * self.width, 0.0);
+        self.clear_lane(lane);
         lane
     }
 
@@ -518,13 +562,14 @@ impl LaneSet {
     /// immediately (no remap needed); interior holes wait for `compact`.
     pub fn release(&mut self, lane: usize) {
         debug_assert!(!self.free.contains(&lane), "double release of lane {lane}");
-        self.buf.clear_lane(lane);
-        if lane + 1 == self.buf.lanes() {
+        self.clear_lane(lane);
+        if lane + 1 == self.lanes {
             // cheap tail trim: drop the released lane and any released
             // run directly below it
             let mut top = lane;
             loop {
-                self.buf.truncate_lanes(top);
+                self.lanes = top;
+                self.rows.truncate(top * self.width);
                 match self.free.iter().position(|&f| f + 1 == top) {
                     Some(i) => {
                         self.free.swap_remove(i);
@@ -538,29 +583,50 @@ impl LaneSet {
         }
     }
 
-    /// Fold the leaf (s, 1, x) into `lane` in place — the resident
-    /// serving hot path; bitwise identical to `ops::fold_token` on that
-    /// lane's accumulator alone.
+    /// Fold the leaf for (score `s`, token `x`) into `lane` in place —
+    /// the resident serving hot path. For Aaren lanes this is bitwise
+    /// identical to `ops::fold_token` on that lane's accumulator alone;
+    /// kernels whose leaves ignore the score take only `x`.
     pub fn fold(&mut self, lane: usize, s: f32, x: &[f32]) {
-        self.buf.fold_lane(lane, s, x);
+        let (d, w) = (self.d, self.width);
+        self.k().fold_leaf(d, s, x, &mut self.rows[lane * w..(lane + 1) * w]);
     }
 
-    /// The attention output `lane`'s accumulator represents (w / u, zeros
-    /// for the u == 0 identity).
+    /// The d-channel output `lane`'s state represents (zeros for the
+    /// nothing-folded-yet identity, never NaN).
     pub fn output_into(&self, lane: usize, out: &mut [f32]) {
-        self.buf.lane_output_into(0, lane, out);
+        let w = self.width;
+        self.k().output_into(self.d, &self.rows[lane * w..(lane + 1) * w], out);
     }
 
-    /// Borrow `lane`'s accumulator as (m, u, w-row) — what a resident
-    /// session's snapshot serializes, straight from the lane.
+    /// Borrow `lane`'s full state row — what a resident session's
+    /// snapshot serializes, straight from the lane.
+    pub fn state(&self, lane: usize) -> &[f32] {
+        &self.rows[lane * self.width..(lane + 1) * self.width]
+    }
+
+    /// Overwrite `lane`'s state row — the restore path (a snapshot's
+    /// state adopted bit-for-bit into a fresh lane).
+    pub fn set_state(&mut self, lane: usize, state: &[f32]) {
+        assert_eq!(state.len(), self.width, "state row width mismatch");
+        self.rows[lane * self.width..(lane + 1) * self.width].copy_from_slice(state);
+    }
+
+    /// Borrow an Aaren `lane`'s accumulator as (m, u, w-row) — the
+    /// (m, u, w)-shaped view predating kernel-generic lanes.
     pub fn row(&self, lane: usize) -> (f32, f32, &[f32]) {
-        self.buf.row(0, lane)
+        assert_eq!(self.kind, KernelKind::Aaren, "row() reads the Aaren (m, u, w) layout");
+        let s = self.state(lane);
+        (s[0], s[1], &s[2..])
     }
 
-    /// Overwrite `lane`'s accumulator — the restore path (a snapshot's
-    /// (m, u, w) adopted bit-for-bit into a fresh lane).
+    /// Overwrite an Aaren `lane`'s accumulator from (m, u, w) parts.
     pub fn set_row(&mut self, lane: usize, m: f32, u: f32, w: &[f32]) {
-        self.buf.set_row(0, lane, m, u, w);
+        assert_eq!(self.kind, KernelKind::Aaren, "set_row() writes the Aaren (m, u, w) layout");
+        let i = lane * self.width;
+        self.rows[i] = m;
+        self.rows[i + 1] = u;
+        self.rows[i + 2..i + 2 + w.len()].copy_from_slice(w);
     }
 
     /// Close interior holes: the highest live lanes move down into
@@ -579,7 +645,8 @@ impl LaneSet {
         // per probed lane would go quadratic after a mass release
         let freed: std::collections::HashSet<usize> = self.free.iter().copied().collect();
         let mut moves = Vec::with_capacity(holes.len());
-        let mut src = self.buf.lanes();
+        let mut src = self.lanes;
+        let w = self.width;
         for hole in holes {
             // the highest not-yet-moved live lane fills the lowest hole
             loop {
@@ -588,17 +655,13 @@ impl LaneSet {
                     break;
                 }
             }
-            self.buf.copy_lane(src, hole);
+            self.rows.copy_within(src * w..(src + 1) * w, hole * w);
             moves.push((src, hole));
         }
-        self.buf.truncate_lanes(live);
+        self.lanes = live;
+        self.rows.truncate(live * w);
         self.free.clear();
         moves
-    }
-
-    /// The underlying single-row-block buffer (tests / diagnostics).
-    pub fn buffer(&self) -> &BatchScanBuffer {
-        &self.buf
     }
 }
 
@@ -1005,5 +1068,79 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Kernel-generic twin of the lifecycle property: for EVERY backend
+    /// kernel, an arbitrary interleaving of alloc / fold / release /
+    /// spill-restore (via `state`/`set_state`) / compact leaves each
+    /// surviving lane bitwise identical to a `fold_leaf` chain over that
+    /// stream's tokens.
+    #[test]
+    fn kernel_lane_lifecycle_stays_bitwise_equal_to_fold_chain() {
+        struct Stream {
+            lane: usize,
+            history: Vec<(f32, Vec<f32>)>,
+        }
+        for kind in KernelKind::ALL {
+            let k = kind.kernel();
+            prop::check("kernel lane lifecycle == fold chain (bitwise)", 16, |rng| {
+                let d = 1 + rng.below(6);
+                let mut lanes = LaneSet::new_kernel(kind, d);
+                assert_eq!((lanes.kind(), lanes.width()), (kind, kind.state_width(d)));
+                let mut streams: Vec<Stream> = Vec::new();
+                for _ in 0..30 + rng.below(60) {
+                    match rng.below(10) {
+                        0 | 1 => streams.push(Stream { lane: lanes.alloc(), history: Vec::new() }),
+                        2 if !streams.is_empty() => {
+                            let s = streams.swap_remove(rng.below(streams.len()));
+                            lanes.release(s.lane);
+                        }
+                        3 if !streams.is_empty() => {
+                            let s = &mut streams[rng.below(streams.len())];
+                            let state = lanes.state(s.lane).to_vec();
+                            lanes.release(s.lane);
+                            s.lane = lanes.alloc();
+                            lanes.set_state(s.lane, &state);
+                        }
+                        4 => {
+                            for (old, new) in lanes.compact() {
+                                for s in streams.iter_mut() {
+                                    if s.lane == old {
+                                        s.lane = new;
+                                    }
+                                }
+                            }
+                        }
+                        _ if !streams.is_empty() => {
+                            let s = &mut streams[rng.below(streams.len())];
+                            let score = rng.range(-30.0, 30.0) as f32;
+                            let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                            lanes.fold(s.lane, score, &v);
+                            s.history.push((score, v));
+                        }
+                        _ => {}
+                    }
+                }
+                for (si, s) in streams.iter().enumerate() {
+                    let mut acc = vec![0.0f32; kind.state_width(d)];
+                    k.identity_into(d, &mut acc);
+                    for (score, v) in &s.history {
+                        k.fold_leaf(d, *score, v, &mut acc);
+                    }
+                    for (i, (x, y)) in lanes.state(s.lane).iter().zip(acc.iter()).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("{kind:?} stream {si}: state[{i}] {x} vs {y}"));
+                        }
+                    }
+                    let (mut got, mut want) = (vec![0.0f32; d], vec![0.0f32; d]);
+                    lanes.output_into(s.lane, &mut got);
+                    k.output_into(d, &acc, &mut want);
+                    if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                        return Err(format!("{kind:?} stream {si}: outputs diverged"));
+                    }
+                }
+                Ok(())
+            });
+        }
     }
 }

@@ -1,0 +1,888 @@
+//! Kernel-generic fold core: the [`FoldKernel`] abstraction every
+//! associative-recurrence backend plugs into.
+//!
+//! The paper's central observation (§3) is that attention is one instance
+//! of a recurrence computable by parallel prefix scan over an associative
+//! operator. This module factors that observation into code: a kernel is
+//! an associative `combine` over flat f32 state rows, a per-token `leaf`,
+//! a state-layout width, and an `output` projection — and the rest of the
+//! stack (lanes, sessions, spill codec, wire protocol) is generic over it.
+//!
+//! Four kernels ship today:
+//!
+//! | kind      | row layout (width)       | recurrence |
+//! |-----------|--------------------------|------------|
+//! | `Aaren`   | `[m, u, w[0..d]]` (d+2)  | softmax attention via the log-sum-exp ⊕ of Appendix B ([`crate::scan::ops`]) |
+//! | `MinGru`  | `[a[0..d], b[0..d]]` (2d)| minGRU (arxiv 2410.01201): `h = (1−z)⊙h + z⊙x`, `z = σ(x)` |
+//! | `MinLstm` | `[a[0..d], b[0..d]]` (2d)| minLSTM (arxiv 2410.01201): `h = f'⊙h + i'⊙x`, normalised σ gates |
+//! | `AvgAttn` | `[n, s[0..d]]` (d+1)     | average attention network (arxiv 1805.00631): cumulative mean |
+//!
+//! minGRU/minLSTM here use fixed identity input weights (gates read the
+//! raw token), which keeps the serving stack parameter-free like the
+//! Aaren path; both are the *diagonal affine* scan element `(a, b)` with
+//! `h = a⊙h_prev + b` and composition `(a₂·a₁, a₂·b₁ + b₂)`. Since every
+//! `a ∈ (0,1)`, products only shrink — the recurrence is stable in linear
+//! space (the Aaren kernel is the one that needs log-space max-shifting,
+//! and it delegates to the shared `ops::axpby` kernels bit-for-bit).
+//!
+//! The generic scan strategies at the bottom ([`scan_kernel_sequential`]
+//! & friends) are the reference/property-test machinery: the hot serving
+//! paths run the streaming [`FoldKernel::fold_leaf`] via
+//! [`crate::scan::LaneSet`], and the Aaren bulk paths keep the tuned SoA
+//! code in [`crate::scan::soa`].
+
+use super::ops::{self, MASK_FILL};
+
+/// Enumeration of the shipped kernels — the hashable identity that keys
+/// lane sets, snapshot backend tags and the wire `"backend"` names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Softmax attention as an RNN — the paper's (m, u, w) recurrence.
+    Aaren,
+    /// minGRU with identity input weights.
+    MinGru,
+    /// minLSTM with identity input weights.
+    MinLstm,
+    /// Average attention network: cumulative mean over the stream.
+    AvgAttn,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 4] =
+        [KernelKind::Aaren, KernelKind::MinGru, KernelKind::MinLstm, KernelKind::AvgAttn];
+
+    /// The static kernel instance. Kernels are stateless, so one shared
+    /// `&'static` serves every lane set and session.
+    pub fn kernel(self) -> &'static dyn FoldKernel {
+        match self {
+            KernelKind::Aaren => &AarenKernel,
+            KernelKind::MinGru => &MinGruKernel,
+            KernelKind::MinLstm => &MinLstmKernel,
+            KernelKind::AvgAttn => &AvgAttnKernel,
+        }
+    }
+
+    /// The wire `kind`/`backend` string (matches
+    /// `persist::codec::BackendTag::kind()` for snapshot blobs).
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            KernelKind::Aaren => "aaren",
+            KernelKind::MinGru => "mingru",
+            KernelKind::MinLstm => "minlstm",
+            KernelKind::AvgAttn => "avg_attn",
+        }
+    }
+
+    /// Parse a wire `kind`/`backend` string.
+    pub fn from_wire(name: &str) -> Option<KernelKind> {
+        KernelKind::ALL.into_iter().find(|k| k.wire_name() == name)
+    }
+
+    /// Width of one state row at `d` channels (delegates to the kernel).
+    pub fn state_width(self, d: usize) -> usize {
+        self.kernel().state_width(d)
+    }
+}
+
+/// One associative-recurrence backend over flat f32 state rows.
+///
+/// A row is `state_width(d)` contiguous f32s; `combine_rows` must be
+/// associative (up to float rounding) with `identity_into` as its neutral
+/// element. `fold_leaf` is the streaming hot path — it MUST compute the
+/// exact same float operations (same order) as
+/// `combine_rows(acc, leaf_into(s, x))` so resident lanes, boxed sessions
+/// and bulk scans all agree bitwise along identical ⊕ orderings.
+///
+/// `s` is the Aaren attention score for the token; kernels whose leaves
+/// depend only on the token itself ignore it.
+pub trait FoldKernel: Sync {
+    fn kind(&self) -> KernelKind;
+
+    /// f32s per state row at `d` channels.
+    fn state_width(&self, d: usize) -> usize;
+
+    /// Write the ⊕-neutral element into `row`.
+    fn identity_into(&self, d: usize, row: &mut [f32]);
+
+    /// Write the leaf element for a token with score `s`, value `x`.
+    fn leaf_into(&self, d: usize, s: f32, x: &[f32], row: &mut [f32]);
+
+    /// `out = a ⊕ b` (a is the earlier prefix).
+    fn combine_rows(&self, d: usize, a: &[f32], b: &[f32], out: &mut [f32]);
+
+    /// In-place right-fold: `b := a ⊕ b` (a is the earlier prefix).
+    fn fold_row(&self, d: usize, a: &[f32], b: &mut [f32]);
+
+    /// Streaming update: `acc := acc ⊕ leaf(s, x)` without materializing
+    /// the leaf — the O(1) per-token step every session runs.
+    fn fold_leaf(&self, d: usize, s: f32, x: &[f32], acc: &mut [f32]);
+
+    /// The d-channel output this prefix represents. An identity prefix
+    /// (nothing folded yet) yields zeros, never NaN.
+    fn output_into(&self, d: usize, row: &[f32], out: &mut [f32]);
+}
+
+// ---------------------------------------------------------------- Aaren
+
+/// The paper's (m, u, w) log-sum-exp recurrence, row `[m, u, w[0..d]]`.
+/// Every method delegates to [`crate::scan::ops`] so the generic path is
+/// bitwise identical to the legacy Aaren-specific one.
+pub struct AarenKernel;
+
+impl FoldKernel for AarenKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Aaren
+    }
+
+    fn state_width(&self, d: usize) -> usize {
+        d + 2
+    }
+
+    fn identity_into(&self, _d: usize, row: &mut [f32]) {
+        row[0] = MASK_FILL;
+        row[1] = 0.0;
+        row[2..].fill(0.0);
+    }
+
+    fn leaf_into(&self, d: usize, s: f32, x: &[f32], row: &mut [f32]) {
+        debug_assert_eq!(x.len(), d);
+        row[0] = s;
+        row[1] = 1.0;
+        row[2..].copy_from_slice(x);
+    }
+
+    fn combine_rows(&self, _d: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        let (head, wo) = out.split_at_mut(2);
+        let (mo, uo) = head.split_at_mut(1);
+        ops::combine_rows(a[0], a[1], &a[2..], b[0], b[1], &b[2..], &mut mo[0], &mut uo[0], wo);
+    }
+
+    fn fold_row(&self, _d: usize, a: &[f32], b: &mut [f32]) {
+        let (head, wb) = b.split_at_mut(2);
+        let (mb, ub) = head.split_at_mut(1);
+        ops::fold_row(a[0], a[1], &a[2..], &mut mb[0], &mut ub[0], wb);
+    }
+
+    fn fold_leaf(&self, _d: usize, s: f32, x: &[f32], acc: &mut [f32]) {
+        // exact float-op order of ops::fold_token / the lane fold
+        let (head, w) = acc.split_at_mut(2);
+        let m = head[0].max(s);
+        let ea = (head[0] - m).exp();
+        let eb = (s - m).exp();
+        head[0] = m;
+        head[1] = head[1] * ea + eb;
+        ops::axpby_inplace(eb, x, ea, w);
+    }
+
+    fn output_into(&self, _d: usize, row: &[f32], out: &mut [f32]) {
+        let u = row[1];
+        if u == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, w) in out.iter_mut().zip(row[2..].iter()) {
+            *o = w / u;
+        }
+    }
+}
+
+// ------------------------------------------- diagonal affine (min*) core
+
+/// Shared ⊕ of the minGRU/minLSTM element `(a, b)`: `h = a⊙h_prev + b`
+/// per channel, so (earlier) ⊕ (later) = `(a_l·a_e, a_l·b_e + b_l)`.
+fn diag_combine(d: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let (oa, ob) = out.split_at_mut(d);
+    for i in 0..d {
+        oa[i] = b[i] * a[i];
+        ob[i] = b[i] * a[d + i] + b[d + i];
+    }
+}
+
+/// In-place `b := a ⊕ b` for the diagonal affine element.
+fn diag_fold_row(d: usize, a: &[f32], b: &mut [f32]) {
+    for i in 0..d {
+        let bl = b[i];
+        b[d + i] = bl * a[d + i] + b[d + i];
+        b[i] = bl * a[i];
+    }
+}
+
+/// In-place `acc := acc ⊕ (al, bl)` given the later element's channels.
+#[inline(always)]
+fn diag_fold_leaf_channel(acc_a: &mut f32, acc_b: &mut f32, al: f32, bl: f32) {
+    *acc_a = al * *acc_a;
+    *acc_b = al * *acc_b + bl;
+}
+
+/// Numerically-stable logistic function.
+fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+// --------------------------------------------------------------- minGRU
+
+/// minGRU (arxiv 2410.01201) with identity input weights:
+/// `z = σ(x)`, `h = (1−z)⊙h_prev + z⊙x` — leaf `(1−z, z·x)`.
+pub struct MinGruKernel;
+
+/// The minGRU leaf gates for one channel: `(a, b) = (1−z, z·x)`.
+#[inline(always)]
+fn mingru_gates(x: f32) -> (f32, f32) {
+    let z = sigmoid(x);
+    (1.0 - z, z * x)
+}
+
+impl FoldKernel for MinGruKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::MinGru
+    }
+
+    fn state_width(&self, d: usize) -> usize {
+        2 * d
+    }
+
+    fn identity_into(&self, d: usize, row: &mut [f32]) {
+        row[..d].fill(1.0);
+        row[d..].fill(0.0);
+    }
+
+    fn leaf_into(&self, d: usize, _s: f32, x: &[f32], row: &mut [f32]) {
+        for i in 0..d {
+            let (a, b) = mingru_gates(x[i]);
+            row[i] = a;
+            row[d + i] = b;
+        }
+    }
+
+    fn combine_rows(&self, d: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        diag_combine(d, a, b, out);
+    }
+
+    fn fold_row(&self, d: usize, a: &[f32], b: &mut [f32]) {
+        diag_fold_row(d, a, b);
+    }
+
+    fn fold_leaf(&self, d: usize, _s: f32, x: &[f32], acc: &mut [f32]) {
+        let (aa, ab) = acc.split_at_mut(d);
+        for i in 0..d {
+            let (al, bl) = mingru_gates(x[i]);
+            diag_fold_leaf_channel(&mut aa[i], &mut ab[i], al, bl);
+        }
+    }
+
+    fn output_into(&self, d: usize, row: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&row[d..2 * d]);
+    }
+}
+
+// -------------------------------------------------------------- minLSTM
+
+/// minLSTM (arxiv 2410.01201) with identity input weights and the
+/// paper's normalised gates: `f = σ(x+1)`, `i = σ(x−1)`,
+/// `f' = f/(f+i)`, `i' = i/(f+i)`, `h = f'⊙h_prev + i'⊙x` — leaf
+/// `(f', i'·x)`. The ±1 biases break the f = i symmetry that would
+/// otherwise make this minGRU with a constant gate.
+pub struct MinLstmKernel;
+
+/// The minLSTM leaf gates for one channel: `(a, b) = (f', i'·x)`.
+#[inline(always)]
+fn minlstm_gates(x: f32) -> (f32, f32) {
+    let f = sigmoid(x + 1.0);
+    let i = sigmoid(x - 1.0);
+    let sum = f + i;
+    let (fp, ip) = if sum > 0.0 {
+        (f / sum, i / sum)
+    } else {
+        // both gates underflowed (x below ~−104): use the analytic tail
+        // limit f/(f+i) → σ(2) instead of 0/0
+        let fp = sigmoid(2.0);
+        (fp, 1.0 - fp)
+    };
+    (fp, ip * x)
+}
+
+impl FoldKernel for MinLstmKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::MinLstm
+    }
+
+    fn state_width(&self, d: usize) -> usize {
+        2 * d
+    }
+
+    fn identity_into(&self, d: usize, row: &mut [f32]) {
+        row[..d].fill(1.0);
+        row[d..].fill(0.0);
+    }
+
+    fn leaf_into(&self, d: usize, _s: f32, x: &[f32], row: &mut [f32]) {
+        for i in 0..d {
+            let (a, b) = minlstm_gates(x[i]);
+            row[i] = a;
+            row[d + i] = b;
+        }
+    }
+
+    fn combine_rows(&self, d: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        diag_combine(d, a, b, out);
+    }
+
+    fn fold_row(&self, d: usize, a: &[f32], b: &mut [f32]) {
+        diag_fold_row(d, a, b);
+    }
+
+    fn fold_leaf(&self, d: usize, _s: f32, x: &[f32], acc: &mut [f32]) {
+        let (aa, ab) = acc.split_at_mut(d);
+        for i in 0..d {
+            let (al, bl) = minlstm_gates(x[i]);
+            diag_fold_leaf_channel(&mut aa[i], &mut ab[i], al, bl);
+        }
+    }
+
+    fn output_into(&self, d: usize, row: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&row[d..2 * d]);
+    }
+}
+
+// -------------------------------------------------------------- avgattn
+
+/// Average attention network (arxiv 1805.00631): the O(1)-state
+/// cumulative mean `g_t = (1/t)·Σ x_i`, row `[n, s[0..d]]`, ⊕ is
+/// componentwise addition.
+pub struct AvgAttnKernel;
+
+impl FoldKernel for AvgAttnKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::AvgAttn
+    }
+
+    fn state_width(&self, d: usize) -> usize {
+        d + 1
+    }
+
+    fn identity_into(&self, _d: usize, row: &mut [f32]) {
+        row.fill(0.0);
+    }
+
+    fn leaf_into(&self, d: usize, _s: f32, x: &[f32], row: &mut [f32]) {
+        debug_assert_eq!(x.len(), d);
+        row[0] = 1.0;
+        row[1..].copy_from_slice(x);
+    }
+
+    fn combine_rows(&self, _d: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        for ((o, a), b) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+            *o = a + b;
+        }
+    }
+
+    fn fold_row(&self, _d: usize, a: &[f32], b: &mut [f32]) {
+        for (b, a) in b.iter_mut().zip(a.iter()) {
+            *b = a + *b;
+        }
+    }
+
+    fn fold_leaf(&self, _d: usize, _s: f32, x: &[f32], acc: &mut [f32]) {
+        acc[0] += 1.0;
+        for (s, x) in acc[1..].iter_mut().zip(x.iter()) {
+            *s += x;
+        }
+    }
+
+    fn output_into(&self, _d: usize, row: &[f32], out: &mut [f32]) {
+        let n = row[0];
+        if n == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, s) in out.iter_mut().zip(row[1..].iter()) {
+            *o = s / n;
+        }
+    }
+}
+
+// -------------------------------------------- generic flat-row scan ops
+
+/// Inclusive sequential scan over flat kernel rows, in place:
+/// `row[i] := row[i−1] ⊕ row[i]`. For the Aaren kernel this performs the
+/// exact float ops of [`ops::scan_rows_inplace`], so results are bitwise
+/// identical to the tuned SoA path along the same ⊕ ordering.
+pub fn scan_kernel_sequential(k: &dyn FoldKernel, d: usize, rows: &mut [f32]) {
+    let w = k.state_width(d);
+    if w == 0 {
+        return;
+    }
+    debug_assert_eq!(rows.len() % w, 0);
+    let n = rows.len() / w;
+    for i in 1..n {
+        let (prev, cur) = rows[(i - 1) * w..(i + 1) * w].split_at_mut(w);
+        k.fold_row(d, prev, cur);
+    }
+}
+
+/// Hillis–Steele (offset-doubling) inclusive scan, double-buffered.
+/// Tree scans reassociate ⊕, so results match the sequential scan only
+/// up to float rounding — never bitwise (see the strategy tests).
+pub fn scan_kernel_hillis_steele(k: &dyn FoldKernel, d: usize, rows: &mut [f32]) {
+    let w = k.state_width(d);
+    if w == 0 {
+        return;
+    }
+    let n = rows.len() / w;
+    if n <= 1 {
+        return;
+    }
+    let mut cur = rows.to_vec();
+    let mut next = vec![0.0f32; rows.len()];
+    let mut off = 1;
+    while off < n {
+        for i in 0..n {
+            if i >= off {
+                let (lo, hi) = cur.split_at(i * w);
+                let a = &lo[(i - off) * w..(i - off + 1) * w];
+                k.combine_rows(d, a, &hi[..w], &mut next[i * w..(i + 1) * w]);
+            } else {
+                next[i * w..(i + 1) * w].copy_from_slice(&cur[i * w..(i + 1) * w]);
+            }
+        }
+        std::mem::swap(&mut cur, &mut next);
+        off *= 2;
+    }
+    rows.copy_from_slice(&cur);
+}
+
+/// Blelloch (work-efficient upsweep/downsweep) inclusive scan over a
+/// power-of-two-padded copy; the exclusive result is folded back with
+/// the original leaves. Same rounding caveat as Hillis–Steele.
+pub fn scan_kernel_blelloch(k: &dyn FoldKernel, d: usize, rows: &mut [f32]) {
+    let w = k.state_width(d);
+    if w == 0 {
+        return;
+    }
+    let n = rows.len() / w;
+    if n <= 1 {
+        return;
+    }
+    let p = n.next_power_of_two();
+    let mut buf = vec![0.0f32; p * w];
+    buf[..n * w].copy_from_slice(rows);
+    for i in n..p {
+        k.identity_into(d, &mut buf[i * w..(i + 1) * w]);
+    }
+    let mut gap = 1;
+    while gap < p {
+        let step = gap * 2;
+        let mut i = step - 1;
+        while i < p {
+            let (lo, hi) = buf.split_at_mut(i * w);
+            k.fold_row(d, &lo[(i - gap) * w..(i - gap + 1) * w], &mut hi[..w]);
+            i += step;
+        }
+        gap = step;
+    }
+    k.identity_into(d, &mut buf[(p - 1) * w..]);
+    let mut tmp = vec![0.0f32; w];
+    gap = p / 2;
+    while gap > 0 {
+        let step = gap * 2;
+        let mut i = step - 1;
+        while i < p {
+            // t = left; left = right; right = t ⊕ right
+            tmp.copy_from_slice(&buf[(i - gap) * w..(i - gap + 1) * w]);
+            let (lo, hi) = buf.split_at_mut(i * w);
+            lo[(i - gap) * w..(i - gap + 1) * w].copy_from_slice(&hi[..w]);
+            k.fold_row(d, &tmp, &mut hi[..w]);
+            i += step;
+        }
+        gap /= 2;
+    }
+    // buf[i] is now the exclusive prefix; inclusive = exclusive ⊕ leaf
+    for i in 0..n {
+        k.fold_row(d, &buf[i * w..(i + 1) * w], &mut rows[i * w..(i + 1) * w]);
+    }
+}
+
+/// Three-phase chunked scan (per-chunk sequential scans, then a carry
+/// fold into every later chunk) — the single-threaded shape of the
+/// pool-chunked SoA strategy, generic over kernels.
+pub fn scan_kernel_chunked(k: &dyn FoldKernel, d: usize, rows: &mut [f32], chunk: usize) {
+    let w = k.state_width(d);
+    if w == 0 || chunk == 0 {
+        return scan_kernel_sequential(k, d, rows);
+    }
+    let cw = chunk * w;
+    for c in rows.chunks_mut(cw) {
+        scan_kernel_sequential(k, d, c);
+    }
+    let nchunks = rows.len().div_ceil(cw);
+    if nchunks <= 1 {
+        return;
+    }
+    let mut carry = rows[cw - w..cw].to_vec();
+    for j in 1..nchunks {
+        let start = j * cw;
+        let end = (start + cw).min(rows.len());
+        for r in rows[start..end].chunks_exact_mut(w) {
+            k.fold_row(d, &carry, r);
+        }
+        carry.copy_from_slice(&rows[end - w..end]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::ops::{fold_token, Muw};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_token(rng: &mut Rng, d: usize) -> (f32, Vec<f32>) {
+        let s = rng.range(-20.0, 20.0) as f32;
+        let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        (s, x)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn wire_names_round_trip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::from_wire(kind.wire_name()), Some(kind));
+            assert_eq!(kind.kernel().kind(), kind);
+        }
+        assert_eq!(KernelKind::from_wire("mamba"), None);
+    }
+
+    #[test]
+    fn state_widths() {
+        for d in [1usize, 3, 8] {
+            assert_eq!(KernelKind::Aaren.state_width(d), d + 2);
+            assert_eq!(KernelKind::MinGru.state_width(d), 2 * d);
+            assert_eq!(KernelKind::MinLstm.state_width(d), 2 * d);
+            assert_eq!(KernelKind::AvgAttn.state_width(d), d + 1);
+        }
+    }
+
+    #[test]
+    fn aaren_kernel_is_bitwise_the_legacy_ops_path() {
+        // the refactor's ground rule: the generic Aaren kernel performs
+        // the exact float ops of scan::ops, so existing sessions, lanes
+        // and snapshots are bit-for-bit unchanged
+        prop::check("kernel fold == fold_token", 64, |rng| {
+            let d = 1 + rng.below(12);
+            let k = KernelKind::Aaren.kernel();
+            let mut row = vec![f32::NAN; k.state_width(d)];
+            k.identity_into(d, &mut row);
+            let mut acc = Muw::identity(d);
+            let mut out = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            for _ in 0..1 + rng.below(24) {
+                let (s, x) = rand_token(rng, d);
+                k.fold_leaf(d, s, &x, &mut row);
+                fold_token(&mut acc, s, &x);
+                if row[0].to_bits() != acc.m.to_bits() || row[1].to_bits() != acc.u.to_bits() {
+                    return Err(format!("m/u diverged: {:?} vs ({}, {})", &row[..2], acc.m, acc.u));
+                }
+                if bits(&row[2..]) != bits(&acc.w) {
+                    return Err("w diverged".into());
+                }
+                k.output_into(d, &row, &mut out);
+                acc.output_into(&mut want);
+                if bits(&out) != bits(&want) {
+                    return Err("output diverged".into());
+                }
+            }
+            // leaf_into / combine_rows against the Muw forms
+            let (s, x) = rand_token(rng, d);
+            let mut leaf = vec![0.0f32; d + 2];
+            k.leaf_into(d, s, &x, &mut leaf);
+            let lw = Muw::leaf(s, &x);
+            if leaf[0].to_bits() != lw.m.to_bits()
+                || leaf[1].to_bits() != lw.u.to_bits()
+                || bits(&leaf[2..]) != bits(&lw.w)
+            {
+                return Err("leaf diverged".into());
+            }
+            let mut combined = vec![0.0f32; d + 2];
+            k.combine_rows(d, &row, &leaf, &mut combined);
+            let cw = crate::scan::ops::combine(&acc, &lw);
+            if combined[0].to_bits() != cw.m.to_bits() || bits(&combined[2..]) != bits(&cw.w) {
+                return Err("combine diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn aaren_generic_sequential_scan_matches_soa_scan_bitwise() {
+        prop::check("kernel seq scan == scan_rows_inplace", 32, |rng| {
+            let (n, d) = (1 + rng.below(40), 1 + rng.below(6));
+            let k = KernelKind::Aaren.kernel();
+            let w = k.state_width(d);
+            let mut rows = vec![0.0f32; n * w];
+            let mut m = vec![0.0f32; n];
+            let mut u = vec![0.0f32; n];
+            let mut wv = vec![0.0f32; n * d];
+            for i in 0..n {
+                let (s, x) = rand_token(rng, d);
+                k.leaf_into(d, s, &x, &mut rows[i * w..(i + 1) * w]);
+                m[i] = s;
+                u[i] = 1.0;
+                wv[i * d..(i + 1) * d].copy_from_slice(&x);
+            }
+            scan_kernel_sequential(k, d, &mut rows);
+            ops::scan_rows_inplace(&mut m, &mut u, &mut wv, d);
+            for i in 0..n {
+                let row = &rows[i * w..(i + 1) * w];
+                if row[0].to_bits() != m[i].to_bits()
+                    || row[1].to_bits() != u[i].to_bits()
+                    || bits(&row[2..]) != bits(&wv[i * d..(i + 1) * d])
+                {
+                    return Err(format!("row {i} diverged from the SoA scan"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mingru_fold_matches_scalar_reference_bitwise() {
+        // scalar reference recurrence, computed with the same per-channel
+        // expressions: z = σ(x); h = (1−z)·h + z·x
+        prop::check("mingru == scalar recurrence", 64, |rng| {
+            let d = 1 + rng.below(12);
+            let k = KernelKind::MinGru.kernel();
+            let mut row = vec![f32::NAN; k.state_width(d)];
+            k.identity_into(d, &mut row);
+            let mut h = vec![0.0f32; d];
+            let mut out = vec![0.0f32; d];
+            for _ in 0..1 + rng.below(32) {
+                let (s, x) = rand_token(rng, d);
+                k.fold_leaf(d, s, &x, &mut row);
+                for i in 0..d {
+                    let z = sigmoid(x[i]);
+                    h[i] = (1.0 - z) * h[i] + z * x[i];
+                }
+                k.output_into(d, &row, &mut out);
+                if bits(&out) != bits(&h) {
+                    return Err(format!("h diverged: {out:?} vs {h:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn minlstm_fold_matches_scalar_reference_bitwise() {
+        // scalar reference: f = σ(x+1), i = σ(x−1), normalised gates,
+        // h = f'·h + i'·x
+        prop::check("minlstm == scalar recurrence", 64, |rng| {
+            let d = 1 + rng.below(12);
+            let k = KernelKind::MinLstm.kernel();
+            let mut row = vec![f32::NAN; k.state_width(d)];
+            k.identity_into(d, &mut row);
+            let mut h = vec![0.0f32; d];
+            let mut out = vec![0.0f32; d];
+            for _ in 0..1 + rng.below(32) {
+                let (s, x) = rand_token(rng, d);
+                k.fold_leaf(d, s, &x, &mut row);
+                for i in 0..d {
+                    let f = sigmoid(x[i] + 1.0);
+                    let ii = sigmoid(x[i] - 1.0);
+                    let sum = f + ii;
+                    let (fp, ip) = (f / sum, ii / sum);
+                    h[i] = fp * h[i] + ip * x[i];
+                }
+                k.output_into(d, &row, &mut out);
+                if bits(&out) != bits(&h) {
+                    return Err(format!("h diverged: {out:?} vs {h:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn minlstm_gates_survive_the_deep_negative_tail() {
+        // x < −104 underflows both σ gates to 0.0; the kernel must fall
+        // back to the analytic tail limit, not emit 0/0 = NaN
+        let (a, b) = minlstm_gates(-3.0e38);
+        assert!(a.is_finite() && b.is_finite(), "got ({a}, {b})");
+        assert!((a - sigmoid(2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_attn_fold_matches_scalar_reference_bitwise() {
+        // scalar reference: running sum and count, output = sum / count
+        prop::check("avg_attn == scalar recurrence", 64, |rng| {
+            let d = 1 + rng.below(12);
+            let k = KernelKind::AvgAttn.kernel();
+            let mut row = vec![f32::NAN; k.state_width(d)];
+            k.identity_into(d, &mut row);
+            let mut sum = vec![0.0f32; d];
+            let mut count = 0.0f32;
+            let mut out = vec![0.0f32; d];
+            for _ in 0..1 + rng.below(32) {
+                let (s, x) = rand_token(rng, d);
+                k.fold_leaf(d, s, &x, &mut row);
+                count += 1.0;
+                for i in 0..d {
+                    sum[i] += x[i];
+                }
+                k.output_into(d, &row, &mut out);
+                let want: Vec<f32> = sum.iter().map(|s| s / count).collect();
+                if bits(&out) != bits(&want) {
+                    return Err(format!("mean diverged: {out:?} vs {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral_and_outputs_zeros_for_every_kernel() {
+        let mut rng = Rng::new(13);
+        for kind in KernelKind::ALL {
+            let k = kind.kernel();
+            let d = 5;
+            let w = k.state_width(d);
+            let mut e = vec![f32::NAN; w];
+            k.identity_into(d, &mut e);
+            let mut out = vec![f32::NAN; d];
+            k.output_into(d, &e, &mut out);
+            assert_eq!(out, vec![0.0; d], "{kind:?}: identity output must be zeros, not NaN");
+            // a non-trivial prefix x: e⊕x == x⊕e == x (value-exact: the
+            // neutral element contributes exp-underflow zeros / exact
+            // 1·v and v+0 terms)
+            let mut x = vec![0.0f32; w];
+            k.identity_into(d, &mut x);
+            for _ in 0..3 {
+                let (s, v) = rand_token(&mut rng, d);
+                k.fold_leaf(d, s, &v, &mut x);
+            }
+            let mut got = vec![0.0f32; w];
+            k.combine_rows(d, &e, &x, &mut got);
+            assert_eq!(got, x, "{kind:?}: e ⊕ x != x");
+            k.combine_rows(d, &x, &e, &mut got);
+            assert_eq!(got, x, "{kind:?}: x ⊕ e != x");
+        }
+    }
+
+    #[test]
+    fn fold_leaf_equals_combine_with_leaf_for_every_kernel() {
+        prop::check("fold_leaf == combine(acc, leaf)", 64, |rng| {
+            for kind in KernelKind::ALL {
+                let k = kind.kernel();
+                let d = 1 + rng.below(8);
+                let w = k.state_width(d);
+                let mut acc = vec![0.0f32; w];
+                k.identity_into(d, &mut acc);
+                for _ in 0..rng.below(6) {
+                    let (s, x) = rand_token(rng, d);
+                    k.fold_leaf(d, s, &x, &mut acc);
+                }
+                let (s, x) = rand_token(rng, d);
+                let mut leaf = vec![0.0f32; w];
+                k.leaf_into(d, s, &x, &mut leaf);
+                let mut want = vec![0.0f32; w];
+                k.combine_rows(d, &acc, &leaf, &mut want);
+                k.fold_leaf(d, s, &x, &mut acc);
+                if bits(&acc) != bits(&want) {
+                    return Err(format!("{kind:?}: fold_leaf != combine(acc, leaf)"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scan_strategies_match_sequential_for_every_kernel() {
+        // the sequential generic scan is bitwise the fold chain (same ⊕
+        // ordering); the tree/chunked strategies REASSOCIATE ⊕, which
+        // float arithmetic does not preserve bitwise — they get the same
+        // tolerance the SoA strategy tests use
+        prop::check("strategies == sequential", 24, |rng| {
+            for kind in KernelKind::ALL {
+                let k = kind.kernel();
+                let d = 1 + rng.below(5);
+                let w = k.state_width(d);
+                let n = 1 + rng.below(33);
+                let mut leaves = vec![0.0f32; n * w];
+                let mut tokens = Vec::new();
+                for i in 0..n {
+                    let (s, x) = rand_token(rng, d);
+                    k.leaf_into(d, s, &x, &mut leaves[i * w..(i + 1) * w]);
+                    tokens.push((s, x));
+                }
+                // sequential scan == streaming fold chain, bitwise
+                let mut seq = leaves.clone();
+                scan_kernel_sequential(k, d, &mut seq);
+                let mut acc = vec![0.0f32; w];
+                k.identity_into(d, &mut acc);
+                let mut out = vec![0.0f32; d];
+                let mut want = vec![0.0f32; d];
+                for (i, (s, x)) in tokens.iter().enumerate() {
+                    k.fold_leaf(d, *s, x, &mut acc);
+                    k.output_into(d, &acc, &mut want);
+                    k.output_into(d, &seq[i * w..(i + 1) * w], &mut out);
+                    if out != want {
+                        return Err(format!(
+                            "{kind:?}: sequential scan row {i} != fold chain: {out:?} vs {want:?}"
+                        ));
+                    }
+                }
+                // tree + chunked strategies: tolerance on outputs
+                let mut variants: Vec<(&str, Vec<f32>)> = Vec::new();
+                let mut hs = leaves.clone();
+                scan_kernel_hillis_steele(k, d, &mut hs);
+                variants.push(("hillis_steele", hs));
+                let mut bl = leaves.clone();
+                scan_kernel_blelloch(k, d, &mut bl);
+                variants.push(("blelloch", bl));
+                for chunk in [1usize, 3, 8, n] {
+                    let mut ch = leaves.clone();
+                    scan_kernel_chunked(k, d, &mut ch, chunk);
+                    variants.push(("chunked", ch));
+                }
+                for (name, rows) in &variants {
+                    for i in 0..n {
+                        k.output_into(d, &seq[i * w..(i + 1) * w], &mut want);
+                        k.output_into(d, &rows[i * w..(i + 1) * w], &mut out);
+                        prop::assert_close(&out, &want, 1e-4)
+                            .map_err(|e| format!("{kind:?}/{name} row {i}: {e}"))?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunked_scan_with_tail_chunks_is_exact_vs_sequential_outputs() {
+        // chunk == 1 degenerates to the sequential ordering exactly; the
+        // carry fold then IS the fold chain, so outputs agree bitwise
+        let mut rng = Rng::new(29);
+        for kind in KernelKind::ALL {
+            let k = kind.kernel();
+            let (n, d) = (17, 3);
+            let w = k.state_width(d);
+            let mut leaves = vec![0.0f32; n * w];
+            for i in 0..n {
+                let (s, x) = rand_token(&mut rng, d);
+                k.leaf_into(d, s, &x, &mut leaves[i * w..(i + 1) * w]);
+            }
+            let mut seq = leaves.clone();
+            scan_kernel_sequential(k, d, &mut seq);
+            let mut ch = leaves.clone();
+            scan_kernel_chunked(k, d, &mut ch, 1);
+            assert_eq!(bits(&ch), bits(&seq), "{kind:?}: chunk=1 must match sequential bitwise");
+        }
+    }
+}

@@ -53,18 +53,31 @@
 //! ⊕ inner loops of every path — single-lane and batch — share the
 //! fixed-width, bounds-check-free `axpby` kernels in [`ops`].
 //!
-//! [`batch::LaneSet`] layers a lane **lifecycle** on top of a
-//! single-row-block `BatchScanBuffer`: stable lane ids with a free-list
-//! (alloc / release / compact-with-remap), so long-lived streaming
-//! sessions can live *inside* the batch buffer and fold tokens in place —
-//! the storage behind `crate::serve`'s resident-lane executors.
+//! [`batch::LaneSet`] layers a lane **lifecycle** on top of flat kernel
+//! state rows: stable lane ids with a free-list (alloc / release /
+//! compact-with-remap), so long-lived streaming sessions can live
+//! *inside* one contiguous buffer and fold tokens in place — the storage
+//! behind `crate::serve`'s resident-lane executors.
+//!
+//! # Fold kernels
+//!
+//! [`kernel::FoldKernel`] generalises the recurrence itself: a kernel is
+//! an associative combine over flat f32 state rows plus a per-token leaf
+//! and an output projection, and the (m, u, w) operator above is its
+//! [`kernel::KernelKind::Aaren`] instance (bitwise — the Aaren kernel
+//! delegates to [`ops`]). minGRU, minLSTM (arxiv 2410.01201) and the
+//! average attention network (arxiv 1805.00631) ship as further
+//! instances; lanes, sessions and the wire protocol are generic over
+//! [`kernel::KernelKind`].
 
 pub mod batch;
+pub mod kernel;
 pub mod ops;
 pub mod pool;
 pub mod soa;
 
 pub use batch::{BatchScanBuffer, LaneSet};
+pub use kernel::{FoldKernel, KernelKind};
 pub use ops::{
     combine, combine_into, combine_rows, fold_row, fold_token, scan_rows_inplace, Muw, MASK_FILL,
 };

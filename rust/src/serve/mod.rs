@@ -3,14 +3,17 @@
 //!
 //! * [`session`] defines the [`StreamSession`] trait (step / state_bytes /
 //!   tokens_seen) and its implementations: the always-available rust-native
-//!   sessions ([`NativeAarenSession`] — one O(1) `Muw` fold per token — and
-//!   [`NativeTfSession`] — a KV cache walking [`TF_BUCKETS`] then doubling
-//!   geometrically) plus, with the `pjrt` feature, the model-bound
-//!   compiled-HLO session.
+//!   sessions ([`NativeScanSession`] — one O(1) [`crate::scan::FoldKernel`]
+//!   fold per token, over any of the `aaren` / `mingru` / `minlstm` /
+//!   `avg_attn` kernels — and [`NativeTfSession`] — a KV cache walking
+//!   [`TF_BUCKETS`] then doubling geometrically) plus, with the `pjrt`
+//!   feature, the model-bound compiled-HLO session.
 //! * [`server`] exposes a line-delimited JSON TCP protocol over trait
 //!   objects. `create` picks the backend per session: `"backend":"native"`
-//!   (default, pure Rust) or `"backend":"hlo"` (`pjrt` builds started with
-//!   artifacts). Native sessions are served by a **sharded executor pool**
+//!   (default, pure Rust), `"backend":"hlo"` (`pjrt` builds started with
+//!   artifacts), or a kernel name (`"aaren"`/`"mingru"`/`"minlstm"`/
+//!   `"avg_attn"` — shorthand for the native tier running that kernel).
+//!   Native sessions are served by a **sharded executor pool**
 //!   — N worker threads with sessions pinned by id — while HLO sessions,
 //!   whose PJRT handles are not `Send`, stay on one dedicated executor
 //!   thread.
@@ -20,7 +23,8 @@
 //! One JSON object per line, one reply line per request, over plain TCP:
 //!
 //! ```text
-//! -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"][,"id":N]} <- {"id":N}
+//! -> {"op":"create","kind":"aaren"|"mingru"|"minlstm"|"avg_attn"|"tf"
+//!                   [,"backend":"native"|"hlo"|<kernel name>][,"id":N]}      <- {"id":N}
 //! -> {"op":"step","id":N,"x":[f32;channels]}       <- {"y":[...],"state_bytes":B,"t":T}
 //! -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
 //!                                        (partial lines first when n > 512)
@@ -32,10 +36,14 @@
 //! ```
 //!
 //! * `create` — allocate a session. `kind` selects the model family
-//!   (`"aaren"`: O(1)-state prefix attention; `"tf"`: KV-cache
-//!   Transformer baseline); the optional `backend` field selects the
-//!   executor tier (`"native"` is the default; `"hlo"` needs a `pjrt`
-//!   build started with `--artifacts`). The reply's `id` routes every
+//!   (`"aaren"`: O(1)-state prefix attention; `"mingru"` / `"minlstm"`:
+//!   the minimal gated RNNs of arXiv 2410.01201 as diagonal-affine fold
+//!   kernels; `"avg_attn"`: the cumulative-average attention baseline of
+//!   arXiv 1805.00631; `"tf"`: KV-cache Transformer baseline); the
+//!   optional `backend` field selects the executor tier (`"native"` is
+//!   the default; `"hlo"` needs a `pjrt` build started with
+//!   `--artifacts`; a kernel name is native-tier shorthand that also
+//!   implies `kind`, which may then be omitted). The reply's `id` routes every
 //!   later request — ids are pinned to one executor shard, so a
 //!   session's requests always serialize in order. An optional explicit
 //!   `id` (native tier only) claims that id instead of an assigned one;
@@ -89,7 +97,11 @@
 //!   `quarantined` (sessions condemned by a panic, poisoned output or
 //!   corrupt snapshot), `corrupt_snapshots` (spilled blobs that failed
 //!   verification), `overloaded_rejects` (requests/connections shed by
-//!   backpressure or the connection cap) and `accept_errors`.
+//!   backpressure or the connection cap) and `accept_errors`. The
+//!   `backends` object breaks sessions down per backend name (`aaren`,
+//!   `mingru`, `minlstm`, `avg_attn`, `tf`, `hlo`) as
+//!   `{"resident":R,"spilled":S}`; spilled counts are read from each
+//!   blob's codec header.
 //! * `shutdown` — stop all executors and the accept loop. Executors
 //!   acknowledge with a first-class `Response::ShuttingDown` reply (the
 //!   wire sees `{"ok":true}`); requests that race a shutdown fail with
@@ -158,20 +170,20 @@
 //! # Coalescing and resident lanes
 //!
 //! Executor shards drain their whole queue per iteration and serve every
-//! pending `step`/`steps` as one batch. Native Aaren sessions are
-//! **resident**: each shard owns a long-lived
-//! [`crate::scan::LaneSet`] (a single-row-block
-//! [`crate::scan::BatchScanBuffer`] with a lane free-list), every
-//! session's (m, u, w) accumulator lives in a stable lane of it, and
-//! drain work folds tokens into the lanes in place
-//! ([`ResidentAarenSession::step_many`], one isolated `catch_unwind`
+//! pending `step`/`steps` as one batch. Native scan sessions — every
+//! fold-kernel backend — are **resident**: each shard owns a map of
+//! long-lived [`crate::scan::LaneSet`]s keyed by (kernel, channel
+//! width), every session's kernel state lives in a stable lane of its
+//! set, and drain work folds tokens into the lanes in place
+//! ([`ResidentScanSession::step_many`], one isolated `catch_unwind`
 //! unit per session so a panic condemns only its own session) — the
-//! buffer owns the state, the session is a lane view, and a drain copies
+//! set owns the state, the session is a lane view, and a drain copies
 //! **no** accumulator state in or out (the gather/scatter overhead of
-//! the PR 3 design). Lanes are released on close/evict/spill/quarantine
-//! and compacted (with the moved sessions re-pointed) once released
-//! lanes outnumber both the live count and a floor of 8 (hysteresis for
-//! small shards).
+//! the PR 3 design). A restored blob with a foreign kernel or width
+//! gets its own set rather than staying boxed. Lanes are released on
+//! close/evict/spill/quarantine and each set is compacted (with the
+//! moved sessions re-pointed) once its released lanes outnumber both
+//! its live count and a floor of 8 (hysteresis for small shards).
 //! `ServeConfig::resident_lanes = false` (CLI `--scatter-drain`) keeps
 //! the PR 3 self-contained sessions (no lane residency) for A/B
 //! benchmarking — `BENCH_serve.json`'s `resident_vs_scatter` records
@@ -195,8 +207,9 @@ pub use server::{
     MAX_STEPS_TOKENS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
 };
 pub use session::{
-    step_many_batched, step_many_resident, NativeAarenSession, NativeTfSession, PendingLane,
-    ResidentAarenSession, ResidentLane, StreamSession, TF_BUCKETS,
+    backend_tag, kernel_of_tag, step_many_batched, step_many_resident, NativeAarenSession,
+    NativeScanSession, NativeTfSession, PendingLane, ResidentAarenSession, ResidentLane,
+    ResidentScanSession, StreamSession, TF_BUCKETS,
 };
 
 #[cfg(feature = "pjrt")]

@@ -2,7 +2,10 @@
 //! objects — the rust-native serving stack, no XLA required.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"op":"create","kind":"aaren"|"tf"[,"backend":"native"|"hlo"][,"id":N]} <- {"id":N}
+//!   -> {"op":"create","kind":"aaren"|"mingru"|"minlstm"|"avg_attn"|"tf"
+//!                     [,"backend":"native"|"hlo"|<kernel name>][,"id":N]} <- {"id":N}
+//!      (a kernel name as "backend" is shorthand for the native tier
+//!       running that kernel; "kind" may then be omitted)
 //!   -> {"op":"step","id":N,"x":[f32;channels]}   <- {"y":[...],"state_bytes":B,"t":T}
 //!   -> {"op":"steps","id":N,"xs":[[f32;channels];n]} <- {"ys":[[...];n],"state_bytes":B,"t":T}
 //!      (n > STEPS_REPLY_BLOCK streams several reply lines, all but the
@@ -12,7 +15,8 @@
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
 //!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S,
 //!                                                    "quarantined":Q,"corrupt_snapshots":C,
-//!                                                    "overloaded_rejects":O,"accept_errors":A}
+//!                                                    "overloaded_rejects":O,"accept_errors":A,
+//!                                                    "backends":{<name>:{"resident":R,"spilled":P},…}}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
 //!
 //! Error replies are structured:
@@ -33,17 +37,21 @@
 //!
 //! Executors COALESCE: each iteration drains its whole request queue and
 //! serves every pending `step`/`steps` in one pass, and a `steps` block
-//! of n tokens costs one executor round-trip instead of n. Native Aaren
-//! sessions are **resident**: each shard owns one long-lived
-//! [`LaneSet`] (a single-row-block [`BatchScanBuffer`] with a lane
-//! free-list), every session holds a stable lane in it, and drain work
-//! folds tokens into the lanes IN PLACE
-//! ([`ResidentAarenSession::step_many`], one isolated unit per session —
-//! see FAULT CONTAINMENT below) — no per-drain export/import of
-//! (m, u, w) state. Lanes are released on close/evict/spill/quarantine
-//! and the set compacts itself (moving high lanes into holes,
-//! re-pointing the moved sessions) when fragmentation exceeds the live
-//! count. `ServeConfig::resident_lanes = false` falls back to the PR 3
+//! of n tokens costs one executor round-trip instead of n. Native scan
+//! sessions — any fold-kernel backend: aaren, mingru, minlstm, avg_attn
+//! — are **resident**: each shard owns a [`LaneMap`] of long-lived
+//! [`LaneSet`]s keyed by (kernel, channel width), every session holds a
+//! stable lane in the set matching its kernel, and drain work folds
+//! tokens into the lanes IN PLACE
+//! ([`ResidentScanSession::step_many`], one isolated unit per session —
+//! see FAULT CONTAINMENT below) — no per-drain export/import of kernel
+//! state. A restored blob whose kernel or width differs from anything
+//! already resident simply gets its own lane set, so cross-server
+//! migration keeps lane residency. Lanes are released on
+//! close/evict/spill/quarantine and each set compacts itself (moving
+//! high lanes into holes, re-pointing the moved sessions) when its
+//! fragmentation exceeds its live count.
+//! `ServeConfig::resident_lanes = false` falls back to the PR 3
 //! gather/scatter sessions (self-contained state, no lane residency) —
 //! the `resident_vs_scatter` A/B baseline in `BENCH_serve.json` and an
 //! escape hatch. The drain is also where idle sessions are swept: with a
@@ -70,8 +78,8 @@
 //!   lane is released, later ops on the id get a structured
 //!   `quarantined` error, and `close` frees the id. The shard thread and
 //!   every other resident session keep serving. This is why the drain
-//!   executes per session ([`ResidentAarenSession::step_many`] straight
-//!   on the shard [`LaneSet`] — still zero state copies, and bitwise
+//!   executes per session ([`ResidentScanSession::step_many`] straight
+//!   on its shard [`LaneSet`] — still zero state copies, and bitwise
 //!   identical to the round-major batch engines since each fold touches
 //!   only its own lane) instead of one fused multi-session fold: a
 //!   mid-batch panic in a fused fold could not be attributed to the one
@@ -106,9 +114,9 @@ use crate::fault::{
 };
 use crate::persist::codec;
 use crate::persist::store::{DirStore, SnapshotStore};
-use crate::scan::LaneSet;
+use crate::scan::{KernelKind, LaneSet};
 use crate::serve::session::{
-    NativeAarenSession, NativeTfSession, ResidentAarenSession, StreamSession,
+    NativeScanSession, NativeTfSession, ResidentScanSession, StreamSession,
 };
 use crate::util::b64;
 use crate::util::json::Json;
@@ -175,6 +183,10 @@ pub enum Response {
         spilled: usize,
         quarantined: usize,
         corrupt_snapshots: usize,
+        /// Per-backend `(resident, spilled)` session counts, keyed by the
+        /// wire backend name (`aaren`/`mingru`/`minlstm`/`avg_attn`/`tf`/
+        /// `hlo`); spilled counts come from each blob's codec header.
+        backends: BTreeMap<String, (usize, usize)>,
     },
     /// The executor acknowledges shutdown and exits its loop.
     ShuttingDown,
@@ -230,21 +242,24 @@ pub struct NativeFactory {
 
 impl SessionFactory for NativeFactory {
     fn create(&mut self, kind: &str) -> Result<Box<dyn StreamSession>> {
-        match kind {
-            "aaren" => Ok(Box::new(NativeAarenSession::new(self.channels))),
-            "tf" => Ok(Box::new(NativeTfSession::new(self.channels))),
-            other => Err(anyhow!("unknown kind {other:?} (aaren|tf)")),
+        if kind == "tf" {
+            return Ok(Box::new(NativeTfSession::new(self.channels)));
+        }
+        match KernelKind::from_wire(kind) {
+            Some(k) => Ok(Box::new(NativeScanSession::new_kernel(k, self.channels))),
+            None => Err(anyhow!("unknown kind {kind:?} (aaren|mingru|minlstm|avg_attn|tf)")),
         }
     }
 
     fn restore(&mut self, blob: &[u8]) -> Result<Box<dyn StreamSession>> {
         // snapshots are self-describing: a blob restored here keeps ITS
-        // channel width even if it differs from this server's --channels
-        // (that is what makes cross-server migration work)
+        // channel width — and its kernel — even if they differ from this
+        // server's --channels (that is what makes cross-server migration
+        // work)
         let snap = codec::decode(blob)?;
         Ok(match snap.backend {
-            codec::BackendTag::Aaren => Box::new(NativeAarenSession::import_state(&snap)?),
             codec::BackendTag::Tf => Box::new(NativeTfSession::import_state(&snap)?),
+            _ => Box::new(NativeScanSession::import_state(&snap)?),
         })
     }
 }
@@ -292,13 +307,14 @@ pub fn wire_error(reply: &Json) -> Option<(String, String)> {
     Some((kind, msg))
 }
 
-/// How an executor holds one session: native Aaren sessions normally
-/// live as **resident lane views** over the shard's [`LaneSet`] (their
-/// accumulator is a lane of the shard buffer, advanced in place); every
-/// other backend — tf KV caches, compiled HLO, plus foreign-width or
-/// scatter-mode Aaren — stays a self-contained trait object.
+/// How an executor holds one session: native scan sessions (any fold
+/// kernel) normally live as **resident lane views** over the shard's
+/// [`LaneMap`] (their accumulator is a lane of the set matching their
+/// kernel and width, advanced in place); every other backend — tf KV
+/// caches, compiled HLO, plus scatter-mode scan sessions — stays a
+/// self-contained trait object.
 enum SessionSlot {
-    Resident(ResidentAarenSession),
+    Resident(ResidentScanSession),
     Boxed(Box<dyn StreamSession>),
 }
 
@@ -324,21 +340,32 @@ impl SessionSlot {
         }
     }
 
+    /// The wire backend name `stats` groups this session under.
+    fn backend(&self) -> &'static str {
+        match self {
+            SessionSlot::Resident(r) => r.kernel().wire_name(),
+            SessionSlot::Boxed(s) => s.backend(),
+        }
+    }
+
     /// The session's full state as a codec blob; a resident session
     /// serializes straight from its lane, so the blob is byte-identical
     /// to its boxed twin's.
-    fn snapshot(&self, lanes: &LaneSet) -> Result<Vec<u8>> {
+    fn snapshot(&self, lanes: &LaneMap) -> Result<Vec<u8>> {
         match self {
-            SessionSlot::Resident(r) => r.snapshot(lanes),
+            SessionSlot::Resident(r) => r.snapshot(lanes.set_of(r)),
             SessionSlot::Boxed(s) => s.snapshot(),
         }
     }
 
-    /// Drop the session, returning its lane to the shard set if it held
+    /// Drop the session, returning its lane to its shard set if it held
     /// one — the close/evict/spill terminal step.
-    fn release(self, lanes: &mut LaneSet) {
+    fn release(self, lanes: &mut LaneMap) {
         match self {
-            SessionSlot::Resident(r) => r.release(lanes),
+            SessionSlot::Resident(r) => {
+                let set = lanes.set_for(r.kernel(), r.channels());
+                r.release(set);
+            }
             SessionSlot::Boxed(_) => {}
         }
     }
@@ -351,39 +378,51 @@ struct Held {
     last_used: Instant,
 }
 
-/// Whether a native Aaren session of width `d` can become resident in
-/// `lanes`: an idle set (no live lanes) is re-dimensioned to fit; a
-/// populated set must match. A mismatch (a restored blob whose channel
-/// width differs from this server's) keeps that session boxed instead.
-fn lanes_fit(lanes: &mut LaneSet, d: usize) -> bool {
-    if lanes.live() == 0 && lanes.dim() != d {
-        lanes.reset_dim(d);
-    }
-    lanes.dim() == d
+/// A shard's lane sets, one per (kernel, channel width): every native
+/// scan session becomes resident in the set matching its kernel and
+/// width, created on first use. A restored blob with a foreign kernel or
+/// width therefore gets lane residency too, instead of staying boxed
+/// (the pre-fold-kernel servers kept one set per shard and boxed every
+/// mismatch).
+struct LaneMap {
+    sets: HashMap<(KernelKind, usize), LaneSet>,
 }
 
-/// Wrap a freshly created/restored session for the map: native Aaren
-/// sessions are adopted into a lane of the shard [`LaneSet`] (when
-/// `resident` mode is on and the width fits), everything else stays
-/// boxed.
+impl LaneMap {
+    fn new() -> LaneMap {
+        LaneMap { sets: HashMap::new() }
+    }
+
+    /// The set for `(kind, d)`, created empty on first use.
+    fn set_for(&mut self, kind: KernelKind, d: usize) -> &mut LaneSet {
+        self.sets.entry((kind, d)).or_insert_with(|| LaneSet::new_kernel(kind, d))
+    }
+
+    /// The set a resident session's lane lives in. The session was
+    /// adopted through [`LaneMap::set_for`], so the set must exist.
+    fn set_of(&self, r: &ResidentScanSession) -> &LaneSet {
+        self.sets.get(&(r.kernel(), r.channels())).expect("resident session's lane set exists")
+    }
+}
+
+/// Wrap a freshly created/restored session for the map: native scan
+/// sessions are adopted into a lane of their (kernel, width) set in the
+/// shard [`LaneMap`] (when `resident` mode is on), everything else
+/// stays boxed.
 fn hold(
     mut session: Box<dyn StreamSession>,
     resident: bool,
-    lanes: &mut LaneSet,
+    lanes: &mut LaneMap,
     now: Instant,
 ) -> Held {
-    let adopt_width = match session.as_native_aaren() {
-        Some(native) if resident => Some(native.channels()),
+    let adopt_key = match session.as_native_scan() {
+        Some(native) if resident => Some((native.kernel(), native.channels())),
         _ => None,
     };
-    let slot = match adopt_width {
-        Some(d) => {
-            if lanes_fit(lanes, d) {
-                let native = session.as_native_aaren().expect("downcast checked above");
-                SessionSlot::Resident(ResidentAarenSession::adopt(native, lanes))
-            } else {
-                SessionSlot::Boxed(session)
-            }
+    let slot = match adopt_key {
+        Some((kind, d)) => {
+            let native = session.as_native_scan().expect("downcast checked above");
+            SessionSlot::Resident(ResidentScanSession::adopt(native, lanes.set_for(kind, d)))
         }
         None => SessionSlot::Boxed(session),
     };
@@ -465,7 +504,7 @@ fn isolate<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
 /// way its lane, if it held one, returns to the shard set.
 fn evict_session(
     sessions: &mut HashMap<u64, Held>,
-    lanes: &mut LaneSet,
+    lanes: &mut LaneMap,
     spill: Option<&mut SpillTier>,
     id: u64,
 ) {
@@ -506,7 +545,7 @@ fn ensure_resident<F: SessionFactory>(
     spill: &mut Option<SpillTier>,
     factory: &mut F,
     resident: bool,
-    lanes: &mut LaneSet,
+    lanes: &mut LaneMap,
     containment: &mut Containment,
     id: u64,
     now: Instant,
@@ -564,7 +603,7 @@ pub struct ExecutorOpts {
     pub session_ttl: Option<Duration>,
     /// where evicted sessions go instead of dying
     pub spill: Option<SpillTier>,
-    /// serve native Aaren sessions as resident lanes (the default)
+    /// serve native scan sessions as resident lanes (the default)
     pub resident: bool,
     /// this shard's seeded fault-injection site (chaos runs only)
     pub fault: Option<FaultSite>,
@@ -577,7 +616,7 @@ impl Default for ExecutorOpts {
 }
 
 /// One executor shard: owns a private id → session map plus the shard
-/// [`LaneSet`] its resident Aaren sessions live in, and serves its
+/// [`LaneMap`] its resident scan sessions live in, and serves its
 /// channel until a `Shutdown` request arrives (acknowledged with
 /// [`Response::ShuttingDown`]; with a spill tier configured, every
 /// session that can snapshot is spilled to the store first, so a
@@ -591,12 +630,12 @@ impl Default for ExecutorOpts {
 /// otherwise). Request order is preserved: a `close` (or any other op)
 /// between two step runs splits them, so a step never observes a later
 /// op's effect. After the drain, the spill tier's `max_resident` cap is
-/// enforced by LRU-spilling the coldest resident sessions, and the lane
-/// set compacts itself when released lanes outnumber both the live
-/// count and a floor of 8 (hysteresis for small shards).
+/// enforced by LRU-spilling the coldest resident sessions, and each
+/// lane set compacts itself when its released lanes outnumber both its
+/// live count and a floor of 8 (hysteresis for small shards).
 ///
 /// `ExecutorOpts::resident = false` disables lane residency: native
-/// Aaren sessions stay boxed and advance through their own `step_many` —
+/// scan sessions stay boxed and advance through their own `step_many` —
 /// the A/B baseline the `resident_vs_scatter` bench records compare
 /// against.
 ///
@@ -609,7 +648,7 @@ impl Default for ExecutorOpts {
 pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: ExecutorOpts) {
     let ExecutorOpts { session_ttl, mut spill, resident, mut fault } = opts;
     let mut sessions: HashMap<u64, Held> = HashMap::new();
-    let mut lanes = LaneSet::new(0);
+    let mut lanes = LaneMap::new();
     let mut containment = Containment::new();
     'serve: loop {
         // with a TTL configured, an idle shard must still wake up to
@@ -780,13 +819,36 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                 }
                             }
                         }
-                        Request::Stats => Ok(Response::Stats {
-                            sessions: sessions.len(),
-                            state_bytes: sessions.values().map(|h| h.slot.state_bytes()).sum(),
-                            spilled: spill.as_ref().map_or(0, |t| t.store.len()),
-                            quarantined: containment.quarantined_total,
-                            corrupt_snapshots: containment.corrupt_snapshots,
-                        }),
+                        Request::Stats => {
+                            let mut backends: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+                            for held in sessions.values() {
+                                backends.entry(held.slot.backend().to_string()).or_default().0 += 1;
+                            }
+                            // spilled blobs carry their backend in the
+                            // codec header; a blob that cannot be read
+                            // here is skipped (it still counts in the
+                            // flat `spilled` total)
+                            if let Some(t) = spill.as_mut() {
+                                for id in t.store.ids() {
+                                    if let Ok(Some(blob)) = t.store.get(id) {
+                                        if let Ok(meta) = codec::meta(&blob) {
+                                            backends
+                                                .entry(meta.backend.kind().to_string())
+                                                .or_default()
+                                                .1 += 1;
+                                        }
+                                    }
+                                }
+                            }
+                            Ok(Response::Stats {
+                                sessions: sessions.len(),
+                                state_bytes: sessions.values().map(|h| h.slot.state_bytes()).sum(),
+                                spilled: spill.as_ref().map_or(0, |t| t.store.len()),
+                                quarantined: containment.quarantined_total,
+                                corrupt_snapshots: containment.corrupt_snapshots,
+                                backends,
+                            })
+                        }
                         Request::Shutdown => {
                             // graceful shutdown: with a spill tier, every
                             // resident session that can snapshot is
@@ -840,23 +902,31 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                 evict_session(&mut sessions, &mut lanes, spill.as_mut(), coldest);
             }
         }
-        // lane hygiene: the set compacts once released lanes outnumber
-        // BOTH the live count and a small floor (8 — hysteresis so tiny
+        // lane hygiene: a set compacts once its released lanes outnumber
+        // BOTH its live count and a small floor (8 — hysteresis so tiny
         // shards don't churn); moved sessions are re-pointed at their
         // new lanes in one pass (states move bit-for-bit, nothing is
-        // recomputed)
-        if lanes.frag() > lanes.live().max(8) {
-            let moves: HashMap<usize, usize> = lanes.compact().into_iter().collect();
-            if !moves.is_empty() {
-                for held in sessions.values_mut() {
-                    if let SessionSlot::Resident(r) = &mut held.slot {
-                        if let Some(&new) = moves.get(&r.lane()) {
-                            r.set_lane(new);
+        // recomputed). Only sessions of the compacting set's kernel and
+        // width are re-pointed — lanes in other sets never move.
+        for (&(kind, d), set) in lanes.sets.iter_mut() {
+            if set.frag() > set.live().max(8) {
+                let moves: HashMap<usize, usize> = set.compact().into_iter().collect();
+                if !moves.is_empty() {
+                    for held in sessions.values_mut() {
+                        if let SessionSlot::Resident(r) = &mut held.slot {
+                            if r.kernel() == kind && r.channels() == d {
+                                if let Some(&new) = moves.get(&r.lane()) {
+                                    r.set_lane(new);
+                                }
+                            }
                         }
                     }
                 }
             }
         }
+        // a set whose lanes all trimmed away is dropped; first use of
+        // that (kernel, width) again recreates it empty
+        lanes.sets.retain(|_, set| set.lanes() > 0);
     }
 }
 
@@ -885,12 +955,12 @@ struct SessionRun {
 /// Execute every queued step-shaped request of a drain as one coalesced
 /// batch and reply to each. Requests are grouped per session (order
 /// preserved within a session); each session's run then executes as ONE
-/// unit under [`isolate`] — **resident** Aaren sessions fold tokens
-/// straight into their lanes of the shard [`LaneSet`]
-/// ([`ResidentAarenSession::step_many`], no state copied in or out, and
+/// unit under [`isolate`] — **resident** scan sessions fold tokens
+/// straight into their lanes of their (kernel, width) [`LaneSet`]
+/// ([`ResidentScanSession::step_many`], no state copied in or out, and
 /// bitwise identical to the round-major batch engines since every fold
-/// touches only its own lane), boxed sessions (scatter mode, foreign
-/// widths, tf KV cache, compiled HLO) take their own `step_many`.
+/// touches only its own lane), boxed sessions (scatter mode, tf KV
+/// cache, compiled HLO) take their own `step_many`.
 /// Per-session execution is what makes panic attribution exact: when a
 /// unit panics or emits a non-finite output, THAT session alone is
 /// quarantined (removed, lane released, outputs discarded) and every
@@ -901,7 +971,7 @@ struct SessionRun {
 fn flush_steps<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     pending: &mut Vec<PendingSteps>,
-    lanes: &mut LaneSet,
+    lanes: &mut LaneMap,
     factory: &mut F,
     spill: &mut Option<SpillTier>,
     containment: &mut Containment,
@@ -978,12 +1048,12 @@ fn flush_steps<F: SessionFactory>(
         })
         .collect();
 
-    // execute: one isolated unit per session. Resident Aaren sessions
+    // execute: one isolated unit per session. Resident scan sessions
     // still fold straight into their lanes (zero state copies per
-    // drain); boxed sessions (scatter mode, foreign widths, tf, HLO)
-    // advance through their own step_many. The per-session boundary is
-    // deliberate — it is the isolation domain: a panic or poisoned
-    // output condemns exactly the session that produced it.
+    // drain); boxed sessions (scatter mode, tf, HLO) advance through
+    // their own step_many. The per-session boundary is deliberate — it
+    // is the isolation domain: a panic or poisoned output condemns
+    // exactly the session that produced it.
     let mut outs: Vec<Vec<f32>> = (0..runs.len()).map(|_| Vec::new()).collect();
     let mut run_err: Vec<Option<anyhow::Error>> = (0..runs.len()).map(|_| None).collect();
     for (ri, run) in runs.iter().enumerate() {
@@ -1001,7 +1071,10 @@ fn flush_steps<F: SessionFactory>(
                 site.maybe_step_panic(run.id);
             }
             match &mut held.slot {
-                SessionSlot::Resident(r) => r.step_many(lanes, xs, out),
+                SessionSlot::Resident(r) => {
+                    let (kind, d) = (r.kernel(), r.channels());
+                    r.step_many(lanes.set_for(kind, d), xs, out)
+                }
                 SessionSlot::Boxed(s) => s.step_many(xs, out),
             }
         });
@@ -1478,6 +1551,7 @@ impl Router {
             WireOp::Stats => {
                 let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
                 let (mut quarantined_total, mut corrupt_total) = (0usize, 0usize);
+                let mut backend_totals: BTreeMap<String, (usize, usize)> = BTreeMap::new();
                 for tx in self.targets() {
                     // a dead executor contributes nothing instead of
                     // failing the whole aggregate
@@ -1487,6 +1561,7 @@ impl Router {
                         spilled,
                         quarantined,
                         corrupt_snapshots,
+                        backends,
                     }) = call_on(tx, Request::Stats)
                     {
                         count += sessions;
@@ -1494,14 +1569,34 @@ impl Router {
                         on_disk += spilled;
                         quarantined_total += quarantined;
                         corrupt_total += corrupt_snapshots;
+                        for (name, (resident, spilled)) in backends {
+                            let entry = backend_totals.entry(name).or_default();
+                            entry.0 += resident;
+                            entry.1 += spilled;
+                        }
                     }
                 }
+                let backends_json = Json::Obj(
+                    backend_totals
+                        .into_iter()
+                        .map(|(name, (resident, spilled))| {
+                            (
+                                name,
+                                obj(vec![
+                                    ("resident", Json::Num(resident as f64)),
+                                    ("spilled", Json::Num(spilled as f64)),
+                                ]),
+                            )
+                        })
+                        .collect::<BTreeMap<_, _>>(),
+                );
                 Ok(obj(vec![
                     ("sessions", Json::Num(count as f64)),
                     ("total_state_bytes", Json::Num(bytes as f64)),
                     ("spilled", Json::Num(on_disk as f64)),
                     ("quarantined", Json::Num(quarantined_total as f64)),
                     ("corrupt_snapshots", Json::Num(corrupt_total as f64)),
+                    ("backends", backends_json),
                     (
                         "overloaded_rejects",
                         Json::Num(self.stats.overloaded_rejects.load(Ordering::Relaxed) as f64),
@@ -1539,10 +1634,34 @@ fn parse_request(line: &str) -> Result<WireOp> {
     let j = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     match j.str_field("op")? {
         "create" => {
+            let mut kind = match j.get("kind") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("create kind must be a string"))?
+                        .to_string(),
+                ),
+            };
             let backend = match j.get("backend").and_then(Json::as_str) {
                 None | Some("native") => Backend::Native,
                 Some("hlo") => Backend::Hlo,
-                Some(other) => bail!("unknown backend {other:?} (native|hlo)"),
+                Some(other) => match KernelKind::from_wire(other) {
+                    // a kernel name as "backend" is shorthand for the
+                    // native tier running that kernel; "kind" may be
+                    // omitted then, but must not contradict
+                    Some(k) => {
+                        match &kind {
+                            Some(existing) if existing != k.wire_name() => {
+                                bail!("backend {other:?} conflicts with kind {existing:?}")
+                            }
+                            _ => kind = Some(k.wire_name().to_string()),
+                        }
+                        Backend::Native
+                    }
+                    None => bail!(
+                        "unknown backend {other:?} (native|hlo|aaren|mingru|minlstm|avg_attn)"
+                    ),
+                },
             };
             let id = match j.get("id") {
                 None => None,
@@ -1550,7 +1669,12 @@ fn parse_request(line: &str) -> Result<WireOp> {
                     v.as_usize().ok_or_else(|| anyhow!("create id must be a number"))? as u64,
                 ),
             };
-            Ok(WireOp::Create { kind: j.str_field("kind")?.to_string(), backend, id })
+            let kind = match kind {
+                Some(k) => k,
+                // surface the standard missing-field error
+                None => j.str_field("kind")?.to_string(),
+            };
+            Ok(WireOp::Create { kind, backend, id })
         }
         "snapshot" => Ok(WireOp::Snapshot { id: j.usize_field("id")? as u64 }),
         "restore" => {
@@ -2019,8 +2143,10 @@ impl Client {
 }
 
 /// One loopback self-test for CI: bind an ephemeral port, run a
-/// create/step/stats/shutdown round-trip over both native session kinds,
-/// and shut the server down. Errors if any reply is wrong.
+/// create/step/stats/shutdown round-trip over the aaren and tf native
+/// session kinds plus one non-Aaren fold kernel (mingru, created via
+/// the backend shorthand), and shut the server down. Errors if any
+/// reply is wrong.
 pub fn run_smoke(base: &ServeConfig) -> Result<()> {
     let mut cfg = base.clone();
     cfg.addr = "127.0.0.1:0".to_string();
@@ -2050,12 +2176,30 @@ pub fn run_smoke(base: &ServeConfig) -> Result<()> {
     let ys = r.get("ys").and_then(Json::as_arr).ok_or_else(|| anyhow!("steps reply missing ys"))?;
     ensure!(ys.len() == 4, "expected 4 outputs from steps, got {}", ys.len());
     ensure!(r.usize_field("t")? == 12, "steps must advance t to 12, got {}", r.usize_field("t")?);
+    // one non-Aaren fold kernel round-trip: create through the backend
+    // shorthand, stream a block, close
+    let mingru = client.call(r#"{"op":"create","backend":"mingru"}"#)?.usize_field("id")?;
+    let r = client.call(&format!(r#"{{"op":"steps","id":{mingru},"xs":[[{x}],[{x}],[{x}]]}}"#))?;
+    ensure!(r.usize_field("t")? == 3, "mingru steps must advance t to 3");
     let stats = client.call(r#"{"op":"stats"}"#)?;
-    ensure!(stats.usize_field("sessions")? == 2, "expected 2 live sessions");
+    ensure!(stats.usize_field("sessions")? == 3, "expected 3 live sessions");
+    let resident_of = |name: &str| -> Result<usize> {
+        stats
+            .get("backends")
+            .and_then(|b| b.get(name))
+            .and_then(|e| e.get("resident"))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("stats reply lacks backends.{name}.resident"))
+    };
+    for name in ["aaren", "mingru", "tf"] {
+        ensure!(resident_of(name)? == 1, "expected 1 resident {name} session");
+    }
+    client.call(&format!(r#"{{"op":"close","id":{mingru}}}"#))?;
     client.call(r#"{"op":"shutdown"}"#)?;
     run.join().map_err(|_| anyhow!("server thread panicked"))??;
     println!(
-        "[serve] smoke ok: aaren + tf sessions served on {addr}, aaren state constant at {} bytes",
+        "[serve] smoke ok: aaren + mingru + tf sessions served on {addr}, \
+         aaren state constant at {} bytes",
         aaren_bytes[0]
     );
     Ok(())
@@ -2103,6 +2247,7 @@ mod hlo_backend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::session::NativeAarenSession;
 
     #[test]
     fn parses_steps_requests() {

@@ -8,12 +8,15 @@
 //!   tuple per (layer, head) for Aaren — **constant memory** — and a
 //!   bucketed KV cache (32 → 64 → … → 512, with migration) for the
 //!   Transformer baseline, so its cumulative time is quadratic.
-//! * the **rust-native tier** (always compiled): [`NativeAarenSession`] /
-//!   [`NativeTfSession`], single-head oracles over raw channel vectors.
-//!   The Aaren fallback is exactly the §3.1 RNN cell: one `Muw` tuple —
-//!   the thin single-tuple view over the SoA scan engine — updated by the
-//!   O(1) `fold_token`. These back `bench_harness::fig5` and the serve
-//!   layer on builds without XLA.
+//! * the **rust-native tier** (always compiled): [`NativeScanSession`]
+//!   (one session per [`FoldKernel`] backend — Aaren, minGRU, minLSTM,
+//!   average-attention — holding one kernel state row updated by the
+//!   O(1) streaming fold; the Aaren instance is exactly the §3.1 RNN
+//!   cell, bitwise the old `Muw` + `fold_token` path) and
+//!   [`NativeTfSession`], the KV-cache baseline. These back
+//!   `bench_harness::fig5` and the serve layer on builds without XLA.
+//!   [`NativeAarenSession`] survives as a type alias for the Aaren
+//!   instantiation.
 //!
 //! Both tiers implement [`StreamSession`], the trait the TCP server's
 //! executors hold sessions through; the backend is chosen per `create`
@@ -27,7 +30,32 @@ use anyhow::{bail, ensure, Result};
 
 use crate::attention;
 use crate::persist::codec::{self, BackendTag, Snapshot};
-use crate::scan::{fold_token, BatchScanBuffer, LaneSet, Muw};
+use crate::scan::{BatchScanBuffer, FoldKernel, KernelKind, LaneSet};
+
+/// The codec tag a `kind` scan session's snapshots carry — the ONE
+/// mapping between the in-memory kernel registry and the on-disk backend
+/// byte (its inverse is [`kernel_of_tag`]). Lives here, not in
+/// `persist::codec`, so the codec stays ignorant of the scan layer.
+pub fn backend_tag(kind: KernelKind) -> BackendTag {
+    match kind {
+        KernelKind::Aaren => BackendTag::Aaren,
+        KernelKind::MinGru => BackendTag::MinGru,
+        KernelKind::MinLstm => BackendTag::MinLstm,
+        KernelKind::AvgAttn => BackendTag::AvgAttn,
+    }
+}
+
+/// The fold kernel a codec backend tag names — `None` for [`BackendTag::Tf`],
+/// the one backend that is a cache, not a scan.
+pub fn kernel_of_tag(tag: BackendTag) -> Option<KernelKind> {
+    Some(match tag {
+        BackendTag::Aaren => KernelKind::Aaren,
+        BackendTag::MinGru => KernelKind::MinGru,
+        BackendTag::MinLstm => KernelKind::MinLstm,
+        BackendTag::AvgAttn => KernelKind::AvgAttn,
+        BackendTag::Tf => return None,
+    })
+}
 
 /// Buckets must mirror aot.py FIG5_BUCKETS (shared by the HLO and native
 /// Transformer baselines).
@@ -84,10 +112,16 @@ pub trait StreamSession {
         Ok(())
     }
 
-    /// Downcast hook for the executor's cross-session batcher
-    /// ([`step_many_batched`]): native Aaren sessions opt in, everything
-    /// else stays on the per-session [`step_many`](Self::step_many) path.
-    fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
+    /// Short backend name for per-backend observability (`stats` wire
+    /// op): a kernel wire name, `"tf"`, or `"hlo"` for the PJRT tier.
+    fn backend(&self) -> &'static str {
+        "other"
+    }
+
+    /// Downcast hook for the executor's residency/batching paths: native
+    /// scan sessions (any fold kernel) opt in, everything else stays on
+    /// the per-session [`step_many`](Self::step_many) path.
+    fn as_native_scan(&mut self) -> Option<&mut NativeScanSession> {
         None
     }
 
@@ -103,108 +137,158 @@ pub trait StreamSession {
     }
 }
 
-/// Rust-native Aaren streaming session: the O(1)-state fallback. Holds a
-/// fixed query vector and a single (m, u, w) accumulator; each token is
-/// folded in with `fold_token` (the §3.1 RNN cell), so per-step cost and
-/// state size are constant in the stream length.
-pub struct NativeAarenSession {
+/// Rust-native fold-kernel streaming session: the O(1)-state tier, one
+/// session per [`FoldKernel`] backend. Holds one kernel state row (for
+/// Aaren, the (m, u, w) accumulator plus a fixed query vector; minGRU /
+/// minLSTM carry their diagonal-affine (a, b) rows, average-attention a
+/// (count, sum) row); each token is folded in with the kernel's
+/// streaming `fold_leaf` (for Aaren, exactly the §3.1 RNN cell —
+/// bitwise `fold_token`), so per-step cost and state size are constant
+/// in the stream length.
+pub struct NativeScanSession {
+    kernel: KernelKind,
+    d: usize,
+    /// Aaren's fixed query (k = v = incoming token); empty for kernels
+    /// whose leaves ignore the attention score
     q: Vec<f32>,
-    acc: Muw,
+    /// the kernel state row: `kernel.state_width(d)` floats
+    state: Vec<f32>,
     scale: f32,
     t: usize,
 }
 
-impl NativeAarenSession {
-    /// Session over `channels`-dim tokens with the uniform (zero) query —
-    /// outputs are running softmax-weighted value averages.
-    pub fn new(channels: usize) -> NativeAarenSession {
+/// The Aaren instantiation of [`NativeScanSession`] — the pre-refactor
+/// name, kept for the call sites (fig5, chaos, serve) that mean
+/// specifically the paper's attention kernel.
+pub type NativeAarenSession = NativeScanSession;
+
+impl NativeScanSession {
+    /// Aaren session over `channels`-dim tokens with the uniform (zero)
+    /// query — outputs are running softmax-weighted value averages.
+    pub fn new(channels: usize) -> NativeScanSession {
         Self::with_query(vec![0.0; channels])
     }
 
-    /// Session with an explicit query vector (k = v = incoming token).
-    pub fn with_query(q: Vec<f32>) -> NativeAarenSession {
+    /// Session running `kind`'s recurrence over `channels`-dim tokens
+    /// (Aaren gets the uniform zero query, as [`new`](Self::new)).
+    pub fn new_kernel(kind: KernelKind, channels: usize) -> NativeScanSession {
+        if kind == KernelKind::Aaren {
+            return Self::new(channels);
+        }
+        let mut state = vec![0.0; kind.state_width(channels)];
+        kind.kernel().identity_into(channels, &mut state);
+        NativeScanSession {
+            kernel: kind,
+            d: channels,
+            q: Vec::new(),
+            state,
+            scale: 1.0 / (channels.max(1) as f32).sqrt(),
+            t: 0,
+        }
+    }
+
+    /// Aaren session with an explicit query vector (k = v = incoming
+    /// token).
+    pub fn with_query(q: Vec<f32>) -> NativeScanSession {
         let d = q.len();
-        NativeAarenSession {
+        let mut state = vec![0.0; KernelKind::Aaren.state_width(d)];
+        KernelKind::Aaren.kernel().identity_into(d, &mut state);
+        NativeScanSession {
+            kernel: KernelKind::Aaren,
+            d,
             q,
-            acc: Muw::identity(d),
+            state,
             scale: 1.0 / (d.max(1) as f32).sqrt(),
             t: 0,
         }
     }
 
+    /// The fold kernel this session runs.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    #[inline]
+    fn k(&self) -> &'static dyn FoldKernel {
+        self.kernel.kernel()
+    }
+
     pub fn channels(&self) -> usize {
-        self.q.len()
+        self.d
     }
 
     pub fn tokens_seen(&self) -> usize {
         self.t
     }
 
-    /// Bytes of per-session state — constant: the (m, u) scalars plus the
-    /// d-dim w row of the single `Muw` accumulator.
+    /// Bytes of per-session state — constant: one kernel state row (for
+    /// Aaren, the (m, u) scalars plus the d-dim w row).
     pub fn state_bytes(&self) -> usize {
-        (2 + self.acc.w.len()) * std::mem::size_of::<f32>()
+        self.state.len() * std::mem::size_of::<f32>()
     }
 
-    /// The attention score of token `x` against this session's query.
+    /// The attention score of token `x` against this session's query
+    /// (0.0 for kernels without one — their leaves ignore it).
     #[inline]
     fn score(&self, x: &[f32]) -> f32 {
         self.q.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f32>() * self.scale
     }
 
-    /// Feed one token (used as both key and value); returns the prefix
-    /// attention output so far. O(1) work and memory per step.
+    /// Feed one token (used as both key and value); returns the kernel's
+    /// prefix output so far. O(1) work and memory per step.
     pub fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != self.q.len() {
-            bail!("token has {} channels, session expects {}", x.len(), self.q.len());
+        if x.len() != self.d {
+            bail!("token has {} channels, session expects {}", x.len(), self.d);
         }
-        fold_token(&mut self.acc, self.score(x), x);
+        let s = self.score(x);
+        self.k().fold_leaf(self.d, s, x, &mut self.state);
         self.t += 1;
-        Ok(self.acc.output())
+        let mut out = vec![0.0; self.d];
+        self.k().output_into(self.d, &self.state, &mut out);
+        Ok(out)
     }
 
     /// Export the session's complete state as a codec [`Snapshot`]:
-    /// payload = q (d floats) then the (m, u, w) accumulator (1 + 1 + d
-    /// floats). `scale` is derived from d and `tokens_seen` travels in
-    /// the header, so this is the WHOLE session — 2·d + 2 floats,
-    /// constant in stream length, exactly the paper's §3.3 claim.
+    /// payload = q (d floats, Aaren only) then the kernel state row.
+    /// `scale` is derived from d and `tokens_seen` travels in the
+    /// header, so this is the WHOLE session — for Aaren 2·d + 2 floats
+    /// (byte-identical to the pre-refactor blob), constant in stream
+    /// length either way, exactly the paper's §3.3 claim.
     pub fn export_state(&self) -> Snapshot {
-        let d = self.q.len();
-        let mut state = Vec::with_capacity(2 * d + 2);
+        let mut state = Vec::with_capacity(self.q.len() + self.state.len());
         state.extend_from_slice(&self.q);
-        state.push(self.acc.m);
-        state.push(self.acc.u);
-        state.extend_from_slice(&self.acc.w);
+        state.extend_from_slice(&self.state);
         Snapshot {
-            backend: BackendTag::Aaren,
-            channels: d,
+            backend: backend_tag(self.kernel),
+            channels: self.d,
             tokens_seen: self.t as u64,
             state,
         }
     }
 
     /// Rebuild a session from [`export_state`](Self::export_state)'s
-    /// snapshot. Bitwise inverse: every f32 (query, accumulator) is
+    /// snapshot. Bitwise inverse: every f32 (query, state row) is
     /// adopted exactly, so the restored session's outputs continue the
     /// stream bit-for-bit.
-    pub fn import_state(snap: &Snapshot) -> Result<NativeAarenSession> {
-        ensure!(snap.backend == BackendTag::Aaren, "snapshot holds a {:?} session", snap.backend);
-        let d = snap.channels;
-        ensure!(
-            snap.state.len() == 2 * d + 2,
-            "aaren snapshot payload has {} floats, {d} channels need {}",
-            snap.state.len(),
-            2 * d + 2
-        );
-        let q = snap.state[..d].to_vec();
-        let acc = Muw {
-            m: snap.state[d],
-            u: snap.state[d + 1],
-            w: snap.state[d + 2..].to_vec(),
+    pub fn import_state(snap: &Snapshot) -> Result<NativeScanSession> {
+        let Some(kind) = kernel_of_tag(snap.backend) else {
+            bail!("snapshot holds a {:?} session", snap.backend)
         };
-        Ok(NativeAarenSession {
-            q,
-            acc,
+        let d = snap.channels;
+        let qlen = if kind == KernelKind::Aaren { d } else { 0 };
+        let width = kind.state_width(d);
+        ensure!(
+            snap.state.len() == qlen + width,
+            "{} snapshot payload has {} floats, {d} channels need {}",
+            snap.backend.kind(),
+            snap.state.len(),
+            qlen + width
+        );
+        Ok(NativeScanSession {
+            kernel: kind,
+            d,
+            q: snap.state[..qlen].to_vec(),
+            state: snap.state[qlen..].to_vec(),
             scale: 1.0 / (d.max(1) as f32).sqrt(),
             t: usize::try_from(snap.tokens_seen)?,
         })
@@ -213,44 +297,49 @@ impl NativeAarenSession {
     /// Feed a flat (n, channels) token block; outputs are appended to
     /// `out` with one reservation — no per-step `Vec` on the hot path.
     pub fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
-        let d = self.q.len();
+        let d = self.d;
         if check_token_block(d, xs)? == 0 {
             return Ok(());
         }
         out.reserve(xs.len());
         for x in xs.chunks_exact(d) {
-            fold_token(&mut self.acc, self.score(x), x);
+            let s = self.score(x);
+            self.k().fold_leaf(d, s, x, &mut self.state);
             self.t += 1;
             let start = out.len();
             out.resize(start + d, 0.0);
-            self.acc.output_into(&mut out[start..]);
+            self.k().output_into(d, &self.state, &mut out[start..]);
         }
         Ok(())
     }
 }
 
-impl StreamSession for NativeAarenSession {
+impl StreamSession for NativeScanSession {
     fn step(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        NativeAarenSession::step(self, x)
+        NativeScanSession::step(self, x)
     }
 
     fn state_bytes(&self) -> usize {
-        NativeAarenSession::state_bytes(self)
+        NativeScanSession::state_bytes(self)
     }
 
     fn tokens_seen(&self) -> usize {
-        NativeAarenSession::tokens_seen(self)
+        NativeScanSession::tokens_seen(self)
     }
 
     fn channels(&self) -> usize {
-        NativeAarenSession::channels(self)
+        NativeScanSession::channels(self)
     }
 
     fn step_many(&mut self, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
-        NativeAarenSession::step_many(self, xs, out)
+        NativeScanSession::step_many(self, xs, out)
     }
 
-    fn as_native_aaren(&mut self) -> Option<&mut NativeAarenSession> {
+    fn backend(&self) -> &'static str {
+        self.kernel.wire_name()
+    }
+
+    fn as_native_scan(&mut self) -> Option<&mut NativeScanSession> {
         Some(self)
     }
 
@@ -261,7 +350,7 @@ impl StreamSession for NativeAarenSession {
 
 /// One batched drain unit: a native Aaren session plus its pending flat
 /// (n, channels) token block.
-pub type PendingLane<'a> = (&'a mut NativeAarenSession, &'a [f32]);
+pub type PendingLane<'a> = (&'a mut NativeScanSession, &'a [f32]);
 
 /// Advance several native Aaren sessions through their pending token
 /// blocks as lane-parallel rounds over one shared [`BatchScanBuffer`]
@@ -289,6 +378,11 @@ pub fn step_many_batched(
     let d = lanes[0].0.channels();
     let mut counts = Vec::with_capacity(nb);
     for (s, xs) in lanes.iter() {
+        ensure!(
+            s.kernel() == KernelKind::Aaren,
+            "the (m, u, w) batcher drains Aaren sessions, got {}",
+            s.kernel().wire_name()
+        );
         ensure!(s.channels() == d, "mixed channel widths in one batch");
         counts.push(check_token_block(d, xs)?);
     }
@@ -297,7 +391,7 @@ pub fn step_many_batched(
     scratch.reset(nb, d);
     scratch.push_identity_row();
     for (b, (s, _)) in lanes.iter().enumerate() {
-        scratch.set_row(0, b, s.acc.m, s.acc.u, &s.acc.w);
+        scratch.set_row(0, b, s.state[0], s.state[1], &s.state[2..]);
     }
 
     let max_n = counts.iter().copied().max().unwrap_or(0);
@@ -321,51 +415,64 @@ pub fn step_many_batched(
     // scatter the advanced accumulators back into their sessions
     for (b, (s, _)) in lanes.iter_mut().enumerate() {
         let (m, u, w) = scratch.row(0, b);
-        s.acc.m = m;
-        s.acc.u = u;
-        s.acc.w.copy_from_slice(w);
+        s.state[0] = m;
+        s.state[1] = u;
+        s.state[2..].copy_from_slice(w);
         s.t += counts[b];
     }
     Ok(())
 }
 
-/// A native Aaren session whose accumulator lives **inside** its executor
-/// shard's [`LaneSet`] instead of in the session struct — the
-/// resident-lane serving mode. The session keeps only what is private to
-/// the stream (query, scale, token count) plus its lane id; `steps` work
-/// folds tokens into the lane in place, so a drain performs **zero**
-/// gather/scatter of (m, u, w) state (the copy overhead of the PR 3
-/// batched path). Every method that touches the accumulator takes the
-/// owning `LaneSet` explicitly — the buffer owns the state, the session
-/// is a view.
+/// A native scan session whose kernel state row lives **inside** its
+/// executor shard's [`LaneSet`] instead of in the session struct — the
+/// resident-lane serving mode, for any fold kernel. The session keeps
+/// only what is private to the stream (query, scale, token count) plus
+/// its lane id; `steps` work folds tokens into the lane in place, so a
+/// drain performs **zero** gather/scatter of kernel state (the copy
+/// overhead of the PR 3 batched path). Every method that touches the
+/// state takes the owning `LaneSet` explicitly — the buffer owns the
+/// state, the session is a view.
 ///
-/// Numerics and observables are those of [`NativeAarenSession`] exactly:
-/// the lane fold is bitwise `fold_token`, `state_bytes` reports the same
-/// constant (2 + d) · 4 bytes, and
+/// Numerics and observables are those of [`NativeScanSession`] exactly:
+/// the lane fold is the same streaming `fold_leaf` (for Aaren, bitwise
+/// `fold_token`), `state_bytes` reports the same constant row width, and
 /// [`export_state`](Self::export_state) emits a byte-identical
-/// `persist::codec` payload (q, then m, u, w read straight from the
-/// lane), so spill blobs and `snapshot` replies cannot tell the two
+/// `persist::codec` payload (q, then the state row read straight from
+/// the lane), so spill blobs and `snapshot` replies cannot tell the two
 /// representations apart.
-pub struct ResidentAarenSession {
+pub struct ResidentScanSession {
+    kernel: KernelKind,
+    d: usize,
     q: Vec<f32>,
     scale: f32,
     t: usize,
     lane: usize,
 }
 
-impl ResidentAarenSession {
-    /// Move a boxed-style native session's accumulator into a freshly
+/// The Aaren instantiation of [`ResidentScanSession`] — the
+/// pre-refactor name.
+pub type ResidentAarenSession = ResidentScanSession;
+
+impl ResidentScanSession {
+    /// Move a boxed-style native session's state row into a freshly
     /// allocated lane of `lanes` and return the resident view. The
     /// native session is left empty (its query is taken); drop it.
-    pub fn adopt(native: &mut NativeAarenSession, lanes: &mut LaneSet) -> ResidentAarenSession {
+    pub fn adopt(native: &mut NativeScanSession, lanes: &mut LaneSet) -> ResidentScanSession {
+        assert_eq!(
+            native.kernel(),
+            lanes.kind(),
+            "lane kernel must match the adopted session's"
+        );
         assert_eq!(
             native.channels(),
             lanes.dim(),
             "lane width must match the adopted session's channels"
         );
         let lane = lanes.alloc();
-        lanes.set_row(lane, native.acc.m, native.acc.u, &native.acc.w);
-        ResidentAarenSession {
+        lanes.set_state(lane, &native.state);
+        ResidentScanSession {
+            kernel: native.kernel,
+            d: native.d,
             q: std::mem::take(&mut native.q),
             scale: native.scale,
             t: native.t,
@@ -377,20 +484,31 @@ impl ResidentAarenSession {
     /// spill-restore and `restore`-wire paths), adopting every f32 of the
     /// payload bit-for-bit into a fresh lane — the exact inverse of
     /// [`export_state`](Self::export_state), and interchangeable with
-    /// [`NativeAarenSession::import_state`].
-    pub fn from_snapshot(snap: &Snapshot, lanes: &mut LaneSet) -> Result<ResidentAarenSession> {
+    /// [`NativeScanSession::import_state`].
+    pub fn from_snapshot(snap: &Snapshot, lanes: &mut LaneSet) -> Result<ResidentScanSession> {
         ensure!(
             snap.channels == lanes.dim(),
             "snapshot is {}-channel, lane set is {}",
             snap.channels,
             lanes.dim()
         );
-        // ONE validation/derivation path for aaren snapshots: decode
+        ensure!(
+            kernel_of_tag(snap.backend) == Some(lanes.kind()),
+            "snapshot holds a {} session, lane set runs {}",
+            snap.backend.kind(),
+            lanes.kind().wire_name()
+        );
+        // ONE validation/derivation path for scan snapshots: decode
         // through `import_state` (every fallible check happens there,
-        // before any lane is touched), then move the accumulator into a
+        // before any lane is touched), then move the state row into a
         // lane — so this can never diverge from the boxed restore path
-        let mut native = NativeAarenSession::import_state(snap)?;
-        Ok(ResidentAarenSession::adopt(&mut native, lanes))
+        let mut native = NativeScanSession::import_state(snap)?;
+        Ok(ResidentScanSession::adopt(&mut native, lanes))
+    }
+
+    /// The fold kernel this session runs.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// The lane this session's accumulator occupies in its shard's set.
@@ -410,17 +528,17 @@ impl ResidentAarenSession {
     }
 
     pub fn channels(&self) -> usize {
-        self.q.len()
+        self.d
     }
 
     pub fn tokens_seen(&self) -> usize {
         self.t
     }
 
-    /// Same constant as [`NativeAarenSession::state_bytes`]: the (m, u)
-    /// scalars plus the d-dim w row, wherever they live.
+    /// Same constant as [`NativeScanSession::state_bytes`]: one kernel
+    /// state row, wherever it lives.
     pub fn state_bytes(&self) -> usize {
-        (2 + self.q.len()) * std::mem::size_of::<f32>()
+        self.kernel.state_width(self.d) * std::mem::size_of::<f32>()
     }
 
     #[inline]
@@ -430,21 +548,21 @@ impl ResidentAarenSession {
 
     /// Feed one token, folding straight into the resident lane.
     pub fn step(&mut self, lanes: &mut LaneSet, x: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != self.q.len() {
-            bail!("token has {} channels, session expects {}", x.len(), self.q.len());
+        if x.len() != self.d {
+            bail!("token has {} channels, session expects {}", x.len(), self.d);
         }
         lanes.fold(self.lane, self.score(x), x);
         self.t += 1;
-        let mut out = vec![0.0; self.q.len()];
+        let mut out = vec![0.0; self.d];
         lanes.output_into(self.lane, &mut out);
         Ok(out)
     }
 
     /// Feed a flat (n, channels) token block, appending outputs to `out`
-    /// — bitwise [`NativeAarenSession::step_many`], minus the per-drain
+    /// — bitwise [`NativeScanSession::step_many`], minus the per-drain
     /// state copies.
     pub fn step_many(&mut self, lanes: &mut LaneSet, xs: &[f32], out: &mut Vec<f32>) -> Result<()> {
-        let d = self.q.len();
+        let d = self.d;
         if check_token_block(d, xs)? == 0 {
             return Ok(());
         }
@@ -460,20 +578,17 @@ impl ResidentAarenSession {
     }
 
     /// Export the full session state as a codec [`Snapshot`], reading the
-    /// accumulator straight from the lane: payload = q, then (m, u, w) —
-    /// byte-identical to [`NativeAarenSession::export_state`] for the
-    /// same stream.
+    /// state row straight from the lane: payload = q (Aaren only), then
+    /// the row — byte-identical to [`NativeScanSession::export_state`]
+    /// for the same stream.
     pub fn export_state(&self, lanes: &LaneSet) -> Snapshot {
-        let d = self.q.len();
-        let (m, u, w) = lanes.row(self.lane);
-        let mut state = Vec::with_capacity(2 * d + 2);
+        let row = lanes.state(self.lane);
+        let mut state = Vec::with_capacity(self.q.len() + row.len());
         state.extend_from_slice(&self.q);
-        state.push(m);
-        state.push(u);
-        state.extend_from_slice(w);
+        state.extend_from_slice(row);
         Snapshot {
-            backend: BackendTag::Aaren,
-            channels: d,
+            backend: backend_tag(self.kernel),
+            channels: self.d,
             tokens_seen: self.t as u64,
             state,
         }
@@ -488,7 +603,7 @@ impl ResidentAarenSession {
 
 /// One resident drain unit: a resident session plus its pending flat
 /// (n, channels) token block.
-pub type ResidentLane<'a> = (&'a mut ResidentAarenSession, &'a [f32]);
+pub type ResidentLane<'a> = (&'a mut ResidentScanSession, &'a [f32]);
 
 /// Advance several resident sessions through their pending token blocks
 /// as lane-parallel rounds over their OWN shard [`LaneSet`] — the
@@ -498,9 +613,10 @@ pub type ResidentLane<'a> = (&'a mut ResidentAarenSession, &'a [f32]);
 /// whole point of residency. Outputs for unit b are appended to
 /// `outs[b]` as a flat (n_b, channels) block.
 ///
-/// Bitwise identical to calling [`ResidentAarenSession::step_many`] per
-/// session (each fold touches only its own lane), and therefore to the
-/// PR 3 gather/scatter path [`step_many_batched`] too.
+/// Bitwise identical to calling [`ResidentScanSession::step_many`] per
+/// session (each fold touches only its own lane), and therefore — for
+/// Aaren units — to the PR 3 gather/scatter path [`step_many_batched`]
+/// too.
 pub fn step_many_resident(
     batch: &mut [ResidentLane<'_>],
     lanes: &mut LaneSet,
@@ -513,6 +629,12 @@ pub fn step_many_resident(
     let d = lanes.dim();
     let mut counts = Vec::with_capacity(batch.len());
     for (s, xs) in batch.iter() {
+        ensure!(
+            s.kernel() == lanes.kind(),
+            "resident {} session drained against a {} lane set",
+            s.kernel().wire_name(),
+            lanes.kind().wire_name()
+        );
         ensure!(
             s.channels() == d,
             "resident session has {} channels, lane set holds {d}",
@@ -688,8 +810,17 @@ impl StreamSession for NativeTfSession {
         NativeTfSession::channels(self)
     }
 
+    fn backend(&self) -> &'static str {
+        "tf"
+    }
+
+    /// tf KV snapshots grow with the stream (O(t·d) floats), so they go
+    /// through [`codec::encode_auto`]: the delta+varint framing when it
+    /// is smaller, raw otherwise. Scan-session blobs stay on the raw
+    /// framing — their state is O(d) and byte-stability matters more
+    /// than the few saved bytes.
     fn snapshot(&self) -> Result<Vec<u8>> {
-        Ok(codec::encode(&self.export_state()))
+        Ok(codec::encode_auto(&self.export_state()))
     }
 }
 
@@ -949,6 +1080,10 @@ mod hlo {
         fn channels(&self) -> usize {
             self.model.channels
         }
+
+        fn backend(&self) -> &'static str {
+            "hlo"
+        }
     }
 
     /// Copy a full (L, H, old, dh) cache into the prefix of a zeroed
@@ -1153,13 +1288,9 @@ mod tests {
                 if batched[b].tokens_seen() != sequential[b].tokens_seen() {
                     return Err(format!("lane {b}: t diverged"));
                 }
-                let (ba, sa) = (&batched[b].acc, &sequential[b].acc);
-                if ba.m.to_bits() != sa.m.to_bits() || ba.u.to_bits() != sa.u.to_bits() {
-                    return Err(format!("lane {b}: accumulator m/u diverged"));
-                }
-                for (x, y) in ba.w.iter().zip(sa.w.iter()) {
+                for (x, y) in batched[b].state.iter().zip(sequential[b].state.iter()) {
                     if x.to_bits() != y.to_bits() {
-                        return Err(format!("lane {b}: accumulator w diverged"));
+                        return Err(format!("lane {b}: accumulator state diverged"));
                     }
                 }
             }
@@ -1168,7 +1299,20 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_restore_resumes_bitwise_for_both_kinds() {
+    fn batched_drain_refuses_non_aaren_sessions() {
+        // the (m, u, w) gather/scatter batcher is Aaren-layout-specific;
+        // other kernels drain resident or via per-session step_many
+        let mut s = NativeScanSession::new_kernel(KernelKind::MinGru, 2);
+        let xs = [0.1, 0.2];
+        let mut lanes: Vec<PendingLane<'_>> = vec![(&mut s, &xs[..])];
+        let mut scratch = BatchScanBuffer::new(0, 0);
+        let mut outs = vec![Vec::new()];
+        assert!(step_many_batched(&mut lanes, &mut scratch, &mut outs).is_err());
+        assert_eq!(s.tokens_seen(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise_for_every_backend() {
         // the persistence tentpole's core property, at the session layer:
         // snapshot → codec blob → restore, then feed both twins the same
         // tail — every output f32 must be bit-identical, as must t and
@@ -1177,9 +1321,12 @@ mod tests {
             let d = 1 + rng.below(8);
             let warm = rng.below(48);
             let tail = 1 + rng.below(24);
-            let makes: [fn(usize) -> Box<dyn StreamSession>; 2] = [
+            let makes: [fn(usize) -> Box<dyn StreamSession>; 5] = [
                 |d| Box::new(NativeAarenSession::new(d)),
                 |d| Box::new(NativeTfSession::new(d)),
+                |d| Box::new(NativeScanSession::new_kernel(KernelKind::MinGru, d)),
+                |d| Box::new(NativeScanSession::new_kernel(KernelKind::MinLstm, d)),
+                |d| Box::new(NativeScanSession::new_kernel(KernelKind::AvgAttn, d)),
             ];
             for make in makes {
                 let mut original = make(d);
@@ -1190,11 +1337,11 @@ mod tests {
                 let blob = original.snapshot().map_err(|e| e.to_string())?;
                 let snap = codec::decode(&blob).map_err(|e| e.to_string())?;
                 let mut restored: Box<dyn StreamSession> = match snap.backend {
-                    BackendTag::Aaren => Box::new(
-                        NativeAarenSession::import_state(&snap).map_err(|e| e.to_string())?,
-                    ),
                     BackendTag::Tf => Box::new(
                         NativeTfSession::import_state(&snap).map_err(|e| e.to_string())?,
+                    ),
+                    _ => Box::new(
+                        NativeScanSession::import_state(&snap).map_err(|e| e.to_string())?,
                     ),
                 };
                 if restored.tokens_seen() != original.tokens_seen()
@@ -1307,6 +1454,69 @@ mod tests {
             let b = resident.snapshot(&lanes).map_err(|e| e.to_string())?;
             if a != b {
                 return Err("snapshot blobs diverged".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resident_matches_boxed_for_every_kernel_incl_snapshot_bytes() {
+        // satellite 3 at the session layer: for EVERY fold kernel,
+        // resident == boxed bitwise (outputs, observables, snapshot
+        // bytes), and spill → restore → resume continues bit-for-bit
+        // against the never-spilled control
+        prop::check("kernel resident == boxed (bitwise)", 12, |rng| {
+            for kind in KernelKind::ALL {
+                let d = 1 + rng.below(6);
+                let mut boxed = NativeScanSession::new_kernel(kind, d);
+                let mut seed = NativeScanSession::new_kernel(kind, d);
+                let mut lanes = LaneSet::new_kernel(kind, d);
+                for _ in 0..rng.below(12) {
+                    let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                    boxed.step(&x).map_err(|e| e.to_string())?;
+                    seed.step(&x).map_err(|e| e.to_string())?;
+                }
+                let mut resident = ResidentScanSession::adopt(&mut seed, &mut lanes);
+                if resident.state_bytes() != boxed.state_bytes()
+                    || resident.tokens_seen() != boxed.tokens_seen()
+                    || resident.kernel() != kind
+                {
+                    return Err(format!("{kind:?}: adopted observables diverged"));
+                }
+                let n = 1 + rng.below(20);
+                let xs: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+                let (mut want, mut got) = (Vec::new(), Vec::new());
+                boxed.step_many(&xs, &mut want).map_err(|e| e.to_string())?;
+                resident.step_many(&mut lanes, &xs, &mut got).map_err(|e| e.to_string())?;
+                prop::assert_close(&got, &want, 0.0).map_err(|e| format!("{kind:?}: {e}"))?;
+                let blob = StreamSession::snapshot(&boxed).map_err(|e| e.to_string())?;
+                if blob != resident.snapshot(&lanes).map_err(|e| e.to_string())? {
+                    return Err(format!("{kind:?}: snapshot blobs diverged"));
+                }
+                // spill: state leaves the lane, the lane is released,
+                // then the blob re-enters a fresh lane
+                let snap = codec::decode(&blob).map_err(|e| e.to_string())?;
+                resident.release(&mut lanes);
+                let mut revived = ResidentScanSession::from_snapshot(&snap, &mut lanes)
+                    .map_err(|e| e.to_string())?;
+                for s in 0..5 {
+                    let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                    let a = boxed.step(&x).map_err(|e| e.to_string())?;
+                    let b = revived.step(&mut lanes, &x).map_err(|e| e.to_string())?;
+                    if a.iter().zip(&b).any(|(p, q)| p.to_bits() != q.to_bits()) {
+                        return Err(format!("{kind:?}: tail step {s} diverged after spill"));
+                    }
+                }
+                // a kernel-mismatched restore is refused before touching a lane
+                if kind != KernelKind::Aaren {
+                    let mut other = LaneSet::new(d);
+                    if ResidentScanSession::from_snapshot(&snap, &mut other).is_ok() {
+                        return Err(format!("{kind:?} snapshot restored into aaren lanes"));
+                    }
+                    if other.live() != 0 {
+                        return Err("refused restore leaked a lane".to_string());
+                    }
+                }
             }
             Ok(())
         });

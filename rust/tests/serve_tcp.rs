@@ -3,6 +3,9 @@
 //! Figure-5 serving story end to end — create → step × k → stats → close
 //! over line-delimited JSON, with Aaren `state_bytes` constant in stream
 //! length and the tf KV session surviving past the largest cache bucket.
+//! The fold-kernel backends (mingru / minlstm / avg_attn) ride the same
+//! wire: each is exercised against a local scalar control session,
+//! bitwise, through steps / snapshot / restore / TTL spill.
 
 use aaren::serve::server::{Client, ServeConfig, Server};
 use aaren::serve::{wire_error, TF_BUCKETS};
@@ -264,12 +267,17 @@ fn as_f64(v: &[f32]) -> Vec<f64> {
 }
 
 /// Drive a local reference session through the same tokens the server
-/// saw and return the expected outputs (exact, as f64 rows).
+/// saw and return the expected outputs (exact, as f64 rows). `kind` is
+/// any fold-kernel wire name or `"tf"`.
 fn control_outputs(kind: &str, channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<f64>> {
-    use aaren::serve::{NativeAarenSession, NativeTfSession, StreamSession};
+    use aaren::scan::KernelKind;
+    use aaren::serve::{NativeScanSession, NativeTfSession, StreamSession};
     let mut session: Box<dyn StreamSession> = match kind {
-        "aaren" => Box::new(NativeAarenSession::new(channels)),
-        _ => Box::new(NativeTfSession::new(channels)),
+        "tf" => Box::new(NativeTfSession::new(channels)),
+        _ => Box::new(NativeScanSession::new_kernel(
+            KernelKind::from_wire(kind).expect("wire kernel name"),
+            channels,
+        )),
     };
     tokens.iter().map(|x| as_f64(&session.step(x).unwrap())).collect()
 }
@@ -325,7 +333,7 @@ fn ttl_spill_then_touch_resumes_bitwise() {
     // the tentpole acceptance: a session spilled to disk by the TTL sweep
     // and then touched again must resume with outputs bitwise identical
     // to a never-evicted twin fed the same token stream (the local
-    // control session), for BOTH native kinds
+    // control session), for EVERY native kind — each fold kernel plus tf
     let channels = 3;
     let ttl = std::time::Duration::from_millis(300);
     let spill = scratch_dir("spill-touch");
@@ -337,8 +345,9 @@ fn ttl_spill_then_touch_resumes_bitwise() {
 
     let head: Vec<Vec<f32>> = (0..11).map(|i| dyadic_token(i, channels)).collect();
     let tail: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(50 + i, channels)).collect();
+    let kinds = ["aaren", "mingru", "minlstm", "avg_attn", "tf"];
     let mut ids = Vec::new();
-    for kind in ["aaren", "tf"] {
+    for kind in kinds {
         let id = client
             .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
             .unwrap()
@@ -348,12 +357,26 @@ fn ttl_spill_then_touch_resumes_bitwise() {
         client.call(&steps_line(id, &refs)).unwrap();
         ids.push((kind, id));
     }
-    // idle past the TTL: the sweep must spill both sessions to disk
+    // idle past the TTL: the sweep must spill every session to disk
     std::thread::sleep(ttl + std::time::Duration::from_millis(700));
     client.call(r#"{"op":"stats"}"#).unwrap();
     let stats = client.call(r#"{"op":"stats"}"#).unwrap();
     assert_eq!(stats.usize_field("sessions").unwrap(), 0, "idle sessions still resident");
-    assert_eq!(stats.usize_field("spilled").unwrap(), 2, "sessions destroyed, not spilled");
+    assert_eq!(
+        stats.usize_field("spilled").unwrap(),
+        kinds.len(),
+        "sessions destroyed, not spilled"
+    );
+    // the per-backend breakdown attributes each spilled blob to its kind
+    for kind in kinds {
+        let spilled_of = stats
+            .get("backends")
+            .and_then(|b| b.get(kind))
+            .and_then(|e| e.get("spilled"))
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| panic!("stats reply lacks backends.{kind}.spilled"));
+        assert_eq!(spilled_of, 1, "kind {kind}: wrong per-backend spilled count");
+    }
 
     // touching a spilled session restores it transparently — and the
     // resumed stream is bitwise the control's
@@ -376,6 +399,97 @@ fn ttl_spill_then_touch_resumes_bitwise() {
     client.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
     let _ = std::fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn fold_kernel_backends_serve_end_to_end_bitwise() {
+    // the fold-kernel tentpole at the TCP level: every non-Aaren kernel
+    // serves create → steps → snapshot → restore → steps with each
+    // output bitwise the local scalar control session's, and `stats`
+    // breaks the session population down per backend
+    let channels = 3;
+    let (addr, server) = start(channels, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let head: Vec<Vec<f32>> = (0..9).map(|i| dyadic_token(i, channels)).collect();
+    let tail: Vec<Vec<f32>> = (0..6).map(|i| dyadic_token(80 + i, channels)).collect();
+    let all: Vec<Vec<f32>> = head.iter().chain(tail.iter()).cloned().collect();
+    for kind in ["mingru", "minlstm", "avg_attn"] {
+        let want = control_outputs(kind, channels, &all);
+        // the backend shorthand creates the kernel without a "kind" field
+        let id = client
+            .call(&format!(r#"{{"op":"create","backend":"{kind}"}}"#))
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+        let reply = client.call(&steps_line(id, &refs)).unwrap();
+        assert_eq!(ys_as_f64(&reply), want[..head.len()].to_vec(), "kind {kind}: head diverged");
+        let snap = client.call(&format!(r#"{{"op":"snapshot","id":{id}}}"#)).unwrap();
+        assert_eq!(snap.str_field("kind").unwrap(), kind);
+        assert_eq!(snap.usize_field("t").unwrap(), head.len());
+        assert_eq!(snap.usize_field("channels").unwrap(), channels);
+        let blob = snap.str_field("state").unwrap().to_string();
+        let restored = client
+            .call(&format!(r#"{{"op":"restore","state":"{blob}"}}"#))
+            .unwrap();
+        assert_eq!(restored.str_field("kind").unwrap(), kind);
+        let twin = restored.usize_field("id").unwrap();
+        let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+        for sid in [id, twin] {
+            let reply = client.call(&steps_line(sid, &refs)).unwrap();
+            assert_eq!(reply.usize_field("t").unwrap(), all.len(), "kind {kind}");
+            assert_eq!(
+                ys_as_f64(&reply),
+                want[head.len()..].to_vec(),
+                "kind {kind}: session {sid} tail diverged from the scalar control"
+            );
+        }
+    }
+    // original + restored twin per kernel; stats names them all
+    let stats = client.call(r#"{"op":"stats"}"#).unwrap();
+    assert_eq!(stats.usize_field("sessions").unwrap(), 6);
+    for kind in ["mingru", "minlstm", "avg_attn"] {
+        let resident_of = stats
+            .get("backends")
+            .and_then(|b| b.get(kind))
+            .and_then(|e| e.get("resident"))
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| panic!("stats reply lacks backends.{kind}.resident"));
+        assert_eq!(resident_of, 2, "kind {kind}: wrong per-backend resident count");
+    }
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn foreign_width_snapshot_restores_and_streams_bitwise() {
+    // a snapshot whose channel width differs from the server's
+    // --channels must restore (into its own lane set — width migration
+    // keeps lane residency now) and resume bitwise where it stood
+    use aaren::serve::{NativeScanSession, StreamSession};
+    use aaren::util::b64;
+    let blob_channels = 3;
+    let head: Vec<Vec<f32>> = (0..6).map(|i| dyadic_token(i, blob_channels)).collect();
+    let tail: Vec<Vec<f32>> = (0..5).map(|i| dyadic_token(60 + i, blob_channels)).collect();
+    let mut control = NativeScanSession::new(blob_channels);
+    for x in &head {
+        control.step(x).unwrap();
+    }
+    let blob = b64::encode(&StreamSession::snapshot(&control).unwrap());
+    let want: Vec<Vec<f64>> = tail.iter().map(|x| as_f64(&control.step(x).unwrap())).collect();
+
+    // the server runs 5-channel natives; the 3-channel blob keeps ITS width
+    let (addr, server) = start(5, 2);
+    let mut client = Client::connect(&addr).unwrap();
+    let restored = client.call(&format!(r#"{{"op":"restore","state":"{blob}"}}"#)).unwrap();
+    assert_eq!(restored.usize_field("channels").unwrap(), blob_channels);
+    let id = restored.usize_field("id").unwrap();
+    let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+    let reply = client.call(&steps_line(id, &refs)).unwrap();
+    assert_eq!(reply.usize_field("t").unwrap(), head.len() + tail.len());
+    assert_eq!(ys_as_f64(&reply), want, "foreign-width stream diverged from the control");
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
 }
 
 #[test]
@@ -732,6 +846,12 @@ fn protocol_errors_are_replies_not_disconnects() {
     assert!(r.get("error").is_some());
     let r = client.call_raw(r#"{"op":"create","kind":"mamba"}"#).unwrap();
     assert!(r.get("error").is_some());
+    // a kernel-name backend that contradicts the kind field is refused
+    let r = client.call_raw(r#"{"op":"create","kind":"tf","backend":"mingru"}"#).unwrap();
+    assert!(r.get("error").is_some());
+    // ...but a matching pair, or backend alone, is fine
+    let ok = client.call(r#"{"op":"create","kind":"minlstm","backend":"minlstm"}"#).unwrap();
+    assert!(ok.usize_field("id").is_ok());
     let r = client.call_raw("not json").unwrap();
     assert!(r.get("error").is_some());
     // the hlo backend is absent from the default build
