@@ -16,7 +16,12 @@
 //! constant). Also records the mixed aaren/tf coalescing scenario
 //! (`mixed_kinds_steps_b16_*`) and the persistence tier's
 //! snapshot→restore→close wire round-trip latency
-//! (`snapshot_restore_roundtrip`), and the resident-lane executor work:
+//! (`snapshot_restore_roundtrip`), the fleet failover drill
+//! (`fleet_failover_b16`: three backends behind the consistent-hash
+//! router, one shut down — `ns_per_iter` is the total wall-clock from
+//! the kill to every stream answering again through the router, and
+//! `speedup_vs_sequential` carries the resumed/total stream fraction),
+//! and the resident-lane executor work:
 //! a second server runs with `resident_lanes: false` (the PR 4
 //! gather/scatter drain) and the `resident_vs_scatter_*` records carry
 //! the resident/scatter throughput ratio in `speedup_vs_sequential` —
@@ -404,6 +409,134 @@ fn main() {
 
     let mut shutdown = Client::connect(&shed_addr).expect("connect");
     let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+
+    // phase 9: fleet failover — three backends behind the consistent-hash
+    // router share one spill directory; every stream drains its state to
+    // disk, one backend shuts down, and the record measures the
+    // wall-clock from the kill until every stream answers a `step`
+    // through the router again (detection + spill replay + retries).
+    // Both fields are OVERLOADED here: ns_per_iter is the TOTAL failover
+    // wall-clock in ns (not a per-iteration cost) and
+    // speedup_vs_sequential carries the resumed/total stream fraction —
+    // the availability number that must stay 1.0 (bitwise resume
+    // equality is asserted by the chaos suite, not re-checked here).
+    {
+        use aaren::fleet::{Fleet, FleetConfig};
+        use aaren::serve::wire_error;
+        use std::time::Duration;
+
+        let spill =
+            std::env::temp_dir().join(format!("aaren-bench-fleet-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&spill);
+        std::fs::create_dir_all(&spill).expect("spill dir");
+
+        let mut backend_addrs: Vec<SocketAddr> = Vec::new();
+        for _ in 0..3 {
+            let backend_cfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                channels,
+                shards: 2,
+                spill_dir: Some(spill.clone()),
+                ..ServeConfig::default()
+            };
+            let server = Server::bind(&backend_cfg).expect("bind fleet backend");
+            let baddr = server.local_addr().expect("addr");
+            std::thread::spawn(move || server.run());
+            backend_addrs.push(baddr);
+        }
+
+        let fleet_cfg = FleetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            members: backend_addrs.iter().map(|a| a.to_string()).collect(),
+            spill_dir: Some(spill.clone()),
+            hb_interval: Duration::from_millis(50),
+            hb_timeout: Duration::from_millis(250),
+            hb_misses: 2,
+            io_timeout: Some(Duration::from_secs(20)),
+            ..FleetConfig::default()
+        };
+        let fleet = Fleet::bind(&fleet_cfg).expect("bind fleet");
+        let fleet_addr = fleet.local_addr().expect("fleet addr");
+        std::thread::spawn(move || {
+            let _ = fleet.run();
+        });
+
+        // warm streams across every kernel kind, each drained so its
+        // latest state is on the shared spill tier before the kill
+        let fleet_streams = if quick { 12 } else { 24 };
+        let kinds = aaren::scan::KernelKind::ALL;
+        let row = format!("[{step_body}]");
+        let mut streams: Vec<(Client, u64)> = Vec::new();
+        for s in 0..fleet_streams {
+            let mut client = Client::connect(&fleet_addr).expect("connect fleet");
+            let kind = kinds[s % kinds.len()].wire_name();
+            let id = client
+                .call(&format!(r#"{{"op":"create","kind":"{kind}"}}"#))
+                .expect("fleet create")
+                .usize_field("id")
+                .expect("id") as u64;
+            let xs = vec![row.as_str(); BATCH].join(",");
+            client
+                .call(&format!(r#"{{"op":"steps","id":{id},"xs":[{xs}]}}"#))
+                .expect("fleet steps");
+            client.call(&format!(r#"{{"op":"drain","id":{id}}}"#)).expect("fleet drain");
+            streams.push((client, id));
+        }
+
+        // graceful shutdown straight to one backend (bypassing the
+        // router): its residents vanish, its spill files survive
+        let mut victim = Client::connect(&backend_addrs[0]).expect("connect victim");
+        let _ = victim.call(r#"{"op":"shutdown"}"#);
+
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_secs(30);
+        let mut resumed = 0usize;
+        for (client, id) in &mut streams {
+            let line = format!(r#"{{"op":"step","id":{id},"x":[{step_body}]}}"#);
+            loop {
+                if Instant::now() >= deadline {
+                    break;
+                }
+                let reply = match client.call_raw(&line) {
+                    Ok(r) => r,
+                    Err(_) => break, // transport failure to the router itself
+                };
+                match wire_error(&reply) {
+                    None => {
+                        resumed += 1;
+                        break;
+                    }
+                    Some((kind, _)) if kind == "overloaded" => {
+                        let hint = reply
+                            .get("error")
+                            .and_then(|e| e.usize_field("retry_after_ms").ok())
+                            .unwrap_or(5);
+                        std::thread::sleep(Duration::from_millis(hint as u64));
+                    }
+                    Some(_) => break, // structured death — counts against resumed
+                }
+            }
+        }
+        let failover = t0.elapsed();
+        let fraction = resumed as f64 / fleet_streams as f64;
+        println!(
+            "serve_loopback: fleet failover b={BATCH} {fleet_streams} streams  \
+             {:>9.1} ms to full resume  ({resumed}/{fleet_streams} resumed{})",
+            failover.as_secs_f64() * 1e3,
+            if resumed == fleet_streams { "" } else { "  ** streams lost in failover **" }
+        );
+        records.push(BenchRecord {
+            name: "fleet_failover_b16".to_string(),
+            n: fleet_streams,
+            d: channels,
+            ns_per_iter: failover.as_nanos() as f64,
+            speedup_vs_sequential: fraction,
+        });
+
+        let mut shutdown = Client::connect(&fleet_addr).expect("connect fleet");
+        let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+        let _ = std::fs::remove_dir_all(&spill);
+    }
 
     let out = std::path::Path::new("BENCH_serve.json");
     match write_records(out, &records) {

@@ -165,6 +165,14 @@ pub struct FaultPlan {
     pub delay: Duration,
     /// session ids whose next step panics regardless of rates
     pub panic_step_ids: BTreeSet<u64>,
+    /// probability the fleet router drops one heartbeat probe on the
+    /// floor (exercises the suspect→dead detector without killing
+    /// anything)
+    pub heartbeat_drop_rate: f64,
+    /// probability the fleet proxy treats a backend connection as
+    /// unreachable for one request — the injected form of a killed
+    /// member, driving the overloaded-shed + failover path
+    pub conn_drop_rate: f64,
 }
 
 impl FaultPlan {
@@ -200,9 +208,20 @@ impl FaultPlan {
         self
     }
 
+    pub fn heartbeat_drops(mut self, rate: f64) -> FaultPlan {
+        self.heartbeat_drop_rate = rate;
+        self
+    }
+
+    pub fn conn_drops(mut self, rate: f64) -> FaultPlan {
+        self.conn_drop_rate = rate;
+        self
+    }
+
     /// Parse the `--fault-plan` CLI spec: comma-separated `key=value`
     /// pairs from `seed=N`, `io=RATE`, `torn=RATE`, `panic=RATE`,
-    /// `delay=RATE`, `delay-ms=N`, `panic-id=N` (repeatable), e.g.
+    /// `delay=RATE`, `delay-ms=N`, `panic-id=N` (repeatable),
+    /// `hb-drop=RATE`, `conn-drop=RATE`, e.g.
     /// `seed=7,io=0.05,torn=0.1,delay=0.2,delay-ms=2`.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::default();
@@ -227,9 +246,11 @@ impl FaultPlan {
                 "panic-id" => {
                     plan.panic_step_ids.insert(value.parse()?);
                 }
+                "hb-drop" => plan.heartbeat_drop_rate = rate()?,
+                "conn-drop" => plan.conn_drop_rate = rate()?,
                 other => bail!(
                     "unknown fault-plan key {other:?} \
-                     (seed|io|torn|panic|delay|delay-ms|panic-id)"
+                     (seed|io|torn|panic|delay|delay-ms|panic-id|hb-drop|conn-drop)"
                 ),
             }
         }
@@ -242,6 +263,8 @@ impl FaultPlan {
             || self.torn_write_rate > 0.0
             || self.step_panic_rate > 0.0
             || self.delay_rate > 0.0
+            || self.heartbeat_drop_rate > 0.0
+            || self.conn_drop_rate > 0.0
             || !self.panic_step_ids.is_empty()
     }
 
@@ -299,6 +322,18 @@ impl FaultSite {
         if self.roll(self.plan.delay_rate) && !self.plan.delay.is_zero() {
             std::thread::sleep(self.plan.delay);
         }
+    }
+
+    /// Roll the dropped-heartbeat fault: `true` means the router should
+    /// discard this probe unsent and count it as a miss.
+    pub fn maybe_drop_heartbeat(&mut self) -> bool {
+        self.roll(self.plan.heartbeat_drop_rate)
+    }
+
+    /// Roll the dropped-connection fault: `true` means the proxy should
+    /// treat the backend as unreachable for this one request.
+    pub fn maybe_drop_conn(&mut self) -> bool {
+        self.roll(self.plan.conn_drop_rate)
     }
 
     /// Roll the step-panic fault for session `id`; a forced id
@@ -396,6 +431,22 @@ mod tests {
         assert!(FaultPlan::parse("io=2.0").is_err());
         assert!(FaultPlan::parse("bogus=1").is_err());
         assert!(FaultPlan::parse("io").is_err());
+        // fleet-side sites ride the same spec
+        let fleet = FaultPlan::parse("hb-drop=0.25,conn-drop=0.1").unwrap();
+        assert_eq!(fleet.heartbeat_drop_rate, 0.25);
+        assert_eq!(fleet.conn_drop_rate, 0.1);
+        assert!(fleet.is_active());
+        assert!(FaultPlan::parse("hb-drop=1.5").is_err());
+    }
+
+    #[test]
+    fn fleet_fault_rolls_follow_their_rates() {
+        let plan = FaultPlan::new(11).heartbeat_drops(1.0);
+        let mut site = plan.site("hb");
+        assert!(site.maybe_drop_heartbeat());
+        assert!(!site.maybe_drop_conn(), "conn rate is 0 — must never fire");
+        let mut quiet = FaultPlan::new(11).site("hb");
+        assert!(!quiet.maybe_drop_heartbeat(), "inactive plan drops nothing");
     }
 
     #[test]

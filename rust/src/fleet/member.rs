@@ -1,0 +1,288 @@
+//! Fleet membership: who the backends are, how healthy they look, and
+//! where every session lives.
+//!
+//! Health is a one-way escalator per member: `Alive` → (missed
+//! heartbeat or data-path failure) → `Suspect` → (misses reach the
+//! configured threshold) → `Dead`, which is terminal — a backend that
+//! comes back must `fleet_join` as a new member rather than silently
+//! resurrect with an empty session table. `Leaving` is the planned
+//! variant: the member stays healthy and reachable but is out of the
+//! ring, so the budgeted migrator drains it session by session.
+
+use std::collections::HashMap;
+
+use super::ring::{hash_str, Ring, RingEntry};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Alive,
+    /// missed at least one heartbeat (or failed a proxied request) but
+    /// not enough to condemn; still routable — most blips heal
+    Suspect,
+    /// terminal: out of the ring, sessions failed over
+    Dead,
+    /// planned exit: out of the ring, still serving while the migrator
+    /// drains it
+    Leaving,
+}
+
+impl Health {
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            Health::Alive => "alive",
+            Health::Suspect => "suspect",
+            Health::Dead => "dead",
+            Health::Leaving => "leaving",
+        }
+    }
+
+    /// Routable = a proxied request may be sent there.
+    pub fn routable(self) -> bool {
+        matches!(self, Health::Alive | Health::Suspect | Health::Leaving)
+    }
+
+    /// In-ring = new sessions may be placed there.
+    pub fn in_ring(self) -> bool {
+        matches!(self, Health::Alive | Health::Suspect)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Member {
+    /// backend address, e.g. `"127.0.0.1:7878"` — also the identity the
+    /// ring key is derived from
+    pub addr: String,
+    /// stable ring key: [`hash_str`] of the address
+    pub key: u64,
+    pub weight: u32,
+    pub health: Health,
+    /// consecutive failed probes/requests since the last success
+    pub misses: u32,
+}
+
+impl Member {
+    pub fn new(addr: String, weight: u32) -> Member {
+        let key = hash_str(&addr);
+        Member { addr, key, weight: weight.max(1), health: Health::Alive, misses: 0 }
+    }
+}
+
+/// Where one session lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// pinned to members\[idx\]
+    Assigned(usize),
+    /// mid-migration (rebalance or failover replay): the proxy sheds
+    /// ops on it with `overloaded` + a retry hint until the move
+    /// commits — the guard against serving a stale pre-move snapshot
+    Moving,
+}
+
+/// The mutable routing state, shared under one mutex: the member table
+/// (append-only, so indices stay stable), the ring over its in-ring
+/// subset, and the session placement map.
+#[derive(Debug, Default)]
+pub struct FleetState {
+    pub members: Vec<Member>,
+    pub ring: Ring,
+    pub placement: HashMap<u64, Placement>,
+    vnodes_per_weight: usize,
+}
+
+impl FleetState {
+    pub fn new(addrs: &[String], weights: &[u32], vnodes_per_weight: usize) -> FleetState {
+        let members = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Member::new(a.clone(), weights.get(i).copied().unwrap_or(1)))
+            .collect();
+        let mut state = FleetState {
+            members,
+            ring: Ring::default(),
+            placement: HashMap::new(),
+            vnodes_per_weight: vnodes_per_weight.max(1),
+        };
+        state.rebuild_ring();
+        state
+    }
+
+    /// Rebuild the ring over the in-ring members ([`Health::in_ring`]).
+    pub fn rebuild_ring(&mut self) {
+        let entries: Vec<RingEntry> = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.health.in_ring())
+            .map(|(idx, m)| RingEntry { key: m.key, weight: m.weight, idx })
+            .collect();
+        self.ring = Ring::build(&entries, self.vnodes_per_weight);
+    }
+
+    /// Record one failed probe or proxied request against a member.
+    /// Returns `true` when this failure crossed the death threshold —
+    /// the caller owes a failover. Dead members never transition;
+    /// Leaving members accumulate misses (and can die — a drain target
+    /// that gets SIGKILLed still needs failover) but never regress to
+    /// Suspect.
+    pub fn note_failure(&mut self, idx: usize, death_threshold: u32) -> bool {
+        let Some(m) = self.members.get_mut(idx) else { return false };
+        if m.health == Health::Dead {
+            return false;
+        }
+        m.misses = m.misses.saturating_add(1);
+        if m.misses >= death_threshold.max(1) {
+            m.health = Health::Dead;
+            self.rebuild_ring();
+            true
+        } else {
+            if m.health != Health::Leaving {
+                m.health = Health::Suspect;
+            }
+            false
+        }
+    }
+
+    /// Record one successful probe or proxied request: misses reset and
+    /// a Suspect member heals to Alive. Dead stays dead.
+    pub fn note_success(&mut self, idx: usize) {
+        if let Some(m) = self.members.get_mut(idx) {
+            m.misses = 0;
+            if m.health == Health::Suspect {
+                m.health = Health::Alive;
+            }
+        }
+    }
+
+    /// Add a member (or revive the slot of a dead one re-joining at the
+    /// same address — it gets a fresh health record but keeps its index
+    /// and ring key, so its old keyspace share comes back to it).
+    pub fn join(&mut self, addr: &str, weight: u32) -> usize {
+        let idx = match self.members.iter().position(|m| m.addr == addr) {
+            Some(i) => {
+                let m = &mut self.members[i];
+                m.weight = weight.max(1);
+                m.health = Health::Alive;
+                m.misses = 0;
+                i
+            }
+            None => {
+                self.members.push(Member::new(addr.to_string(), weight));
+                self.members.len() - 1
+            }
+        };
+        self.rebuild_ring();
+        idx
+    }
+
+    /// Mark a member Leaving: out of the ring immediately (new sessions
+    /// avoid it), drained live by the migrator. Returns its index.
+    pub fn leave(&mut self, addr: &str) -> Option<usize> {
+        let idx = self.members.iter().position(|m| m.addr == addr)?;
+        if self.members[idx].health != Health::Dead {
+            self.members[idx].health = Health::Leaving;
+            self.rebuild_ring();
+        }
+        Some(idx)
+    }
+
+    /// Sessions currently assigned to members\[idx\].
+    pub fn sessions_of(&self, idx: usize) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .placement
+            .iter()
+            .filter(|&(_, p)| *p == Placement::Assigned(idx))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Per-member assigned-session counts (the placement view `stats`
+    /// reports).
+    pub fn session_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.members.len()];
+        for p in self.placement.values() {
+            if let Placement::Assigned(idx) = p {
+                if let Some(c) = counts.get_mut(*idx) {
+                    *c += 1;
+                }
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> FleetState {
+        FleetState::new(
+            &["127.0.0.1:9001".into(), "127.0.0.1:9002".into(), "127.0.0.1:9003".into()],
+            &[1, 1, 1],
+            8,
+        )
+    }
+
+    #[test]
+    fn failure_escalates_alive_suspect_dead_and_success_heals_suspect() {
+        let mut s = three();
+        assert!(!s.note_failure(0, 3));
+        assert_eq!(s.members[0].health, Health::Suspect);
+        s.note_success(0);
+        assert_eq!(s.members[0].health, Health::Alive);
+        assert_eq!(s.members[0].misses, 0);
+        assert!(!s.note_failure(0, 3));
+        assert!(!s.note_failure(0, 3));
+        assert!(s.note_failure(0, 3), "third miss must cross the threshold");
+        assert_eq!(s.members[0].health, Health::Dead);
+        // dead is terminal: neither failures nor successes move it
+        assert!(!s.note_failure(0, 3));
+        s.note_success(0);
+        assert_eq!(s.members[0].health, Health::Dead);
+    }
+
+    #[test]
+    fn death_and_leaving_drop_the_member_from_the_ring() {
+        let mut s = three();
+        let full = s.ring.len();
+        s.note_failure(1, 1);
+        assert_eq!(s.members[1].health, Health::Dead);
+        assert!(s.ring.len() < full);
+        for id in 1..200u64 {
+            assert_ne!(s.ring.lookup(id), Some(1), "ring still routes to the dead member");
+        }
+        s.leave("127.0.0.1:9003");
+        for id in 1..200u64 {
+            assert_eq!(s.ring.lookup(id), Some(0), "only member 0 is left in the ring");
+        }
+        // leaving members are routable (still draining) but not in-ring
+        assert!(s.members[2].health.routable());
+        assert!(!s.members[2].health.in_ring());
+    }
+
+    #[test]
+    fn join_revives_a_dead_slot_in_place() {
+        let mut s = three();
+        s.note_failure(2, 1);
+        assert_eq!(s.members[2].health, Health::Dead);
+        let idx = s.join("127.0.0.1:9003", 2);
+        assert_eq!(idx, 2, "same address re-joins its old slot");
+        assert_eq!(s.members.len(), 3);
+        assert_eq!(s.members[2].health, Health::Alive);
+        assert_eq!(s.members[2].weight, 2);
+        let idx = s.join("127.0.0.1:9004", 1);
+        assert_eq!(idx, 3, "new address appends");
+    }
+
+    #[test]
+    fn placement_views_count_assigned_sessions_only() {
+        let mut s = three();
+        s.placement.insert(10, Placement::Assigned(0));
+        s.placement.insert(11, Placement::Assigned(0));
+        s.placement.insert(12, Placement::Assigned(2));
+        s.placement.insert(13, Placement::Moving);
+        assert_eq!(s.sessions_of(0), vec![10, 11]);
+        assert_eq!(s.session_counts(), vec![2, 0, 1]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Fleet mode — consistent-hash routing over N `aaren serve` backends
+//! with failure detection and bitwise failover.
+//!
+//! The paper's constant-memory serving claim (§3.3) makes a session
+//! cheap to *move*: its whole state is a tiny versioned blob that the
+//! `snapshot`/`restore` wire ops already migrate bitwise between live
+//! processes, and the spill tier already persists it crash-safely. The
+//! fleet router is the thin layer that turns those primitives into
+//! process-loss tolerance:
+//!
+//! * [`ring`] — a deterministic weighted-vnode consistent-hash ring
+//!   assigns every session id to one backend; removing a member moves
+//!   only that member's sessions.
+//! * [`member`] — the membership table with per-member health
+//!   (`Alive` → `Suspect` → `Dead`, one way) and the session placement
+//!   map.
+//! * [`proxy`] — per-connection handlers speak the *same* line-JSON
+//!   wire protocol as a single server and relay each request to the
+//!   owning backend (injecting fleet-unique session ids into
+//!   `create`/`restore` so backends sharing one spill dir never
+//!   collide). Backend failures answer as structured `overloaded`
+//!   + `retry_after_ms` — the client's existing back-off loop rides
+//!   out a failover without new client code.
+//! * [`rebalance`] — the maintenance loop: heartbeat (`ping`) probes
+//!   feed the health state machine; a death triggers **failover
+//!   replay** (the dead member's sessions are re-read from the shared
+//!   `--spill-dir` and `restore`d onto the surviving ring owners); a
+//!   planned `fleet_join`/`fleet_leave` triggers **live rebalancing**
+//!   (drain → snapshot → restore → close per session) under a bounded
+//!   per-tick migration budget so rebalancing never starves foreground
+//!   traffic.
+//!
+//! The acceptance bar (ROADMAP item 6, `tests/chaos.rs`): three
+//! backends under concurrent multi-kernel load, SIGKILL one, and every
+//! stream either resumes bitwise on a survivor or answers a structured
+//! error kind — never silent corruption.
+//!
+//! Fleet-specific wire ops (everything else proxies through):
+//!
+//! ```text
+//! -> {"op":"ping"}                              <- {"ok":true}        (answered locally)
+//! -> {"op":"fleet_stats"}                       <- {"members":[...],"failovers":F,...}
+//! -> {"op":"fleet_join","addr":A[,"weight":W]}  <- {"ok":true,"members":N}
+//! -> {"op":"fleet_leave","addr":A}              <- {"ok":true,"draining":K}
+//! ```
+//!
+//! Caveat (documented, not defended): the placement map lives in the
+//! router, so a router restart forgets which backend spilled which
+//! session. Ring routing still finds every session the ring owner
+//! itself spilled; a session spilled by a *different* backend before
+//! the restart answers `no_session` (structured) until re-created.
+
+pub mod member;
+pub mod proxy;
+pub mod rebalance;
+pub mod ring;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::fault::FaultPlan;
+use crate::persist::{DirStore, SnapshotStore};
+use crate::serve::server::accept_backoff;
+use crate::util::rng::Rng;
+
+pub use member::{FleetState, Health, Member, Placement};
+pub use ring::{hash64, hash_str, Ring, RingEntry, DEFAULT_VNODES_PER_WEIGHT};
+
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// router listen address
+    pub addr: String,
+    /// backend addresses (`aaren serve` processes)
+    pub members: Vec<String>,
+    /// per-member ring weights, parallel to `members`; missing entries
+    /// default to 1
+    pub weights: Vec<u32>,
+    /// the spill directory SHARED with every backend — the failover
+    /// replay source. Without it a dead member's sessions are lost
+    /// (structured `no_session`), not resumed.
+    pub spill_dir: Option<PathBuf>,
+    /// heartbeat probe period
+    pub hb_interval: Duration,
+    /// per-probe connect/read/write timeout
+    pub hb_timeout: Duration,
+    /// consecutive misses before a member is declared dead
+    pub hb_misses: u32,
+    /// max sessions migrated per maintenance tick (planned rebalancing
+    /// only; failover replay is never budget-limited)
+    pub migrate_budget: usize,
+    /// ring points per unit of member weight
+    pub vnodes_per_weight: usize,
+    /// request-line size cap on client connections
+    pub max_frame_bytes: usize,
+    /// per-connection read/write timeout on client connections; also
+    /// applied to proxied backend connections
+    pub io_timeout: Option<Duration>,
+    /// seeded fault injection (`hb-drop` / `conn-drop` sites)
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            addr: "127.0.0.1:7979".to_string(),
+            members: Vec::new(),
+            weights: Vec::new(),
+            spill_dir: None,
+            hb_interval: Duration::from_millis(500),
+            hb_timeout: Duration::from_millis(1000),
+            hb_misses: 3,
+            migrate_budget: 8,
+            vnodes_per_weight: DEFAULT_VNODES_PER_WEIGHT,
+            max_frame_bytes: 16 << 20,
+            io_timeout: None,
+            fault: None,
+        }
+    }
+}
+
+/// Cumulative fleet counters, reported by `fleet_stats` (and the
+/// `fleet` section of an aggregated `stats` reply).
+#[derive(Debug, Default)]
+pub struct FleetStats {
+    /// heartbeat probes sent (dropped-by-fault probes count as sent)
+    pub heartbeats: AtomicU64,
+    /// probes that failed or were dropped
+    pub heartbeat_misses: AtomicU64,
+    /// members declared dead
+    pub failovers: AtomicU64,
+    /// sessions owned by dead members at their death
+    pub failed_over_sessions: AtomicU64,
+    /// of those, sessions successfully replayed onto a survivor
+    pub failover_resumed: AtomicU64,
+    /// sessions moved by planned rebalancing
+    pub migrations: AtomicU64,
+    /// client requests relayed to a backend
+    pub proxied_requests: AtomicU64,
+    /// client requests answered `overloaded` by the router itself
+    /// (unreachable backend, mid-migration session, empty ring)
+    pub routed_sheds: AtomicU64,
+}
+
+/// Everything the proxy handlers and the maintenance thread share.
+pub(crate) struct Shared {
+    pub cfg: FleetConfig,
+    pub state: Mutex<FleetState>,
+    pub stats: FleetStats,
+    /// fleet-assigned session ids: globally unique across every backend
+    /// sharing the spill dir (seeded past any surviving snapshot files)
+    pub next_id: AtomicU64,
+    pub shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Claim a fresh fleet-unique session id.
+    pub fn assign_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// An explicit client-chosen id passed through: keep the assigner
+    /// ahead of it so later assignments never collide.
+    pub fn reserve_id(&self, id: u64) {
+        self.next_id.fetch_max(id.saturating_add(1), Ordering::Relaxed);
+    }
+}
+
+/// A bound fleet router: the listener plus the shared routing state.
+/// `run` serves until a `shutdown` request arrives (which is also
+/// forwarded to every routable backend).
+pub struct Fleet {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Fleet {
+    pub fn bind(cfg: &FleetConfig) -> Result<Fleet> {
+        if cfg.members.is_empty() {
+            bail!("fleet needs at least one --members backend address");
+        }
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let state = FleetState::new(&cfg.members, &cfg.weights, cfg.vnodes_per_weight);
+        // seed the id assigner past every snapshot already on disk so a
+        // router restart cannot hand out an id that collides with a
+        // live spilled session
+        let mut next = 1u64;
+        if let Some(dir) = &cfg.spill_dir {
+            if let Ok(store) = DirStore::open(dir) {
+                next = store.ids().into_iter().max().map_or(1, |m| m + 1);
+            }
+        }
+        Ok(Fleet {
+            listener,
+            shared: Arc::new(Shared {
+                cfg: cfg.clone(),
+                state: Mutex::new(state),
+                stats: FleetStats::default(),
+                next_id: AtomicU64::new(next),
+                shutdown: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept client connections (one handler thread each) and run the
+    /// maintenance loop (heartbeats, failover, migration) until
+    /// shutdown.
+    pub fn run(&self) -> Result<()> {
+        let wake_addr = self.listener.local_addr().ok();
+        let maint = {
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || rebalance::maintenance_loop(&shared))
+        };
+        let mut backoff_rng = Rng::new(0x0F1E_E7AC);
+        let mut consecutive_errors = 0u32;
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    consecutive_errors = 0;
+                    let shared = Arc::clone(&self.shared);
+                    std::thread::spawn(move || proxy::handle_conn(s, &shared, wake_addr));
+                }
+                Err(e) => {
+                    consecutive_errors = consecutive_errors.saturating_add(1);
+                    eprintln!("[fleet] accept error: {e}");
+                    std::thread::sleep(accept_backoff(consecutive_errors, &mut backoff_rng));
+                }
+            }
+        }
+        let _ = maint.join();
+        Ok(())
+    }
+}
+
+/// Wake a blocked accept loop after the shutdown flag is set: the
+/// listener's own address is connectable unless bound to the
+/// unspecified address, which rewrites to its loopback.
+pub(crate) fn wake_listener(addr: Option<SocketAddr>) {
+    if let Some(mut addr) = addr {
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(addr);
+    }
+}
+
+/// Serve forever on `cfg.addr`, with the standard banner.
+pub fn serve_fleet(cfg: &FleetConfig) -> Result<()> {
+    let fleet = Fleet::bind(cfg)?;
+    let spill = match &cfg.spill_dir {
+        Some(dir) => format!("failover replay from {}", dir.display()),
+        None => "NO spill dir — dead members lose their sessions".to_string(),
+    };
+    let fault = match &cfg.fault {
+        Some(p) if p.is_active() => format!("; FAULT INJECTION ACTIVE (seed {})", p.seed),
+        _ => String::new(),
+    };
+    println!(
+        "[fleet] listening on {} ({} member(s); heartbeat every {}ms, timeout {}ms, \
+         dead after {} misses; {spill}; migrate budget {}/tick{fault}; \
+         line-delimited JSON; extra ops: ping/fleet_stats/fleet_join/fleet_leave)",
+        fleet.local_addr()?,
+        cfg.members.len(),
+        cfg.hb_interval.as_millis(),
+        cfg.hb_timeout.as_millis(),
+        cfg.hb_misses.max(1),
+        cfg.migrate_budget.max(1),
+    );
+    fleet.run()
+}

@@ -1,0 +1,572 @@
+//! The fleet data plane: per-client-connection handlers that speak the
+//! single-server wire protocol and relay each request to the backend
+//! the ring (or the placement map) says owns it.
+//!
+//! Design rules:
+//!
+//! * **The router never holds the routing lock across network IO** —
+//!   routing decisions snapshot `(member idx, addr)` under the lock and
+//!   release it before touching a socket.
+//! * **Session ids are fleet-assigned.** Backends share one spill dir,
+//!   so backend-local auto-assignment would collide across processes;
+//!   the proxy injects a fleet-unique `id` into every `create`/
+//!   `restore` before forwarding (explicit client ids pass through and
+//!   reserve the assigner past themselves).
+//! * **Failures shed, never hang.** An unreachable backend, a
+//!   mid-migration (`Moving`) session or an empty ring answers the
+//!   structured `overloaded` + `retry_after_ms` envelope — the same
+//!   shape a single overloaded server uses, so existing client retry
+//!   loops ride out a failover with no new code. Every data-path
+//!   failure also feeds the health state machine (miss accounting),
+//!   sharpening the heartbeat detector.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fault::{FaultSite, Kinded};
+use crate::serve::server::{
+    drain_frame_tail, error_body, obj, read_frame, wire_error, Frame, RETRY_AFTER_CAP_MS,
+    RETRY_AFTER_MS,
+};
+use crate::util::json::Json;
+
+use super::member::Placement;
+use super::{wake_listener, Shared};
+
+/// One cached line-JSON connection to a backend. Also used by the
+/// maintenance loop for heartbeats and migration legs.
+pub(crate) struct BackendConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl BackendConn {
+    /// Connect with `timeout` bounding the connect itself and every
+    /// later read/write — a wedged backend must cost one timeout, not a
+    /// hung router thread.
+    pub fn connect(addr: &str, timeout: Option<Duration>) -> Result<BackendConn> {
+        let stream = match timeout {
+            None => TcpStream::connect(addr)?,
+            Some(t) => {
+                let mut last: Option<std::io::Error> = None;
+                let mut stream = None;
+                for sa in addr.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&sa, t) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                stream.ok_or_else(|| match last {
+                    Some(e) => anyhow!("connect {addr}: {e}"),
+                    None => anyhow!("connect {addr}: no resolvable address"),
+                })?
+            }
+        };
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        let writer = stream.try_clone()?;
+        Ok(BackendConn { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn send(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read one reply line (trailing newline stripped).
+    pub fn recv(&mut self) -> Result<String> {
+        let mut buf = String::new();
+        if self.reader.read_line(&mut buf)? == 0 {
+            bail!("backend closed the connection");
+        }
+        while buf.ends_with('\n') || buf.ends_with('\r') {
+            buf.pop();
+        }
+        Ok(buf)
+    }
+
+    /// One request line → one reply line.
+    pub fn call_line(&mut self, line: &str) -> Result<String> {
+        self.send(line)?;
+        self.recv()
+    }
+
+    /// One request line → one parsed reply, with error replies turned
+    /// into `Err` (the shape the maintenance loop wants).
+    pub fn call(&mut self, line: &str) -> Result<Json> {
+        let reply = self.call_line(line)?;
+        let j = Json::parse(&reply).map_err(|e| anyhow!("bad backend reply {reply:?}: {e}"))?;
+        if let Some((kind, msg)) = wire_error(&j) {
+            bail!("backend error ({kind}): {msg}");
+        }
+        Ok(j)
+    }
+}
+
+/// The per-handler backend connection cache: connections are created
+/// lazily and dropped on any failure (the next request reconnects).
+pub(crate) type ConnCache = HashMap<String, BackendConn>;
+
+pub(crate) fn backend<'a>(
+    conns: &'a mut ConnCache,
+    addr: &str,
+    timeout: Option<Duration>,
+) -> Result<&'a mut BackendConn> {
+    match conns.entry(addr.to_string()) {
+        std::collections::hash_map::Entry::Occupied(e) => Ok(e.into_mut()),
+        std::collections::hash_map::Entry::Vacant(e) => {
+            Ok(e.insert(BackendConn::connect(addr, timeout)?))
+        }
+    }
+}
+
+/// The retry hint the router attaches to its own sheds: long enough to
+/// cover a detection + replay cycle (two heartbeat intervals), capped
+/// like the server's own occupancy-derived hints.
+fn shed_hint(shared: &Shared) -> u64 {
+    let two_ticks = (shared.cfg.hb_interval.as_millis() as u64).saturating_mul(2);
+    two_ticks.clamp(RETRY_AFTER_MS, RETRY_AFTER_CAP_MS)
+}
+
+fn write_line(w: &mut TcpStream, body: &str) -> bool {
+    w.write_all(body.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
+}
+
+fn write_json(w: &mut TcpStream, j: &Json) -> bool {
+    write_line(w, &j.to_string())
+}
+
+fn write_shed(w: &mut TcpStream, shared: &Shared, msg: &str) -> bool {
+    shared.stats.routed_sheds.fetch_add(1, Ordering::Relaxed);
+    write_json(w, &error_body(&Kinded::overloaded(msg, shed_hint(shared))))
+}
+
+/// Record a data-path failure against a member. The proxy only ever
+/// escalates to Suspect — declaring death (and running failover) is the
+/// heartbeat loop's job, so there is exactly one replay driver — but
+/// the misses it adds make the next failed probe cross the threshold
+/// sooner.
+fn note_data_path_failure(shared: &Shared, idx: usize) {
+    let mut state = shared.state.lock().expect("fleet state lock");
+    state.note_failure(idx, u32::MAX);
+}
+
+/// Where an id-bearing request should go right now.
+enum Route {
+    To(usize, String),
+    /// shed with `overloaded`: the reason goes in the message
+    Shed(&'static str),
+}
+
+fn route_id(shared: &Shared, id: u64) -> Route {
+    let state = shared.state.lock().expect("fleet state lock");
+    match state.placement.get(&id) {
+        Some(Placement::Moving) => Route::Shed("session is migrating — back off and retry"),
+        Some(Placement::Assigned(m)) => {
+            let member = &state.members[*m];
+            if member.health.routable() {
+                Route::To(*m, member.addr.clone())
+            } else {
+                // owner died and failover has not replayed it yet
+                Route::Shed("session's backend failed — failover in progress")
+            }
+        }
+        None => match state.ring.lookup(id) {
+            Some(m) if state.members[m].health.routable() => {
+                Route::To(m, state.members[m].addr.clone())
+            }
+            Some(_) => Route::Shed("ring owner unreachable — back off and retry"),
+            None => Route::Shed("fleet has no live members"),
+        },
+    }
+}
+
+/// Forward one already-serialized request to `addr`, relaying every
+/// reply line to the client until the final one (the first without
+/// `"partial":true` — the `steps` streaming contract). Returns Err on
+/// backend-side failure (the caller sheds and notes the miss) and
+/// Ok(client_alive) otherwise.
+fn relay(
+    conns: &mut ConnCache,
+    addr: &str,
+    timeout: Option<Duration>,
+    line: &str,
+    client: &mut TcpStream,
+) -> Result<(bool, Option<Json>)> {
+    let conn = backend(conns, addr, timeout)?;
+    conn.send(line)?;
+    let mut last = None;
+    loop {
+        let reply = conn.recv()?;
+        let parsed = Json::parse(&reply).map_err(|e| anyhow!("bad backend reply: {e}"))?;
+        let partial = matches!(parsed.get("partial"), Some(Json::Bool(true)));
+        if !write_line(client, &reply) {
+            // client went away mid-stream; drain the backend's
+            // remaining lines so the cached connection stays framed
+            if partial {
+                loop {
+                    let tail = conn.recv()?;
+                    let t = Json::parse(&tail).map_err(|e| anyhow!("bad backend reply: {e}"))?;
+                    if !matches!(t.get("partial"), Some(Json::Bool(true))) {
+                        break;
+                    }
+                }
+            }
+            return Ok((false, None));
+        }
+        if !partial {
+            last = Some(parsed);
+            break;
+        }
+    }
+    Ok((true, last))
+}
+
+/// Aggregate `stats` across every routable member: numeric top-level
+/// fields sum, the per-backend breakdown merges field-wise, and a
+/// `fleet` section carries the router's own counters and member table.
+fn aggregate_stats(shared: &Shared, conns: &mut ConnCache) -> Json {
+    let members: Vec<(usize, String)> = {
+        let state = shared.state.lock().expect("fleet state lock");
+        state
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.health.routable())
+            .map(|(i, m)| (i, m.addr.clone()))
+            .collect()
+    };
+    let mut totals: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut backends: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    for (idx, addr) in members {
+        let reply = backend(conns, &addr, shared.cfg.io_timeout)
+            .and_then(|c| c.call(r#"{"op":"stats"}"#));
+        let j = match reply {
+            Ok(j) => j,
+            Err(_) => {
+                conns.remove(&addr);
+                note_data_path_failure(shared, idx);
+                continue;
+            }
+        };
+        if let Json::Obj(map) = &j {
+            for (k, v) in map {
+                match (k.as_str(), v) {
+                    ("backends", Json::Obj(per)) => {
+                        for (name, counts) in per {
+                            let slot = backends.entry(name.clone()).or_default();
+                            slot.0 +=
+                                counts.get("resident").and_then(Json::as_f64).unwrap_or(0.0);
+                            slot.1 += counts.get("spilled").and_then(Json::as_f64).unwrap_or(0.0);
+                        }
+                    }
+                    (_, Json::Num(n)) => *totals.entry(k.clone()).or_default() += n,
+                    _ => {}
+                }
+            }
+        }
+    }
+    let mut out: std::collections::BTreeMap<String, Json> =
+        totals.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
+    out.insert(
+        "backends".to_string(),
+        Json::Obj(
+            backends
+                .into_iter()
+                .map(|(name, (r, s))| {
+                    (name, obj(vec![("resident", Json::Num(r)), ("spilled", Json::Num(s))]))
+                })
+                .collect(),
+        ),
+    );
+    out.insert("fleet".to_string(), fleet_stats_json(shared));
+    Json::Obj(out)
+}
+
+/// The `fleet_stats` reply body: the member table with health and
+/// per-member session counts, plus the cumulative router counters.
+pub(crate) fn fleet_stats_json(shared: &Shared) -> Json {
+    let state = shared.state.lock().expect("fleet state lock");
+    let counts = state.session_counts();
+    let members = Json::Arr(
+        state
+            .members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                obj(vec![
+                    ("addr", Json::Str(m.addr.clone())),
+                    ("health", Json::Str(m.health.wire_name().to_string())),
+                    ("weight", Json::Num(m.weight as f64)),
+                    ("misses", Json::Num(m.misses as f64)),
+                    ("sessions", Json::Num(counts[i] as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let s = &shared.stats;
+    obj(vec![
+        ("members", members),
+        ("placements", Json::Num(state.placement.len() as f64)),
+        ("heartbeats", Json::Num(s.heartbeats.load(Ordering::Relaxed) as f64)),
+        ("heartbeat_misses", Json::Num(s.heartbeat_misses.load(Ordering::Relaxed) as f64)),
+        ("failovers", Json::Num(s.failovers.load(Ordering::Relaxed) as f64)),
+        ("failed_over_sessions", Json::Num(s.failed_over_sessions.load(Ordering::Relaxed) as f64)),
+        ("failover_resumed", Json::Num(s.failover_resumed.load(Ordering::Relaxed) as f64)),
+        ("migrations", Json::Num(s.migrations.load(Ordering::Relaxed) as f64)),
+        ("proxied_requests", Json::Num(s.proxied_requests.load(Ordering::Relaxed) as f64)),
+        ("routed_sheds", Json::Num(s.routed_sheds.load(Ordering::Relaxed) as f64)),
+    ])
+}
+
+pub(crate) fn handle_conn(stream: TcpStream, shared: &Arc<Shared>, wake_addr: Option<SocketAddr>) {
+    let _ = stream.set_read_timeout(shared.cfg.io_timeout);
+    let _ = stream.set_write_timeout(shared.cfg.io_timeout);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut conns: ConnCache = HashMap::new();
+    // per-handler injected-failure site: deterministic per (seed, tag),
+    // so every connection replays the same drop pattern — the chaos
+    // tests rely on that, and real deployments never set the rate
+    let mut conn_faults: Option<FaultSite> = shared
+        .cfg
+        .fault
+        .as_ref()
+        .filter(|p| p.conn_drop_rate > 0.0)
+        .map(|p| p.site("fleet-conn"));
+    let max_frame = shared.cfg.max_frame_bytes.max(1);
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let line = match read_frame(&mut reader, max_frame) {
+            Frame::Line(l) => l,
+            Frame::Eof => break,
+            Frame::TooLong => {
+                let e = Kinded::frame_too_large(format!(
+                    "request frame exceeds the {max_frame}-byte limit"
+                ));
+                let _ = write_json(&mut writer, &error_body(&e));
+                drain_frame_tail(&mut reader);
+                break;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let alive = handle_line(&line, shared, &mut conns, &mut conn_faults, &mut writer);
+        if shared.shutdown.load(Ordering::Acquire) {
+            wake_listener(wake_addr);
+            break;
+        }
+        if !alive {
+            break;
+        }
+    }
+}
+
+/// Serve one request line; returns whether the connection stays open.
+fn handle_line(
+    line: &str,
+    shared: &Arc<Shared>,
+    conns: &mut ConnCache,
+    conn_faults: &mut Option<FaultSite>,
+    writer: &mut TcpStream,
+) -> bool {
+    let mut j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return write_json(writer, &error_body(&anyhow!("bad request JSON: {e}"))),
+    };
+    let op = match j.get("op").and_then(Json::as_str) {
+        Some(op) => op.to_string(),
+        None => return write_json(writer, &error_body(&anyhow!("request needs an \"op\" field"))),
+    };
+    match op.as_str() {
+        // liveness probe: answered by the router itself so health
+        // checks of the router never depend on backend health
+        "ping" => write_json(writer, &obj(vec![("ok", Json::Bool(true))])),
+        "fleet_stats" => write_json(writer, &fleet_stats_json(shared)),
+        "fleet_join" => {
+            let (addr, weight) = match j.get("addr").and_then(Json::as_str) {
+                Some(a) => (
+                    a.to_string(),
+                    j.get("weight").and_then(Json::as_f64).map_or(1, |w| w.max(1.0) as u32),
+                ),
+                None => {
+                    return write_json(
+                        writer,
+                        &error_body(&anyhow!("fleet_join needs an \"addr\" field")),
+                    )
+                }
+            };
+            let members = {
+                let mut state = shared.state.lock().expect("fleet state lock");
+                state.join(&addr, weight);
+                state.members.len()
+            };
+            write_json(
+                writer,
+                &obj(vec![("ok", Json::Bool(true)), ("members", Json::Num(members as f64))]),
+            )
+        }
+        "fleet_leave" => {
+            let addr = match j.get("addr").and_then(Json::as_str) {
+                Some(a) => a.to_string(),
+                None => {
+                    return write_json(
+                        writer,
+                        &error_body(&anyhow!("fleet_leave needs an \"addr\" field")),
+                    )
+                }
+            };
+            let draining = {
+                let mut state = shared.state.lock().expect("fleet state lock");
+                let idx = state.leave(&addr);
+                idx.map(|i| state.sessions_of(i).len())
+            };
+            match draining {
+                Some(k) => write_json(
+                    writer,
+                    &obj(vec![("ok", Json::Bool(true)), ("draining", Json::Num(k as f64))]),
+                ),
+                None => write_json(writer, &error_body(&anyhow!("no fleet member at {addr}"))),
+            }
+        }
+        "stats" => {
+            let agg = aggregate_stats(shared, conns);
+            write_json(writer, &agg)
+        }
+        "shutdown" => {
+            // best-effort fan-out so `shutdown` through the fleet means
+            // what it means against a single server: everything stops
+            let members: Vec<String> = {
+                let state = shared.state.lock().expect("fleet state lock");
+                state
+                    .members
+                    .iter()
+                    .filter(|m| m.health.routable())
+                    .map(|m| m.addr.clone())
+                    .collect()
+            };
+            for addr in members {
+                if let Ok(conn) = backend(conns, &addr, shared.cfg.io_timeout) {
+                    let _ = conn.call_line(r#"{"op":"shutdown"}"#);
+                }
+            }
+            shared.shutdown.store(true, Ordering::Release);
+            write_json(writer, &obj(vec![("ok", Json::Bool(true))]));
+            false
+        }
+        "create" | "restore" => {
+            // fleet-unique id: inject one unless the client chose its own
+            let id = match j.get("id").and_then(Json::as_f64) {
+                Some(n) => {
+                    let id = n as u64;
+                    shared.reserve_id(id);
+                    id
+                }
+                None => {
+                    let id = shared.assign_id();
+                    if let Json::Obj(map) = &mut j {
+                        map.insert("id".to_string(), Json::Num(id as f64));
+                    }
+                    id
+                }
+            };
+            {
+                let state = shared.state.lock().expect("fleet state lock");
+                if state.placement.contains_key(&id) {
+                    return write_json(
+                        writer,
+                        &error_body(&anyhow!("session {id} already exists")),
+                    );
+                }
+            }
+            let (idx, addr) = {
+                let state = shared.state.lock().expect("fleet state lock");
+                match state.ring.lookup(id) {
+                    Some(m) if state.members[m].health.routable() => {
+                        (m, state.members[m].addr.clone())
+                    }
+                    _ => return write_shed(writer, shared, "fleet has no live members"),
+                }
+            };
+            forward(shared, conns, conn_faults, writer, (idx, &addr), &j.to_string(), |ok| {
+                if ok {
+                    let mut state = shared.state.lock().expect("fleet state lock");
+                    state.placement.insert(id, Placement::Assigned(idx));
+                }
+            })
+        }
+        // every id-bearing data op (step/steps/snapshot/close/drain/…)
+        // routes by id — unknown ops forward too, so backend protocol
+        // growth does not require fleet releases
+        _ => {
+            let Some(id) = j.get("id").and_then(Json::as_f64).map(|n| n as u64) else {
+                return write_json(
+                    writer,
+                    &error_body(&anyhow!("unknown fleet op {op:?} without an \"id\" to route by")),
+                );
+            };
+            let (idx, addr) = match route_id(shared, id) {
+                Route::To(idx, addr) => (idx, addr),
+                Route::Shed(msg) => return write_shed(writer, shared, msg),
+            };
+            let closing = op == "close";
+            forward(shared, conns, conn_faults, writer, (idx, &addr), line, |ok| {
+                if ok && closing {
+                    let mut state = shared.state.lock().expect("fleet state lock");
+                    state.placement.remove(&id);
+                }
+            })
+        }
+    }
+}
+
+/// Forward one request to a backend, relay the reply (streamed lines
+/// included), run `on_done(reply_was_ok)` and translate backend-side
+/// transport failures into a shed + health miss.
+fn forward(
+    shared: &Arc<Shared>,
+    conns: &mut ConnCache,
+    conn_faults: &mut Option<FaultSite>,
+    writer: &mut TcpStream,
+    (idx, addr): (usize, &str),
+    line: &str,
+    on_done: impl FnOnce(bool),
+) -> bool {
+    shared.stats.proxied_requests.fetch_add(1, Ordering::Relaxed);
+    let dropped = conn_faults.as_mut().is_some_and(|site| site.maybe_drop_conn());
+    let outcome = if dropped {
+        conns.remove(addr);
+        Err(anyhow!("injected fault: backend connection dropped"))
+    } else {
+        relay(conns, addr, shared.cfg.io_timeout, line, writer)
+    };
+    match outcome {
+        Ok((client_alive, last)) => {
+            let ok = last.as_ref().is_some_and(|r| wire_error(r).is_none());
+            on_done(ok);
+            client_alive
+        }
+        Err(_) => {
+            conns.remove(addr);
+            note_data_path_failure(shared, idx);
+            on_done(false);
+            write_shed(writer, shared, &format!("backend {addr} unreachable — retry"))
+        }
+    }
+}

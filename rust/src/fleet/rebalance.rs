@@ -1,0 +1,283 @@
+//! The fleet control plane: one maintenance thread that probes member
+//! health, replays a dead member's sessions onto survivors, and drains
+//! planned membership changes under a bounded per-tick budget.
+//!
+//! ## Failover replay (unplanned death)
+//!
+//! The spill tier makes this possible without any cooperation from the
+//! dead process: every TTL/LRU eviction (and every graceful shutdown)
+//! already wrote the session's snapshot to the shared `--spill-dir`
+//! with crash-safe tmp-then-rename discipline. But a subtlety of
+//! `DirStore` shapes the design: each store instance mirrors the
+//! directory into an in-memory index **at open time** and never
+//! re-scans, so a file spilled by process A is invisible to process
+//! B's already-open store. Survivors therefore cannot lazily restore a
+//! victim's sessions — the router must replay them actively. On death
+//! it opens a **fresh** `DirStore` view (fresh index = sees every
+//! file), reads each affected session's blob, and issues an
+//! explicit-id `restore` to the session's new ring owner. The
+//! survivor's duplicate check is index-based too, so the restore is
+//! accepted. The source file is deliberately left in place — deleting
+//! it would race the survivor's own later re-spill of the same id.
+//!
+//! While a session is being replayed its placement is `Moving`, so the
+//! proxy sheds requests on it with `overloaded` + a retry hint instead
+//! of racing the replay to a stale answer. Sessions with no snapshot
+//! on disk (never idle long enough to spill, or their blob was torn)
+//! lose their placement: later requests route by ring to a backend
+//! that answers a structured `no_session`/`corrupt_snapshot` — the
+//! "dies with a structured kind" half of the acceptance dichotomy.
+//!
+//! ## Budgeted migration (planned change)
+//!
+//! One rule covers join, leave and weight changes alike: each tick,
+//! migrate up to `migrate_budget` sessions whose current placement
+//! disagrees with the ring (`drain` → `snapshot` → `restore` →
+//! `close`, with the `Moving` marker shed-guarding the whole leg). The
+//! drain-first ordering matters: `drain` executes on the source's own
+//! executor queue, **after** any in-flight ops on the session, so the
+//! snapshot that follows can never miss a token that was already
+//! acknowledged to a client.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::fault::FaultSite;
+use crate::persist::{DirStore, SnapshotStore};
+use crate::util::b64;
+
+use super::member::Placement;
+use super::proxy::{backend, BackendConn, ConnCache};
+use super::ring::Ring;
+use super::Shared;
+
+pub(crate) fn maintenance_loop(shared: &Arc<Shared>) {
+    let mut hb_faults: Option<FaultSite> = shared
+        .cfg
+        .fault
+        .as_ref()
+        .filter(|p| p.heartbeat_drop_rate > 0.0)
+        .map(|p| p.site("fleet-hb"));
+    loop {
+        std::thread::sleep(shared.cfg.hb_interval);
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        heartbeat_tick(shared, &mut hb_faults);
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        migrate_tick(shared);
+    }
+}
+
+/// Probe every non-dead member with a `ping` on a fresh connection
+/// (a fresh connect is itself part of the liveness evidence). Probe
+/// failures feed the `Alive → Suspect → Dead` escalator; crossing the
+/// death threshold triggers failover replay.
+fn heartbeat_tick(shared: &Arc<Shared>, hb_faults: &mut Option<FaultSite>) {
+    let probes: Vec<(usize, String)> = {
+        let state = shared.state.lock().expect("fleet state lock");
+        state
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.health.routable())
+            .map(|(i, m)| (i, m.addr.clone()))
+            .collect()
+    };
+    for (idx, addr) in probes {
+        shared.stats.heartbeats.fetch_add(1, Ordering::Relaxed);
+        let dropped = hb_faults.as_mut().is_some_and(|site| site.maybe_drop_heartbeat());
+        let ok = !dropped
+            && BackendConn::connect(&addr, Some(shared.cfg.hb_timeout))
+                .and_then(|mut c| c.call(r#"{"op":"ping"}"#))
+                .is_ok();
+        let died = {
+            let mut state = shared.state.lock().expect("fleet state lock");
+            if ok {
+                state.note_success(idx);
+                false
+            } else {
+                shared.stats.heartbeat_misses.fetch_add(1, Ordering::Relaxed);
+                state.note_failure(idx, shared.cfg.hb_misses)
+            }
+        };
+        if died {
+            eprintln!("[fleet] member {addr} declared dead after {} misses", shared.cfg.hb_misses);
+            failover(shared, idx);
+        }
+    }
+}
+
+/// The new ring owner's address for `id`, if it is routable right now.
+fn replay_target(shared: &Shared, id: u64, ring: &Ring) -> Option<(usize, String)> {
+    let state = shared.state.lock().expect("fleet state lock");
+    let idx = ring.lookup(id)?;
+    let m = state.members.get(idx)?;
+    m.health.routable().then(|| (idx, m.addr.clone()))
+}
+
+/// Replay every session the dead member owned from the shared spill
+/// dir onto its new ring owner. Never budget-limited: until a session
+/// is replayed it answers sheds, so dragging the replay out would
+/// trade correctness pressure for smoothness nobody gets.
+fn failover(shared: &Arc<Shared>, dead_idx: usize) {
+    shared.stats.failovers.fetch_add(1, Ordering::Relaxed);
+    let (ids, ring) = {
+        let mut state = shared.state.lock().expect("fleet state lock");
+        let ids = state.sessions_of(dead_idx);
+        for &id in &ids {
+            state.placement.insert(id, Placement::Moving);
+        }
+        (ids, state.ring.clone())
+    };
+    shared.stats.failed_over_sessions.fetch_add(ids.len() as u64, Ordering::Relaxed);
+    if ids.is_empty() {
+        return;
+    }
+    // a FRESH store view: the dead member's spill files landed after
+    // any longer-lived index was mirrored, so only a fresh open sees
+    // them (see the module docs)
+    let mut store = match shared.cfg.spill_dir.as_deref().map(DirStore::open) {
+        Some(Ok(store)) => Some(store),
+        Some(Err(e)) => {
+            eprintln!("[fleet] failover cannot open spill dir: {e:#}");
+            None
+        }
+        None => None,
+    };
+    let mut conns: std::collections::HashMap<String, BackendConn> = Default::default();
+    let mut resumed = 0usize;
+    for id in &ids {
+        let replayed = store
+            .as_mut()
+            .and_then(|s| s.get(*id).ok().flatten())
+            .and_then(|blob| {
+                let (target, addr) = replay_target(shared, *id, &ring)?;
+                let line =
+                    format!(r#"{{"op":"restore","id":{id},"state":"{}"}}"#, b64::encode(&blob));
+                let conn = match conns.entry(addr.clone()) {
+                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(e) => e.insert(
+                        BackendConn::connect(&addr, Some(shared.cfg.hb_timeout)).ok()?,
+                    ),
+                };
+                match conn.call(&line) {
+                    Ok(_) => Some(target),
+                    Err(e) => {
+                        eprintln!("[fleet] failover restore of session {id} on {addr}: {e:#}");
+                        conns.remove(&addr);
+                        None
+                    }
+                }
+            });
+        let mut state = shared.state.lock().expect("fleet state lock");
+        match replayed {
+            Some(target) => {
+                state.placement.insert(*id, Placement::Assigned(target));
+                resumed += 1;
+            }
+            // no snapshot (or no survivor): the id's future requests
+            // ring-route to a backend that answers a structured kind
+            None => {
+                state.placement.remove(id);
+            }
+        }
+    }
+    shared.stats.failover_resumed.fetch_add(resumed as u64, Ordering::Relaxed);
+    eprintln!("[fleet] failover: resumed {resumed}/{} sessions from spill", ids.len());
+}
+
+/// One migration candidate chosen under the lock.
+struct Move {
+    id: u64,
+    src_idx: usize,
+    src: String,
+    dst_idx: usize,
+    dst: String,
+}
+
+/// Migrate up to `migrate_budget` sessions whose placement disagrees
+/// with the ring — the single rule that serves join, leave and weight
+/// changes. The budget bounds how much foreground capacity one tick
+/// of rebalancing may consume.
+fn migrate_tick(shared: &Arc<Shared>) {
+    let moves: Vec<Move> = {
+        let mut state = shared.state.lock().expect("fleet state lock");
+        let budget = shared.cfg.migrate_budget.max(1);
+        let mut picked = Vec::new();
+        for (&id, p) in &state.placement {
+            if picked.len() >= budget {
+                break;
+            }
+            let Placement::Assigned(src_idx) = *p else { continue };
+            let Some(src) = state.members.get(src_idx) else { continue };
+            // dead owners are failover's job, unreachable ones heal or die
+            if !src.health.routable() {
+                continue;
+            }
+            let Some(dst_idx) = state.ring.lookup(id) else { continue };
+            if dst_idx == src_idx || !state.members[dst_idx].health.in_ring() {
+                continue;
+            }
+            picked.push(Move {
+                id,
+                src_idx,
+                src: src.addr.clone(),
+                dst_idx,
+                dst: state.members[dst_idx].addr.clone(),
+            });
+        }
+        for m in &picked {
+            state.placement.insert(m.id, Placement::Moving);
+        }
+        picked
+    };
+    if moves.is_empty() {
+        return;
+    }
+    let mut conns: std::collections::HashMap<String, BackendConn> = Default::default();
+    for mv in moves {
+        let moved = migrate_one(shared, &mut conns, &mv);
+        let mut state = shared.state.lock().expect("fleet state lock");
+        match moved {
+            Ok(()) => {
+                state.placement.insert(mv.id, Placement::Assigned(mv.dst_idx));
+                shared.stats.migrations.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                eprintln!("[fleet] migration of session {} {}→{}: {e:#}", mv.id, mv.src, mv.dst);
+                // revert: the source still owns a perfectly good copy;
+                // a later tick retries
+                state.placement.insert(mv.id, Placement::Assigned(mv.src_idx));
+            }
+        }
+    }
+}
+
+/// One session's migration leg: drain (order barrier + spill), then
+/// snapshot from the source, restore onto the target, close the
+/// source's copy.
+fn migrate_one(shared: &Arc<Shared>, conns: &mut ConnCache, mv: &Move) -> anyhow::Result<()> {
+    let timeout = shared.cfg.io_timeout.or(Some(shared.cfg.hb_timeout));
+    let src = backend(conns, &mv.src, timeout)?;
+    // the drain doubles as an ordering barrier: it runs on the source's
+    // executor after every in-flight op on this session. A server
+    // without a spill tier refuses the spill but still provides the
+    // barrier, and the snapshot below works either way.
+    let _ = src.call(&format!(r#"{{"op":"drain","id":{}}}"#, mv.id));
+    let snap = src.call(&format!(r#"{{"op":"snapshot","id":{}}}"#, mv.id))?;
+    let state = snap
+        .get("state")
+        .and_then(crate::util::json::Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("snapshot reply without a state field"))?
+        .to_string();
+    let dst = backend(conns, &mv.dst, timeout)?;
+    dst.call(&format!(r#"{{"op":"restore","id":{},"state":"{state}"}}"#, mv.id))?;
+    // free the source's copy (resident or spilled) — best effort; a
+    // leaked spilled blob is re-spilled over by the new owner later
+    let src = backend(conns, &mv.src, timeout)?;
+    let _ = src.call(&format!(r#"{{"op":"close","id":{}}}"#, mv.id));
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Consistent-hash ring with weighted virtual nodes.
+//!
+//! The ring is a sorted list of hash points; each fleet member
+//! contributes `weight × vnodes_per_weight` points derived from its
+//! stable key, and a session id is owned by the member whose point is
+//! the first at-or-after `hash64(id)` (wrapping). The properties the
+//! fleet leans on, each pinned by a test below:
+//!
+//! * **deterministic** — the ring is a pure function of the member set,
+//!   so every router (and every restart) routes identically;
+//! * **balanced** — vnodes smear each member over the keyspace, so
+//!   equal weights get roughly equal session shares;
+//! * **weighted** — a weight-2 member draws roughly twice the sessions
+//!   of a weight-1 member;
+//! * **minimally disruptive** — removing a member reassigns only the
+//!   sessions it owned; everyone else's placement is untouched (the
+//!   property that makes failover replay O(victim), not O(fleet)).
+
+/// SplitMix64-style avalanche over one u64 — the same mixer the seeded
+/// [`crate::util::rng::Rng`] stream uses, applied here as a stateless
+/// hash. The pre-add breaks the `hash64(0) == 0` fixed point of the
+/// bare finalizer.
+pub fn hash64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over a string — the member key for an address like
+/// `"10.0.0.7:7878"`. Stable across processes and restarts.
+pub fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// How many ring points one unit of member weight contributes. 64
+/// points per weight keeps the expected share within a few percent of
+/// proportional for single-digit fleets without making ring rebuilds
+/// (a binary-searchable sort of members × weight × 64 points) costly.
+pub const DEFAULT_VNODES_PER_WEIGHT: usize = 64;
+
+/// One ring entry for [`Ring::build`]: the member's stable hash key
+/// (from [`hash_str`] of its address), its weight, and the caller's
+/// member index returned by lookups.
+#[derive(Debug, Clone, Copy)]
+pub struct RingEntry {
+    pub key: u64,
+    pub weight: u32,
+    pub idx: usize,
+}
+
+/// The immutable ring: rebuilt from scratch on every membership change
+/// (membership changes are rare and fleets are small; determinism and
+/// simplicity beat incremental updates here).
+#[derive(Debug, Clone, Default)]
+pub struct Ring {
+    /// (point, member idx), sorted by point; ties (cosmically unlikely)
+    /// break by idx so the ring is still a pure function of its input
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn build(entries: &[RingEntry], vnodes_per_weight: usize) -> Ring {
+        let per_weight = vnodes_per_weight.max(1);
+        let mut points = Vec::new();
+        for e in entries {
+            for v in 0..(e.weight.max(1) as usize * per_weight) {
+                // mix the vnode ordinal into the member key so a
+                // member's points scatter instead of clustering
+                points.push((hash64(e.key ^ hash64(v as u64)), e.idx));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// The member owning session `id`, or `None` on an empty ring.
+    pub fn lookup(&self, id: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = hash64(id);
+        let at = self.points.partition_point(|&(p, _)| p < h);
+        // past the last point wraps to the first — it's a ring
+        Some(self.points[at % self.points.len()].1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(weights: &[u32]) -> Vec<RingEntry> {
+        weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| RingEntry {
+                key: hash_str(&format!("127.0.0.1:{}", 9000 + i)),
+                weight: w,
+                idx: i,
+            })
+            .collect()
+    }
+
+    fn shares(ring: &Ring, members: usize, ids: u64) -> Vec<usize> {
+        let mut counts = vec![0usize; members];
+        for id in 1..=ids {
+            counts[ring.lookup(id).unwrap()] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn empty_ring_routes_nothing() {
+        let ring = Ring::build(&[], DEFAULT_VNODES_PER_WEIGHT);
+        assert!(ring.is_empty());
+        assert_eq!(ring.lookup(7), None);
+    }
+
+    #[test]
+    fn lookups_are_deterministic_across_builds() {
+        let a = Ring::build(&entries(&[1, 1, 1]), DEFAULT_VNODES_PER_WEIGHT);
+        let b = Ring::build(&entries(&[1, 1, 1]), DEFAULT_VNODES_PER_WEIGHT);
+        assert_eq!(a.len(), 3 * DEFAULT_VNODES_PER_WEIGHT);
+        for id in 1..2000u64 {
+            assert_eq!(a.lookup(id), b.lookup(id));
+        }
+    }
+
+    #[test]
+    fn equal_weights_share_the_keyspace_roughly_equally() {
+        let ring = Ring::build(&entries(&[1, 1, 1]), DEFAULT_VNODES_PER_WEIGHT);
+        let counts = shares(&ring, 3, 10_000);
+        for (i, &c) in counts.iter().enumerate() {
+            // perfect balance is ~3333 each; vnode smearing keeps every
+            // member within a generous band of it
+            assert!((1800..=5200).contains(&c), "member {i} got {c} of 10000");
+        }
+    }
+
+    #[test]
+    fn weight_two_draws_roughly_twice_the_sessions() {
+        let ring = Ring::build(&entries(&[2, 1, 1]), DEFAULT_VNODES_PER_WEIGHT);
+        let counts = shares(&ring, 3, 10_000);
+        let heavy = counts[0] as f64;
+        let light = (counts[1] + counts[2]) as f64 / 2.0;
+        let ratio = heavy / light;
+        assert!((1.3..=3.0).contains(&ratio), "weight-2/weight-1 ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn removing_a_member_moves_only_its_own_keys() {
+        let all = entries(&[1, 1, 1]);
+        let full = Ring::build(&all, DEFAULT_VNODES_PER_WEIGHT);
+        let without_2 = Ring::build(&all[..2], DEFAULT_VNODES_PER_WEIGHT);
+        let mut moved_foreign = 0;
+        for id in 1..=10_000u64 {
+            let before = full.lookup(id).unwrap();
+            let after = without_2.lookup(id).unwrap();
+            if before != 2 {
+                // a key the dead member never owned must not move
+                if before != after {
+                    moved_foreign += 1;
+                }
+            } else {
+                // the dead member's keys all land on a survivor
+                assert!(after < 2, "orphaned key {id} routed to the removed member");
+            }
+        }
+        assert_eq!(moved_foreign, 0, "{moved_foreign} keys moved without their owner dying");
+    }
+}

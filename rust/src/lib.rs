@@ -39,6 +39,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
 pub mod fault;
+pub mod fleet;
 pub mod metrics;
 pub mod persist;
 #[cfg(feature = "pjrt")]

@@ -13,6 +13,11 @@
 //!           --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)
 //!           --scatter-drain          disable resident lanes (gather/scatter drains)
 //!           --smoke            loopback create/step/steps/stats round-trip, then exit
+//!   fleet   --addr host:port --members H1:P1,H2:P2,...   consistent-hash router
+//!           --weights W1,W2,...      per-member ring weights (default 1 each)
+//!           --spill-dir DIR          shared spill dir (the failover replay source)
+//!           --hb-interval-ms N --hb-timeout-ms N --hb-misses N   failure detector
+//!           --migrate-budget N       max sessions migrated per maintenance tick
 //!   state   export --addr H:P --id N --out FILE   snapshot a live session to a file
 //!           import --addr H:P --file FILE [--id N]  restore a snapshot as a new session
 //!           inspect --file FILE                   decode a snapshot offline
@@ -53,6 +58,7 @@ fn run(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "serve" => serve_cmd(args),
+        "fleet" => fleet_cmd(args),
         "state" => state_cmd(args),
         "bench" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
@@ -125,6 +131,73 @@ fn serve_cmd(args: &Args) -> Result<()> {
         return server::run_smoke(&cfg);
     }
     server::serve(&cfg)
+}
+
+/// `aaren fleet` — the consistent-hash router over N `aaren serve`
+/// backends: heartbeat failure detection, failover replay from the
+/// shared spill dir, budgeted live rebalancing.
+fn fleet_cmd(args: &Args) -> Result<()> {
+    use aaren::fleet::{serve_fleet, FleetConfig};
+
+    let defaults = FleetConfig::default();
+    let members: Vec<String> = args
+        .str("members", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(
+        !members.is_empty(),
+        "fleet needs --members H1:P1,H2:P2,... (the backend `aaren serve` addresses)"
+    );
+    let weights: Vec<u32> = args
+        .str("weights", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<u32>()
+                .ok()
+                .filter(|&w| w >= 1)
+                .ok_or_else(|| anyhow::anyhow!("--weights entries must be positive integers"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        weights.is_empty() || weights.len() == members.len(),
+        "--weights must list one weight per --members entry ({} != {})",
+        weights.len(),
+        members.len()
+    );
+    let hb_interval_ms = args.u64("hb-interval-ms", defaults.hb_interval.as_millis() as u64);
+    let hb_timeout_ms = args.u64("hb-timeout-ms", defaults.hb_timeout.as_millis() as u64);
+    let io_timeout_secs = args.u64("io-timeout-secs", 0);
+    let fault = match args.flags.get("fault-plan") {
+        Some(spec) => Some(aaren::fault::FaultPlan::parse(spec)?),
+        None => None,
+    };
+    let cfg = FleetConfig {
+        addr: args.str("addr", &defaults.addr),
+        members,
+        weights,
+        spill_dir: args.flags.get("spill-dir").map(PathBuf::from),
+        hb_interval: std::time::Duration::from_millis(hb_interval_ms.max(1)),
+        hb_timeout: std::time::Duration::from_millis(hb_timeout_ms.max(1)),
+        hb_misses: args.u64("hb-misses", defaults.hb_misses as u64).max(1) as u32,
+        migrate_budget: args.usize("migrate-budget", defaults.migrate_budget).max(1),
+        vnodes_per_weight: args.usize("vnodes", defaults.vnodes_per_weight).max(1),
+        max_frame_bytes: args.usize("max-frame-bytes", defaults.max_frame_bytes),
+        io_timeout: (io_timeout_secs > 0)
+            .then(|| std::time::Duration::from_secs(io_timeout_secs)),
+        fault,
+    };
+    if cfg.spill_dir.is_none() {
+        eprintln!(
+            "warning: no --spill-dir — a dead member's sessions cannot be replayed \
+             (point it at the directory every backend spills to)"
+        );
+    }
+    serve_fleet(&cfg)
 }
 
 /// `aaren state export|import|inspect` — offline snapshot handling over
@@ -263,9 +336,19 @@ fn help() {
          --fault-plan SPEC     seeded fault injection (chaos testing), e.g.\n                        \
                        seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2\n                        \
          --smoke        loopback self-test, then exit\n                        \
-         ops: create/step/steps/snapshot/restore/close/stats/shutdown\n                        \
+         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/shutdown\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"mingru\"|\"minlstm\"|\"avg_attn\"|\"tf\"\n                        \
                    [,\"backend\":\"native\"|\"hlo\"|<kernel>]}}\n  \
+         fleet --addr H:P      consistent-hash router over N serve backends\n                        \
+         --members H1:P1,H2:P2,...  backend addresses (required)\n                        \
+         --weights W1,W2,...   per-member ring weights (default 1 each)\n                        \
+         --spill-dir DIR       shared spill dir — the failover replay source\n                        \
+         --hb-interval-ms N    heartbeat period (default 500)\n                        \
+         --hb-timeout-ms N     per-probe timeout (default 1000)\n                        \
+         --hb-misses N         misses before a member is dead (default 3)\n                        \
+         --migrate-budget N    sessions migrated per tick (default 8)\n                        \
+         --vnodes N            ring points per unit weight (default 64)\n                        \
+         extra ops: ping/fleet_stats/fleet_join/fleet_leave\n  \
          state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
          state import --addr H:P --file F [--id N]  restore a snapshot as a new session\n  \
          state inspect --file F                     decode a snapshot offline\n  \

@@ -17,6 +17,9 @@
 //!   — N worker threads with sessions pinned by id — while HLO sessions,
 //!   whose PJRT handles are not `Send`, stay on one dedicated executor
 //!   thread.
+//! * The fleet router ([`crate::fleet`], `aaren fleet`) speaks this same
+//!   protocol in front of N servers: consistent-hash routing, heartbeat
+//!   failure detection, and failover replay from a shared spill dir.
 //!
 //! # Wire protocol
 //!
@@ -31,6 +34,8 @@
 //! -> {"op":"snapshot","id":N}   <- {"state":"<base64>","kind":K,"channels":D,"t":T,"bytes":B}
 //! -> {"op":"restore","state":"<base64>"[,"id":M]}  <- {"id":M,"kind":K,"channels":D,"t":T}
 //! -> {"op":"close","id":N}                         <- {"ok":true}
+//! -> {"op":"drain","id":N}                         <- {"ok":true,"spilled":true|false}
+//! -> {"op":"ping"}                                 <- {"ok":true}
 //! -> {"op":"stats"}                 <- {"sessions":K,"total_state_bytes":B,"spilled":S}
 //! -> {"op":"shutdown"}                             <- {"ok":true}
 //! ```
@@ -91,6 +96,16 @@
 //!   `--session-ttl-secs N` (ServeConfig::session_ttl), executor drains
 //!   sweep sessions idle longer than the TTL — DESTROYING them without a
 //!   spill tier, SPILLING them with one (see below).
+//! * `drain` — spill the session to the store and release its residency
+//!   NOW: the same spill a TTL eviction performs, but on demand and
+//!   with a structured reply (`"spilled":true`; `false` when the
+//!   session was already spilled — idempotent). Refused without a
+//!   spill tier (the session keeps serving). Because the drain runs on
+//!   the session's own executor shard it also acts as an ordering
+//!   barrier after every in-flight op — the fleet migrator's first leg.
+//! * `ping` — liveness probe answered by the router thread itself,
+//!   never dispatched to an executor: a server with every queue full
+//!   still answers `ping`, so heartbeats measure liveness, not load.
 //! * `stats` — resident session count, their total state bytes, and the
 //!   spilled-session count, aggregated across every executor shard, plus
 //!   the containment counters (all cumulative since server start):
@@ -204,7 +219,7 @@ pub mod session;
 
 pub use server::{
     wire_error, Client, ExecutorOpts, ServeConfig, ServeStats, Server, SessionFactory, SpillTier,
-    MAX_STEPS_TOKENS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
+    MAX_STEPS_TOKENS, RETRY_AFTER_CAP_MS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
 };
 pub use session::{
     backend_tag, kernel_of_tag, step_many_batched, step_many_resident, NativeAarenSession,

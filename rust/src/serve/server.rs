@@ -120,6 +120,7 @@ use crate::serve::session::{
 };
 use crate::util::b64;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Hard ceiling on the token count of one `steps` request: an absurd `n`
 /// is refused with a clean error reply at parse time, before any
@@ -132,10 +133,31 @@ pub const MAX_STEPS_TOKENS: usize = 1 << 20;
 /// bounded by the block size instead of n.
 pub const STEPS_REPLY_BLOCK: usize = 512;
 
-/// The `retry_after_ms` hint attached to `overloaded` replies — long
-/// enough for a drain to free queue slots, short enough that a backing-off
-/// client barely notices.
+/// The FLOOR of the `retry_after_ms` hint attached to `overloaded`
+/// replies — long enough for a drain to free queue slots, short enough
+/// that a backing-off client barely notices. The actual hint is priced
+/// from the shedding shard's occupancy by [`retry_hint_ms`] and never
+/// drops below this.
 pub const RETRY_AFTER_MS: u64 = 25;
+
+/// Ceiling of the occupancy-priced `retry_after_ms` hint: even a deeply
+/// backlogged shard never pushes a client further than this, so retry
+/// loops stay responsive once the backlog clears.
+pub const RETRY_AFTER_CAP_MS: u64 = 400;
+
+/// Price the `retry_after_ms` hint on an `overloaded` shed from the
+/// shedding shard's occupancy (requests enqueued or executing, `depth`
+/// being the queue bound): an exactly-full queue keeps the
+/// [`RETRY_AFTER_MS`] floor, and every extra quarter-queue of requests
+/// already waiting beyond the bound doubles the hint, up to
+/// [`RETRY_AFTER_CAP_MS`] — a deep backlog pushes clients further away
+/// instead of inviting the whole herd back in 25 ms.
+pub fn retry_hint_ms(occupancy: usize, depth: usize) -> u64 {
+    let depth = depth.max(1) as u64;
+    let over = (occupancy as u64).saturating_sub(depth);
+    let doublings = ((4 * over) / depth).min(4) as u32;
+    (RETRY_AFTER_MS << doublings).min(RETRY_AFTER_CAP_MS)
+}
 
 /// Default hard cap on one request frame (line) in bytes; see
 /// `ServeConfig::max_frame_bytes`.
@@ -145,10 +167,25 @@ pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 24;
 /// `ServeConfig::queue_depth`.
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
 
-/// How long the accept loop sleeps after an `accept(2)` error (EMFILE
-/// and friends) so it degrades to slow accepting instead of busy-spinning
-/// a core while the condition persists.
-const ACCEPT_ERROR_BACKOFF: Duration = Duration::from_millis(50);
+/// First accept-error sleep, in ms; each CONSECUTIVE error doubles it.
+const ACCEPT_BACKOFF_FLOOR_MS: u64 = 5;
+
+/// Accept-error sleep ceiling, in ms — a persistent condition (EMFILE
+/// for minutes) degrades to slow accepting, never to an unbounded stall.
+const ACCEPT_BACKOFF_CAP_MS: u64 = 500;
+
+/// How long the accept loop sleeps after its `consecutive_errors`-th
+/// `accept(2)` error in a row: capped exponential from
+/// [`ACCEPT_BACKOFF_FLOOR_MS`] doubling to [`ACCEPT_BACKOFF_CAP_MS`],
+/// plus jitter in `[0, base)` drawn from the caller's seeded [`Rng`] —
+/// deterministic for a given seed (chaos runs replay exactly), while a
+/// fleet of processes herding on one shared condition decorrelates.
+pub fn accept_backoff(consecutive_errors: u32, rng: &mut Rng) -> Duration {
+    let n = consecutive_errors.max(1) - 1;
+    let base =
+        ACCEPT_BACKOFF_FLOOR_MS.saturating_mul(1u64 << n.min(16)).min(ACCEPT_BACKOFF_CAP_MS);
+    Duration::from_millis(base + rng.below(base as usize) as u64)
+}
 
 /// A request as an executor sees it (ids are assigned by the router
 /// before dispatch, so `Create` already carries one).
@@ -165,6 +202,10 @@ pub enum Request {
     /// Create a session at `id` from a codec blob (the migration path).
     Restore { id: u64, blob: Vec<u8> },
     Close { id: u64 },
+    /// Spill the session to the store and release its residency on
+    /// demand — a TTL eviction a caller (the fleet rebalancer) asks for,
+    /// with a structured reply instead of the sweep's silence.
+    Drain { id: u64 },
     Stats,
     Shutdown,
 }
@@ -273,7 +314,7 @@ pub struct SpillTier {
     pub max_resident: Option<usize>,
 }
 
-fn obj(entries: Vec<(&str, Json)>) -> Json {
+pub(crate) fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
@@ -283,7 +324,7 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
 /// `overloaded`, `corrupt_snapshot`, `frame_too_large`, `no_session`)
 /// and the generic `"error"` otherwise, so clients can branch on kind
 /// without parsing prose.
-fn error_body(e: &anyhow::Error) -> Json {
+pub(crate) fn error_body(e: &anyhow::Error) -> Json {
     let mut fields = vec![
         ("kind", Json::Str(Kinded::kind_of(e).to_string())),
         ("message", Json::Str(format!("{e:#}"))),
@@ -669,6 +710,9 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
         while let Ok(envelope) = rx.try_recv() {
             batch.push(envelope);
         }
+        // an empty batch is an idle wake (TTL timer, nobody waiting):
+        // the cheapest moment to pay for background lane compaction below
+        let idle = batch.is_empty();
         let now = Instant::now();
         if let Some(ttl) = session_ttl {
             // a request already in hand keeps its session alive: refresh
@@ -819,6 +863,41 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                 }
                             }
                         }
+                        Request::Drain { id } => {
+                            if let Some(e) = containment.error_for(id) {
+                                Err(e)
+                            } else if sessions.contains_key(&id) {
+                                if spill.is_none() {
+                                    Err(anyhow!(
+                                        "drain of session {id} needs a spill tier \
+                                         (start the server with --spill-dir)"
+                                    ))
+                                } else {
+                                    // same mechanics as a TTL eviction —
+                                    // snapshot, store, release the lane —
+                                    // but on demand, and the reply only
+                                    // claims success if the blob actually
+                                    // landed in the store
+                                    evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
+                                    if spill.as_ref().is_some_and(|t| t.store.contains(id)) {
+                                        Ok(Response::Value(obj(vec![
+                                            ("ok", Json::Bool(true)),
+                                            ("spilled", Json::Bool(true)),
+                                        ])))
+                                    } else {
+                                        Err(anyhow!("session {id} failed to spill on drain"))
+                                    }
+                                }
+                            } else if spill.as_ref().is_some_and(|t| t.store.contains(id)) {
+                                // already spilled: drain is idempotent
+                                Ok(Response::Value(obj(vec![
+                                    ("ok", Json::Bool(true)),
+                                    ("spilled", Json::Bool(false)),
+                                ])))
+                            } else {
+                                Err(Kinded::no_session(id))
+                            }
+                        }
                         Request::Stats => {
                             let mut backends: BTreeMap<String, (usize, usize)> = BTreeMap::new();
                             for held in sessions.values() {
@@ -902,32 +981,41 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                 evict_session(&mut sessions, &mut lanes, spill.as_mut(), coldest);
             }
         }
-        // lane hygiene: a set compacts once its released lanes outnumber
-        // BOTH its live count and a small floor (8 — hysteresis so tiny
-        // shards don't churn); moved sessions are re-pointed at their
-        // new lanes in one pass (states move bit-for-bit, nothing is
-        // recomputed). Only sessions of the compacting set's kernel and
-        // width are re-pointed — lanes in other sets never move.
-        for (&(kind, d), set) in lanes.sets.iter_mut() {
-            if set.frag() > set.live().max(8) {
-                let moves: HashMap<usize, usize> = set.compact().into_iter().collect();
-                if !moves.is_empty() {
-                    for held in sessions.values_mut() {
-                        if let SessionSlot::Resident(r) = &mut held.slot {
-                            if r.kernel() == kind && r.channels() == d {
-                                if let Some(&new) = moves.get(&r.lane()) {
-                                    r.set_lane(new);
-                                }
+        compact_lanes(&mut sessions, &mut lanes, idle);
+    }
+}
+
+/// Lane hygiene at a drain's trailing edge. On a busy drain a set
+/// compacts once its released lanes outnumber BOTH its live count and a
+/// small floor (8 — hysteresis so tiny shards don't churn); on an idle
+/// wake (`idle` — the TTL timer fired with an empty queue) ANY
+/// fragmentation is taken, so the worst case left by a mass eviction is
+/// paid while nobody is waiting instead of at the front of the next busy
+/// drain. Moved sessions are re-pointed at their new lanes in one pass
+/// (states move bit-for-bit, nothing is recomputed); only sessions of
+/// the compacting set's kernel and width are re-pointed — lanes in other
+/// sets never move.
+fn compact_lanes(sessions: &mut HashMap<u64, Held>, lanes: &mut LaneMap, idle: bool) {
+    for (&(kind, d), set) in lanes.sets.iter_mut() {
+        let due = if idle { set.frag() > 0 } else { set.frag() > set.live().max(8) };
+        if due {
+            let moves: HashMap<usize, usize> = set.compact().into_iter().collect();
+            if !moves.is_empty() {
+                for held in sessions.values_mut() {
+                    if let SessionSlot::Resident(r) = &mut held.slot {
+                        if r.kernel() == kind && r.channels() == d {
+                            if let Some(&new) = moves.get(&r.lane()) {
+                                r.set_lane(new);
                             }
                         }
                     }
                 }
             }
         }
-        // a set whose lanes all trimmed away is dropped; first use of
-        // that (kernel, width) again recreates it empty
-        lanes.sets.retain(|_, set| set.lanes() > 0);
     }
+    // a set whose lanes all trimmed away is dropped; first use of
+    // that (kernel, width) again recreates it empty
+    lanes.sets.retain(|_, set| set.lanes() > 0);
 }
 
 /// The `snapshot` op's reply body for one codec blob: the base64 state
@@ -1278,10 +1366,26 @@ pub struct ServeStats {
     pub accept_errors: AtomicU64,
 }
 
+/// One executor shard as the router sees it: the bounded request channel
+/// plus a gauge of requests enqueued or executing (incremented on a
+/// successful send, decremented when the reply lands), which prices the
+/// `retry_after_ms` hint when the queue sheds.
+struct Shard {
+    tx: ReqTx,
+    in_flight: AtomicUsize,
+}
+
+impl Shard {
+    fn new(tx: ReqTx) -> Shard {
+        Shard { tx, in_flight: AtomicUsize::new(0) }
+    }
+}
+
 /// Routes wire requests to executor shards and aggregates fan-out ops.
 pub struct Router {
-    shards: Vec<ReqTx>,
-    hlo: Option<ReqTx>,
+    shards: Vec<Shard>,
+    hlo: Option<Shard>,
+    queue_depth: usize,
     next_native_id: AtomicU64,
     next_hlo_id: AtomicU64,
     shutdown: AtomicBool,
@@ -1289,7 +1393,8 @@ pub struct Router {
 }
 
 /// Blocking send: waits for queue space. Reserved for the control ops
-/// (`stats`, `shutdown`) that must reach every shard even under load.
+/// (`stats`, `shutdown`, `drain`) that must reach their shard even under
+/// load.
 fn call_on(tx: &ReqTx, req: Request) -> Reply {
     let (rtx, rrx) = mpsc::channel();
     tx.send((req, rtx)).map_err(|_| anyhow!("executor thread gone"))?;
@@ -1298,21 +1403,25 @@ fn call_on(tx: &ReqTx, req: Request) -> Reply {
 
 /// Backpressured send: a full shard queue is refused on the spot with a
 /// structured `overloaded` error (and counted) instead of blocking the
-/// handler thread behind it. Session ops go through here.
-fn try_call_on(tx: &ReqTx, req: Request, stats: &ServeStats) -> Reply {
+/// handler thread behind it — the hint scales with the shard's current
+/// occupancy via [`retry_hint_ms`]. Session ops go through here.
+fn try_call_on(shard: &Shard, depth: usize, req: Request, stats: &ServeStats) -> Reply {
     let (rtx, rrx) = mpsc::channel();
-    match tx.try_send((req, rtx)) {
+    match shard.tx.try_send((req, rtx)) {
         Ok(()) => {}
         Err(mpsc::TrySendError::Full(_)) => {
             stats.overloaded_rejects.fetch_add(1, Ordering::Relaxed);
             return Err(Kinded::overloaded(
                 "executor queue full — back off and retry",
-                RETRY_AFTER_MS,
+                retry_hint_ms(shard.in_flight.load(Ordering::Relaxed), depth),
             ));
         }
         Err(mpsc::TrySendError::Disconnected(_)) => return Err(anyhow!("executor thread gone")),
     }
-    rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    shard.in_flight.fetch_add(1, Ordering::Relaxed);
+    let out = rrx.recv().map_err(|_| anyhow!("executor dropped reply"));
+    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+    out?
 }
 
 impl Router {
@@ -1373,7 +1482,7 @@ impl Router {
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
                 .spawn(move || run_executor(NativeFactory { channels }, rx, opts))?;
-            shards.push(tx);
+            shards.push(Shard::new(tx));
         }
         #[cfg(feature = "pjrt")]
         let hlo = match &cfg.artifacts {
@@ -1402,15 +1511,16 @@ impl Router {
                         Err(e) => eprintln!("[serve] hlo backend unavailable: {e:#}"),
                     },
                 )?;
-                Some(tx)
+                Some(Shard::new(tx))
             }
             None => None,
         };
         #[cfg(not(feature = "pjrt"))]
-        let hlo: Option<ReqTx> = None;
+        let hlo: Option<Shard> = None;
         Ok(Router {
             shards,
             hlo,
+            queue_depth,
             next_native_id: AtomicU64::new(first_native_id),
             next_hlo_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
@@ -1428,7 +1538,7 @@ impl Router {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    fn create_target(&self, backend: Backend) -> Result<(&ReqTx, u64)> {
+    fn create_target(&self, backend: Backend) -> Result<(&Shard, u64)> {
         match backend {
             Backend::Native => {
                 let id = self.next_native_id.fetch_add(1, Ordering::Relaxed);
@@ -1452,7 +1562,7 @@ impl Router {
         }
     }
 
-    fn route(&self, id: u64) -> Result<&ReqTx> {
+    fn route(&self, id: u64) -> Result<&Shard> {
         if id >= HLO_ID_BASE {
             self.hlo.as_ref().ok_or_else(|| anyhow!("no session {id}"))
         } else {
@@ -1460,7 +1570,7 @@ impl Router {
         }
     }
 
-    fn targets(&self) -> impl Iterator<Item = &ReqTx> + '_ {
+    fn targets(&self) -> impl Iterator<Item = &Shard> + '_ {
         self.shards.iter().chain(self.hlo.iter())
     }
 
@@ -1488,13 +1598,19 @@ impl Router {
                     }
                     None => self.create_target(backend)?,
                 };
-                match try_call_on(tx, Request::Create { id, kind }, &self.stats)? {
+                let req = Request::Create { id, kind };
+                match try_call_on(tx, self.queue_depth, req, &self.stats)? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to create"),
                 }
             }
             WireOp::Snapshot { id } => {
-                match try_call_on(self.route(id)?, Request::Snapshot { id }, &self.stats)? {
+                match try_call_on(
+                    self.route(id)?,
+                    self.queue_depth,
+                    Request::Snapshot { id },
+                    &self.stats,
+                )? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to snapshot"),
                 }
@@ -1525,34 +1641,63 @@ impl Router {
                     }
                 };
                 let tx = &self.shards[(id as usize) % self.shards.len()];
-                match try_call_on(tx, Request::Restore { id, blob }, &self.stats)? {
+                match try_call_on(tx, self.queue_depth, Request::Restore { id, blob }, &self.stats)?
+                {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to restore"),
                 }
             }
             WireOp::Step { id, x } => {
-                match try_call_on(self.route(id)?, Request::Step { id, x }, &self.stats)? {
+                match try_call_on(
+                    self.route(id)?,
+                    self.queue_depth,
+                    Request::Step { id, x },
+                    &self.stats,
+                )? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to step"),
                 }
             }
             WireOp::Steps { id, xs, n } => {
-                match try_call_on(self.route(id)?, Request::Steps { id, xs, n }, &self.stats)? {
+                match try_call_on(
+                    self.route(id)?,
+                    self.queue_depth,
+                    Request::Steps { id, xs, n },
+                    &self.stats,
+                )? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to steps"),
                 }
             }
             WireOp::Close { id } => {
-                match try_call_on(self.route(id)?, Request::Close { id }, &self.stats)? {
+                match try_call_on(
+                    self.route(id)?,
+                    self.queue_depth,
+                    Request::Close { id },
+                    &self.stats,
+                )? {
                     Response::Value(j) => Ok(j),
                     _ => bail!("unexpected reply to close"),
                 }
             }
+            WireOp::Drain { id } => {
+                // control-plane op (the fleet rebalancer's first
+                // migration step): a blocking send, so a busy queue
+                // delays the drain instead of shedding it
+                match call_on(&self.route(id)?.tx, Request::Drain { id })? {
+                    Response::Value(j) => Ok(j),
+                    _ => bail!("unexpected reply to drain"),
+                }
+            }
+            // answered by the router itself, no executor round-trip: a
+            // heartbeat must stay cheap and must not be shed by a full
+            // queue — reachability and capacity are different questions
+            WireOp::Ping => Ok(obj(vec![("ok", Json::Bool(true))])),
             WireOp::Stats => {
                 let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
                 let (mut quarantined_total, mut corrupt_total) = (0usize, 0usize);
                 let mut backend_totals: BTreeMap<String, (usize, usize)> = BTreeMap::new();
-                for tx in self.targets() {
+                for shard in self.targets() {
                     // a dead executor contributes nothing instead of
                     // failing the whole aggregate
                     if let Ok(Response::Stats {
@@ -1562,7 +1707,7 @@ impl Router {
                         quarantined,
                         corrupt_snapshots,
                         backends,
-                    }) = call_on(tx, Request::Stats)
+                    }) = call_on(&shard.tx, Request::Stats)
                     {
                         count += sessions;
                         bytes += state_bytes;
@@ -1608,8 +1753,8 @@ impl Router {
                 ]))
             }
             WireOp::Shutdown => {
-                for tx in self.targets() {
-                    let _ = call_on(tx, Request::Shutdown);
+                for shard in self.targets() {
+                    let _ = call_on(&shard.tx, Request::Shutdown);
                 }
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(obj(vec![("ok", Json::Bool(true))]))
@@ -1626,6 +1771,11 @@ pub enum WireOp {
     Snapshot { id: u64 },
     Restore { blob: Vec<u8>, id: Option<u64> },
     Close { id: u64 },
+    /// Spill + release one session on demand (fleet rebalance step 1).
+    Drain { id: u64 },
+    /// Liveness probe, answered by the router without touching any
+    /// executor — the fleet's heartbeat op.
+    Ping,
     Stats,
     Shutdown,
 }
@@ -1745,6 +1895,8 @@ fn parse_request(line: &str) -> Result<WireOp> {
             Ok(WireOp::Steps { id, xs, n })
         }
         "close" => Ok(WireOp::Close { id: j.usize_field("id")? as u64 }),
+        "drain" => Ok(WireOp::Drain { id: j.usize_field("id")? as u64 }),
+        "ping" => Ok(WireOp::Ping),
         "stats" => Ok(WireOp::Stats),
         "shutdown" => Ok(WireOp::Shutdown),
         other => Err(anyhow!("unknown op {other:?}")),
@@ -1804,7 +1956,7 @@ fn stream_steps_blocks(
 }
 
 /// One frame off the wire, or the reason there isn't one.
-enum Frame {
+pub(crate) enum Frame {
     Line(String),
     /// the line crossed `max_frame_bytes` before its newline — the rest
     /// of the frame is unread, so the connection cannot be resynced
@@ -1815,7 +1967,7 @@ enum Frame {
 /// Read one newline-terminated frame with a hard byte cap. The cap is
 /// enforced *while reading*: an attacker streaming an endless line is
 /// cut off after `max` bytes instead of growing a String until OOM.
-fn read_frame(reader: &mut BufReader<TcpStream>, max: usize) -> Frame {
+pub(crate) fn read_frame(reader: &mut BufReader<TcpStream>, max: usize) -> Frame {
     let mut line = Vec::new();
     loop {
         let buf = match reader.fill_buf() {
@@ -1854,7 +2006,7 @@ fn read_frame(reader: &mut BufReader<TcpStream>, max: usize) -> Frame {
 /// receive queue before it reads it. The cap — together with the
 /// connection's read timeout — bounds how long an abusive peer can hold
 /// the handler thread; past it the socket closes RST and all.
-fn drain_frame_tail(reader: &mut BufReader<TcpStream>) {
+pub(crate) fn drain_frame_tail(reader: &mut BufReader<TcpStream>) {
     let mut budget: usize = 1 << 20;
     while budget > 0 {
         let buf = match reader.fill_buf() {
@@ -1988,12 +2140,18 @@ impl Server {
     pub fn run(&self) -> Result<()> {
         let wake_addr = self.listener.local_addr().ok();
         let active = Arc::new(AtomicUsize::new(0));
+        // seeded jitter source for the accept-error backoff: per-process
+        // deterministic, so chaos runs replay while separate processes
+        // herding on a shared condition (a full fd table, say) spread out
+        let mut backoff_rng = Rng::new(0x0ACC_EB7E);
+        let mut consecutive_errors = 0u32;
         for stream in self.listener.incoming() {
             if self.router.is_shutdown() {
                 break;
             }
             match stream {
                 Ok(mut s) => {
+                    consecutive_errors = 0;
                     if let Some(cap) = self.max_conns {
                         // claim a slot up front — the CAS-free add is fine
                         // because over-claims are immediately released
@@ -2023,11 +2181,14 @@ impl Server {
                     });
                 }
                 Err(e) => {
+                    consecutive_errors = consecutive_errors.saturating_add(1);
                     self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
                     eprintln!("[serve] accept error: {e}");
                     // EMFILE and friends persist for a while: sleeping
-                    // beats spinning the core and flooding stderr
-                    std::thread::sleep(ACCEPT_ERROR_BACKOFF);
+                    // beats spinning the core and flooding stderr, and
+                    // the capped-exponential schedule backs further off
+                    // the longer the condition lasts
+                    std::thread::sleep(accept_backoff(consecutive_errors, &mut backoff_rng));
                 }
             }
         }
@@ -2060,7 +2221,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     println!(
         "[serve] listening on {} ({} native executor shard(s); {ttl}; {spill}; {conns}, \
          queue depth {}, frame cap {} bytes{fault}; line-delimited JSON; \
-         ops: create/step/steps/snapshot/restore/close/stats/shutdown)",
+         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/shutdown)",
         server.local_addr()?,
         cfg.shards.max(1),
         cfg.queue_depth.max(1),
@@ -2442,6 +2603,59 @@ mod tests {
     }
 
     #[test]
+    fn drain_spills_on_demand_and_is_idempotent() {
+        let x = vec![0.5f32, -1.0];
+        let replies = run_drained_mode(
+            vec![
+                Request::Create { id: 3, kind: "aaren".into() },
+                Request::Step { id: 3, x: x.clone() },
+                Request::Drain { id: 3 },          // spills + releases
+                Request::Stats,                    // 0 resident, 1 spilled
+                Request::Drain { id: 3 },          // already spilled: still ok
+                Request::Step { id: 3, x: x.clone() }, // lazy restore, t=2
+                Request::Drain { id: 9 },          // no such session
+                Request::Shutdown,
+            ],
+            None,
+            mem_spill(None),
+            true,
+        );
+        value_reply(&replies[0]);
+        assert_eq!(value_reply(&replies[1]).usize_field("t").unwrap(), 1);
+        let r = value_reply(&replies[2]);
+        assert_eq!(r.get("spilled"), Some(&Json::Bool(true)));
+        match replies[3].recv().unwrap().unwrap() {
+            Response::Stats { sessions, spilled, .. } => {
+                assert_eq!((sessions, spilled), (0, 1));
+            }
+            _ => panic!("expected stats"),
+        }
+        let r = value_reply(&replies[4]);
+        assert_eq!(r.get("spilled"), Some(&Json::Bool(false)));
+        assert_eq!(value_reply(&replies[5]).usize_field("t").unwrap(), 2);
+        let (kind, _) = kind_of_reply(replies[6].recv().unwrap());
+        assert_eq!(kind, crate::fault::KIND_NO_SESSION);
+        assert!(matches!(replies[7].recv().unwrap(), Ok(Response::ShuttingDown)));
+    }
+
+    #[test]
+    fn drain_without_a_spill_tier_refuses_and_spares_the_stream() {
+        let replies = run_drained(
+            vec![
+                Request::Create { id: 1, kind: "aaren".into() },
+                Request::Drain { id: 1 },
+                Request::Step { id: 1, x: vec![0.5, -1.0] }, // stream unharmed
+                Request::Shutdown,
+            ],
+            None,
+        );
+        value_reply(&replies[0]);
+        let err = replies[1].recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("spill"), "got: {err:#}");
+        assert_eq!(value_reply(&replies[2]).usize_field("t").unwrap(), 1);
+    }
+
+    #[test]
     fn duplicate_create_is_a_structured_error() {
         // a `create` landing on a live id must refuse, not clobber: the
         // original session keeps its stream position
@@ -2700,6 +2914,99 @@ mod tests {
     }
 
     #[test]
+    fn idle_compaction_remaps_bitwise_like_the_drain_edge_path() {
+        // the ROADMAP gap this closes: mass evictions leave a lane set
+        // fragmented until the next busy drain crosses the frag > live
+        // threshold. Idle wakes now compact at ANY fragmentation — this
+        // property pins down that the eager path is pure bookkeeping:
+        // survivor snapshots are bitwise unchanged, further steps match a
+        // boxed twin resumed from the pre-compaction snapshot, and the
+        // idle path ends in exactly the state the drain-edge path does.
+        let kinds = KernelKind::ALL;
+        crate::util::prop::check("idle_compaction_remap", 32, |rng| {
+            let seed = rng.next_u64();
+            let run = |idle: bool| -> Result<Vec<(u64, Vec<u8>, Vec<u32>)>, String> {
+                let mut rng = Rng::new(seed);
+                let d = 2 + rng.below(3);
+                let mut factory = NativeFactory { channels: d };
+                let mut lanes = LaneMap::new();
+                let mut sessions: HashMap<u64, Held> = HashMap::new();
+                let now = Instant::now();
+                let n = (6 + rng.below(10)) as u64;
+                for id in 1..=n {
+                    let kind = kinds[rng.below(kinds.len())];
+                    let s = factory.create(kind.wire_name()).map_err(|e| e.to_string())?;
+                    sessions.insert(id, hold(s, true, &mut lanes, now));
+                }
+                // advance every stream in place (exactly-representable
+                // inputs, so any remap slip shows as a bit flip)
+                for id in 1..=n {
+                    for t in 0..1 + rng.below(4) {
+                        let x: Vec<f32> = (0..d)
+                            .map(|c| ((id as usize + t * 7 + c * 3) % 13) as f32 * 0.25 - 1.5)
+                            .collect();
+                        let held = sessions.get_mut(&id).unwrap();
+                        match &mut held.slot {
+                            SessionSlot::Resident(r) => {
+                                let set =
+                                    lanes.sets.get_mut(&(r.kernel(), r.channels())).unwrap();
+                                r.step(set, &x).map_err(|e| e.to_string())?;
+                            }
+                            SessionSlot::Boxed(_) => unreachable!("scan kinds adopt lanes"),
+                        }
+                    }
+                }
+                // release a random subset — the mass-eviction shape
+                for id in 1..=n {
+                    if rng.below(2) == 0 && sessions.len() > 1 {
+                        sessions.remove(&id).unwrap().slot.release(&mut lanes);
+                    }
+                }
+                let mut pre: Vec<(u64, Vec<u8>)> = sessions
+                    .iter()
+                    .map(|(&id, h)| (id, h.slot.snapshot(&lanes).unwrap()))
+                    .collect();
+                pre.sort();
+                compact_lanes(&mut sessions, &mut lanes, idle);
+                let mut out = Vec::new();
+                for (id, pre_blob) in &pre {
+                    let held = sessions.get_mut(id).unwrap();
+                    let post = held.slot.snapshot(&lanes).map_err(|e| e.to_string())?;
+                    if &post != pre_blob {
+                        return Err(format!("session {id}: snapshot changed across compaction"));
+                    }
+                    let x: Vec<f32> = (0..d)
+                        .map(|c| ((c * 5 + *id as usize) % 13) as f32 * 0.25 - 1.5)
+                        .collect();
+                    let y = match &mut held.slot {
+                        SessionSlot::Resident(r) => {
+                            let set = lanes.sets.get_mut(&(r.kernel(), r.channels())).unwrap();
+                            r.step(set, &x).map_err(|e| e.to_string())?
+                        }
+                        SessionSlot::Boxed(_) => unreachable!(),
+                    };
+                    let snap = codec::decode(pre_blob).map_err(|e| e.to_string())?;
+                    let mut twin =
+                        NativeScanSession::import_state(&snap).map_err(|e| e.to_string())?;
+                    let ty = twin.step(&x).map_err(|e| e.to_string())?;
+                    let bits: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+                    if bits != ty.iter().map(|v| v.to_bits()).collect::<Vec<u32>>() {
+                        return Err(format!("session {id}: post-compaction step != boxed twin"));
+                    }
+                    out.push((*id, post, bits));
+                }
+                Ok(out)
+            };
+            let idle_path = run(true)?;
+            let edge_path = run(false)?;
+            if idle_path != edge_path {
+                return Err("idle-path end state diverged from the drain-edge path".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn graceful_shutdown_spills_resident_sessions_to_the_store() {
         // ROADMAP PR 4 follow-up: a shutdown with a spill tier configured
         // must spill what is resident instead of dropping it
@@ -2828,6 +3135,13 @@ mod tests {
         assert!(parse_request(&line).is_err());
         assert!(parse_request(r#"{"op":"restore","state":"!!!"}"#).is_err());
         assert!(parse_request(r#"{"op":"restore"}"#).is_err());
+        // the fleet control-plane ops: on-demand spill and liveness probe
+        match parse_request(r#"{"op":"drain","id":9}"#).unwrap() {
+            WireOp::Drain { id } => assert_eq!(id, 9),
+            _ => panic!("wrong variant"),
+        }
+        assert!(parse_request(r#"{"op":"drain"}"#).is_err());
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#).unwrap(), WireOp::Ping));
     }
 
     #[test]
@@ -3157,28 +3471,80 @@ mod tests {
     fn full_queue_is_refused_with_a_structured_overloaded_error() {
         use crate::fault::KIND_OVERLOADED;
         let (tx, rx) = mpsc::sync_channel(1);
+        let shard = Shard::new(tx);
         let stats = ServeStats::default();
         // wedge the queue: one envelope nobody drains
         let (rtx, _rrx) = mpsc::channel();
-        tx.try_send((Request::Stats, rtx)).unwrap();
-        let err = try_call_on(&tx, Request::Stats, &stats).unwrap_err();
+        shard.tx.try_send((Request::Stats, rtx)).unwrap();
+        let err = try_call_on(&shard, 1, Request::Stats, &stats).unwrap_err();
         let k = Kinded::of(&err).expect("overload must carry a kind");
         assert_eq!(k.kind, KIND_OVERLOADED);
+        // the hint is occupancy-priced: never below the floor, never
+        // above the cap (here nothing is in flight, so it is the floor)
         assert_eq!(k.retry_after_ms, Some(RETRY_AFTER_MS));
         assert_eq!(stats.overloaded_rejects.load(Ordering::Relaxed), 1);
         // the wire body carries kind + retry hint
         let body = error_body(&err);
         let (kind, _) = wire_error(&body).unwrap();
         assert_eq!(kind, KIND_OVERLOADED);
-        assert_eq!(
-            body.get("error").and_then(|e| e.get("retry_after_ms")).and_then(Json::as_f64),
-            Some(RETRY_AFTER_MS as f64)
-        );
+        let hint = body
+            .get("error")
+            .and_then(|e| e.get("retry_after_ms"))
+            .and_then(Json::as_f64)
+            .expect("overload reply carries a hint") as u64;
+        assert!((RETRY_AFTER_MS..=RETRY_AFTER_CAP_MS).contains(&hint), "hint {hint}");
         // a dead executor is a plain error, not an overload
         drop(rx);
-        let err = try_call_on(&tx, Request::Stats, &stats).unwrap_err();
+        let err = try_call_on(&shard, 1, Request::Stats, &stats).unwrap_err();
         assert!(Kinded::of(&err).is_none(), "got: {err:#}");
         assert_eq!(stats.overloaded_rejects.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_occupancy_and_stays_bounded() {
+        let depth = 64;
+        // at or below the queue bound the hint is exactly the floor
+        assert_eq!(retry_hint_ms(0, depth), RETRY_AFTER_MS);
+        assert_eq!(retry_hint_ms(depth, depth), RETRY_AFTER_MS);
+        // every extra quarter-queue beyond the bound doubles the hint
+        assert_eq!(retry_hint_ms(depth + depth / 4, depth), RETRY_AFTER_MS * 2);
+        assert_eq!(retry_hint_ms(depth + depth / 2, depth), RETRY_AFTER_MS * 4);
+        // monotone non-decreasing in occupancy, and capped
+        let mut prev = 0;
+        for occ in 0..depth * 8 {
+            let hint = retry_hint_ms(occ, depth);
+            assert!(hint >= prev, "occ {occ}: {hint} < {prev}");
+            assert!((RETRY_AFTER_MS..=RETRY_AFTER_CAP_MS).contains(&hint));
+            prev = hint;
+        }
+        assert_eq!(retry_hint_ms(depth * 8, depth), RETRY_AFTER_CAP_MS);
+        // a zero depth cannot divide-by-zero
+        assert!(retry_hint_ms(7, 0) <= RETRY_AFTER_CAP_MS);
+    }
+
+    #[test]
+    fn accept_backoff_is_capped_exponential_with_deterministic_jitter() {
+        // deterministic: the same seed yields the same schedule
+        let schedule = |seed: u64| -> Vec<u128> {
+            let mut rng = Rng::new(seed);
+            (1..=16u32).map(|n| accept_backoff(n, &mut rng).as_millis()).collect()
+        };
+        assert_eq!(schedule(7), schedule(7));
+        assert_ne!(schedule(7), schedule(8), "different seeds must jitter differently");
+        // each sleep stays within [base, 2*base) for its doubling step,
+        // and the whole schedule is bounded by twice the cap
+        let mut rng = Rng::new(3);
+        for n in 1..=24u32 {
+            let base = ACCEPT_BACKOFF_FLOOR_MS
+                .saturating_mul(1 << (n - 1).min(16))
+                .min(ACCEPT_BACKOFF_CAP_MS);
+            let ms = accept_backoff(n, &mut rng).as_millis() as u64;
+            assert!(ms >= base && ms < base * 2, "n={n}: {ms} outside [{base}, {})", base * 2);
+            assert!(ms < ACCEPT_BACKOFF_CAP_MS * 2);
+        }
+        // the very first error sleeps ~the floor, not the old fixed 50ms
+        let mut rng = Rng::new(11);
+        assert!(accept_backoff(1, &mut rng).as_millis() < (ACCEPT_BACKOFF_FLOOR_MS * 2) as u128);
     }
 
     #[test]

@@ -1,19 +1,25 @@
 //! Chaos suite: the fault-containment acceptance tests from the
-//! robustness issue, in the **default feature set** (no XLA).
+//! robustness issues, in the **default feature set** (no XLA).
 //!
-//! Two attack surfaces:
+//! Three attack surfaces:
 //!
 //! * In-process, a server under a seeded [`FaultPlan`] (IO errors, torn
-//!   writes, forced panics, delays) serves concurrent streaming clients.
-//!   The contract under fire is a DICHOTOMY: every stream either
-//!   completes bitwise against an offline control, or ends in a
-//!   structured error kind — never a hang (client IO timeouts enforce
-//!   this) and never a silently wrong output.
+//!   writes, forced panics, delays) serves concurrent streaming clients
+//!   across all four fold kernels. The contract under fire is a
+//!   DICHOTOMY: every stream either completes bitwise against an
+//!   offline control, or ends in a structured error kind — never a hang
+//!   (client IO timeouts enforce this) and never a silently wrong
+//!   output.
 //! * Out-of-process, a spawned server is SIGKILLed mid-load and
 //!   restarted on the same spill directory. Sessions whose snapshots hit
 //!   disk resume bitwise; everything else answers with a structured
 //!   error. With torn writes injected under the kill, damaged blobs must
 //!   surface as `corrupt_snapshot` — not as wrong outputs.
+//! * Fleet: three spawned backends behind an `aaren fleet` router, one
+//!   SIGKILLed under multi-kernel load. Every stream resumes bitwise on
+//!   a survivor (failover replay from the shared spill dir for the
+//!   victim's sessions, lazy restore for the survivors') or dies with a
+//!   structured kind.
 //!
 //! Fault decisions are drawn from per-site decision streams keyed on
 //! (seed, site tag), so the injected sequence at any one site is
@@ -25,8 +31,9 @@ use std::collections::BTreeSet;
 use std::time::Duration;
 
 use aaren::fault::{FaultPlan, KIND_CORRUPT_SNAPSHOT, KIND_NO_SESSION, KIND_QUARANTINED};
+use aaren::scan::KernelKind;
 use aaren::serve::server::{Client, ServeConfig, Server};
-use aaren::serve::{NativeAarenSession, StreamSession, RETRY_AFTER_MS};
+use aaren::serve::{NativeScanSession, StreamSession, RETRY_AFTER_CAP_MS, RETRY_AFTER_MS};
 use aaren::util::json::Json;
 
 /// Exactly-representable token values (multiples of 0.25 in a small
@@ -36,14 +43,26 @@ fn dyadic_token(i: usize, channels: usize) -> Vec<f32> {
     (0..channels).map(|c| ((i * 7 + c * 3) % 13) as f32 * 0.25 - 1.5).collect()
 }
 
-/// Offline control: the outputs an undisturbed Aaren stream over
+/// Offline control: the outputs an undisturbed `kind` stream over
 /// `tokens` must produce (exact, as f64 rows).
-fn control_outputs(channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<f64>> {
-    let mut session = NativeAarenSession::new(channels);
+fn control_outputs(kind: KernelKind, channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<f64>> {
+    let mut session = NativeScanSession::new_kernel(kind, channels);
     tokens
         .iter()
         .map(|x| session.step(x).unwrap().iter().map(|v| *v as f64).collect())
         .collect()
+}
+
+/// Per-kernel controls, indexed like [`KernelKind::ALL`].
+fn controls_per_kind(channels: usize, tokens: &[Vec<f32>]) -> Vec<Vec<Vec<f64>>> {
+    KernelKind::ALL.iter().map(|&k| control_outputs(k, channels, tokens)).collect()
+}
+
+/// The kernel a chaos session id streams on: ids cycle through the
+/// whole family so every backend sees quarantine, spill churn and kill
+/// recovery.
+fn kind_of_id(id: u64) -> KernelKind {
+    KernelKind::ALL[(id as usize + KernelKind::ALL.len() - 1) % KernelKind::ALL.len()]
 }
 
 fn step_line(id: u64, x: &[f32]) -> String {
@@ -92,6 +111,7 @@ enum Outcome {
 fn drive_stream(
     addr: &std::net::SocketAddr,
     id: u64,
+    kind: KernelKind,
     tokens: &[Vec<f32>],
     want: &[Vec<f64>],
     pause_every: usize,
@@ -99,7 +119,8 @@ fn drive_stream(
 ) -> Outcome {
     let mut client = Client::connect(addr).unwrap();
     client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
-    let r = client.call_raw(&format!(r#"{{"op":"create","kind":"aaren","id":{id}}}"#)).unwrap();
+    let create = format!(r#"{{"op":"create","kind":"{}","id":{id}}}"#, kind.wire_name());
+    let r = client.call_raw(&create).unwrap();
     assert!(r.get("error").is_none(), "create {id} failed: {r:?}");
     for (t, x) in tokens.iter().enumerate() {
         if pause_every > 0 && t > 0 && t % pause_every == 0 {
@@ -110,9 +131,17 @@ fn drive_stream(
             match aaren::serve::wire_error(&r) {
                 None => break Ok(r),
                 Some((kind, msg)) if kind == "overloaded" => {
-                    let hint = r.get("error").and_then(|e| e.usize_field("retry_after_ms").ok());
-                    assert_eq!(hint, Some(RETRY_AFTER_MS as usize), "no backoff hint: {msg}");
-                    std::thread::sleep(Duration::from_millis(RETRY_AFTER_MS));
+                    // the hint is occupancy-priced now: anywhere in
+                    // [floor, cap] is a valid shed, missing is not
+                    let hint = r
+                        .get("error")
+                        .and_then(|e| e.usize_field("retry_after_ms").ok())
+                        .unwrap_or_else(|| panic!("overloaded without a backoff hint: {msg}"));
+                    assert!(
+                        (RETRY_AFTER_MS as usize..=RETRY_AFTER_CAP_MS as usize).contains(&hint),
+                        "hint {hint}ms outside [{RETRY_AFTER_MS}, {RETRY_AFTER_CAP_MS}]"
+                    );
+                    std::thread::sleep(Duration::from_millis(hint as u64));
                 }
                 Some((kind, msg)) => break Err((kind, msg)),
             }
@@ -138,14 +167,16 @@ fn drive_stream(
 
 /// The in-process half of the acceptance criterion: a seeded fault plan
 /// (IO errors + torn spill writes + two forced panics + delays) under
-/// concurrent clients, TTL spills and an LRU resident cap. Every stream
-/// must complete bitwise or die structured; the forced panics must
-/// quarantine exactly their victims.
+/// concurrent clients, TTL spills and an LRU resident cap — with the
+/// session population cycling through ALL FOUR fold kernels, so
+/// quarantine and spill churn are exercised per backend. Every stream
+/// must complete bitwise against its own kernel's control or die
+/// structured; the forced panics must quarantine exactly their victims.
 #[test]
 fn seeded_chaos_streams_complete_bitwise_or_die_structured() {
     let channels = 4;
     let tokens: Vec<Vec<f32>> = (0..40).map(|i| dyadic_token(i, channels)).collect();
-    let want = control_outputs(channels, &tokens);
+    let controls = controls_per_kind(channels, &tokens);
 
     // rates are deliberately low: the forced panics guarantee faults
     // fire, while innocents survive often enough that "at least one
@@ -180,7 +211,7 @@ fn seeded_chaos_streams_complete_bitwise_or_die_structured() {
         let handles: Vec<_> = ids
             .chunks(3)
             .map(|chunk| {
-                let (tokens, want) = (&tokens, &want);
+                let (tokens, controls) = (&tokens, &controls);
                 scope.spawn(move || {
                     chunk
                         .iter()
@@ -188,9 +219,13 @@ fn seeded_chaos_streams_complete_bitwise_or_die_structured() {
                             // a 150ms pause every 10 tokens: well past
                             // the 60ms TTL, so the idle-wake sweep
                             // spills the session mid-stream each time
+                            let kind = kind_of_id(id);
+                            let want = &controls
+                                [KernelKind::ALL.iter().position(|&k| k == kind).unwrap()];
                             let out = drive_stream(
                                 &addr,
                                 id,
+                                kind,
                                 tokens,
                                 want,
                                 10,
@@ -279,13 +314,18 @@ fn spawn_server(extra: &[&str]) -> (ChildGuard, std::net::SocketAddr) {
 /// same spill directory, and demand the dichotomy — a session either
 /// resumes BITWISE from its spilled snapshot or answers a structured
 /// error; no third outcome (hang, wrong output, clobbered id) exists.
-/// `fault` optionally injects torn spill writes under the kill, which
-/// must then surface as `corrupt_snapshot`, never as silent damage.
+/// Sessions cycle through all four fold kernels, so every backend's
+/// spill blobs cross the kill/restart boundary. `fault` optionally
+/// injects torn spill writes under the kill, which must then surface as
+/// `corrupt_snapshot`, never as silent damage.
 fn kill_restart_dichotomy(tag: &str, fault: Option<&str>) {
     let channels = 4;
     let head: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(i, channels)).collect();
     let all: Vec<Vec<f32>> = (0..9).map(|i| dyadic_token(i, channels)).collect();
-    let want = control_outputs(channels, &all);
+    let controls = controls_per_kind(channels, &all);
+    let want_of = |id: u64| -> &Vec<Vec<f64>> {
+        &controls[KernelKind::ALL.iter().position(|&k| k == kind_of_id(id)).unwrap()]
+    };
     let dir = scratch_dir(tag);
     let dir_s = dir.to_str().unwrap().to_string();
 
@@ -296,9 +336,10 @@ fn kill_restart_dichotomy(tag: &str, fault: Option<&str>) {
     let (child, addr) = spawn_server(&args);
     let mut client = Client::connect(&addr).unwrap();
     client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
-    let ids: Vec<u64> = (1..=6).collect();
+    let ids: Vec<u64> = (1..=8).collect();
     for &id in &ids {
-        client.call(&format!(r#"{{"op":"create","kind":"aaren","id":{id}}}"#)).unwrap();
+        let kind = kind_of_id(id).wire_name();
+        client.call(&format!(r#"{{"op":"create","kind":"{kind}","id":{id}}}"#)).unwrap();
         for x in &head {
             client.call(&step_line(id, x)).unwrap();
         }
@@ -325,7 +366,7 @@ fn kill_restart_dichotomy(tag: &str, fault: Option<&str>) {
                 // resumed: it must stand EXACTLY where the spilled
                 // snapshot left it — head folded, token 8 just applied
                 assert_eq!(r.usize_field("t").unwrap(), 9, "session {id} resumed at wrong t");
-                assert_eq!(y_as_f64(&r), want[8], "session {id} resumed off the control");
+                assert_eq!(y_as_f64(&r), want_of(id)[8], "session {id} resumed off the control");
                 resumed += 1;
             }
             Some((kind, msg)) => {
@@ -339,14 +380,14 @@ fn kill_restart_dichotomy(tag: &str, fault: Option<&str>) {
     }
     if fault.is_none() {
         // no injected damage: everything the sweep spilled and the load
-        // did not retire (ids 3–6) resumes bitwise
-        assert!(resumed >= 4, "only {resumed} of 4 spilled sessions resumed");
+        // did not retire (ids 3–8) resumes bitwise
+        assert!(resumed >= 6, "only {resumed} of 6 spilled sessions resumed");
     }
     // fresh ids are seeded past every surviving snapshot, so recovery
     // cannot clobber a spilled stream
     let fresh =
         client.call(r#"{"op":"create","kind":"aaren"}"#).unwrap().usize_field("id").unwrap();
-    assert!(fresh as u64 > 6, "auto id {fresh} collides with recovered sessions");
+    assert!(fresh as u64 > 8, "auto id {fresh} collides with recovered sessions");
     client.call(r#"{"op":"shutdown"}"#).unwrap();
     drop(child);
     let _ = std::fs::remove_dir_all(&dir);
@@ -363,4 +404,177 @@ fn sigkill_with_torn_spill_writes_stays_structured() {
     // after the restart those blobs MUST answer corrupt_snapshot (and
     // the rest resume bitwise) — the lying-disk acceptance path
     kill_restart_dichotomy("torn", Some("seed=11,torn=0.5"));
+}
+
+/// Spawn an `aaren fleet` router over `members` and parse its banner.
+fn spawn_fleet(
+    members: &[std::net::SocketAddr],
+    spill: &str,
+) -> (ChildGuard, std::net::SocketAddr) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+    let members: Vec<String> = members.iter().map(|a| a.to_string()).collect();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_aaren"))
+        .args(["fleet", "--addr", "127.0.0.1:0", "--members", &members.join(",")])
+        .args(["--spill-dir", spill])
+        // an aggressive detector so the test's failover completes in
+        // well under a second: probe every 50ms, dead after 2 misses
+        .args(["--hb-interval-ms", "50", "--hb-timeout-ms", "250", "--hb-misses", "2"])
+        .args(["--io-timeout-secs", "20"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn aaren fleet");
+    let mut banner = String::new();
+    std::io::BufReader::new(child.stdout.take().expect("stdout piped"))
+        .read_line(&mut banner)
+        .expect("read fleet banner");
+    let addr = banner
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no address in banner {banner:?}"))
+        .parse::<std::net::SocketAddr>()
+        .expect("parse fleet listen address");
+    (ChildGuard(child), addr)
+}
+
+/// Step `id` through the fleet with a deadline-bounded retry loop:
+/// `overloaded` sheds (including the router's own failover-in-progress
+/// sheds) are retried after their hint; any other error is the stream's
+/// structured outcome.
+fn fleet_step(
+    client: &mut Client,
+    id: u64,
+    x: &[f32],
+    deadline: Duration,
+) -> Result<Json, (String, String)> {
+    let start = std::time::Instant::now();
+    loop {
+        let r = client.call_raw(&step_line(id, x)).unwrap();
+        match aaren::serve::wire_error(&r) {
+            None => return Ok(r),
+            Some((kind, msg)) if kind == "overloaded" => {
+                assert!(
+                    start.elapsed() < deadline,
+                    "session {id} still shedding after {deadline:?}: {msg}"
+                );
+                let hint = r
+                    .get("error")
+                    .and_then(|e| e.usize_field("retry_after_ms").ok())
+                    .unwrap_or_else(|| panic!("overloaded without a backoff hint: {msg}"));
+                std::thread::sleep(Duration::from_millis(hint as u64));
+            }
+            Some(err) => return Err(err),
+        }
+    }
+}
+
+/// THE fleet acceptance test (ROADMAP item 6): three backends behind a
+/// router, sessions across all four kernels, one backend SIGKILLed.
+/// Every stream must resume bitwise on a survivor — failover replay
+/// from the shared spill dir covers the victim's sessions, lazy restore
+/// covers the survivors' — or die with a structured kind. Never silent
+/// corruption, never a hang.
+#[test]
+fn fleet_sigkill_one_member_streams_resume_bitwise_or_die_structured() {
+    let channels = 4;
+    let head: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(i, channels)).collect();
+    let all: Vec<Vec<f32>> = (0..9).map(|i| dyadic_token(i, channels)).collect();
+    let controls = controls_per_kind(channels, &all);
+    let dir = scratch_dir("fleet");
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    // three backends sharing ONE spill dir — the failover replay source
+    let backend_args = ["--spill-dir", &dir_s, "--session-ttl-secs", "1", "--shards", "2"];
+    let mut backends: Vec<(ChildGuard, std::net::SocketAddr)> =
+        (0..3).map(|_| spawn_server(&backend_args)).collect();
+    let member_addrs: Vec<std::net::SocketAddr> = backends.iter().map(|(_, a)| *a).collect();
+    let (fleet, fleet_addr) = spawn_fleet(&member_addrs, &dir_s);
+
+    let mut client = Client::connect(&fleet_addr).unwrap();
+    client.set_io_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    // 16 streams across the 4 kernels, ids assigned by the fleet
+    let mut sessions: Vec<(u64, KernelKind)> = Vec::new();
+    for i in 0..16usize {
+        let kind = KernelKind::ALL[i % KernelKind::ALL.len()];
+        let r = client
+            .call(&format!(r#"{{"op":"create","kind":"{}"}}"#, kind.wire_name()))
+            .unwrap();
+        sessions.push((r.usize_field("id").unwrap() as u64, kind));
+    }
+    for &(id, _) in &sessions {
+        for x in &head {
+            fleet_step(&mut client, id, x, Duration::from_secs(5)).expect("head token failed");
+        }
+    }
+
+    // outlive the TTL so every backend's sweep spills every session to
+    // the shared dir, then SIGKILL one member with no warning
+    std::thread::sleep(Duration::from_millis(2500));
+    let victim_addr = member_addrs[0].to_string();
+    drop(backends.remove(0));
+
+    // every stream steps token 8: the detector (50ms probes, 2 misses)
+    // plus the replay must finish well inside the retry deadline
+    let mut resumed = 0;
+    for &(id, kind) in &sessions {
+        let want = &controls[KernelKind::ALL.iter().position(|&k| k == kind).unwrap()];
+        match fleet_step(&mut client, id, &all[8], Duration::from_secs(15)) {
+            Ok(r) => {
+                assert_eq!(r.usize_field("t").unwrap(), 9, "session {id} resumed at wrong t");
+                assert_eq!(y_as_f64(&r), want[8], "session {id} resumed off the control");
+                resumed += 1;
+            }
+            Err((kind, msg)) => {
+                let kinds = [KIND_NO_SESSION, KIND_CORRUPT_SNAPSHOT, KIND_QUARANTINED];
+                assert!(
+                    kinds.contains(&kind.as_str()),
+                    "session {id} died unstructured: {kind} ({msg})"
+                );
+            }
+        }
+    }
+    // every session was cleanly spilled before the kill, so the full
+    // population resumes: survivors' sessions lazily from their own
+    // stores, the victim's via the router's failover replay
+    assert_eq!(resumed, sessions.len(), "only {resumed}/{} streams resumed", sessions.len());
+
+    // the router's own view agrees: one dead member, a completed
+    // failover, and every failed-over session resumed
+    let fs = client.call(r#"{"op":"fleet_stats"}"#).unwrap();
+    let members = fs.get("members").and_then(Json::as_arr).expect("members array");
+    let health_of = |addr: &str| -> String {
+        members
+            .iter()
+            .find(|m| m.get("addr").and_then(Json::as_str) == Some(addr))
+            .and_then(|m| m.get("health").and_then(Json::as_str))
+            .expect("member health")
+            .to_string()
+    };
+    assert_eq!(health_of(&victim_addr), "dead", "victim not detected: {fs:?}");
+    for alive in &member_addrs[1..] {
+        assert_eq!(health_of(&alive.to_string()), "alive", "survivor misdiagnosed: {fs:?}");
+    }
+    assert_eq!(fs.usize_field("failovers").unwrap(), 1, "failover count: {fs:?}");
+    let failed_over = fs.usize_field("failed_over_sessions").unwrap();
+    assert!(failed_over >= 1, "the victim owned no sessions — ring balance broke: {fs:?}");
+    assert_eq!(
+        fs.usize_field("failover_resumed").unwrap(),
+        failed_over,
+        "failover lost sessions: {fs:?}"
+    );
+
+    // the fleet still takes new work after the loss
+    let fresh = client.call(r#"{"op":"create","kind":"mingru"}"#).unwrap();
+    let fresh_id = fresh.usize_field("id").unwrap() as u64;
+    assert!(sessions.iter().all(|&(id, _)| id != fresh_id), "fresh id collided");
+    fleet_step(&mut client, fresh_id, &all[0], Duration::from_secs(5)).expect("fresh stream");
+
+    // shutdown through the fleet stops the survivors too
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    drop(fleet);
+    drop(backends);
+    let _ = std::fs::remove_dir_all(&dir);
 }
