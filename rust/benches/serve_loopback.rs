@@ -30,8 +30,15 @@
 //! its `ns_per_iter` is delivered throughput under admission control
 //! and its `speedup_vs_sequential` field carries the shed rate
 //! (structured `overloaded` replies per delivered token) instead of a
-//! speedup. Pass `--quick` (CI) for a shorter run; AAREN_TOKENS /
-//! AAREN_CLIENTS override the workload size.
+//! speedup. The telemetry records: `steps_b16_p50` / `steps_b16_p99`
+//! carry the server's own `metrics`-op wire-latency percentiles for
+//! the batched scenario (ns_per_iter IS the percentile, speedup
+//! unused), and `metrics_overhead_b16` re-runs the batched scenario
+//! against a telemetry-on vs `--no-telemetry` server pair with
+//! `speedup_vs_sequential` carrying the on/off throughput ratio
+//! (acceptance: >= 0.95, instrumentation costs <= 5%). Pass `--quick`
+//! (CI) for a shorter run; AAREN_TOKENS / AAREN_CLIENTS override the
+//! workload size.
 
 use std::net::SocketAddr;
 use std::time::Instant;
@@ -261,6 +268,37 @@ fn main() {
             d: channels,
             ns_per_iter: 1e9 / rate,
             speedup_vs_sequential: ratio,
+        });
+    }
+
+    // phase 2c: the server's own view of the batched scenario — the
+    // `metrics` op's op_steps wire-latency histogram, populated while
+    // phases 2/2b streamed (every op_steps round-trip so far was a
+    // b=16 block). Both fields are OVERLOADED: ns_per_iter carries the
+    // percentile's bucket ceiling in ns per round-trip, and
+    // speedup_vs_sequential is unused (0.0)
+    let mut probe = Client::connect(&addr).expect("connect");
+    let m = probe.call(r#"{"op":"metrics"}"#).expect("metrics");
+    let steps_hist = m
+        .get("histograms")
+        .and_then(|h| h.get("op_steps"))
+        .cloned()
+        .expect("metrics reply lacks an op_steps histogram");
+    let p50 = steps_hist.usize_field("p50_ns").expect("p50_ns") as f64;
+    let p99 = steps_hist.usize_field("p99_ns").expect("p99_ns") as f64;
+    println!(
+        "serve_loopback: steps b={BATCH} wire latency  p50 {:.1} us  p99 {:.1} us \
+         (server-side histogram)",
+        p50 / 1e3,
+        p99 / 1e3
+    );
+    for (name, ns) in [("steps_b16_p50", p50), ("steps_b16_p99", p99)] {
+        records.push(BenchRecord {
+            name: name.to_string(),
+            n: tokens,
+            d: channels,
+            ns_per_iter: ns,
+            speedup_vs_sequential: 0.0,
         });
     }
 
@@ -537,6 +575,49 @@ fn main() {
         let _ = shutdown.call(r#"{"op":"shutdown"}"#);
         let _ = std::fs::remove_dir_all(&spill);
     }
+
+    // phase 10: telemetry overhead — the single-client batched scenario
+    // against a fresh default server (telemetry on) and a
+    // `--no-telemetry` twin. speedup_vs_sequential carries the on/off
+    // throughput ratio; the acceptance bar is >= 0.95 (instrumentation
+    // must cost <= 5% at b=16)
+    let on_cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        channels,
+        shards: 1,
+        ..ServeConfig::default()
+    };
+    let mut off_cfg = on_cfg.clone();
+    off_cfg.telemetry = false;
+    let on_server = Server::bind(&on_cfg).expect("bind telemetry-on");
+    let on_addr = on_server.local_addr().expect("addr");
+    std::thread::spawn(move || on_server.run());
+    let off_server = Server::bind(&off_cfg).expect("bind telemetry-off");
+    let off_addr = off_server.local_addr().expect("addr");
+    std::thread::spawn(move || off_server.run());
+
+    // a warmup pass each so neither server wins on cache warmth
+    let _ = stream_one(&on_addr, &step_body, (tokens / 4).max(BATCH), BATCH);
+    let _ = stream_one(&off_addr, &step_body, (tokens / 4).max(BATCH), BATCH);
+    let rate_on = stream_one(&on_addr, &step_body, tokens, BATCH);
+    let rate_off = stream_one(&off_addr, &step_body, tokens, BATCH);
+    let ratio = rate_on / rate_off;
+    println!(
+        "serve_loopback: telemetry b={BATCH} on {rate_on:>12.0} / off {rate_off:>12.0} tokens/s  \
+         ({ratio:.3}x{})",
+        if ratio >= 0.95 { "" } else { "  ** telemetry overhead above the 5% budget **" }
+    );
+    records.push(BenchRecord {
+        name: "metrics_overhead_b16".to_string(),
+        n: tokens,
+        d: channels,
+        ns_per_iter: 1e9 / rate_on,
+        speedup_vs_sequential: ratio,
+    });
+    let mut shutdown = Client::connect(&on_addr).expect("connect");
+    let _ = shutdown.call(r#"{"op":"shutdown"}"#);
+    let mut shutdown = Client::connect(&off_addr).expect("connect");
+    let _ = shutdown.call(r#"{"op":"shutdown"}"#);
 
     let out = std::path::Path::new("BENCH_serve.json");
     match write_records(out, &records) {

@@ -10,6 +10,7 @@
 //! ring, so the budgeted migrator drains it session by session.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use super::ring::{hash_str, Ring, RingEntry};
 
@@ -58,12 +59,23 @@ pub struct Member {
     pub health: Health,
     /// consecutive failed probes/requests since the last success
     pub misses: u32,
+    /// when the last successful probe/request landed — `None` until the
+    /// first success. `fleet_stats` reports its age as
+    /// `last_heartbeat_ms`, the operator's staleness-at-a-glance signal.
+    pub last_ok: Option<Instant>,
 }
 
 impl Member {
     pub fn new(addr: String, weight: u32) -> Member {
         let key = hash_str(&addr);
-        Member { addr, key, weight: weight.max(1), health: Health::Alive, misses: 0 }
+        Member {
+            addr,
+            key,
+            weight: weight.max(1),
+            health: Health::Alive,
+            misses: 0,
+            last_ok: None,
+        }
     }
 }
 
@@ -147,6 +159,7 @@ impl FleetState {
     pub fn note_success(&mut self, idx: usize) {
         if let Some(m) = self.members.get_mut(idx) {
             m.misses = 0;
+            m.last_ok = Some(Instant::now());
             if m.health == Health::Suspect {
                 m.health = Health::Alive;
             }
@@ -227,11 +240,14 @@ mod tests {
     #[test]
     fn failure_escalates_alive_suspect_dead_and_success_heals_suspect() {
         let mut s = three();
+        assert!(s.members[0].last_ok.is_none(), "no success recorded yet");
         assert!(!s.note_failure(0, 3));
         assert_eq!(s.members[0].health, Health::Suspect);
+        assert!(s.members[0].last_ok.is_none(), "failures must not stamp last_ok");
         s.note_success(0);
         assert_eq!(s.members[0].health, Health::Alive);
         assert_eq!(s.members[0].misses, 0);
+        assert!(s.members[0].last_ok.is_some(), "success stamps last_ok");
         assert!(!s.note_failure(0, 3));
         assert!(!s.note_failure(0, 3));
         assert!(s.note_failure(0, 3), "third miss must cross the threshold");

@@ -42,7 +42,15 @@
 //! -> {"op":"fleet_stats"}                       <- {"members":[...],"failovers":F,...}
 //! -> {"op":"fleet_join","addr":A[,"weight":W]}  <- {"ok":true,"members":N}
 //! -> {"op":"fleet_leave","addr":A}              <- {"ok":true,"draining":K}
+//! -> {"op":"metrics"}                           <- {"histograms":{...},"counters":{...},...}
 //! ```
+//!
+//! `metrics` is fleet-aware like `stats`: the router fans it out to
+//! every routable member, merges the log2-bucket histograms
+//! **bucket-wise** (percentiles re-derived from the merged buckets,
+//! never averaged), and appends its own `fleet_proxy` /
+//! `fleet_heartbeat` / `fleet_migrate` timings and flight-recorder
+//! events.
 //!
 //! Caveat (documented, not defended): the placement map lives in the
 //! router, so a router restart forgets which backend spilled which
@@ -64,6 +72,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::fault::FaultPlan;
+use crate::obs::Telemetry;
 use crate::persist::{DirStore, SnapshotStore};
 use crate::serve::server::accept_backoff;
 use crate::util::rng::Rng;
@@ -155,6 +164,10 @@ pub(crate) struct Shared {
     /// sharing the spill dir (seeded past any surviving snapshot files)
     pub next_id: AtomicU64,
     pub shutdown: AtomicBool,
+    /// the router's own telemetry domain: the proxy hop, heartbeat and
+    /// migration-leg histograms plus the fleet flight recorder. The
+    /// `metrics` op merges this with every member's reply.
+    pub tel: Arc<Telemetry>,
 }
 
 impl Shared {
@@ -202,6 +215,7 @@ impl Fleet {
                 stats: FleetStats::default(),
                 next_id: AtomicU64::new(next),
                 shutdown: AtomicBool::new(false),
+                tel: Arc::new(Telemetry::new(true)),
             }),
         })
     }
@@ -272,7 +286,7 @@ pub fn serve_fleet(cfg: &FleetConfig) -> Result<()> {
     println!(
         "[fleet] listening on {} ({} member(s); heartbeat every {}ms, timeout {}ms, \
          dead after {} misses; {spill}; migrate budget {}/tick{fault}; \
-         line-delimited JSON; extra ops: ping/fleet_stats/fleet_join/fleet_leave)",
+         line-delimited JSON; extra ops: ping/fleet_stats/fleet_join/fleet_leave/metrics)",
         fleet.local_addr()?,
         cfg.members.len(),
         cfg.hb_interval.as_millis(),

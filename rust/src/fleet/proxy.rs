@@ -30,9 +30,10 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::fault::{FaultSite, Kinded};
+use crate::obs::{self, Stage};
 use crate::serve::server::{
-    drain_frame_tail, error_body, obj, read_frame, wire_error, Frame, RETRY_AFTER_CAP_MS,
-    RETRY_AFTER_MS,
+    drain_frame_tail, error_body, obj, read_frame, wire_error, Frame, METRICS_MAX_EVENTS,
+    RETRY_AFTER_CAP_MS, RETRY_AFTER_MS,
 };
 use crate::util::json::Json;
 
@@ -304,11 +305,18 @@ pub(crate) fn fleet_stats_json(shared: &Shared) -> Json {
             .iter()
             .enumerate()
             .map(|(i, m)| {
+                // age of the last successful probe/request, or null
+                // before the first success — reachability staleness at
+                // a glance next to the Alive/Suspect/Leaving state
+                let last_hb = m
+                    .last_ok
+                    .map_or(Json::Null, |t| Json::Num(t.elapsed().as_millis() as f64));
                 obj(vec![
                     ("addr", Json::Str(m.addr.clone())),
                     ("health", Json::Str(m.health.wire_name().to_string())),
                     ("weight", Json::Num(m.weight as f64)),
                     ("misses", Json::Num(m.misses as f64)),
+                    ("last_heartbeat_ms", last_hb),
                     ("sessions", Json::Num(counts[i] as f64)),
                 ])
             })
@@ -326,6 +334,80 @@ pub(crate) fn fleet_stats_json(shared: &Shared) -> Json {
         ("migrations", Json::Num(s.migrations.load(Ordering::Relaxed) as f64)),
         ("proxied_requests", Json::Num(s.proxied_requests.load(Ordering::Relaxed) as f64)),
         ("routed_sheds", Json::Num(s.routed_sheds.load(Ordering::Relaxed) as f64)),
+    ])
+}
+
+/// Aggregate `metrics` across every routable member, the fleet way:
+/// the log2-bucket histograms merge **bucket-wise** and percentiles are
+/// re-derived from the merged buckets — summing or averaging a
+/// member's p50/p99 fields would be statistically meaningless.
+/// Counters sum. Flight-recorder events are tagged with the member
+/// address (each process has its own monotonic epoch, so cross-member
+/// timestamps are not comparable — events keep member order rather
+/// than pretending to a global clock). The router appends its own
+/// proxy/heartbeat/migration histograms and fleet lifecycle events,
+/// tagged `"member":"fleet"`.
+fn aggregate_metrics(shared: &Shared, conns: &mut ConnCache) -> Json {
+    let members: Vec<(usize, String)> = {
+        let state = shared.state.lock().expect("fleet state lock");
+        state
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.health.routable())
+            .map(|(i, m)| (i, m.addr.clone()))
+            .collect()
+    };
+    let mut maps = Vec::new();
+    let mut counters: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut events: Vec<Json> = Vec::new();
+    for (idx, addr) in members {
+        let reply = backend(conns, &addr, shared.cfg.io_timeout)
+            .and_then(|c| c.call(r#"{"op":"metrics"}"#));
+        let j = match reply {
+            Ok(j) => j,
+            Err(_) => {
+                conns.remove(&addr);
+                note_data_path_failure(shared, idx);
+                continue;
+            }
+        };
+        maps.push(obs::parse_histograms(&j));
+        if let Some(Json::Obj(cs)) = j.get("counters") {
+            for (k, v) in cs {
+                if let Json::Num(n) = v {
+                    *counters.entry(k.clone()).or_default() += n;
+                }
+            }
+        }
+        if let Some(Json::Arr(evs)) = j.get("events") {
+            for e in evs {
+                if let Json::Obj(map) = e {
+                    let mut map = map.clone();
+                    map.insert("member".to_string(), Json::Str(addr.clone()));
+                    events.push(Json::Obj(map));
+                }
+            }
+        }
+    }
+    maps.push(shared.tel.snapshots());
+    for e in shared.tel.recorder().recent() {
+        if let Json::Obj(mut map) = e.to_json() {
+            map.insert("member".to_string(), Json::Str("fleet".to_string()));
+            events.push(Json::Obj(map));
+        }
+    }
+    *counters.entry("events_logged".to_string()).or_default() +=
+        shared.tel.recorder().logged() as f64;
+    *counters.entry("events_dropped".to_string()).or_default() +=
+        shared.tel.recorder().dropped() as f64;
+    if events.len() > METRICS_MAX_EVENTS {
+        events.drain(..events.len() - METRICS_MAX_EVENTS);
+    }
+    obj(vec![
+        ("histograms", obs::histograms_json(&obs::merge_named(maps))),
+        ("counters", Json::Obj(counters.into_iter().map(|(k, v)| (k, Json::Num(v))).collect())),
+        ("events", Json::Arr(events)),
     ])
 }
 
@@ -449,6 +531,13 @@ fn handle_line(
             let agg = aggregate_stats(shared, conns);
             write_json(writer, &agg)
         }
+        // fleet-aware like `stats`: fan out, merge buckets, re-derive
+        // percentiles (must be an explicit arm — the id-routed default
+        // below would reject it for lacking an "id")
+        "metrics" => {
+            let agg = aggregate_metrics(shared, conns);
+            write_json(writer, &agg)
+        }
         "shutdown" => {
             // best-effort fan-out so `shutdown` through the fleet means
             // what it means against a single server: everything stops
@@ -554,6 +643,8 @@ fn forward(
         conns.remove(addr);
         Err(anyhow!("injected fault: backend connection dropped"))
     } else {
+        // the proxy hop: connect-or-reuse + forward + full reply relay
+        crate::obs::span!(shared.tel, Stage::FleetProxy);
         relay(conns, addr, shared.cfg.io_timeout, line, writer)
     };
     match outcome {

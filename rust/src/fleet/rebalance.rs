@@ -43,6 +43,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::fault::FaultSite;
+use crate::obs::Stage;
 use crate::persist::{DirStore, SnapshotStore};
 use crate::util::b64;
 
@@ -89,10 +90,14 @@ fn heartbeat_tick(shared: &Arc<Shared>, hb_faults: &mut Option<FaultSite>) {
     for (idx, addr) in probes {
         shared.stats.heartbeats.fetch_add(1, Ordering::Relaxed);
         let dropped = hb_faults.as_mut().is_some_and(|site| site.maybe_drop_heartbeat());
-        let ok = !dropped
-            && BackendConn::connect(&addr, Some(shared.cfg.hb_timeout))
+        let ok = !dropped && {
+            // a dropped probe never reaches the wire, so it does not
+            // belong in the heartbeat latency histogram
+            crate::obs::span!(shared.tel, Stage::FleetHeartbeat);
+            BackendConn::connect(&addr, Some(shared.cfg.hb_timeout))
                 .and_then(|mut c| c.call(r#"{"op":"ping"}"#))
-                .is_ok();
+                .is_ok()
+        };
         let died = {
             let mut state = shared.state.lock().expect("fleet state lock");
             if ok {
@@ -104,6 +109,9 @@ fn heartbeat_tick(shared: &Arc<Shared>, hb_faults: &mut Option<FaultSite>) {
             }
         };
         if died {
+            // the event id is the member INDEX (stable across the
+            // append-only member table), not a session id
+            shared.tel.event("member_dead", idx as u64);
             eprintln!("[fleet] member {addr} declared dead after {} misses", shared.cfg.hb_misses);
             failover(shared, idx);
         }
@@ -176,6 +184,7 @@ fn failover(shared: &Arc<Shared>, dead_idx: usize) {
         match replayed {
             Some(target) => {
                 state.placement.insert(*id, Placement::Assigned(target));
+                shared.tel.event("failover", *id);
                 resumed += 1;
             }
             // no snapshot (or no survivor): the id's future requests
@@ -245,6 +254,7 @@ fn migrate_tick(shared: &Arc<Shared>) {
             Ok(()) => {
                 state.placement.insert(mv.id, Placement::Assigned(mv.dst_idx));
                 shared.stats.migrations.fetch_add(1, Ordering::Relaxed);
+                shared.tel.event("migrate", mv.id);
             }
             Err(e) => {
                 eprintln!("[fleet] migration of session {} {}→{}: {e:#}", mv.id, mv.src, mv.dst);
@@ -260,6 +270,7 @@ fn migrate_tick(shared: &Arc<Shared>) {
 /// snapshot from the source, restore onto the target, close the
 /// source's copy.
 fn migrate_one(shared: &Arc<Shared>, conns: &mut ConnCache, mv: &Move) -> anyhow::Result<()> {
+    crate::obs::span!(shared.tel, Stage::FleetMigrate);
     let timeout = shared.cfg.io_timeout.or(Some(shared.cfg.hb_timeout));
     let src = backend(conns, &mv.src, timeout)?;
     // the drain doubles as an ordering barrier: it runs on the source's

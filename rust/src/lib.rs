@@ -41,6 +41,7 @@ pub mod data;
 pub mod fault;
 pub mod fleet;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -12,7 +12,9 @@
 //!           --spill-dir DIR          spill evicted sessions to disk instead of dropping
 //!           --max-resident-sessions N  LRU-spill beyond N resident (needs --spill-dir)
 //!           --scatter-drain          disable resident lanes (gather/scatter drains)
-//!           --smoke            loopback create/step/steps/stats round-trip, then exit
+//!           --metrics-interval-secs N  print a per-op latency digest every N seconds
+//!           --no-telemetry           disable histograms/spans/flight recorder
+//!           --smoke            loopback create/step/steps/stats/metrics round-trip, then exit
 //!   fleet   --addr host:port --members H1:P1,H2:P2,...   consistent-hash router
 //!           --weights W1,W2,...      per-member ring weights (default 1 each)
 //!           --spill-dir DIR          shared spill dir (the failover replay source)
@@ -94,6 +96,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let max_resident = args.usize("max-resident-sessions", 0);
     let max_conns = args.usize("max-conns", 0);
     let io_timeout_secs = args.u64("io-timeout-secs", 0);
+    let metrics_secs = args.u64("metrics-interval-secs", 0);
     // chaos testing only: a seeded fault-injection plan like
     // "seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2,panic-id=3"
     let fault = match args.flags.get("fault-plan") {
@@ -121,6 +124,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
             .then(|| std::time::Duration::from_secs(io_timeout_secs)),
         max_frame_bytes: args.usize("max-frame-bytes", defaults.max_frame_bytes),
         fault,
+        // telemetry is on by default; --no-telemetry turns every
+        // histogram/span/event site into a runtime no-op
+        telemetry: !args.bool("no-telemetry"),
+        // 0 (the default) prints no periodic digest
+        metrics_interval: (metrics_secs > 0)
+            .then(|| std::time::Duration::from_secs(metrics_secs)),
     };
     if cfg.max_resident_sessions.is_some() && cfg.spill_dir.is_none() {
         anyhow::bail!(
@@ -335,8 +344,10 @@ fn help() {
          --max-frame-bytes N   hard request-line size limit (default 16 MiB)\n                        \
          --fault-plan SPEC     seeded fault injection (chaos testing), e.g.\n                        \
                        seed=7,io=0.05,torn=0.2,panic=0.01,delay=0.5,delay-ms=2\n                        \
+         --metrics-interval-secs N  per-op latency digest to stderr every N seconds\n                        \
+         --no-telemetry        disable latency histograms + flight recorder\n                        \
          --smoke        loopback self-test, then exit\n                        \
-         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/shutdown\n                        \
+         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/metrics/shutdown\n                        \
          protocol: {{\"op\":\"create\",\"kind\":\"aaren\"|\"mingru\"|\"minlstm\"|\"avg_attn\"|\"tf\"\n                        \
                    [,\"backend\":\"native\"|\"hlo\"|<kernel>]}}\n  \
          fleet --addr H:P      consistent-hash router over N serve backends\n                        \
@@ -348,7 +359,7 @@ fn help() {
          --hb-misses N         misses before a member is dead (default 3)\n                        \
          --migrate-budget N    sessions migrated per tick (default 8)\n                        \
          --vnodes N            ring points per unit weight (default 64)\n                        \
-         extra ops: ping/fleet_stats/fleet_join/fleet_leave\n  \
+         extra ops: ping/fleet_stats/fleet_join/fleet_leave/metrics\n  \
          state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
          state import --addr H:P --file F [--id N]  restore a snapshot as a new session\n  \
          state inspect --file F                     decode a snapshot offline\n  \

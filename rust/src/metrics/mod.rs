@@ -23,11 +23,14 @@ impl OnlineStats {
         self.mean
     }
 
+    /// Sample variance (`m2 / (n − 1)`): these stats aggregate per-seed
+    /// results drawn from a larger population, so the population
+    /// divisor `n` would bias the spread low.
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
         } else {
-            self.m2 / self.n as f64
+            self.m2 / (self.n - 1) as f64
         }
     }
 
@@ -90,13 +93,25 @@ mod tests {
 
     #[test]
     fn online_stats_match_closed_form() {
+        // m2 = Σ(x − x̄)² = 32 over n = 8 samples: the SAMPLE variance
+        // is 32/7 (the population variance would be 32/8 = 4)
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         let mut s = OnlineStats::default();
         for x in xs {
             s.push(x);
         }
         assert!((s.mean() - 5.0).abs() < 1e-12);
-        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_stats_degenerate_counts_have_zero_variance() {
+        let mut s = OnlineStats::default();
+        assert_eq!(s.var(), 0.0);
+        s.push(3.0);
+        assert_eq!(s.var(), 0.0, "a single sample has no spread estimate");
+        assert!((s.mean() - 3.0).abs() < 1e-12);
     }
 
     #[test]

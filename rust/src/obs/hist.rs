@@ -1,0 +1,363 @@
+//! Lock-free log2-bucketed latency histograms.
+//!
+//! A [`Histogram`] is a fixed array of atomic `u64` counters — bucket
+//! `b ≥ 1` covers durations in `[2^(b-1), 2^b - 1]` nanoseconds, bucket
+//! 0 holds exact zeros, and the last bucket absorbs everything past the
+//! top boundary (2^39 ns ≈ 9 minutes — far beyond any per-request
+//! stage). Recording is three relaxed atomic ops (bucket increment,
+//! sum add, max update): no locks, no allocation, safe from any thread.
+//!
+//! Reading happens through [`HistSnapshot`], a plain (non-atomic) copy
+//! that is **mergeable** — bucketwise addition plus sum/max folding —
+//! so per-shard histograms combine into a server view and per-member
+//! views combine into a fleet view without ever sharing a cache line
+//! on the hot path. Percentiles (p50/p90/p99) are derived from the
+//! snapshot by a cumulative rank walk and answer with the bucket's
+//! upper boundary clamped to the observed max, which keeps
+//! `p50 ≤ p90 ≤ p99 ≤ max` by construction (the property tests pin
+//! this down). Bucketing means a percentile is exact only to its
+//! bucket's width (a factor of 2) — the right resolution for "where
+//! does the wall-clock go", not for microbenchmarking.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Bucket count: bucket 0 = exact zero, buckets 1..=39 cover
+/// `[2^(b-1), 2^b)` ns, the last bucket absorbs the tail.
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a duration in nanoseconds.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower boundary of bucket `b`, in nanoseconds.
+pub fn bucket_floor(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Inclusive upper boundary of bucket `b`, in nanoseconds (the last
+/// bucket is open-ended; its nominal boundary is still returned).
+pub fn bucket_ceil(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// A lock-free log2 latency histogram. All methods take `&self`.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one duration (nanoseconds). Three relaxed atomics; no
+    /// allocation, no locks — safe on the hottest path.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// A plain copy for reading/merging. Concurrent recording may be
+    /// mid-flight; each counter is individually consistent, which is
+    /// all a latency histogram needs.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed)),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A non-atomic histogram snapshot: mergeable, serializable, and the
+/// thing percentiles are derived from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Total recorded samples (derived from the buckets, so a merged
+    /// snapshot can never disagree with its own bucket mass).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Merge `other` in: bucketwise add, sum add, max fold. Merging is
+    /// commutative and associative, so shard → server → fleet rollups
+    /// are order-independent (property-tested).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (b, v) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += v;
+        }
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// The q-quantile (q in (0, 1]) in nanoseconds: the upper boundary
+    /// of the bucket holding the rank-⌈q·count⌉ sample, clamped to the
+    /// observed max. Exact to a factor of 2; 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (b, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_ceil(b).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// Wire form: counts, max, derived percentiles, and the non-empty
+    /// buckets as a sparse `{index: count}` object (raw buckets travel
+    /// so a reader — the fleet router — can re-merge and re-derive).
+    pub fn to_json(&self) -> Json {
+        let mut buckets = std::collections::BTreeMap::new();
+        for (b, n) in self.buckets.iter().enumerate() {
+            if *n > 0 {
+                buckets.insert(format!("{b}"), Json::Num(*n as f64));
+            }
+        }
+        let fields = vec![
+            ("count".to_string(), Json::Num(self.count() as f64)),
+            ("sum_ns".to_string(), Json::Num(self.sum_ns as f64)),
+            ("max_ns".to_string(), Json::Num(self.max_ns as f64)),
+            ("p50_ns".to_string(), Json::Num(self.percentile(0.50) as f64)),
+            ("p90_ns".to_string(), Json::Num(self.percentile(0.90) as f64)),
+            ("p99_ns".to_string(), Json::Num(self.percentile(0.99) as f64)),
+            ("buckets".to_string(), Json::Obj(buckets)),
+        ];
+        Json::Obj(fields.into_iter().collect())
+    }
+
+    /// Parse the `to_json` form back (the fleet merge path). Percentile
+    /// fields are ignored — they are derived, never merged — and the
+    /// count is recomputed from the buckets.
+    pub fn from_json(j: &Json) -> Option<HistSnapshot> {
+        let mut snap = HistSnapshot::default();
+        match j.get("buckets")? {
+            Json::Obj(map) => {
+                for (k, v) in map {
+                    let b: usize = k.parse().ok()?;
+                    if b >= BUCKETS {
+                        return None;
+                    }
+                    snap.buckets[b] = v.as_f64()? as u64;
+                }
+            }
+            _ => return None,
+        }
+        snap.sum_ns = j.get("sum_ns").and_then(Json::as_f64)? as u64;
+        snap.max_ns = j.get("max_ns").and_then(Json::as_f64)? as u64;
+        Some(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_cover_the_line_without_overlap() {
+        // exhaustive at the seams: every boundary value lands in its own
+        // bucket, its predecessor in the one below
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        for b in 1..BUCKETS - 1 {
+            let lo = bucket_floor(b);
+            let hi = bucket_ceil(b);
+            assert_eq!(bucket_index(lo), b, "floor of bucket {b}");
+            assert_eq!(bucket_index(hi), b, "ceil of bucket {b}");
+            assert_eq!(bucket_index(hi + 1), b + 1, "first value past bucket {b}");
+        }
+        // the tail bucket absorbs everything, u64::MAX included
+        assert_eq!(bucket_index(bucket_floor(BUCKETS - 1)), BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_boundaries_bracket_every_recorded_value() {
+        crate::util::prop::check("hist_bucket_brackets", 256, |rng| {
+            // skew toward small magnitudes so every bucket gets traffic
+            let v = rng.next_u64() >> (rng.next_u64() % 64) as u32;
+            let b = bucket_index(v);
+            if v < bucket_floor(b) {
+                return Err(format!("{v} below its bucket {b} floor"));
+            }
+            if b < BUCKETS - 1 && v > bucket_ceil(b) {
+                return Err(format!("{v} above its bucket {b} ceil"));
+            }
+            Ok(())
+        });
+    }
+
+    fn random_snapshot(rng: &mut Rng, samples: usize) -> HistSnapshot {
+        let h = Histogram::new();
+        for _ in 0..samples {
+            h.record(rng.next_u64() >> (32 + (rng.next_u64() % 28) as u32));
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        crate::util::prop::check("hist_merge_assoc", 64, |rng| {
+            let a = random_snapshot(rng, 1 + (rng.next_u64() % 40) as usize);
+            let b = random_snapshot(rng, 1 + (rng.next_u64() % 40) as usize);
+            let c = random_snapshot(rng, 1 + (rng.next_u64() % 40) as usize);
+            let mut ab_c = a.clone();
+            ab_c.merge(&b);
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            if ab_c != a_bc {
+                return Err("(a∪b)∪c != a∪(b∪c)".into());
+            }
+            let mut ba = b.clone();
+            ba.merge(&a);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            if ab != ba {
+                return Err("a∪b != b∪a".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_of_shards_equals_record_into_one() {
+        // the fleet-rollup guarantee: sharding the sample stream and
+        // merging the shard histograms is indistinguishable from
+        // recording everything into one histogram
+        crate::util::prop::check("hist_shard_merge", 64, |rng| {
+            let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+            let whole = Histogram::new();
+            for _ in 0..1 + (rng.next_u64() % 200) {
+                let v = rng.next_u64() >> (24 + (rng.next_u64() % 40) as u32);
+                shards[(rng.next_u64() % 4) as usize].record(v);
+                whole.record(v);
+            }
+            let mut merged = HistSnapshot::default();
+            for s in &shards {
+                merged.merge(&s.snapshot());
+            }
+            if merged != whole.snapshot() {
+                return Err("merged shard snapshots != single-histogram snapshot".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bounded_by_max() {
+        crate::util::prop::check("hist_percentile_monotone", 128, |rng| {
+            let snap = random_snapshot(rng, 1 + (rng.next_u64() % 300) as usize);
+            let (p50, p90, p99) =
+                (snap.percentile(0.50), snap.percentile(0.90), snap.percentile(0.99));
+            if !(p50 <= p90 && p90 <= p99 && p99 <= snap.max_ns) {
+                return Err(format!(
+                    "monotonicity broken: p50={p50} p90={p90} p99={p99} max={}",
+                    snap.max_ns
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn percentile_walks_known_mass_correctly() {
+        let h = Histogram::new();
+        // 90 samples at ~100ns (bucket 7: 64..=127), 10 at ~1000ns
+        // (bucket 10: 512..=1023)
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.percentile(0.50), 127);
+        assert_eq!(s.percentile(0.90), 127);
+        // rank 91 crosses into the 1000ns bucket, clamped to the max
+        assert_eq!(s.percentile(0.99), 1000);
+        assert_eq!(s.max_ns, 1000);
+        assert_eq!(s.sum_ns, 90 * 100 + 10 * 1000);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_buckets_sum_and_max() {
+        crate::util::prop::check("hist_json_roundtrip", 64, |rng| {
+            let snap = random_snapshot(rng, (rng.next_u64() % 50) as usize);
+            let j = snap.to_json();
+            let parsed = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+            let back = HistSnapshot::from_json(&parsed).ok_or("from_json failed")?;
+            if back != snap {
+                return Err("snapshot changed across the JSON round-trip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn malformed_json_is_refused_not_misread() {
+        assert!(HistSnapshot::from_json(&Json::Null).is_none());
+        let j = Json::parse(r#"{"buckets":{"99":1},"sum_ns":0,"max_ns":0}"#).unwrap();
+        assert!(HistSnapshot::from_json(&j).is_none(), "out-of-range bucket index");
+        let j = Json::parse(r#"{"buckets":3,"sum_ns":0,"max_ns":0}"#).unwrap();
+        assert!(HistSnapshot::from_json(&j).is_none(), "non-object buckets");
+        let j = Json::parse(r#"{"buckets":{}}"#).unwrap();
+        assert!(HistSnapshot::from_json(&j).is_none(), "missing sum/max");
+    }
+}

@@ -1,0 +1,331 @@
+//! Observability core: latency histograms, span timing, and the flight
+//! recorder — zero dependencies, zero allocation on the fast path.
+//!
+//! Three layers (see ARCHITECTURE.md, "Observability"):
+//!
+//! * [`hist`] — lock-free log2-bucketed latency [`Histogram`]s with
+//!   mergeable [`HistSnapshot`]s and derived p50/p90/p99/max.
+//! * spans — [`Telemetry::span`] returns a scoped-timer guard that
+//!   records its elapsed time into the stage's histogram on drop; the
+//!   [`crate::obs::span!`](crate::obs_span) macro is the one-line form.
+//!   When telemetry is disabled (runtime flag or the compiled-in
+//!   `obs-noop` feature) a span takes no clock reading at all.
+//! * [`recorder`] — a fixed-capacity ring of structured lifecycle
+//!   [`Event`](recorder::Event)s with monotonic timestamps.
+//!
+//! One [`Telemetry`] instance is owned per executor shard (plus one by
+//! the router and one by the fleet): recording never crosses a core,
+//! and the `metrics` wire op merges the per-shard snapshots on read.
+//! [`Stage`] names every instrumented site — per-op wire latency plus
+//! the internal stages of a request (queue wait, executor drain,
+//! kernel fold, spill encode/write, restore read/decode, and the
+//! fleet's proxy hop / heartbeat / migration legs).
+
+pub mod hist;
+pub mod recorder;
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+pub use hist::{HistSnapshot, Histogram, BUCKETS};
+pub use recorder::{Event, Recorder};
+
+use crate::util::json::Json;
+
+/// Milliseconds since the process's monotonic epoch (first use).
+pub fn monotonic_ms() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Every instrumented site. `Op*` stages record whole-request wire
+/// latency at the connection handler; the rest time internal legs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    OpCreate,
+    OpStep,
+    OpSteps,
+    OpSnapshot,
+    OpRestore,
+    OpClose,
+    OpDrain,
+    OpPing,
+    OpStats,
+    OpMetrics,
+    OpShutdown,
+    QueueWait,
+    ExecDrain,
+    KernelFold,
+    SpillEncode,
+    SpillWrite,
+    RestoreRead,
+    RestoreDecode,
+    FleetProxy,
+    FleetHeartbeat,
+    FleetMigrate,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 21] = [
+        Stage::OpCreate,
+        Stage::OpStep,
+        Stage::OpSteps,
+        Stage::OpSnapshot,
+        Stage::OpRestore,
+        Stage::OpClose,
+        Stage::OpDrain,
+        Stage::OpPing,
+        Stage::OpStats,
+        Stage::OpMetrics,
+        Stage::OpShutdown,
+        Stage::QueueWait,
+        Stage::ExecDrain,
+        Stage::KernelFold,
+        Stage::SpillEncode,
+        Stage::SpillWrite,
+        Stage::RestoreRead,
+        Stage::RestoreDecode,
+        Stage::FleetProxy,
+        Stage::FleetHeartbeat,
+        Stage::FleetMigrate,
+    ];
+
+    /// The histogram name this stage reports under (wire-stable).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::OpCreate => "op_create",
+            Stage::OpStep => "op_step",
+            Stage::OpSteps => "op_steps",
+            Stage::OpSnapshot => "op_snapshot",
+            Stage::OpRestore => "op_restore",
+            Stage::OpClose => "op_close",
+            Stage::OpDrain => "op_drain",
+            Stage::OpPing => "op_ping",
+            Stage::OpStats => "op_stats",
+            Stage::OpMetrics => "op_metrics",
+            Stage::OpShutdown => "op_shutdown",
+            Stage::QueueWait => "queue_wait",
+            Stage::ExecDrain => "exec_drain",
+            Stage::KernelFold => "kernel_fold",
+            Stage::SpillEncode => "spill_encode",
+            Stage::SpillWrite => "spill_write",
+            Stage::RestoreRead => "restore_read",
+            Stage::RestoreDecode => "restore_decode",
+            Stage::FleetProxy => "fleet_proxy",
+            Stage::FleetHeartbeat => "fleet_heartbeat",
+            Stage::FleetMigrate => "fleet_migrate",
+        }
+    }
+}
+
+/// One telemetry domain: a histogram per [`Stage`] plus a flight
+/// recorder. Shared behind an `Arc`; every method takes `&self`.
+pub struct Telemetry {
+    enabled: bool,
+    stages: Vec<Histogram>,
+    recorder: Recorder,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new(true)
+    }
+}
+
+impl Telemetry {
+    pub fn new(enabled: bool) -> Telemetry {
+        Telemetry {
+            enabled,
+            stages: (0..Stage::ALL.len()).map(|_| Histogram::new()).collect(),
+            recorder: Recorder::default(),
+        }
+    }
+
+    /// A permanently-off instance: spans skip the clock, events are
+    /// dropped — the runtime form of the `obs-noop` build.
+    pub fn disabled() -> Telemetry {
+        Telemetry::new(false)
+    }
+
+    /// False when disabled at runtime OR compiled out (`obs-noop`).
+    /// The feature check is a constant, so `obs-noop` builds fold every
+    /// instrumentation branch to a no-op at compile time.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        !cfg!(feature = "obs-noop") && self.enabled
+    }
+
+    /// Record one duration into a stage's histogram.
+    #[inline]
+    pub fn record(&self, stage: Stage, d: Duration) {
+        if self.is_enabled() {
+            self.stages[stage as usize].record(d.as_nanos().min(u64::MAX as u128) as u64);
+        }
+    }
+
+    /// A scoped timer: the guard records its lifetime into `stage` on
+    /// drop. Disabled telemetry never reads the clock.
+    #[inline]
+    pub fn span(&self, stage: Stage) -> Span<'_> {
+        Span { tel: self, stage, start: self.is_enabled().then(Instant::now) }
+    }
+
+    /// Append a flight-recorder event (dropped when disabled).
+    #[inline]
+    pub fn event(&self, kind: &'static str, id: u64) {
+        if self.is_enabled() {
+            self.recorder.push(kind, id);
+        }
+    }
+
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
+    }
+
+    /// Snapshot every non-empty stage histogram, keyed by stage name.
+    pub fn snapshots(&self) -> BTreeMap<String, HistSnapshot> {
+        let mut out = BTreeMap::new();
+        for stage in Stage::ALL {
+            let snap = self.stages[stage as usize].snapshot();
+            if !snap.is_empty() {
+                out.insert(stage.name().to_string(), snap);
+            }
+        }
+        out
+    }
+}
+
+/// The guard returned by [`Telemetry::span`]. Holds no allocation;
+/// dropping it records the elapsed time (if telemetry was enabled at
+/// creation).
+pub struct Span<'a> {
+    tel: &'a Telemetry,
+    stage: Stage,
+    start: Option<Instant>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            self.tel.record(self.stage, start.elapsed());
+        }
+    }
+}
+
+/// `obs::span!(telemetry, Stage::ExecDrain)` — time the rest of the
+/// enclosing scope into the stage's histogram.
+#[macro_export]
+macro_rules! obs_span {
+    ($tel:expr, $stage:expr) => {
+        let _obs_span_guard = $tel.span($stage);
+    };
+}
+
+pub use crate::obs_span as span;
+
+/// Merge any number of per-stage snapshot maps (per-shard, or parsed
+/// from fleet members' `metrics` replies) into one rollup.
+pub fn merge_named<I>(maps: I) -> BTreeMap<String, HistSnapshot>
+where
+    I: IntoIterator<Item = BTreeMap<String, HistSnapshot>>,
+{
+    let mut out: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+    for map in maps {
+        for (name, snap) in map {
+            out.entry(name).or_default().merge(&snap);
+        }
+    }
+    out
+}
+
+/// Serialize a merged snapshot map as the `metrics` op's `histograms`
+/// object.
+pub fn histograms_json(merged: &BTreeMap<String, HistSnapshot>) -> Json {
+    Json::Obj(merged.iter().map(|(name, s)| (name.clone(), s.to_json())).collect())
+}
+
+/// Parse a `metrics` reply's `histograms` object back into snapshots
+/// (unknown or malformed entries are skipped — a newer member's extra
+/// stages must not break an older router's rollup).
+pub fn parse_histograms(j: &Json) -> BTreeMap<String, HistSnapshot> {
+    let mut out = BTreeMap::new();
+    if let Some(Json::Obj(map)) = j.get("histograms") {
+        for (name, h) in map {
+            if let Some(snap) = HistSnapshot::from_json(h) {
+                out.insert(name.clone(), snap);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_unique_and_indexed_consistently() {
+        let mut seen = std::collections::HashSet::new();
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*stage as usize, i, "Stage::ALL order must match discriminants");
+            assert!(seen.insert(stage.name()), "duplicate stage name {}", stage.name());
+        }
+    }
+
+    #[test]
+    fn spans_record_into_their_stage() {
+        let tel = Telemetry::new(true);
+        {
+            crate::obs::span!(tel, Stage::ExecDrain);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        tel.record(Stage::QueueWait, Duration::from_micros(3));
+        let snaps = tel.snapshots();
+        assert_eq!(snaps["exec_drain"].count(), 1);
+        assert!(snaps["exec_drain"].max_ns >= 1_000_000, "span under-measured");
+        assert_eq!(snaps["queue_wait"].count(), 1);
+        assert!(!snaps.contains_key("kernel_fold"), "untouched stages must be omitted");
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let tel = Telemetry::disabled();
+        {
+            let _s = tel.span(Stage::KernelFold);
+        }
+        tel.record(Stage::QueueWait, Duration::from_secs(1));
+        tel.event("create", 1);
+        assert!(tel.snapshots().is_empty());
+        assert_eq!(tel.recorder().logged(), 0);
+    }
+
+    #[test]
+    fn merge_named_rolls_up_across_domains() {
+        let a = Telemetry::new(true);
+        let b = Telemetry::new(true);
+        a.record(Stage::OpStep, Duration::from_nanos(100));
+        a.record(Stage::OpStep, Duration::from_nanos(200));
+        b.record(Stage::OpStep, Duration::from_nanos(1000));
+        b.record(Stage::KernelFold, Duration::from_nanos(50));
+        let merged = merge_named([a.snapshots(), b.snapshots()]);
+        assert_eq!(merged["op_step"].count(), 3);
+        assert_eq!(merged["op_step"].max_ns, 1000);
+        assert_eq!(merged["kernel_fold"].count(), 1);
+    }
+
+    #[test]
+    fn histograms_json_round_trips_through_parse() {
+        let tel = Telemetry::new(true);
+        for ns in [10u64, 100, 1000, 10_000] {
+            tel.record(Stage::OpSteps, Duration::from_nanos(ns));
+        }
+        let merged = merge_named([tel.snapshots()]);
+        let wire = Json::Obj(
+            [("histograms".to_string(), histograms_json(&merged))].into_iter().collect(),
+        );
+        let parsed = Json::parse(&wire.to_string()).unwrap();
+        let back = parse_histograms(&parsed);
+        assert_eq!(back, merged);
+    }
+}

@@ -1,0 +1,140 @@
+//! The flight recorder: a fixed-capacity ring buffer of structured
+//! lifecycle events (session create / evict / spill / restore /
+//! quarantine / migrate / failover …) with monotonic timestamps and a
+//! global sequence number per recorder.
+//!
+//! Events are *rare* relative to token traffic — lifecycle edges, not
+//! per-request records — so a mutex-guarded `VecDeque` is the right
+//! trade: the histogram layer keeps the per-token path lock-free, and
+//! the recorder buys bounded memory plus exact loss accounting (the
+//! sequence counter keeps advancing when the ring wraps, so a dump can
+//! always report how many events it no longer holds).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Default ring capacity per recorder (per executor shard): enough to
+/// hold the recent lifecycle history of a busy shard, small enough to
+/// be dumped whole in one `metrics` reply.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// One structured flight-recorder entry. `ts_ms` is milliseconds since
+/// the process's monotonic epoch (comparable across recorders in one
+/// process, never wall-clock), `seq` is this recorder's dense sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub ts_ms: u64,
+    pub kind: &'static str,
+    pub id: u64,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let fields = vec![
+            ("seq".to_string(), Json::Num(self.seq as f64)),
+            ("ts_ms".to_string(), Json::Num(self.ts_ms as f64)),
+            ("kind".to_string(), Json::Str(self.kind.to_string())),
+            ("id".to_string(), Json::Num(self.id as f64)),
+        ];
+        Json::Obj(fields.into_iter().collect())
+    }
+}
+
+struct Ring {
+    next_seq: u64,
+    events: VecDeque<Event>,
+}
+
+/// A bounded ring of [`Event`]s. Push is O(1) amortized under a short
+/// mutex hold; overflow drops the oldest entry and is accounted for.
+pub struct Recorder {
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl Recorder {
+    pub fn new(cap: usize) -> Recorder {
+        Recorder {
+            cap: cap.max(1),
+            ring: Mutex::new(Ring { next_seq: 0, events: VecDeque::new() }),
+        }
+    }
+
+    /// Append one event, evicting the oldest past capacity.
+    pub fn push(&self, kind: &'static str, id: u64) {
+        let ts_ms = super::monotonic_ms();
+        let mut ring = self.ring.lock().expect("recorder lock");
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        ring.events.push_back(Event { seq, ts_ms, kind, id });
+        if ring.events.len() > self.cap {
+            ring.events.pop_front();
+        }
+    }
+
+    /// The retained events, oldest first.
+    pub fn recent(&self) -> Vec<Event> {
+        let ring = self.ring.lock().expect("recorder lock");
+        ring.events.iter().cloned().collect()
+    }
+
+    /// Total events ever pushed (including ones the ring dropped).
+    pub fn logged(&self) -> u64 {
+        self.ring.lock().expect("recorder lock").next_seq
+    }
+
+    /// Events the ring no longer holds.
+    pub fn dropped(&self) -> u64 {
+        let ring = self.ring.lock().expect("recorder lock");
+        ring.next_seq - ring.events.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_the_newest_events_and_counts_drops() {
+        let rec = Recorder::new(4);
+        for id in 0..10u64 {
+            rec.push("create", id);
+        }
+        let events = rec.recent();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events.iter().map(|e| e.id).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(rec.logged(), 10);
+        assert_eq!(rec.dropped(), 6);
+        // sequence numbers are dense and survive the wrap
+        assert_eq!(events.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn timestamps_are_monotone_within_a_recorder() {
+        let rec = Recorder::new(8);
+        rec.push("spill", 1);
+        rec.push("restore", 1);
+        let events = rec.recent();
+        assert!(events[0].ts_ms <= events[1].ts_ms);
+        assert_eq!(events[0].kind, "spill");
+    }
+
+    #[test]
+    fn event_json_carries_every_field() {
+        let e = Event { seq: 3, ts_ms: 17, kind: "quarantine", id: 9 };
+        let j = e.to_json();
+        assert_eq!(j.usize_field("seq").unwrap(), 3);
+        assert_eq!(j.usize_field("ts_ms").unwrap(), 17);
+        assert_eq!(j.str_field("kind").unwrap(), "quarantine");
+        assert_eq!(j.usize_field("id").unwrap(), 9);
+    }
+}

@@ -37,6 +37,7 @@
 //! -> {"op":"drain","id":N}                         <- {"ok":true,"spilled":true|false}
 //! -> {"op":"ping"}                                 <- {"ok":true}
 //! -> {"op":"stats"}                 <- {"sessions":K,"total_state_bytes":B,"spilled":S}
+//! -> {"op":"metrics"}               <- {"histograms":{...},"counters":{...},"events":[...]}
 //! -> {"op":"shutdown"}                             <- {"ok":true}
 //! ```
 //!
@@ -117,6 +118,25 @@
 //!   `mingru`, `minlstm`, `avg_attn`, `tf`, `hlo`) as
 //!   `{"resident":R,"spilled":S}`; spilled counts are read from each
 //!   blob's codec header.
+//! * `metrics` — the telemetry dump (see [`crate::obs`] and
+//!   ARCHITECTURE.md § Observability), answered by the router from
+//!   shared handles like `ping` — never shed by a full queue. The
+//!   `histograms` object maps every non-empty stage — per-op wire
+//!   latency (`op_step`, `op_steps`, …) and internal legs (`queue_wait`,
+//!   `exec_drain`, `kernel_fold`, `spill_encode`/`spill_write`,
+//!   `restore_read`/`restore_decode`) — to its log2-bucketed latency
+//!   histogram: `count`, `sum_ns`, `max_ns`, derived `p50_ns` /
+//!   `p90_ns` / `p99_ns`, and the sparse raw `buckets` so downstreams
+//!   (the fleet router) merge bucket-wise and re-derive percentiles
+//!   instead of averaging them. `counters` carries
+//!   `overloaded_rejects` / `accept_errors` plus flight-recorder totals
+//!   (`events_logged` / `events_dropped`); `events` holds the newest
+//!   lifecycle events (create / spill / restore / evict / quarantine)
+//!   across all shards, each stamped with its `shard`, capped at
+//!   [`server::METRICS_MAX_EVENTS`]. `--metrics-interval-secs N` prints
+//!   a compact per-op digest of the same data to stderr every N
+//!   seconds; `--no-telemetry` (or the `obs-noop` cargo feature) turns
+//!   every recording site into a no-op and leaves `histograms` empty.
 //! * `shutdown` — stop all executors and the accept loop. Executors
 //!   acknowledge with a first-class `Response::ShuttingDown` reply (the
 //!   wire sees `{"ok":true}`); requests that race a shutdown fail with
@@ -219,7 +239,7 @@ pub mod session;
 
 pub use server::{
     wire_error, Client, ExecutorOpts, ServeConfig, ServeStats, Server, SessionFactory, SpillTier,
-    MAX_STEPS_TOKENS, RETRY_AFTER_CAP_MS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
+    MAX_STEPS_TOKENS, METRICS_MAX_EVENTS, RETRY_AFTER_CAP_MS, RETRY_AFTER_MS, STEPS_REPLY_BLOCK,
 };
 pub use session::{
     backend_tag, kernel_of_tag, step_many_batched, step_many_resident, NativeAarenSession,

@@ -17,6 +17,10 @@
 //!                                                    "quarantined":Q,"corrupt_snapshots":C,
 //!                                                    "overloaded_rejects":O,"accept_errors":A,
 //!                                                    "backends":{<name>:{"resident":R,"spilled":P},…}}
+//!   -> {"op":"metrics"}                          <- {"histograms":{<stage>:{"count":N,"p50_ns":…,
+//!                                                    "p99_ns":…,"max_ns":…,"buckets":{…}},…},
+//!                                                    "counters":{…},"events":[{"seq":…,"ts_ms":…,
+//!                                                    "kind":K,"id":N,"shard":S},…]}
 //!   -> {"op":"shutdown"}                         <- {"ok":true}
 //!
 //! Error replies are structured:
@@ -112,6 +116,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::fault::{
     FaultPlan, FaultSite, FaultingStore, Kinded, KIND_CORRUPT_SNAPSHOT, KIND_QUARANTINED,
 };
+use crate::obs::{self, Stage, Telemetry};
 use crate::persist::codec;
 use crate::persist::store::{DirStore, SnapshotStore};
 use crate::scan::{KernelKind, LaneSet};
@@ -235,12 +240,14 @@ pub enum Response {
 
 pub type Reply = Result<Response>;
 
-/// A request plus the channel its reply goes back on. Executor queues
+/// A request plus the channel its reply goes back on and the instant it
+/// was enqueued (the executor prices its `queue_wait` histogram off the
+/// gap between that and the drain that picks it up). Executor queues
 /// are BOUNDED (`ServeConfig::queue_depth`): the router data-plane path
 /// uses `try_send` and sheds with a structured `overloaded` reply when
 /// the queue is full, so a stalled shard back-pressures its clients
 /// instead of buffering unboundedly.
-pub type Envelope = (Request, mpsc::Sender<Reply>);
+pub type Envelope = (Request, mpsc::Sender<Reply>, Instant);
 pub type ReqTx = mpsc::SyncSender<Envelope>;
 pub type ReqRx = mpsc::Receiver<Envelope>;
 
@@ -547,16 +554,30 @@ fn evict_session(
     sessions: &mut HashMap<u64, Held>,
     lanes: &mut LaneMap,
     spill: Option<&mut SpillTier>,
+    tel: &Telemetry,
     id: u64,
 ) {
     let Some(held) = sessions.remove(&id) else {
         return;
     };
     if let Some(tier) = spill {
-        match held.slot.snapshot(lanes).and_then(|blob| tier.store.put(id, &blob)) {
-            Ok(()) => {}
-            Err(e) => eprintln!("[serve] session {id} could not spill, dropping: {e:#}"),
+        let blob = {
+            crate::obs::span!(tel, Stage::SpillEncode);
+            held.slot.snapshot(lanes)
+        };
+        let stored = blob.and_then(|blob| {
+            crate::obs::span!(tel, Stage::SpillWrite);
+            tier.store.put(id, &blob)
+        });
+        match stored {
+            Ok(()) => tel.event("spill", id),
+            Err(e) => {
+                tel.event("evict", id);
+                eprintln!("[serve] session {id} could not spill, dropping: {e:#}");
+            }
         }
+    } else {
+        tel.event("evict", id);
     }
     held.slot.release(lanes);
 }
@@ -581,6 +602,7 @@ enum Presence {
 }
 
 /// Make `id` resident if it can be; see [`Presence`].
+#[allow(clippy::too_many_arguments)]
 fn ensure_resident<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
     spill: &mut Option<SpillTier>,
@@ -588,6 +610,7 @@ fn ensure_resident<F: SessionFactory>(
     resident: bool,
     lanes: &mut LaneMap,
     containment: &mut Containment,
+    tel: &Telemetry,
     id: u64,
     now: Instant,
 ) -> Presence {
@@ -597,7 +620,11 @@ fn ensure_resident<F: SessionFactory>(
     let Some(tier) = spill.as_mut() else {
         return Presence::Missing;
     };
-    let blob = match tier.store.get(id) {
+    let read = {
+        crate::obs::span!(tel, Stage::RestoreRead);
+        tier.store.get(id)
+    };
+    let blob = match read {
         Ok(Some(blob)) => blob,
         Ok(None) => return Presence::Missing,
         Err(e) => {
@@ -605,11 +632,16 @@ fn ensure_resident<F: SessionFactory>(
                 // the store already quarantined the damaged file itself
                 containment.corrupt_snapshots += 1;
                 containment.quarantine(id, "spilled snapshot failed verification".into(), now);
+                tel.event("quarantine", id);
             }
             return Presence::Failed(e);
         }
     };
-    match factory.restore(&blob) {
+    let restored = {
+        crate::obs::span!(tel, Stage::RestoreDecode);
+        factory.restore(&blob)
+    };
+    match restored {
         Ok(session) => {
             if let Err(e) = tier.store.remove(id) {
                 // the restored copy is authoritative; a blob the store
@@ -620,6 +652,7 @@ fn ensure_resident<F: SessionFactory>(
                 )));
             }
             sessions.insert(id, hold(session, resident, lanes, now));
+            tel.event("restore", id);
             Presence::Ready
         }
         Err(e) => {
@@ -630,6 +663,7 @@ fn ensure_resident<F: SessionFactory>(
             let _ = tier.store.remove(id);
             containment.corrupt_snapshots += 1;
             containment.quarantine(id, format!("spilled snapshot failed to restore: {e:#}"), now);
+            tel.event("quarantine", id);
             Presence::Failed(Kinded::corrupt_snapshot(format!(
                 "session {id} snapshot is corrupt: {e:#}"
             )))
@@ -648,11 +682,22 @@ pub struct ExecutorOpts {
     pub resident: bool,
     /// this shard's seeded fault-injection site (chaos runs only)
     pub fault: Option<FaultSite>,
+    /// this shard's telemetry domain: stage histograms plus the flight
+    /// recorder. The router keeps a clone and merges every shard's
+    /// snapshots on a `metrics` op. The default is a disabled instance
+    /// (spans never read the clock) so bare executors pay nothing.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl Default for ExecutorOpts {
     fn default() -> ExecutorOpts {
-        ExecutorOpts { session_ttl: None, spill: None, resident: true, fault: None }
+        ExecutorOpts {
+            session_ttl: None,
+            spill: None,
+            resident: true,
+            fault: None,
+            telemetry: Arc::new(Telemetry::disabled()),
+        }
     }
 }
 
@@ -687,7 +732,7 @@ impl Default for ExecutorOpts {
 /// `ExecutorOpts::fault` set, the seeded [`FaultSite`] injects step
 /// panics and delays at the same points a real fault would hit.
 pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: ExecutorOpts) {
-    let ExecutorOpts { session_ttl, mut spill, resident, mut fault } = opts;
+    let ExecutorOpts { session_ttl, mut spill, resident, mut fault, telemetry: tel } = opts;
     let mut sessions: HashMap<u64, Held> = HashMap::new();
     let mut lanes = LaneMap::new();
     let mut containment = Containment::new();
@@ -714,11 +759,19 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
         // the cheapest moment to pay for background lane compaction below
         let idle = batch.is_empty();
         let now = Instant::now();
+        // queue wait: the gap between a request's enqueue and the drain
+        // that picked it up — the congestion the retry hints price
+        for (_, _, enq) in &batch {
+            tel.record(Stage::QueueWait, now.saturating_duration_since(*enq));
+        }
+        // time the whole drain (sweep, dispatch, flush, cap enforcement
+        // and compaction); idle wakes are not drains
+        let _drain_span = (!idle).then(|| tel.span(Stage::ExecDrain));
         if let Some(ttl) = session_ttl {
             // a request already in hand keeps its session alive: refresh
             // before sweeping, so a slow-but-connected client can never
             // lose its stream state between enqueue and execution
-            for (req, _) in &batch {
+            for (req, _, _) in &batch {
                 if let Request::Step { id, .. }
                 | Request::Steps { id, .. }
                 | Request::Snapshot { id }
@@ -738,14 +791,14 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                 .map(|(&id, _)| id)
                 .collect();
             for id in expired {
-                evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
+                evict_session(&mut sessions, &mut lanes, spill.as_mut(), &tel, id);
             }
             // quarantine tombstones expire on the same clock, so an
             // abandoned (never-closed) quarantined id cannot leak forever
             containment.tombstones.retain(|_, entry| now.duration_since(entry.1) <= ttl);
         }
         let mut pending: Vec<PendingSteps> = Vec::new();
-        for (req, reply) in batch {
+        for (req, reply, _) in batch {
             match req {
                 Request::Step { id, x } => {
                     pending.push(PendingSteps { id, xs: x, n: 1, single: true, reply });
@@ -764,6 +817,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                         &mut spill,
                         &mut containment,
                         &mut fault,
+                        &tel,
                         resident,
                         now,
                     );
@@ -783,6 +837,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                             } else {
                                 factory.create(&kind).map(|session| {
                                     sessions.insert(id, hold(session, resident, &mut lanes, now));
+                                    tel.event("create", id);
                                     Response::Value(obj(vec![("id", Json::Num(id as f64))]))
                                 })
                             }
@@ -810,6 +865,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                                     "spilled snapshot failed verification".into(),
                                                     now,
                                                 );
+                                                tel.event("quarantine", id);
                                             }
                                             Err(e)
                                         }
@@ -827,8 +883,12 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                 Err(anyhow!("session {id} already exists"))
                             } else {
                                 codec::meta(&blob).and_then(|meta| {
-                                    let session = factory.restore(&blob)?;
+                                    let session = {
+                                        crate::obs::span!(tel, Stage::RestoreDecode);
+                                        factory.restore(&blob)?
+                                    };
                                     sessions.insert(id, hold(session, resident, &mut lanes, now));
+                                    tel.event("restore", id);
                                     Ok(Response::Value(obj(vec![
                                         ("id", Json::Num(id as f64)),
                                         ("kind", Json::Str(meta.backend.kind().to_string())),
@@ -878,7 +938,13 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                     // but on demand, and the reply only
                                     // claims success if the blob actually
                                     // landed in the store
-                                    evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
+                                    evict_session(
+                                        &mut sessions,
+                                        &mut lanes,
+                                        spill.as_mut(),
+                                        &tel,
+                                        id,
+                                    );
                                     if spill.as_ref().is_some_and(|t| t.store.contains(id)) {
                                         Ok(Response::Value(obj(vec![
                                             ("ok", Json::Bool(true)),
@@ -938,7 +1004,13 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                             if spill.is_some() {
                                 let ids: Vec<u64> = sessions.keys().copied().collect();
                                 for id in ids {
-                                    evict_session(&mut sessions, &mut lanes, spill.as_mut(), id);
+                                    evict_session(
+                                        &mut sessions,
+                                        &mut lanes,
+                                        spill.as_mut(),
+                                        &tel,
+                                        id,
+                                    );
                                 }
                             }
                             Ok(Response::ShuttingDown)
@@ -963,6 +1035,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
             &mut spill,
             &mut containment,
             &mut fault,
+            &tel,
             resident,
             now,
         );
@@ -978,7 +1051,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                     .min_by_key(|(_, held)| held.last_used)
                     .map(|(&id, _)| id)
                     .expect("resident count exceeds the cap, so the map is nonempty");
-                evict_session(&mut sessions, &mut lanes, spill.as_mut(), coldest);
+                evict_session(&mut sessions, &mut lanes, spill.as_mut(), &tel, coldest);
             }
         }
         compact_lanes(&mut sessions, &mut lanes, idle);
@@ -1064,6 +1137,7 @@ fn flush_steps<F: SessionFactory>(
     spill: &mut Option<SpillTier>,
     containment: &mut Containment,
     fault: &mut Option<FaultSite>,
+    tel: &Telemetry,
     resident: bool,
     now: Instant,
 ) {
@@ -1081,7 +1155,9 @@ fn flush_steps<F: SessionFactory>(
             replies[wi] = Some(Err(e));
             continue;
         }
-        match ensure_resident(sessions, spill, factory, resident, lanes, containment, p.id, now) {
+        let presence =
+            ensure_resident(sessions, spill, factory, resident, lanes, containment, tel, p.id, now);
+        match presence {
             Presence::Ready => {}
             Presence::Missing => {
                 replies[wi] = Some(Err(Kinded::no_session(p.id)));
@@ -1151,21 +1227,26 @@ fn flush_steps<F: SessionFactory>(
         };
         let xs = token_views[ri];
         let out = &mut outs[ri];
-        let result = isolate(|| {
-            if let Some(site) = fault.as_mut() {
-                site.maybe_delay();
-                // inside the isolation boundary, exactly where a real
-                // bug would unwind from
-                site.maybe_step_panic(run.id);
-            }
-            match &mut held.slot {
-                SessionSlot::Resident(r) => {
-                    let (kind, d) = (r.kernel(), r.channels());
-                    r.step_many(lanes.set_for(kind, d), xs, out)
+        let result = {
+            // one kernel_fold sample per isolated unit: the pure fold
+            // cost of a session's run, queueing and reply excluded
+            crate::obs::span!(tel, Stage::KernelFold);
+            isolate(|| {
+                if let Some(site) = fault.as_mut() {
+                    site.maybe_delay();
+                    // inside the isolation boundary, exactly where a real
+                    // bug would unwind from
+                    site.maybe_step_panic(run.id);
                 }
-                SessionSlot::Boxed(s) => s.step_many(xs, out),
-            }
-        });
+                match &mut held.slot {
+                    SessionSlot::Resident(r) => {
+                        let (kind, d) = (r.kernel(), r.channels());
+                        r.step_many(lanes.set_for(kind, d), xs, out)
+                    }
+                    SessionSlot::Boxed(s) => s.step_many(xs, out),
+                }
+            })
+        };
         // poison gate: parse already rejects non-finite INPUTS, so a
         // non-finite OUTPUT means the session's accumulator state went
         // bad (overflow, a backend bug) — every later step would be
@@ -1193,6 +1274,7 @@ fn flush_steps<F: SessionFactory>(
                     let held = sessions.remove(&run.id).expect("present above");
                     held.slot.release(lanes);
                     containment.quarantine(run.id, reason.clone(), now);
+                    tel.event("quarantine", run.id);
                     outs[ri].clear();
                     run_err[ri] = Some(Kinded::quarantined(format!(
                         "session {} is quarantined: {reason}",
@@ -1331,6 +1413,14 @@ pub struct ServeConfig {
     /// / panics on the executor step path. `None` (the default) injects
     /// nothing
     pub fault: Option<FaultPlan>,
+    /// record latency histograms, span timings and flight-recorder
+    /// events (the default). `false` (`--no-telemetry`) turns every
+    /// instrumentation site into a runtime no-op — spans never read the
+    /// clock; the `obs-noop` cargo feature removes them at compile time
+    pub telemetry: bool,
+    /// with `Some(d)` (`--metrics-interval-secs`), a background thread
+    /// prints a compact per-op latency digest line to stderr every `d`
+    pub metrics_interval: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -1349,6 +1439,8 @@ impl Default for ServeConfig {
             io_timeout: None,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             fault: None,
+            telemetry: true,
+            metrics_interval: None,
         }
     }
 }
@@ -1390,6 +1482,12 @@ pub struct Router {
     next_hlo_id: AtomicU64,
     shutdown: AtomicBool,
     stats: Arc<ServeStats>,
+    /// the router's own telemetry domain: whole-request wire latency
+    /// per op, recorded by the connection handlers
+    telemetry: Arc<Telemetry>,
+    /// every executor's telemetry (native shards in order, then the HLO
+    /// executor if one runs) — merged on a `metrics` op
+    shard_tel: Vec<Arc<Telemetry>>,
 }
 
 /// Blocking send: waits for queue space. Reserved for the control ops
@@ -1397,7 +1495,7 @@ pub struct Router {
 /// load.
 fn call_on(tx: &ReqTx, req: Request) -> Reply {
     let (rtx, rrx) = mpsc::channel();
-    tx.send((req, rtx)).map_err(|_| anyhow!("executor thread gone"))?;
+    tx.send((req, rtx, Instant::now())).map_err(|_| anyhow!("executor thread gone"))?;
     rrx.recv().map_err(|_| anyhow!("executor dropped reply"))?
 }
 
@@ -1407,7 +1505,7 @@ fn call_on(tx: &ReqTx, req: Request) -> Reply {
 /// occupancy via [`retry_hint_ms`]. Session ops go through here.
 fn try_call_on(shard: &Shard, depth: usize, req: Request, stats: &ServeStats) -> Reply {
     let (rtx, rrx) = mpsc::channel();
-    match shard.tx.try_send((req, rtx)) {
+    match shard.tx.try_send((req, rtx, Instant::now())) {
         Ok(()) => {}
         Err(mpsc::TrySendError::Full(_)) => {
             stats.overloaded_rejects.fetch_add(1, Ordering::Relaxed);
@@ -1452,6 +1550,7 @@ impl Router {
         let fault_plan = cfg.fault.as_ref().filter(|p| p.is_active());
         let queue_depth = cfg.queue_depth.max(1);
         let mut shards = Vec::with_capacity(nshards);
+        let mut shard_tel = Vec::with_capacity(nshards);
         for s in 0..nshards {
             let (tx, rx) = mpsc::sync_channel(queue_depth);
             let channels = cfg.channels;
@@ -1473,11 +1572,14 @@ impl Router {
                 }
                 None => None,
             };
+            let tel = Arc::new(Telemetry::new(cfg.telemetry));
+            shard_tel.push(Arc::clone(&tel));
             let opts = ExecutorOpts {
                 session_ttl: cfg.session_ttl,
                 spill,
                 resident,
                 fault: fault_plan.map(|plan| plan.site(&format!("exec-{s}"))),
+                telemetry: tel,
             };
             std::thread::Builder::new()
                 .name(format!("serve-exec-{s}"))
@@ -1490,6 +1592,8 @@ impl Router {
                 let (tx, rx) = mpsc::sync_channel(queue_depth);
                 let dir = dir.clone();
                 let ttl = cfg.session_ttl;
+                let tel = Arc::new(Telemetry::new(cfg.telemetry));
+                shard_tel.push(Arc::clone(&tel));
                 std::thread::Builder::new().name("serve-exec-hlo".to_string()).spawn(
                     // no spill tier: HLO sessions cannot snapshot (their
                     // state is device literals), so TTL expiry keeps its
@@ -1502,6 +1606,7 @@ impl Router {
                             let opts = ExecutorOpts {
                                 session_ttl: ttl,
                                 resident: false,
+                                telemetry: tel,
                                 ..Default::default()
                             };
                             run_executor(factory, rx, opts)
@@ -1525,6 +1630,8 @@ impl Router {
             next_hlo_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             stats: Arc::new(ServeStats::default()),
+            telemetry: Arc::new(Telemetry::new(cfg.telemetry)),
+            shard_tel,
         })
     }
 
@@ -1532,6 +1639,60 @@ impl Router {
     /// replies. The accept loop shares this handle.
     pub fn stats(&self) -> Arc<ServeStats> {
         Arc::clone(&self.stats)
+    }
+
+    /// Every stage histogram, merged across the router's own domain
+    /// (per-op wire latency) and all executor shards. Raw buckets
+    /// merge; percentiles are re-derived from the merged buckets.
+    fn merged_snapshots(&self) -> BTreeMap<String, crate::obs::HistSnapshot> {
+        obs::merge_named(
+            std::iter::once(self.telemetry.snapshots())
+                .chain(self.shard_tel.iter().map(|t| t.snapshots())),
+        )
+    }
+
+    /// The `metrics` op's reply: merged per-stage histograms, the
+    /// admission/flight counters, and the newest flight-recorder events
+    /// across all shards (each stamped with its shard index, ordered by
+    /// timestamp then sequence, capped at [`METRICS_MAX_EVENTS`]).
+    pub fn metrics_json(&self) -> Json {
+        let merged = self.merged_snapshots();
+        let (mut logged, mut dropped) = (0u64, 0u64);
+        let mut tagged: Vec<(u64, u64, Json)> = Vec::new();
+        for (s, tel) in self.shard_tel.iter().enumerate() {
+            logged += tel.recorder().logged();
+            dropped += tel.recorder().dropped();
+            for e in tel.recorder().recent() {
+                let Json::Obj(mut fields) = e.to_json() else {
+                    continue;
+                };
+                fields.insert("shard".to_string(), Json::Num(s as f64));
+                tagged.push((e.ts_ms, e.seq, Json::Obj(fields)));
+            }
+        }
+        tagged.sort_by_key(|t| (t.0, t.1));
+        if tagged.len() > METRICS_MAX_EVENTS {
+            let cut = tagged.len() - METRICS_MAX_EVENTS;
+            tagged.drain(..cut);
+        }
+        let events: Vec<Json> = tagged.into_iter().map(|(_, _, j)| j).collect();
+        let counters = obj(vec![
+            (
+                "overloaded_rejects",
+                Json::Num(self.stats.overloaded_rejects.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "accept_errors",
+                Json::Num(self.stats.accept_errors.load(Ordering::Relaxed) as f64),
+            ),
+            ("events_logged", Json::Num(logged as f64)),
+            ("events_dropped", Json::Num(dropped as f64)),
+        ]);
+        obj(vec![
+            ("histograms", obs::histograms_json(&merged)),
+            ("counters", counters),
+            ("events", Json::Arr(events)),
+        ])
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -1693,6 +1854,10 @@ impl Router {
             // heartbeat must stay cheap and must not be shed by a full
             // queue — reachability and capacity are different questions
             WireOp::Ping => Ok(obj(vec![("ok", Json::Bool(true))])),
+            // also router-answered: the telemetry handles are shared
+            // Arcs, so reading histograms never competes with the data
+            // plane for executor queue space
+            WireOp::Metrics => Ok(self.metrics_json()),
             WireOp::Stats => {
                 let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
                 let (mut quarantined_total, mut corrupt_total) = (0usize, 0usize);
@@ -1777,7 +1942,31 @@ pub enum WireOp {
     /// executor — the fleet's heartbeat op.
     Ping,
     Stats,
+    /// Telemetry dump: merged latency histograms, counters and recent
+    /// flight-recorder events — router-answered, like `ping`.
+    Metrics,
     Shutdown,
+}
+
+/// Flight-recorder events returned by one `metrics` reply at most —
+/// bounds the reply line even when many shards' rings are all full.
+pub const METRICS_MAX_EVENTS: usize = 128;
+
+/// The wire-latency histogram a request records into.
+fn op_stage(op: &WireOp) -> Stage {
+    match op {
+        WireOp::Create { .. } => Stage::OpCreate,
+        WireOp::Step { .. } => Stage::OpStep,
+        WireOp::Steps { .. } => Stage::OpSteps,
+        WireOp::Snapshot { .. } => Stage::OpSnapshot,
+        WireOp::Restore { .. } => Stage::OpRestore,
+        WireOp::Close { .. } => Stage::OpClose,
+        WireOp::Drain { .. } => Stage::OpDrain,
+        WireOp::Ping => Stage::OpPing,
+        WireOp::Stats => Stage::OpStats,
+        WireOp::Metrics => Stage::OpMetrics,
+        WireOp::Shutdown => Stage::OpShutdown,
+    }
 }
 
 fn parse_request(line: &str) -> Result<WireOp> {
@@ -1898,6 +2087,7 @@ fn parse_request(line: &str) -> Result<WireOp> {
         "drain" => Ok(WireOp::Drain { id: j.usize_field("id")? as u64 }),
         "ping" => Ok(WireOp::Ping),
         "stats" => Ok(WireOp::Stats),
+        "metrics" => Ok(WireOp::Metrics),
         "shutdown" => Ok(WireOp::Shutdown),
         other => Err(anyhow!("unknown op {other:?}")),
     }
@@ -2067,12 +2257,20 @@ fn handle_conn(
             // a steps block too large for one bounded reply streams back
             // in partial lines instead of materializing a giant one
             Ok(WireOp::Steps { id, xs, n }) if n > STEPS_REPLY_BLOCK => {
-                if !stream_steps_blocks(&mut writer, router, id, &xs, n) {
+                let alive = {
+                    // whole-request wire latency, reply streaming included
+                    crate::obs::span!(router.telemetry, Stage::OpSteps);
+                    stream_steps_blocks(&mut writer, router, id, &xs, n)
+                };
+                if !alive {
                     break;
                 }
             }
             parsed => {
-                let resp = parsed.and_then(|op| router.dispatch(op));
+                let resp = parsed.and_then(|op| {
+                    crate::obs::span!(router.telemetry, op_stage(&op));
+                    router.dispatch(op)
+                });
                 let body = match resp {
                     Ok(j) => j.to_string(),
                     Err(e) => error_body(&e).to_string(),
@@ -2221,13 +2419,45 @@ pub fn serve(cfg: &ServeConfig) -> Result<()> {
     println!(
         "[serve] listening on {} ({} native executor shard(s); {ttl}; {spill}; {conns}, \
          queue depth {}, frame cap {} bytes{fault}; line-delimited JSON; \
-         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/shutdown)",
+         ops: create/step/steps/snapshot/restore/close/drain/ping/stats/metrics/shutdown)",
         server.local_addr()?,
         cfg.shards.max(1),
         cfg.queue_depth.max(1),
         cfg.max_frame_bytes.max(1)
     );
+    if let Some(every) = cfg.metrics_interval {
+        let router = Arc::clone(&server.router);
+        std::thread::Builder::new().name("serve-metrics".to_string()).spawn(move || {
+            while !router.is_shutdown() {
+                std::thread::sleep(every);
+                eprintln!("{}", metrics_digest(&router));
+            }
+        })?;
+    }
     server.run()
+}
+
+/// One compact stderr line for the `--metrics-interval-secs` thread:
+/// every non-empty per-op histogram's count, p50 and p99 (µs).
+fn metrics_digest(router: &Router) -> String {
+    let merged = router.merged_snapshots();
+    let mut parts = Vec::new();
+    for (name, snap) in &merged {
+        if !name.starts_with("op_") {
+            continue;
+        }
+        parts.push(format!(
+            "{name} n={} p50={}us p99={}us",
+            snap.count(),
+            snap.percentile(0.50) / 1_000,
+            snap.percentile(0.99) / 1_000
+        ));
+    }
+    if parts.is_empty() {
+        "[metrics] no requests served yet".to_string()
+    } else {
+        format!("[metrics] {}", parts.join("; "))
+    }
 }
 
 /// Minimal blocking line-JSON client over one TCP connection — used by
@@ -2311,6 +2541,9 @@ impl Client {
 pub fn run_smoke(base: &ServeConfig) -> Result<()> {
     let mut cfg = base.clone();
     cfg.addr = "127.0.0.1:0".to_string();
+    // the smoke asserts the telemetry layer reports real histograms, so
+    // it must be on regardless of the caller's flags
+    cfg.telemetry = true;
     let channels = cfg.channels;
     let server = Server::bind(&cfg)?;
     let addr = server.local_addr()?;
@@ -2355,12 +2588,46 @@ pub fn run_smoke(base: &ServeConfig) -> Result<()> {
     for name in ["aaren", "mingru", "tf"] {
         ensure!(resident_of(name)? == 1, "expected 1 resident {name} session");
     }
+    // the telemetry layer must report well-formed, non-empty histograms
+    // for the traffic above: per-op and per-stage buckets present,
+    // percentiles ordered, flight recorder holding the creates
+    if !cfg!(feature = "obs-noop") {
+        let metrics = client.call(r#"{"op":"metrics"}"#)?;
+        let hist = |stage: &str| -> Result<&Json> {
+            metrics
+                .get("histograms")
+                .and_then(|h| h.get(stage))
+                .ok_or_else(|| anyhow!("metrics reply lacks histograms.{stage}"))
+        };
+        let steps = hist("op_steps")?;
+        let count = steps.usize_field("count")?;
+        ensure!(count >= 2, "op_steps histogram must hold the smoke's calls, got {count}");
+        let (p50, p99) = (steps.usize_field("p50_ns")?, steps.usize_field("p99_ns")?);
+        let max = steps.usize_field("max_ns")?;
+        ensure!(
+            p50 > 0 && p50 <= p99 && p99 <= max,
+            "op_steps percentiles malformed: p50={p50} p99={p99} max={max}"
+        );
+        match steps.get("buckets") {
+            Some(Json::Obj(b)) if !b.is_empty() => {}
+            _ => bail!("op_steps histogram reports no buckets"),
+        }
+        for stage in ["queue_wait", "exec_drain", "kernel_fold"] {
+            ensure!(hist(stage)?.usize_field("count")? > 0, "stage histogram {stage} is empty");
+        }
+        let logged = metrics
+            .get("counters")
+            .and_then(|c| c.get("events_logged"))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("metrics reply lacks counters.events_logged"))?;
+        ensure!(logged >= 3, "flight recorder must hold the smoke's creates, got {logged}");
+    }
     client.call(&format!(r#"{{"op":"close","id":{mingru}}}"#))?;
     client.call(r#"{"op":"shutdown"}"#)?;
     run.join().map_err(|_| anyhow!("server thread panicked"))??;
     println!(
         "[serve] smoke ok: aaren + mingru + tf sessions served on {addr}, \
-         aaren state constant at {} bytes",
+         aaren state constant at {} bytes, metrics histograms validated",
         aaren_bytes[0]
     );
     Ok(())
@@ -2465,7 +2732,7 @@ mod tests {
         let mut receivers = Vec::new();
         for req in requests {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             receivers.push(rrx);
         }
         drop(tx);
@@ -2574,7 +2841,7 @@ mod tests {
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             rrx.recv().unwrap()
         };
         call(Request::Create { id: 1, kind: "aaren".into() }).unwrap();
@@ -2701,7 +2968,7 @@ mod tests {
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             rrx.recv().unwrap()
         };
         call(Request::Create { id: 1, kind: "aaren".into() }).unwrap();
@@ -2808,7 +3075,7 @@ mod tests {
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             rrx.recv().unwrap()
         };
         for id in 1..=3u64 {
@@ -2885,7 +3152,7 @@ mod tests {
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             rrx.recv().unwrap()
         };
         for id in 1..=12u64 {
@@ -3385,7 +3652,7 @@ mod tests {
         });
         let call = |req: Request| -> Reply {
             let (rtx, rrx) = mpsc::channel();
-            tx.send((req, rtx)).unwrap();
+            tx.send((req, rtx, Instant::now())).unwrap();
             rrx.recv().unwrap()
         };
         for id in 1..=12u64 {
@@ -3475,7 +3742,7 @@ mod tests {
         let stats = ServeStats::default();
         // wedge the queue: one envelope nobody drains
         let (rtx, _rrx) = mpsc::channel();
-        shard.tx.try_send((Request::Stats, rtx)).unwrap();
+        shard.tx.try_send((Request::Stats, rtx, Instant::now())).unwrap();
         let err = try_call_on(&shard, 1, Request::Stats, &stats).unwrap_err();
         let k = Kinded::of(&err).expect("overload must carry a kind");
         assert_eq!(k.kind, KIND_OVERLOADED);

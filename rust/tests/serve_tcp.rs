@@ -921,3 +921,223 @@ fn oversized_frame_closes_only_the_offending_connection() {
     a.call(r#"{"op":"shutdown"}"#).unwrap();
     server.join().unwrap().unwrap();
 }
+
+/// The histogram object the `metrics` reply carries for `name`, if any.
+fn metrics_hist(reply: &Json, name: &str) -> Option<Json> {
+    reply.get("histograms").and_then(|h| h.get(name)).cloned()
+}
+
+fn hist_count(reply: &Json, name: &str) -> usize {
+    metrics_hist(reply, name)
+        .and_then(|h| h.get("count").and_then(Json::as_usize))
+        .unwrap_or(0)
+}
+
+#[test]
+fn metrics_op_reports_histograms_and_flight_events() {
+    // the observability acceptance at the wire: after a round-trip with a
+    // spill, a restore and a forced quarantine, the `metrics` op must
+    // report well-formed per-op and per-stage histograms (p50 ≤ p99 ≤
+    // max, non-empty buckets) and the flight recorder must hold the
+    // lifecycle events with the right session ids
+    if cfg!(feature = "obs-noop") {
+        return; // instrumentation compiled out — nothing to assert
+    }
+    aaren::fault::silence_injected_panics();
+    let channels = 3;
+    let spill = scratch_dir("metrics");
+    let mut cfg = base_cfg(channels, 2);
+    cfg.spill_dir = Some(spill.clone());
+    // session 1 (the first auto-assigned id) is the sacrificial panic
+    // victim; session 2 carries the real mingru workload
+    cfg.fault = Some(aaren::fault::FaultPlan::new(0x0B5).panic_on_step(1));
+    let (addr, server) = start_cfg(&cfg);
+    let mut client = Client::connect(&addr).unwrap();
+
+    let victim = client
+        .call(r#"{"op":"create","kind":"aaren"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
+    assert_eq!(victim, 1, "auto ids must start at 1 for the fault plan to hit");
+    let id = client
+        .call(r#"{"op":"create","kind":"mingru"}"#)
+        .unwrap()
+        .usize_field("id")
+        .unwrap();
+    let head: Vec<Vec<f32>> = (0..8).map(|i| dyadic_token(i, channels)).collect();
+    let refs: Vec<&[f32]> = head.iter().map(|x| x.as_slice()).collect();
+    client.call(&steps_line(id, &refs)).unwrap();
+
+    // the injected panic fires on the victim's first step and must come
+    // back as the structured quarantine kind — and land in the recorder
+    let r = client.call_raw(&step_line(victim, &dyadic_token(0, channels))).unwrap();
+    let (kind, _) = wire_error(&r).unwrap();
+    assert_eq!(kind, aaren::fault::KIND_QUARANTINED);
+
+    // drain spills the workload session; the next steps restores it
+    client.call(&format!(r#"{{"op":"drain","id":{id}}}"#)).unwrap();
+    let tail: Vec<Vec<f32>> = (0..5).map(|i| dyadic_token(30 + i, channels)).collect();
+    let refs: Vec<&[f32]> = tail.iter().map(|x| x.as_slice()).collect();
+    let reply = client.call(&steps_line(id, &refs)).unwrap();
+    assert_eq!(reply.usize_field("t").unwrap(), head.len() + tail.len());
+
+    let m = client.call(r#"{"op":"metrics"}"#).unwrap();
+
+    // per-op wire latency: two `steps` round-trips, well-formed shape
+    let steps = metrics_hist(&m, "op_steps").expect("metrics reply lacks op_steps");
+    assert!(steps.usize_field("count").unwrap() >= 2);
+    let p50 = steps.usize_field("p50_ns").unwrap();
+    let p99 = steps.usize_field("p99_ns").unwrap();
+    let max = steps.usize_field("max_ns").unwrap();
+    assert!(p50 > 0, "a TCP round-trip cannot take zero time");
+    assert!(p50 <= p99 && p99 <= max, "percentiles out of order: {p50} {p99} {max}");
+    let Some(Json::Obj(buckets)) = steps.get("buckets").cloned() else {
+        panic!("op_steps histogram lacks a buckets object");
+    };
+    assert!(!buckets.is_empty(), "op_steps buckets must be non-empty");
+
+    // internal stages: the executor, kernel and both spill legs all saw
+    // work this session, so their histograms must be populated
+    for stage in [
+        "queue_wait",
+        "exec_drain",
+        "kernel_fold",
+        "spill_encode",
+        "spill_write",
+        "restore_read",
+        "restore_decode",
+    ] {
+        assert!(hist_count(&m, stage) > 0, "stage {stage} recorded nothing");
+    }
+
+    // the flight recorder holds the lifecycle with the right ids
+    let events = m.get("events").and_then(Json::as_arr).expect("metrics reply lacks events");
+    for e in events {
+        for field in ["seq", "ts_ms", "kind", "id", "shard"] {
+            assert!(e.get(field).is_some(), "event {e} lacks the {field} field");
+        }
+    }
+    let has = |kind: &str, id: usize| {
+        events.iter().any(|e| {
+            e.get("kind").and_then(Json::as_str) == Some(kind)
+                && e.get("id").and_then(Json::as_usize) == Some(id)
+        })
+    };
+    assert!(has("create", victim) && has("create", id), "create events missing");
+    assert!(has("quarantine", victim), "the forced panic must log a quarantine event");
+    assert!(has("spill", id), "the drain must log a spill event");
+    assert!(has("restore", id), "the touch after the drain must log a restore event");
+
+    let logged = m
+        .get("counters")
+        .and_then(|c| c.get("events_logged"))
+        .and_then(Json::as_usize)
+        .expect("metrics reply lacks counters.events_logged");
+    assert!(logged >= 5, "expected at least 5 recorded events, got {logged}");
+
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}
+
+#[test]
+fn fleet_metrics_merges_member_histograms_bucket_wise() {
+    // fleet-level observability: the router's `metrics` must equal the
+    // bucket-wise merge of its members' histograms (counts sum, maxes
+    // max, percentiles re-derived — never summed), append its own
+    // proxy-hop timings, and `fleet_stats` must report per-member
+    // liveness (health state + last_heartbeat_ms age)
+    if cfg!(feature = "obs-noop") {
+        return;
+    }
+    let channels = 2;
+    let (a_addr, a_srv) = start(channels, 1);
+    let (b_addr, b_srv) = start(channels, 1);
+    let fcfg = aaren::fleet::FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        members: vec![a_addr.to_string(), b_addr.to_string()],
+        hb_interval: std::time::Duration::from_millis(50),
+        io_timeout: Some(std::time::Duration::from_secs(10)),
+        ..aaren::fleet::FleetConfig::default()
+    };
+    let fleet = aaren::fleet::Fleet::bind(&fcfg).unwrap();
+    let faddr = fleet.local_addr().unwrap();
+    let frun = std::thread::spawn(move || fleet.run());
+    let mut client = Client::connect(&faddr).unwrap();
+
+    // 8 sessions spread over the ring, one steps block each
+    let tokens: Vec<Vec<f32>> = (0..4).map(|i| dyadic_token(i, channels)).collect();
+    let refs: Vec<&[f32]> = tokens.iter().map(|x| x.as_slice()).collect();
+    let n_sessions = 8;
+    for _ in 0..n_sessions {
+        let id = client
+            .call(r#"{"op":"create","kind":"mingru"}"#)
+            .unwrap()
+            .usize_field("id")
+            .unwrap();
+        client.call(&steps_line(id, &refs)).unwrap();
+    }
+
+    // give the 50ms heartbeat loop time to stamp every member
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let fs = client.call(r#"{"op":"fleet_stats"}"#).unwrap();
+    let members = fs.get("members").and_then(Json::as_arr).expect("fleet_stats lacks members");
+    assert_eq!(members.len(), 2);
+    for m in members {
+        assert_eq!(m.str_field("health").unwrap(), "alive");
+        let age = m
+            .get("last_heartbeat_ms")
+            .and_then(Json::as_f64)
+            .expect("member lacks a numeric last_heartbeat_ms");
+        assert!(age >= 0.0, "heartbeat age cannot be negative: {age}");
+    }
+
+    // ground truth: each member's own metrics, asked directly
+    let mut member_counts = 0usize;
+    let mut member_max = 0usize;
+    for addr in [&a_addr, &b_addr] {
+        let mut c = Client::connect(addr).unwrap();
+        let direct = c.call(r#"{"op":"metrics"}"#).unwrap();
+        member_counts += hist_count(&direct, "op_steps");
+        if let Some(h) = metrics_hist(&direct, "op_steps") {
+            member_max = member_max.max(h.usize_field("max_ns").unwrap_or(0));
+        }
+    }
+    assert_eq!(member_counts, n_sessions, "every steps block lands on exactly one member");
+
+    let merged = client.call(r#"{"op":"metrics"}"#).unwrap();
+    let steps = metrics_hist(&merged, "op_steps").expect("fleet metrics lacks op_steps");
+    assert_eq!(
+        steps.usize_field("count").unwrap(),
+        member_counts,
+        "merged count must be the sum of the member counts"
+    );
+    assert_eq!(
+        steps.usize_field("max_ns").unwrap(),
+        member_max,
+        "merged max must be the max of the member maxes"
+    );
+    let p50 = steps.usize_field("p50_ns").unwrap();
+    let p99 = steps.usize_field("p99_ns").unwrap();
+    assert!(p50 <= p99 && p99 <= member_max, "re-derived percentiles out of order");
+
+    // the router's own domain rides along: every create/steps crossed
+    // the proxy hop
+    assert!(
+        hist_count(&merged, "fleet_proxy") >= 2 * n_sessions,
+        "fleet_proxy histogram missing or undercounted"
+    );
+    // member events carry their origin tag
+    let events = merged.get("events").and_then(Json::as_arr).expect("fleet metrics lacks events");
+    assert!(events.iter().all(|e| e.get("member").is_some()), "untagged fleet event");
+    assert!(
+        events.iter().any(|e| e.get("kind").and_then(Json::as_str) == Some("create")),
+        "member create events must surface in the fleet rollup"
+    );
+
+    client.call(r#"{"op":"shutdown"}"#).unwrap();
+    frun.join().unwrap().unwrap();
+    a_srv.join().unwrap().unwrap();
+    b_srv.join().unwrap().unwrap();
+}
