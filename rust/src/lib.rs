@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fault;
 pub mod fleet;
+pub mod loadgen;
 pub mod metrics;
 pub mod obs;
 pub mod persist;

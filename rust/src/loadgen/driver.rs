@@ -1,0 +1,565 @@
+//! Open-loop trace replay against a live server (or fleet router).
+//!
+//! The driver takes the pure arrival trace from [`crate::loadgen::trace`]
+//! and replays it over the unchanged wire protocol: `workers` threads
+//! each own one TCP connection and the slots with `slot % workers ==
+//! worker` (the trace is globally time-sorted, so each worker sees its
+//! slots' lifecycles in order). Replay is as fast as the server admits
+//! — the virtual timestamps fix WHICH ops arrive in WHAT order, never
+//! wall-clock pacing — and `overloaded` sheds are honored with a seeded
+//! capped-exponential [`Backoff`] that treats the server's
+//! `retry_after_ms` hint as a floor. Nothing about a reply ever feeds
+//! back into the trace: that is the open-loop contract, and it is what
+//! makes two runs with the same seed land the same ops (and therefore
+//! bitwise-identical session states) on two different servers.
+//!
+//! With no `--addr` the driver self-spawns a loopback server tuned to
+//! force the full residency cycle: a resident-session cap far below the
+//! live population plus a short TTL, so sessions continuously spill to
+//! the store and lazily restore on their next burst while the run
+//! measures it (cumulative `spills`/`restores` from the `stats` op,
+//! `op_steps` latency percentiles from the `metrics` op).
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::loadgen::trace::{schedule, Arrival, ArrivalKind, OpKind, TokenBank, TraceConfig};
+use crate::serve::{wire_error, Client, ServeConfig, Server};
+use crate::util::bench::BenchRecord;
+use crate::util::rng::Rng;
+
+/// Deterministic capped-exponential backoff for `overloaded` sheds.
+/// The schedule is a pure function of the seed and the attempt count;
+/// a `retry_after_ms` hint from the server acts as a FLOOR on the next
+/// delay (never ignored, even past the exponential cap).
+pub struct Backoff {
+    rng: Rng,
+    attempt: u32,
+}
+
+/// First retry delay, ms.
+pub const BACKOFF_FLOOR_MS: u64 = 1;
+/// Ceiling of the exponential component, ms (hints may exceed it).
+pub const BACKOFF_CAP_MS: u64 = 500;
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff { rng: Rng::new(seed), attempt: 0 }
+    }
+
+    /// Delay before the next retry. Doubling from the floor, capped,
+    /// plus up to +50% seeded jitter; `hint_ms` (the server's
+    /// `retry_after_ms`) floors the result.
+    pub fn next_delay(&mut self, hint_ms: Option<u64>) -> Duration {
+        let expo =
+            BACKOFF_FLOOR_MS.saturating_mul(1u64 << self.attempt.min(16)).min(BACKOFF_CAP_MS);
+        let base = expo.max(hint_ms.unwrap_or(0));
+        let jitter = (self.rng.uniform() * base as f64 * 0.5) as u64;
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_millis(base + jitter)
+    }
+
+    /// A delivered op ends the burst of sheds.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// One capacity run's shape. `trace()` derives the pure arrival trace;
+/// everything else configures replay and (optionally) the self-spawned
+/// loopback server.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// target server; `None` self-spawns a loopback server with a
+    /// spill tier and resident cap sized to force residency cycling
+    pub addr: Option<String>,
+    pub sessions: usize,
+    pub workers: usize,
+    /// `steps` bursts per session
+    pub bursts: usize,
+    /// tokens per burst
+    pub batch: usize,
+    pub channels: usize,
+    pub kind: ArrivalKind,
+    pub seed: u64,
+    /// every `keep_every`-th slot stays open for post-run sampling
+    pub keep_every: usize,
+    /// resident-session cap for the self-spawned server (`None` →
+    /// `max(sessions/16, 64)`); ignored with `--addr`
+    pub max_resident: Option<usize>,
+    /// merge `capacity_*` records into this `BENCH_*.json` trail
+    pub out: Option<PathBuf>,
+}
+
+impl LoadConfig {
+    /// CI smoke shape: a few thousand sessions, seconds of wall clock.
+    pub fn quick() -> LoadConfig {
+        LoadConfig { sessions: 2_000, ..LoadConfig::full() }
+    }
+
+    /// The capacity run the `capacity_*` records are defined over:
+    /// 120k sessions cycling resident ↔ spilled.
+    pub fn full() -> LoadConfig {
+        LoadConfig {
+            addr: None,
+            sessions: 120_000,
+            workers: 8,
+            bursts: 3,
+            batch: 16,
+            channels: 8,
+            kind: ArrivalKind::Poisson,
+            seed: 42,
+            keep_every: 97,
+            max_resident: None,
+            out: None,
+        }
+    }
+
+    /// The arrival-trace parameters implied by this run shape. Think
+    /// times are sized so ~60% of the population is mid-lifecycle at
+    /// once — far above any sane resident cap, which is what drives
+    /// the spill ↔ restore churn the harness exists to measure.
+    pub fn trace(&self) -> TraceConfig {
+        let interarrival = 50.0;
+        let think = 0.6 * self.sessions as f64 * interarrival / self.bursts.max(1) as f64;
+        TraceConfig {
+            kind: self.kind,
+            sessions: self.sessions,
+            bursts: self.bursts,
+            batch: self.batch,
+            seed: self.seed,
+            mean_interarrival_us: interarrival,
+            mean_think_us: think,
+            keep_every: self.keep_every,
+        }
+    }
+
+    fn resident_cap(&self) -> usize {
+        self.max_resident.unwrap_or_else(|| (self.sessions / 16).max(64))
+    }
+}
+
+/// What a run delivered and what the server reported afterwards.
+/// `created/steps_ops/tokens/closed` are deterministic for a given
+/// `(seed, config)` — the replay test's invariant; `sheds/retries` and
+/// the spill-tier counters depend on real timing and are excluded from
+/// replay comparisons.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub population: usize,
+    pub channels: usize,
+    pub created: u64,
+    pub steps_ops: u64,
+    pub tokens: u64,
+    pub closed: u64,
+    pub sheds: u64,
+    pub retries: u64,
+    /// structured non-`overloaded` error replies, by kind
+    pub failures: BTreeMap<String, u64>,
+    /// cumulative spill-tier writes (server `stats.spills`)
+    pub spills: u64,
+    /// cumulative lazy restores (server `stats.restores`)
+    pub restores: u64,
+    /// sessions on the spill store when the run ended
+    pub spilled_now: u64,
+    pub quarantined: u64,
+    /// server-side `op_steps` wire-latency percentiles from the
+    /// `metrics` op (0.0 when the target runs without telemetry)
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    /// The `capacity_*` perf-trail records. Schema (documented in
+    /// rust/README.md): `n` is the record's count, `ns_per_iter` the
+    /// mean wall-clock between successive events of that record's kind
+    /// (elapsed / count; the percentile itself for `_p50`/`_p99`), and
+    /// `speedup_vs_sequential` is unused (0.0).
+    pub fn capacity_records(&self) -> Vec<BenchRecord> {
+        let elapsed_ns = self.elapsed.as_nanos() as f64;
+        let per = |count: u64| if count == 0 { 0.0 } else { elapsed_ns / count as f64 };
+        let rec = |name: &str, n: usize, ns: f64| BenchRecord {
+            name: name.to_string(),
+            n,
+            d: self.channels,
+            ns_per_iter: ns,
+            speedup_vs_sequential: 0.0,
+        };
+        vec![
+            rec("capacity_population", self.population, per(self.tokens)),
+            rec("capacity_spills", self.spills as usize, per(self.spills)),
+            rec("capacity_restores", self.restores as usize, per(self.restores)),
+            rec("capacity_sheds", self.sheds as usize, per(self.sheds)),
+            rec("capacity_steps_p50", self.steps_ops as usize, self.p50_ns),
+            rec("capacity_steps_p99", self.steps_ops as usize, self.p99_ns),
+        ]
+    }
+
+    pub fn print(&self) {
+        let secs = self.elapsed.as_secs_f64().max(1e-9);
+        println!(
+            "aaren load: {} sessions  {} steps ops  {} tokens  in {:.2}s  ({:.0} tokens/s)",
+            self.population,
+            self.steps_ops,
+            self.tokens,
+            secs,
+            self.tokens as f64 / secs
+        );
+        println!(
+            "aaren load: spill tier  {} spills  {} restores  ({} spilled at end, {} quarantined)",
+            self.spills, self.restores, self.spilled_now, self.quarantined
+        );
+        println!(
+            "aaren load: admission  {} sheds  {} retries  {} structured failures",
+            self.sheds,
+            self.retries,
+            self.failures.values().sum::<u64>()
+        );
+        for (kind, n) in &self.failures {
+            println!("aaren load:   failure kind {kind}: {n}");
+        }
+        if self.p50_ns > 0.0 {
+            println!(
+                "aaren load: server op_steps latency  p50 {:.1} us  p99 {:.1} us",
+                self.p50_ns / 1e3,
+                self.p99_ns / 1e3
+            );
+        }
+    }
+}
+
+#[derive(Default)]
+struct WorkerTally {
+    created: u64,
+    steps_ops: u64,
+    tokens: u64,
+    closed: u64,
+    sheds: u64,
+    retries: u64,
+    failures: BTreeMap<String, u64>,
+}
+
+/// Send one op, honoring `overloaded` sheds with seeded backoff.
+/// Retries the SAME line — a shed never changes the op stream, only
+/// when it lands. Gives up (recording the kind) after `MAX_TRIES`.
+fn deliver(
+    client: &mut Client,
+    backoff: &mut Backoff,
+    tally: &mut WorkerTally,
+    line: &str,
+) -> Result<bool> {
+    const MAX_TRIES: usize = 200;
+    for _ in 0..MAX_TRIES {
+        let reply = client.call_raw(line).context("transport failure")?;
+        match wire_error(&reply) {
+            None => {
+                backoff.reset();
+                return Ok(true);
+            }
+            Some((kind, _)) if kind == "overloaded" => {
+                tally.sheds += 1;
+                tally.retries += 1;
+                let hint = reply
+                    .get("error")
+                    .and_then(|e| e.usize_field("retry_after_ms").ok())
+                    .map(|ms| ms as u64);
+                std::thread::sleep(backoff.next_delay(hint));
+            }
+            Some((kind, _)) => {
+                *tally.failures.entry(kind).or_default() += 1;
+                backoff.reset();
+                return Ok(false);
+            }
+        }
+    }
+    *tally.failures.entry("overloaded".to_string()).or_default() += 1;
+    Ok(false)
+}
+
+/// Serialize a token block as the wire's `"xs":[[...],...]` rows.
+/// `f32 → f64 → Display` is shortest-round-trip, so the server parses
+/// back bitwise-identical values — the soak test's bitwise claims rest
+/// on this.
+fn xs_rows(tokens: &[f32], channels: usize) -> String {
+    let mut out = String::with_capacity(tokens.len() * 8);
+    for (i, row) in tokens.chunks_exact(channels).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}", *v as f64));
+        }
+        out.push(']');
+    }
+    out
+}
+
+/// The wire session id owning `slot` (explicit native ids start at 1).
+pub fn slot_id(slot: usize) -> u64 {
+    slot as u64 + 1
+}
+
+fn worker_loop(
+    addr: SocketAddr,
+    events: Vec<Arrival>,
+    bank: Arc<TokenBank>,
+    channels: usize,
+    batch: usize,
+    seed: u64,
+    worker: usize,
+) -> Result<WorkerTally> {
+    let mut client = Client::connect(&addr).context("worker connect")?;
+    client.set_io_timeout(Some(Duration::from_secs(60)))?;
+    let mut backoff = Backoff::new(seed ^ 0x6c6f6164 ^ (worker as u64).wrapping_mul(0x9e37));
+    let mut tally = WorkerTally::default();
+    for a in events {
+        let id = slot_id(a.slot);
+        match a.op {
+            OpKind::Create => {
+                let kind = crate::loadgen::trace::slot_kind(a.slot).wire_name();
+                let line = format!(r#"{{"op":"create","kind":"{kind}","id":{id}}}"#);
+                if deliver(&mut client, &mut backoff, &mut tally, &line)? {
+                    tally.created += 1;
+                }
+            }
+            OpKind::Steps { burst } => {
+                let tokens = bank.tokens(a.slot, burst, batch);
+                let rows = xs_rows(&tokens, channels);
+                let line = format!(r#"{{"op":"steps","id":{id},"xs":[{rows}]}}"#);
+                if deliver(&mut client, &mut backoff, &mut tally, &line)? {
+                    tally.steps_ops += 1;
+                    tally.tokens += (tokens.len() / channels) as u64;
+                }
+            }
+            OpKind::Close => {
+                let line = format!(r#"{{"op":"close","id":{id}}}"#);
+                if deliver(&mut client, &mut backoff, &mut tally, &line)? {
+                    tally.closed += 1;
+                }
+            }
+        }
+    }
+    Ok(tally)
+}
+
+/// Where the run's spill tier lives when self-spawning: tmpfs when the
+/// platform offers it (a 100k-session run writes spill files by the
+/// hundred thousand; fsync on disk would dominate the measurement),
+/// else the system temp dir.
+fn spill_root() -> PathBuf {
+    let shm = PathBuf::from("/dev/shm");
+    if shm.is_dir() {
+        shm
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// Run the capacity harness: resolve or spawn the target server,
+/// replay the trace across workers, then collect the server's own
+/// counters into a [`LoadReport`].
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    let trace_cfg = cfg.trace();
+    let trace = schedule(&trace_cfg);
+    let bank = Arc::new(TokenBank::new(cfg.seed ^ 0x746f6b, cfg.channels));
+
+    let (addr, spawned_spill) = match &cfg.addr {
+        Some(a) => {
+            let addr: SocketAddr = a.parse().map_err(|e| anyhow!("bad --addr {a:?}: {e}"))?;
+            (addr, None)
+        }
+        None => {
+            // pid + counter: two runs in one process (tests, replay
+            // pairs) must never share or race a spill directory
+            static SPAWN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let n = SPAWN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let spill = spill_root().join(format!("aaren-load-{}-{n}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&spill);
+            std::fs::create_dir_all(&spill).context("create spill dir")?;
+            let server_cfg = ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                channels: cfg.channels,
+                shards: cfg.workers.clamp(2, 8),
+                session_ttl: Some(Duration::from_millis(250)),
+                spill_dir: Some(spill.clone()),
+                max_resident_sessions: Some(cfg.resident_cap()),
+                ..ServeConfig::default()
+            };
+            let server = Server::bind(&server_cfg).context("bind loopback server")?;
+            let addr = server.local_addr().context("server addr")?;
+            std::thread::spawn(move || server.run());
+            (addr, Some(spill))
+        }
+    };
+
+    // partition the time-sorted trace: slot % workers, order preserved
+    let workers = cfg.workers.max(1);
+    let mut per_worker: Vec<Vec<Arrival>> = (0..workers).map(|_| Vec::new()).collect();
+    for a in &trace {
+        per_worker[a.slot % workers].push(*a);
+    }
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = per_worker
+        .into_iter()
+        .enumerate()
+        .map(|(w, events)| {
+            let bank = Arc::clone(&bank);
+            let (channels, batch, seed) = (cfg.channels, cfg.batch, cfg.seed);
+            std::thread::spawn(move || worker_loop(addr, events, bank, channels, batch, seed, w))
+        })
+        .collect();
+    let mut report = LoadReport {
+        population: cfg.sessions,
+        channels: cfg.channels,
+        ..LoadReport::default()
+    };
+    let mut worker_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(t)) => {
+                report.created += t.created;
+                report.steps_ops += t.steps_ops;
+                report.tokens += t.tokens;
+                report.closed += t.closed;
+                report.sheds += t.sheds;
+                report.retries += t.retries;
+                for (k, n) in t.failures {
+                    *report.failures.entry(k).or_default() += n;
+                }
+            }
+            Ok(Err(e)) => worker_err = Some(e),
+            Err(_) => worker_err = Some(anyhow!("worker thread panicked")),
+        }
+    }
+    report.elapsed = t0.elapsed();
+
+    // server-side truth: spill-tier counters + wire-latency percentiles
+    let mut control = Client::connect(&addr).context("control connect")?;
+    let stats = control.call(r#"{"op":"stats"}"#).context("stats op")?;
+    report.spills = stats.usize_field("spills").unwrap_or(0) as u64;
+    report.restores = stats.usize_field("restores").unwrap_or(0) as u64;
+    report.spilled_now = stats.usize_field("spilled").unwrap_or(0) as u64;
+    report.quarantined = stats.usize_field("quarantined").unwrap_or(0) as u64;
+    if let Ok(metrics) = control.call_raw(r#"{"op":"metrics"}"#) {
+        if let Some(hist) = metrics.get("histograms").and_then(|h| h.get("op_steps")) {
+            report.p50_ns = hist.usize_field("p50_ns").unwrap_or(0) as f64;
+            report.p99_ns = hist.usize_field("p99_ns").unwrap_or(0) as f64;
+        }
+    }
+
+    if let Some(spill) = spawned_spill {
+        let _ = control.call(r#"{"op":"shutdown"}"#);
+        let _ = std::fs::remove_dir_all(&spill);
+    }
+    if let Some(e) = worker_err {
+        return Err(e.context("a load worker failed"));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_honors_retry_after_hint_as_floor() {
+        for seed in [1u64, 7, 99] {
+            let mut b = Backoff::new(seed);
+            for hint in [1u64, 25, 120, 900, 2_000] {
+                let d = b.next_delay(Some(hint));
+                assert!(
+                    d.as_millis() as u64 >= hint,
+                    "seed {seed}: delay {}ms ignored retry_after_ms hint {hint}",
+                    d.as_millis()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_a_seeded_capped_exponential() {
+        let mut a = Backoff::new(5);
+        let mut b = Backoff::new(5);
+        let mut prev_floor = 0u64;
+        for attempt in 0..16u32 {
+            let da = a.next_delay(None);
+            let db = b.next_delay(None);
+            assert_eq!(da, db, "same seed must replay the same schedule");
+            // the deterministic exponential component floors the delay
+            // and is capped; jitter adds at most +50%
+            let expo = BACKOFF_FLOOR_MS.saturating_mul(1 << attempt.min(16)).min(BACKOFF_CAP_MS);
+            let ms = da.as_millis() as u64;
+            assert!(ms >= expo, "attempt {attempt}: {ms}ms under the exponential floor {expo}ms");
+            assert!(ms <= expo + expo / 2, "attempt {attempt}: {ms}ms over floor+jitter");
+            assert!(expo >= prev_floor, "exponential component must not shrink");
+            prev_floor = expo;
+        }
+        assert_eq!(prev_floor, BACKOFF_CAP_MS, "schedule never reached the cap");
+        a.reset();
+        let first = a.next_delay(None).as_millis() as u64;
+        assert!(first <= BACKOFF_FLOOR_MS + BACKOFF_FLOOR_MS / 2 + 1, "reset must restart");
+    }
+
+    #[test]
+    fn xs_rows_round_trip_bitwise_through_the_wire_grammar() {
+        use crate::util::json::Json;
+        let tokens: Vec<f32> = vec![0.125, -3.5, 1.0e-6, 7.625, 0.0, -0.0, 15.99, -15.99];
+        let line = format!(r#"{{"xs":[{}]}}"#, xs_rows(&tokens, 4));
+        let parsed = Json::parse(&line).unwrap();
+        let rows = parsed.get("xs").and_then(Json::as_arr).unwrap();
+        let mut got: Vec<f32> = Vec::new();
+        for row in rows {
+            for v in row.as_arr().unwrap() {
+                got.push(v.as_f64().unwrap() as f32);
+            }
+        }
+        assert_eq!(got.len(), tokens.len());
+        for (g, t) in got.iter().zip(tokens.iter()) {
+            assert_eq!(g.to_bits(), t.to_bits(), "token did not survive serialization");
+        }
+    }
+
+    /// End-to-end smoke: a tiny population through a self-spawned
+    /// server with an 8-session resident cap — every op delivered, the
+    /// population forced through the spill ↔ restore cycle, nothing
+    /// quarantined.
+    #[test]
+    fn tiny_run_cycles_sessions_through_residency() {
+        let cfg = LoadConfig {
+            sessions: 48,
+            workers: 3,
+            bursts: 2,
+            batch: 4,
+            channels: 4,
+            keep_every: 7,
+            max_resident: Some(8),
+            ..LoadConfig::full()
+        };
+        let report = run(&cfg).expect("load run");
+        assert_eq!(report.created, 48);
+        assert_eq!(report.steps_ops, 96);
+        assert_eq!(report.tokens, 96 * 4);
+        // slots 0,7,…,42 are kept open for sampling; the rest close
+        assert_eq!(report.closed, 48 - 7);
+        assert!(report.failures.is_empty(), "structured failures: {:?}", report.failures);
+        assert_eq!(report.quarantined, 0);
+        assert!(report.spills > 0, "an 8-session cap must force spills");
+        assert!(report.restores > 0, "spilled sessions must lazily restore on their next burst");
+        let records = report.capacity_records();
+        assert_eq!(records.len(), 6);
+        assert!(records.iter().all(|r| r.name.starts_with("capacity_")));
+        assert_eq!(records[0].n, 48);
+        assert!(records[0].ns_per_iter > 0.0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Million-session capacity harness: seeded open-loop traffic replay.
+//!
+//! `aaren load` answers the question the serving stack exists for: how
+//! large a session population can one server (or fleet) cycle through
+//! the resident ↔ spilled lifecycle while staying correct and
+//! responsive? The paper's core claim — attention reformulated as an
+//! RNN holds every stream in O(1) memory — only matters at scale if
+//! the machinery around it (lane allocator, spill tier, admission
+//! control) survives six-figure populations. This module generates
+//! that population.
+//!
+//! Three properties anchor the design:
+//!
+//! - **Open-loop**: the arrival trace ([`trace::schedule`]) and every
+//!   token block ([`trace::TokenBank`]) are pure functions of
+//!   `(seed, config)`. Reply latency, sheds, and retries shift WHEN an
+//!   op lands, never WHICH ops exist — so a saturated server is
+//!   measured under the offered load, not a load that politely shrinks
+//!   to match it (the closed-loop fallacy).
+//! - **Deterministic replay**: same seed + config → the same ops with
+//!   the same tokens, so two runs against two fresh servers must leave
+//!   bitwise-identical session states. `tests/capacity.rs` holds the
+//!   harness to that.
+//! - **Sheds are honored, not fatal**: structured `overloaded` replies
+//!   are retried with a seeded capped-exponential [`driver::Backoff`]
+//!   that treats `retry_after_ms` as a floor; every other structured
+//!   error kind is counted, never panicked on.
+//!
+//! Results land as `capacity_*` records merged into `BENCH_serve.json`
+//! (see [`driver::LoadReport::capacity_records`]) next to the
+//! serve_loopback bench's records.
+
+pub mod driver;
+pub mod trace;
+
+pub use driver::{run, slot_id, Backoff, LoadConfig, LoadReport, BACKOFF_CAP_MS, BACKOFF_FLOOR_MS};
+pub use trace::{
+    completion_times, schedule, slot_kind, Arrival, ArrivalKind, OpKind, TokenBank, TraceConfig,
+};

@@ -1,0 +1,395 @@
+//! Seeded open-loop arrival traces and workload token synthesis.
+//!
+//! Everything here is a PURE function of `(seed, config)`: the schedule
+//! never reads a wall clock, service latency, or any reply — that is
+//! what makes the generator **open-loop** (the op stream is fixed a
+//! priori; a slow server shifts dispatch instants but can never change
+//! which ops arrive, in what order, with which tokens) and what makes
+//! capacity runs REPLAYABLE (same seed + config → bit-identical trace,
+//! so two runs against two fresh servers must leave bitwise-identical
+//! session states; `tests/capacity.rs` asserts exactly that).
+//!
+//! The virtual `at_us` timestamps exist to ORDER the trace — they
+//! interleave many session lifecycles so a large population is alive at
+//! once (which is what pressures the spill tier) — not to pace the
+//! wall clock: the driver replays the sequence as fast as the server
+//! admits it, honoring `overloaded` sheds with a seeded backoff.
+//!
+//! Tokens come from the four paper task suites
+//! (`crate::data::{tsf,events,tsc,rl}`), so a capacity run streams the
+//! same signal families the paper's tables are computed over instead of
+//! white noise.
+
+use crate::data::{events, rl, tsc, tsf};
+use crate::scan::KernelKind;
+use crate::util::rng::Rng;
+
+/// The arrival process shaping session-start times.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless session starts: i.i.d. exponential inter-arrivals.
+    Poisson,
+    /// Bursty ON-OFF (interrupted Poisson): ON windows arrive 4× faster
+    /// than the Poisson mean, separated by silent OFF gaps — the herd
+    /// pattern that stresses admission control and the shed path.
+    OnOff,
+}
+
+impl ArrivalKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::OnOff => "onoff",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ArrivalKind> {
+        match name {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "onoff" | "on-off" | "bursty" => Some(ArrivalKind::OnOff),
+            _ => None,
+        }
+    }
+}
+
+/// One session lifecycle op in the trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Create,
+    /// The `burst`-th `steps` block of this session.
+    Steps { burst: usize },
+    Close,
+}
+
+/// One scheduled arrival: virtual time, session slot, and the op. `seq`
+/// is the op's index within its slot — the tiebreaker that keeps a
+/// slot's lifecycle ordered even at equal timestamps.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub at_us: u64,
+    pub slot: usize,
+    pub seq: u32,
+    pub op: OpKind,
+}
+
+/// Everything the schedule is a function of. See [`schedule`].
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub kind: ArrivalKind,
+    /// session population (one slot = one session over its lifetime)
+    pub sessions: usize,
+    /// `steps` bursts per session between create and close
+    pub bursts: usize,
+    /// tokens per `steps` burst
+    pub batch: usize,
+    pub seed: u64,
+    /// mean virtual gap between session starts, µs
+    pub mean_interarrival_us: f64,
+    /// mean virtual think time between one session's bursts, µs — large
+    /// relative to the inter-arrival mean so lifecycles overlap and the
+    /// resident population grows into the spill tier's cap
+    pub mean_think_us: f64,
+    /// every `keep_every`-th slot skips its Close — the sample the soak
+    /// and replay tests snapshot after the run (0 closes everything)
+    pub keep_every: usize,
+}
+
+impl TraceConfig {
+    /// Does `slot` keep its session open (no Close op) for post-run
+    /// snapshot sampling?
+    pub fn kept(&self, slot: usize) -> bool {
+        self.keep_every != 0 && slot % self.keep_every == 0
+    }
+}
+
+/// The kernel backend `slot`'s session is created with — the population
+/// cycles through every fold-kernel backend so one capacity run
+/// pressure-tests each kernel's constant-memory story at once.
+pub fn slot_kind(slot: usize) -> KernelKind {
+    KernelKind::ALL[slot % KernelKind::ALL.len()]
+}
+
+/// Build the full arrival trace: a pure function of `cfg` (fixed seed,
+/// no wall-clock randomness). Session starts follow `cfg.kind`; each
+/// session then runs create → `bursts`×steps → close with exponential
+/// think times from its own split rng stream. The result is sorted by
+/// `(at_us, slot, seq)`, and every slot's ops stay in lifecycle order
+/// (its timestamps are strictly cumulative).
+pub fn schedule(cfg: &TraceConfig) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let lambda = 1.0 / cfg.mean_interarrival_us.max(1.0);
+    let mut out = Vec::with_capacity(cfg.sessions * (cfg.bursts + 2));
+    let mut t = 0.0f64;
+    // ON-OFF phase state (unused for Poisson)
+    let mut on_left = 0.0f64;
+    for slot in 0..cfg.sessions {
+        t += match cfg.kind {
+            ArrivalKind::Poisson => rng.exponential(lambda),
+            ArrivalKind::OnOff => {
+                // inside an ON window arrivals come 4× faster; when the
+                // window is spent, jump over a silent OFF gap and open
+                // the next window
+                if on_left <= 0.0 {
+                    let off_gap = rng.exponential(lambda / 40.0);
+                    on_left = rng.exponential(lambda / 20.0);
+                    t += off_gap;
+                }
+                let gap = rng.exponential(4.0 * lambda);
+                on_left -= gap;
+                gap
+            }
+        };
+        let mut slot_rng = rng.split(slot as u64);
+        let mut st = t;
+        let mut seq = 0u32;
+        out.push(Arrival { at_us: st as u64, slot, seq, op: OpKind::Create });
+        for burst in 0..cfg.bursts {
+            st += slot_rng.exponential(1.0 / cfg.mean_think_us.max(1.0));
+            seq += 1;
+            out.push(Arrival { at_us: st as u64, slot, seq, op: OpKind::Steps { burst } });
+        }
+        if !cfg.kept(slot) {
+            st += slot_rng.exponential(1.0 / cfg.mean_think_us.max(1.0));
+            seq += 1;
+            out.push(Arrival { at_us: st as u64, slot, seq, op: OpKind::Close });
+        }
+    }
+    out.sort_by_key(|a| (a.at_us, a.slot, a.seq));
+    out
+}
+
+/// Pure replay helper for the open-loop property: given per-op service
+/// latencies, compute when each op would COMPLETE on a
+/// one-at-a-time server (dispatch = max(arrival, previous completion)).
+/// Completion times move with the latencies; the arrival sequence — by
+/// construction — cannot, which the loadgen unit tests assert.
+pub fn completion_times(trace: &[Arrival], service_latency_us: &[u64]) -> Vec<u64> {
+    let mut done = 0u64;
+    trace
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let svc = service_latency_us.get(i % service_latency_us.len().max(1)).unwrap_or(&0);
+            done = done.max(a.at_us) + svc;
+            done
+        })
+        .collect()
+}
+
+/// Fixed-size template streams drawn from the four task suites, ready
+/// to serve as session token traffic. Construction and lookup are pure
+/// functions of `(seed, channels)`, so a test can recompute any
+/// session's full token history client-side and drive a boxed control
+/// session to a bitwise-expected state.
+pub struct TokenBank {
+    channels: usize,
+    /// flat (len × channels) streams, one per template
+    templates: Vec<Vec<f32>>,
+}
+
+/// Cyclic width adaptation: suite rows (7-wide tsf, 8-wide tsc, …)
+/// become `channels`-wide tokens by index wraparound — no information
+/// is invented, every value is a real suite value.
+fn resample(row: &[f32], channels: usize, out: &mut Vec<f32>) {
+    for c in 0..channels {
+        // clamp keeps scores tame over long streams; suite values are
+        // z-scored or bounded already, so this is a safety rail
+        out.push(row[c % row.len()].clamp(-16.0, 16.0));
+    }
+}
+
+impl TokenBank {
+    pub fn new(seed: u64, channels: usize) -> TokenBank {
+        assert!(channels > 0, "token bank needs at least one channel");
+        let mut templates = Vec::new();
+        // two presets per suite: 8 templates, cycled over slots
+        for (i, ds) in tsf::ALL.into_iter().take(2).enumerate() {
+            let series = tsf::generate(ds, 256, seed ^ (i as u64 + 1));
+            let mut tpl = Vec::with_capacity(series.len * channels);
+            for ti in 0..series.len {
+                resample(series.at(ti), channels, &mut tpl);
+            }
+            templates.push(tpl);
+        }
+        for (i, ds) in events::ALL.into_iter().take(2).enumerate() {
+            let seq = events::simulate(ds, seed ^ (0x10 + i as u64));
+            let mut tpl = Vec::with_capacity(seq.times.len() * channels);
+            let mut prev = 0.0f32;
+            for (k, &tk) in seq.times.iter().enumerate() {
+                let row = [tk - prev, seq.marks[k] as f32];
+                resample(&row, channels, &mut tpl);
+                prev = tk;
+            }
+            templates.push(tpl);
+        }
+        for (i, ds) in tsc::ALL.into_iter().take(2).enumerate() {
+            let gen = tsc::TscGenerator::new(ds, seed ^ (0x20 + i as u64));
+            let mut rng = Rng::new(seed ^ (0x21 + i as u64));
+            let ex = gen.sample(&mut rng);
+            let mut tpl = Vec::with_capacity(tsc::SEQ_LEN * channels);
+            for row in ex.x.chunks_exact(tsc::CHANNELS) {
+                resample(row, channels, &mut tpl);
+            }
+            templates.push(tpl);
+        }
+        for (i, env_id) in rl::ALL_ENVS.into_iter().take(2).enumerate() {
+            let mut env = rl::Env::new(env_id, seed ^ (0x30 + i as u64));
+            let traj =
+                rl::rollout(&mut env, &rl::ScriptedPolicy::medium(), seed ^ (0x31 + i as u64));
+            let width = if traj.len() == 0 { 1 } else { traj.states.len() / traj.len() };
+            let mut tpl = Vec::with_capacity(traj.len() * channels);
+            for row in traj.states.chunks_exact(width.max(1)) {
+                resample(row, channels, &mut tpl);
+            }
+            templates.push(tpl);
+        }
+        templates.retain(|t| !t.is_empty());
+        assert!(!templates.is_empty(), "token bank built no templates");
+        TokenBank { channels, templates }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// The flat `(batch, channels)` token block for `slot`'s
+    /// `burst`-th steps op — a pure lookup: the slot picks a template
+    /// and a phase offset, bursts read consecutive (wrapping) rows.
+    pub fn tokens(&self, slot: usize, burst: usize, batch: usize) -> Vec<f32> {
+        let tpl = &self.templates[slot % self.templates.len()];
+        let rows = tpl.len() / self.channels;
+        let start = (slot / self.templates.len() + burst * batch) % rows;
+        let mut out = Vec::with_capacity(batch * self.channels);
+        for j in 0..batch {
+            let r = (start + j) % rows;
+            out.extend_from_slice(&tpl[r * self.channels..(r + 1) * self.channels]);
+        }
+        out
+    }
+
+    /// Every token `slot` has streamed after `bursts` bursts of `batch`
+    /// tokens — the client-side replay the soak test feeds its boxed
+    /// control sessions.
+    pub fn history(&self, slot: usize, bursts: usize, batch: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(bursts * batch * self.channels);
+        for b in 0..bursts {
+            out.extend_from_slice(&self.tokens(slot, b, batch));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: ArrivalKind) -> TraceConfig {
+        TraceConfig {
+            kind,
+            sessions: 400,
+            bursts: 3,
+            batch: 8,
+            seed: 11,
+            mean_interarrival_us: 200.0,
+            mean_think_us: 20_000.0,
+            keep_every: 16,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_lifecycle_ordered() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::OnOff] {
+            let a = schedule(&cfg(kind));
+            let b = schedule(&cfg(kind));
+            assert_eq!(a.len(), b.len(), "{kind:?}: replay changed length");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(
+                    (x.at_us, x.slot, x.seq),
+                    (y.at_us, y.slot, y.seq),
+                    "{kind:?}: replay diverged"
+                );
+                assert_eq!(x.op, y.op);
+            }
+            // per-slot lifecycle order: Create first, bursts in order,
+            // Close last (when present)
+            let mut last_seq = vec![None::<u32>; 400];
+            for arr in &a {
+                if let Some(prev) = last_seq[arr.slot] {
+                    assert!(arr.seq > prev, "slot {} ops out of order", arr.slot);
+                } else {
+                    assert_eq!(arr.op, OpKind::Create, "slot {} must start with create", arr.slot);
+                }
+                last_seq[arr.slot] = Some(arr.seq);
+            }
+            let closes = a.iter().filter(|x| x.op == OpKind::Close).count();
+            let kept = (0..400).filter(|&s| cfg(kind).kept(s)).count();
+            assert_eq!(closes, 400 - kept, "{kind:?}: kept slots must skip close");
+        }
+    }
+
+    #[test]
+    fn onoff_is_burstier_than_poisson() {
+        // squared coefficient of variation of inter-arrival gaps: the
+        // interrupted-Poisson process must be markedly more variable
+        let gaps = |kind| {
+            let mut starts: Vec<u64> = schedule(&cfg(kind))
+                .iter()
+                .filter(|a| a.op == OpKind::Create)
+                .map(|a| a.at_us)
+                .collect();
+            starts.sort_unstable();
+            starts.windows(2).map(|w| (w[1] - w[0]) as f64).collect::<Vec<_>>()
+        };
+        let cv2 = |g: &[f64]| {
+            let m = g.iter().sum::<f64>() / g.len() as f64;
+            let v = g.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / g.len() as f64;
+            v / (m * m)
+        };
+        let poisson = cv2(&gaps(ArrivalKind::Poisson));
+        let onoff = cv2(&gaps(ArrivalKind::OnOff));
+        assert!(
+            onoff > poisson * 1.5,
+            "ON-OFF should be burstier: cv² {onoff:.2} vs poisson {poisson:.2}"
+        );
+    }
+
+    #[test]
+    fn token_bank_is_pure_and_finite() {
+        let a = TokenBank::new(7, 8);
+        let b = TokenBank::new(7, 8);
+        for slot in [0usize, 3, 17, 1000] {
+            for burst in 0..3 {
+                let xa = a.tokens(slot, burst, 16);
+                let xb = b.tokens(slot, burst, 16);
+                assert_eq!(xa.len(), 16 * 8);
+                for (u, v) in xa.iter().zip(xb.iter()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "token bank not pure");
+                    assert!(u.is_finite());
+                }
+            }
+        }
+        // history is the burst concatenation, bitwise
+        let h = a.history(3, 3, 16);
+        let cat: Vec<f32> = (0..3).flat_map(|burst| a.tokens(3, burst, 16)).collect();
+        assert_eq!(h.len(), cat.len());
+        for (u, v) in h.iter().zip(cat.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn completion_moves_with_latency_but_arrivals_do_not() {
+        // the open-loop property made concrete: wildly different service
+        // latencies shift completions, yet the arrival sequence (times,
+        // slots, ops, tokens) is untouched because nothing in schedule()
+        // or TokenBank reads a latency
+        let trace = schedule(&cfg(ArrivalKind::Poisson));
+        let fast = completion_times(&trace, &[10]);
+        let slow = completion_times(&trace, &[10_000]);
+        assert!(fast.last() < slow.last(), "latency must move completions");
+        let again = schedule(&cfg(ArrivalKind::Poisson));
+        for (x, y) in trace.iter().zip(again.iter()) {
+            assert_eq!((x.at_us, x.slot, x.seq), (y.at_us, y.slot, y.seq));
+        }
+    }
+}

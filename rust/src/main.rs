@@ -23,6 +23,12 @@
 //!   state   export --addr H:P --id N --out FILE   snapshot a live session to a file
 //!           import --addr H:P --file FILE [--id N]  restore a snapshot as a new session
 //!           inspect --file FILE                   decode a snapshot offline
+//!   load    capacity harness: seeded open-loop traffic replay
+//!           --addr H:P               target a live server/fleet (default: self-spawn loopback)
+//!           --quick                  CI smoke shape (2k sessions; default is 120k)
+//!           --sessions N --workers N --bursts N --batch N --channels N
+//!           --trace poisson|onoff    arrival process   --seed N   deterministic replay
+//!           --out FILE               merge capacity_* records into this BENCH trail
 //!   bench   fig5 [+ table1..table4|params|all with pjrt]
 //!   check                      verify artifacts load + run (pjrt)
 //!   train   --domain …         train one model/dataset cell (pjrt)
@@ -62,6 +68,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => serve_cmd(args),
         "fleet" => fleet_cmd(args),
         "state" => state_cmd(args),
+        "load" => load_cmd(args),
         "bench" => {
             let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
             bench_cmd(which, args)
@@ -207,6 +214,49 @@ fn fleet_cmd(args: &Args) -> Result<()> {
         );
     }
     serve_fleet(&cfg)
+}
+
+/// `aaren load` — the million-session capacity harness: replay a seeded
+/// open-loop arrival trace (Poisson or bursty ON-OFF) over a large
+/// session population cycling create → steps → idle → spill → restore
+/// → close, against `--addr` or a self-spawned loopback server sized to
+/// force residency churn. Results land as `capacity_*` records merged
+/// into the `BENCH_serve.json` perf trail (serve_loopback's records are
+/// preserved).
+fn load_cmd(args: &Args) -> Result<()> {
+    use aaren::loadgen::{ArrivalKind, LoadConfig};
+    use aaren::util::bench::merge_records;
+
+    let mut cfg = if args.bool("quick") { LoadConfig::quick() } else { LoadConfig::full() };
+    cfg.addr = args.flags.get("addr").cloned();
+    cfg.sessions = args.usize("sessions", cfg.sessions).max(1);
+    cfg.workers = args.usize("workers", cfg.workers).max(1);
+    cfg.bursts = args.usize("bursts", cfg.bursts).max(1);
+    cfg.batch = args.usize("batch", cfg.batch).clamp(1, aaren::serve::MAX_STEPS_TOKENS);
+    cfg.channels = args.usize("channels", cfg.channels).max(1);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg.keep_every = args.usize("keep-every", cfg.keep_every);
+    let trace = args.str("trace", cfg.kind.name());
+    cfg.kind = ArrivalKind::from_name(&trace)
+        .ok_or_else(|| anyhow::anyhow!("unknown --trace {trace:?} (poisson|onoff)"))?;
+    let max_resident = args.usize("max-resident-sessions", 0);
+    cfg.max_resident = (max_resident > 0).then_some(max_resident);
+
+    let report = aaren::loadgen::run(&cfg)?;
+    report.print();
+    let records = report.capacity_records();
+    let out = PathBuf::from(args.str("out", "BENCH_serve.json"));
+    aaren::util::bench::print_table(
+        "capacity records",
+        &["record", "n", "ns_per_iter"],
+        &records
+            .iter()
+            .map(|r| vec![r.name.clone(), r.n.to_string(), format!("{:.0}", r.ns_per_iter)])
+            .collect::<Vec<_>>(),
+    );
+    merge_records(&out, "capacity_", &records)?;
+    println!("merged {} capacity_* records into {}", records.len(), out.display());
+    Ok(())
 }
 
 /// `aaren state export|import|inspect` — offline snapshot handling over
@@ -363,6 +413,12 @@ fn help() {
          state export --addr H:P --id N [--out F]   snapshot a live session to a file\n  \
          state import --addr H:P --file F [--id N]  restore a snapshot as a new session\n  \
          state inspect --file F                     decode a snapshot offline\n  \
+         load                  capacity harness: seeded open-loop traffic replay\n                        \
+         --addr H:P     target a live server/fleet (default: self-spawn loopback)\n                        \
+         --quick        CI smoke shape, 2k sessions (default: 120k)\n                        \
+         --sessions N --workers N --bursts N --batch N --channels N\n                        \
+         --trace poisson|onoff  arrival process   --seed N  deterministic replay\n                        \
+         --out FILE     merge capacity_* records into this trail (BENCH_serve.json)\n  \
          bench fig5            streaming memory/time shape (rust-native sessions)\n\n\
          commands needing --features pjrt + compiled artifacts:\n  \
          check                 smoke-run every artifact family\n  \

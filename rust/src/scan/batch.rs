@@ -592,6 +592,34 @@ impl LaneSet {
         self.k().fold_leaf(d, s, x, &mut self.rows[lane * w..(lane + 1) * w]);
     }
 
+    /// Fold one leaf into each of several lanes in a single forward walk
+    /// over the row buffer — the vectorized resident-drain round. Entries
+    /// are `(lane, score, token)` and MUST be sorted strictly ascending by
+    /// lane id (the drain sorts its pending sessions once per drain, so
+    /// every round walks the state rows in address order instead of
+    /// hopping around the buffer in session-arrival order). Bitwise
+    /// identical to calling [`fold`](LaneSet::fold) per entry in any
+    /// order: each fold reads and writes only its own lane row.
+    pub fn fold_all(&mut self, entries: &[(usize, f32, &[f32])]) {
+        let k = self.k();
+        let (d, w) = (self.d, self.width);
+        // One pass of disjoint `&mut` row borrows out of the flat buffer:
+        // repeatedly split the remaining tail at the next entry's lane.
+        let mut rest: &mut [f32] = &mut self.rows;
+        let mut base = 0usize;
+        for &(lane, s, x) in entries {
+            assert!(
+                lane >= base,
+                "fold_all needs strictly ascending lane ids (lane {lane} after {base})"
+            );
+            let tail = std::mem::take(&mut rest);
+            let (row, tail) = tail[(lane - base) * w..].split_at_mut(w);
+            k.fold_leaf(d, s, x, row);
+            rest = tail;
+            base = lane + 1;
+        }
+    }
+
     /// The d-channel output `lane`'s state represents (zeros for the
     /// nothing-folded-yet identity, never NaN).
     pub fn output_into(&self, lane: usize, out: &mut [f32]) {
@@ -1142,5 +1170,59 @@ mod tests {
                 Ok(())
             });
         }
+    }
+
+    /// The sorted-drain round primitive: one `fold_all` walk over an
+    /// ascending subset of lanes (holes included) must be bitwise
+    /// identical to per-lane `fold` calls, for every kernel.
+    #[test]
+    fn lane_set_fold_all_is_bitwise_equal_to_per_lane_folds() {
+        prop::check("LaneSet::fold_all == per-lane fold (bitwise)", 32, |rng| {
+            let kind = KernelKind::ALL[rng.below(KernelKind::ALL.len())];
+            let d = 1 + rng.below(8);
+            let n_lanes = 1 + rng.below(10);
+            let mut a = LaneSet::new_kernel(kind, d);
+            let mut b = LaneSet::new_kernel(kind, d);
+            for _ in 0..n_lanes {
+                a.alloc();
+                b.alloc();
+            }
+            // pre-warm every lane identically so the round starts from
+            // non-identity states
+            for lane in 0..n_lanes {
+                let s = rng.range(-30.0, 30.0) as f32;
+                let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                a.fold(lane, s, &x);
+                b.fold(lane, s, &x);
+            }
+            // a random ascending subset gets a leaf this round — the
+            // skipped lanes are the "session has no token r" holes
+            let chosen: Vec<usize> = (0..n_lanes).filter(|_| rng.uniform() < 0.6).collect();
+            let leaves: Vec<(f32, Vec<f32>)> = chosen
+                .iter()
+                .map(|_| {
+                    let s = rng.range(-30.0, 30.0) as f32;
+                    let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                    (s, x)
+                })
+                .collect();
+            let entries: Vec<(usize, f32, &[f32])> = chosen
+                .iter()
+                .zip(leaves.iter())
+                .map(|(&lane, (s, x))| (lane, *s, x.as_slice()))
+                .collect();
+            a.fold_all(&entries);
+            for &(lane, s, x) in &entries {
+                b.fold(lane, s, x);
+            }
+            for lane in 0..n_lanes {
+                for (x, y) in a.state(lane).iter().zip(b.state(lane)) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{kind:?} lane {lane}: state diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -112,7 +112,11 @@
 //!   the containment counters (all cumulative since server start):
 //!   `quarantined` (sessions condemned by a panic, poisoned output or
 //!   corrupt snapshot), `corrupt_snapshots` (spilled blobs that failed
-//!   verification), `overloaded_rejects` (requests/connections shed by
+//!   verification), `spills` / `restores` (cumulative spill-tier
+//!   traffic: sessions spilled by the TTL sweep / LRU cap / `drain` /
+//!   shutdown, and sessions lazily restored on a touch — what the
+//!   capacity harness turns into spill/restore rates),
+//!   `overloaded_rejects` (requests/connections shed by
 //!   backpressure or the connection cap) and `accept_errors`. The
 //!   `backends` object breaks sessions down per backend name (`aaren`,
 //!   `mingru`, `minlstm`, `avg_attn`, `tf`, `hlo`) as

@@ -15,8 +15,11 @@
 //!   -> {"op":"close","id":N}                     <- {"ok":true}
 //!   -> {"op":"stats"}                            <- {"sessions":K,"total_state_bytes":B,"spilled":S,
 //!                                                    "quarantined":Q,"corrupt_snapshots":C,
+//!                                                    "spills":V,"restores":R,
 //!                                                    "overloaded_rejects":O,"accept_errors":A,
 //!                                                    "backends":{<name>:{"resident":R,"spilled":P},…}}
+//!      ("spills"/"restores" are cumulative spill-tier traffic since
+//!       start; "spilled" is the store's current population)
 //!   -> {"op":"metrics"}                          <- {"histograms":{<stage>:{"count":N,"p50_ns":…,
 //!                                                    "p99_ns":…,"max_ns":…,"buckets":{…}},…},
 //!                                                    "counters":{…},"events":[{"seq":…,"ts_ms":…,
@@ -77,17 +80,18 @@
 //!
 //! FAULT CONTAINMENT (see `ARCHITECTURE.md` § Failure modes):
 //!
-//! * Each session's drain work runs under `catch_unwind`; a panic — or a
-//!   non-finite (poisoned) output — QUARANTINES that session alone: its
-//!   lane is released, later ops on the id get a structured
-//!   `quarantined` error, and `close` frees the id. The shard thread and
-//!   every other resident session keep serving. This is why the drain
-//!   executes per session ([`ResidentScanSession::step_many`] straight
-//!   on its shard [`LaneSet`] — still zero state copies, and bitwise
-//!   identical to the round-major batch engines since each fold touches
-//!   only its own lane) instead of one fused multi-session fold: a
-//!   mid-batch panic in a fused fold could not be attributed to the one
-//!   session that caused it.
+//! * Drain work runs under `catch_unwind`; a panic — or a non-finite
+//!   (poisoned) output — QUARANTINES the implicated session(s): lanes
+//!   are released, later ops on the id get a structured `quarantined`
+//!   error, and `close` frees the id. The shard thread and every other
+//!   resident session keep serving. Resident runs sharing a (kernel,
+//!   width) lane set normally execute as one sorted-lane engine pass
+//!   ([`step_many_resident`] — still zero state copies, bitwise
+//!   identical to per-session execution since each fold touches only
+//!   its own lane); a panic mid-engine quarantines the whole group
+//!   (unattributable), while the poison gate stays per-session. With a
+//!   fault plan active the drain falls back to strict per-session
+//!   execution so each injected panic blames exactly one session.
 //! * Executor queues are BOUNDED (`ServeConfig::queue_depth`): a full
 //!   queue sheds data-plane requests with a structured `overloaded`
 //!   reply carrying a `retry_after_ms` hint, instead of queueing without
@@ -121,7 +125,8 @@ use crate::persist::codec;
 use crate::persist::store::{DirStore, SnapshotStore};
 use crate::scan::{KernelKind, LaneSet};
 use crate::serve::session::{
-    NativeScanSession, NativeTfSession, ResidentScanSession, StreamSession,
+    step_many_resident, NativeScanSession, NativeTfSession, ResidentLane, ResidentScanSession,
+    StreamSession,
 };
 use crate::util::b64;
 use crate::util::json::Json;
@@ -221,14 +226,23 @@ pub enum Response {
     /// The wire-level reply body.
     Value(Json),
     /// Per-shard stats, aggregated by the router before hitting the wire.
-    /// `quarantined` and `corrupt_snapshots` are CUMULATIVE totals since
-    /// the executor started (a closed quarantined id stays counted).
+    /// `quarantined`, `corrupt_snapshots`, `spills` and `restores` are
+    /// CUMULATIVE totals since the executor started (a closed
+    /// quarantined id stays counted); `spilled` is the CURRENT store
+    /// population.
     Stats {
         sessions: usize,
         state_bytes: usize,
         spilled: usize,
         quarantined: usize,
         corrupt_snapshots: usize,
+        /// sessions ever spilled to the store (TTL sweep, LRU cap,
+        /// `drain` op, graceful shutdown) — the capacity harness reads
+        /// spill/restore RATES off this without needing telemetry on
+        spills: usize,
+        /// sessions ever lazily restored from the store on a touch (the
+        /// `restore` wire op — a client-supplied blob — is not counted)
+        restores: usize,
         /// Per-backend `(resident, spilled)` session counts, keyed by the
         /// wire backend name (`aaren`/`mingru`/`minlstm`/`avg_attn`/`tf`/
         /// `hlo`); spilled counts come from each blob's codec header.
@@ -503,11 +517,22 @@ struct Containment {
     quarantined_total: usize,
     /// spilled blobs that failed verification on this shard (cumulative)
     corrupt_snapshots: usize,
+    /// sessions ever spilled to the store on this shard (cumulative)
+    spills_total: usize,
+    /// sessions ever lazily restored from the store on this shard
+    /// (cumulative; the `restore` wire op is not counted)
+    restores_total: usize,
 }
 
 impl Containment {
     fn new() -> Containment {
-        Containment { tombstones: HashMap::new(), quarantined_total: 0, corrupt_snapshots: 0 }
+        Containment {
+            tombstones: HashMap::new(),
+            quarantined_total: 0,
+            corrupt_snapshots: 0,
+            spills_total: 0,
+            restores_total: 0,
+        }
     }
 
     fn quarantine(&mut self, id: u64, reason: String, now: Instant) {
@@ -554,6 +579,7 @@ fn evict_session(
     sessions: &mut HashMap<u64, Held>,
     lanes: &mut LaneMap,
     spill: Option<&mut SpillTier>,
+    containment: &mut Containment,
     tel: &Telemetry,
     id: u64,
 ) {
@@ -570,7 +596,10 @@ fn evict_session(
             tier.store.put(id, &blob)
         });
         match stored {
-            Ok(()) => tel.event("spill", id),
+            Ok(()) => {
+                containment.spills_total += 1;
+                tel.event("spill", id);
+            }
             Err(e) => {
                 tel.event("evict", id);
                 eprintln!("[serve] session {id} could not spill, dropping: {e:#}");
@@ -652,6 +681,7 @@ fn ensure_resident<F: SessionFactory>(
                 )));
             }
             sessions.insert(id, hold(session, resident, lanes, now));
+            containment.restores_total += 1;
             tel.event("restore", id);
             Presence::Ready
         }
@@ -791,7 +821,14 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                 .map(|(&id, _)| id)
                 .collect();
             for id in expired {
-                evict_session(&mut sessions, &mut lanes, spill.as_mut(), &tel, id);
+                evict_session(
+                    &mut sessions,
+                    &mut lanes,
+                    spill.as_mut(),
+                    &mut containment,
+                    &tel,
+                    id,
+                );
             }
             // quarantine tombstones expire on the same clock, so an
             // abandoned (never-closed) quarantined id cannot leak forever
@@ -942,6 +979,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                         &mut sessions,
                                         &mut lanes,
                                         spill.as_mut(),
+                                        &mut containment,
                                         &tel,
                                         id,
                                     );
@@ -991,6 +1029,8 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                 spilled: spill.as_ref().map_or(0, |t| t.store.len()),
                                 quarantined: containment.quarantined_total,
                                 corrupt_snapshots: containment.corrupt_snapshots,
+                                spills: containment.spills_total,
+                                restores: containment.restores_total,
                                 backends,
                             })
                         }
@@ -1008,6 +1048,7 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                                         &mut sessions,
                                         &mut lanes,
                                         spill.as_mut(),
+                                        &mut containment,
                                         &tel,
                                         id,
                                     );
@@ -1051,7 +1092,14 @@ pub fn run_executor<F: SessionFactory>(mut factory: F, rx: ReqRx, opts: Executor
                     .min_by_key(|(_, held)| held.last_used)
                     .map(|(&id, _)| id)
                     .expect("resident count exceeds the cap, so the map is nonempty");
-                evict_session(&mut sessions, &mut lanes, spill.as_mut(), &tel, coldest);
+                evict_session(
+                    &mut sessions,
+                    &mut lanes,
+                    spill.as_mut(),
+                    &mut containment,
+                    &tel,
+                    coldest,
+                );
             }
         }
         compact_lanes(&mut sessions, &mut lanes, idle);
@@ -1115,19 +1163,23 @@ struct SessionRun {
 
 /// Execute every queued step-shaped request of a drain as one coalesced
 /// batch and reply to each. Requests are grouped per session (order
-/// preserved within a session); each session's run then executes as ONE
-/// unit under [`isolate`] — **resident** scan sessions fold tokens
-/// straight into their lanes of their (kernel, width) [`LaneSet`]
-/// ([`ResidentScanSession::step_many`], no state copied in or out, and
-/// bitwise identical to the round-major batch engines since every fold
-/// touches only its own lane), boxed sessions (scatter mode, tf KV
-/// cache, compiled HLO) take their own `step_many`.
-/// Per-session execution is what makes panic attribution exact: when a
-/// unit panics or emits a non-finite output, THAT session alone is
-/// quarantined (removed, lane released, outputs discarded) and every
-/// other unit of the drain completes untouched. A session that was
-/// spilled to the store is transparently restored here, on its owning
-/// shard, before its first request of the drain.
+/// preserved within a session); **resident** scan sessions sharing a
+/// (kernel, width) [`LaneSet`] then execute as one sorted-lane engine
+/// pass under a single [`isolate`] ([`step_many_resident`]: units
+/// sorted by lane id, one ascending `fold_all` walk per round, no state
+/// copied in or out — bitwise identical to per-session execution since
+/// every fold touches only its own lane), while boxed sessions (scatter
+/// mode, tf KV cache, compiled HLO) and lone resident runs take their
+/// own `step_many` as one isolated unit each.
+/// Containment: on the per-session path, a panicking or output-poisoned
+/// unit quarantines THAT session alone (removed, lane released, outputs
+/// discarded). On the engine path the poison gate is still per-session,
+/// but a mid-engine panic quarantines the whole group — a fallen round
+/// cannot be attributed — which is why an active fault plan (injected
+/// per-session panics) forces the per-session path for the entire
+/// drain. A session that was spilled to the store is transparently
+/// restored here, on its owning shard, before its first request of the
+/// drain.
 #[allow(clippy::too_many_arguments)]
 fn flush_steps<F: SessionFactory>(
     sessions: &mut HashMap<u64, Held>,
@@ -1212,15 +1264,126 @@ fn flush_steps<F: SessionFactory>(
         })
         .collect();
 
-    // execute: one isolated unit per session. Resident scan sessions
-    // still fold straight into their lanes (zero state copies per
-    // drain); boxed sessions (scatter mode, tf, HLO) advance through
-    // their own step_many. The per-session boundary is deliberate — it
-    // is the isolation domain: a panic or poisoned output condemns
-    // exactly the session that produced it.
+    // execute. Resident scan sessions fold straight into their lanes
+    // (zero state copies per drain); boxed sessions (scatter mode, tf,
+    // HLO) advance through their own step_many. Resident runs sharing a
+    // (kernel, width) lane set execute as ONE sorted-lane engine pass
+    // ([`step_many_resident`]: units sorted by lane id once, each round
+    // one ascending `fold_all` walk over the state rows — bitwise
+    // identical to the per-session path, property-tested) when no fault
+    // plan is active; a fault plan forces the per-session path because
+    // its injected panics need an exact per-session isolation domain.
     let mut outs: Vec<Vec<f32>> = (0..runs.len()).map(|_| Vec::new()).collect();
     let mut run_err: Vec<Option<anyhow::Error>> = (0..runs.len()).map(|_| None).collect();
-    for (ri, run) in runs.iter().enumerate() {
+    let mut solo: Vec<usize> = Vec::new();
+    let mut groups: HashMap<(KernelKind, usize), Vec<usize>> = HashMap::new();
+    if fault.is_none() {
+        for (ri, run) in runs.iter().enumerate() {
+            match sessions.get(&run.id).map(|h| &h.slot) {
+                Some(SessionSlot::Resident(r)) => {
+                    groups.entry((r.kernel(), r.channels())).or_default().push(ri);
+                }
+                _ => solo.push(ri),
+            }
+        }
+        // a single-member group gains nothing from the engine; keep it on
+        // the per-session path
+        groups.retain(|_, ris| {
+            if ris.len() >= 2 {
+                true
+            } else {
+                solo.extend(ris.iter().copied());
+                false
+            }
+        });
+    } else {
+        solo.extend(0..runs.len());
+    }
+    solo.sort_unstable();
+
+    for (&(kind, d), ris) in groups.iter() {
+        // take ownership of the group's sessions so every lane view can
+        // be borrowed at once alongside the shard lane set
+        let mut members: Vec<(usize, u64, ResidentScanSession, Instant)> =
+            Vec::with_capacity(ris.len());
+        for &ri in ris {
+            let id = runs[ri].id;
+            let held = sessions.remove(&id).expect("grouped runs were resident above");
+            match held.slot {
+                SessionSlot::Resident(r) => members.push((ri, id, r, held.last_used)),
+                SessionSlot::Boxed(_) => unreachable!("grouped runs are resident"),
+            }
+        }
+        let mut group_outs: Vec<Vec<f32>> = (0..members.len()).map(|_| Vec::new()).collect();
+        let result = {
+            // one kernel_fold sample per engine pass: the fused fold cost
+            // of the whole group, queueing and reply excluded
+            crate::obs::span!(tel, Stage::KernelFold);
+            isolate(|| {
+                let mut units: Vec<ResidentLane<'_>> = members
+                    .iter_mut()
+                    .map(|(ri, _, r, _)| (r, token_views[*ri]))
+                    .collect();
+                step_many_resident(&mut units, lanes.set_for(kind, d), &mut group_outs)
+            })
+        };
+        match result {
+            Ok(()) => {
+                for (mi, (ri, id, r, last_used)) in members.into_iter().enumerate() {
+                    let out = std::mem::take(&mut group_outs[mi]);
+                    // the per-session poison gate still applies: the
+                    // engine's rounds only touched this session's own
+                    // lane, so a non-finite output condemns it alone
+                    if out.iter().any(|v| !v.is_finite()) {
+                        let reason = format!("session {id} produced non-finite outputs");
+                        r.release(lanes.set_for(kind, d));
+                        containment.quarantine(id, reason.clone(), now);
+                        tel.event("quarantine", id);
+                        run_err[ri] = Some(Kinded::quarantined(format!(
+                            "session {id} is quarantined: {reason}"
+                        )));
+                    } else {
+                        outs[ri] = out;
+                        sessions.insert(id, Held { slot: SessionSlot::Resident(r), last_used });
+                    }
+                }
+            }
+            Err(e) if Kinded::of(&e).is_some_and(|k| k.kind == KIND_QUARANTINED) => {
+                // a mid-engine panic is unattributable — any member's
+                // fold may have fallen mid-round — so the whole group is
+                // quarantined: the containment-correct call, and the
+                // reason a fault plan (whose injected panics must blame
+                // one session) disables grouping entirely
+                let reason = format!("{e:#}");
+                for (ri, id, r, _) in members {
+                    r.release(lanes.set_for(kind, d));
+                    containment.quarantine(id, reason.clone(), now);
+                    tel.event("quarantine", id);
+                    run_err[ri] = Some(Kinded::quarantined(format!(
+                        "session {id} is quarantined: {reason}"
+                    )));
+                }
+            }
+            Err(e) => {
+                // validation errors fail BEFORE any fold (the engine
+                // checks every unit's block up front), so the sessions
+                // are untouched: reinsert them and error every run with
+                // zero tokens executed
+                let reason = format!("{e:#}");
+                for (ri, id, r, last_used) in members {
+                    run_err[ri] = Some(anyhow!("{reason}"));
+                    sessions.insert(id, Held { slot: SessionSlot::Resident(r), last_used });
+                }
+            }
+        }
+    }
+
+    // the per-session path: boxed sessions, lone resident runs, and
+    // every run of a fault-plan drain. The per-session boundary is the
+    // isolation domain: a panic or poisoned output condemns exactly the
+    // session that produced it.
+    for ri in solo {
+        let run = &runs[ri];
         let Some(held) = sessions.get_mut(&run.id) else {
             run_err[ri] = Some(Kinded::no_session(run.id));
             continue;
@@ -1861,6 +2024,7 @@ impl Router {
             WireOp::Stats => {
                 let (mut count, mut bytes, mut on_disk) = (0usize, 0usize, 0usize);
                 let (mut quarantined_total, mut corrupt_total) = (0usize, 0usize);
+                let (mut spills_total, mut restores_total) = (0usize, 0usize);
                 let mut backend_totals: BTreeMap<String, (usize, usize)> = BTreeMap::new();
                 for shard in self.targets() {
                     // a dead executor contributes nothing instead of
@@ -1871,6 +2035,8 @@ impl Router {
                         spilled,
                         quarantined,
                         corrupt_snapshots,
+                        spills,
+                        restores,
                         backends,
                     }) = call_on(&shard.tx, Request::Stats)
                     {
@@ -1879,6 +2045,8 @@ impl Router {
                         on_disk += spilled;
                         quarantined_total += quarantined;
                         corrupt_total += corrupt_snapshots;
+                        spills_total += spills;
+                        restores_total += restores;
                         for (name, (resident, spilled)) in backends {
                             let entry = backend_totals.entry(name).or_default();
                             entry.0 += resident;
@@ -1906,6 +2074,8 @@ impl Router {
                     ("spilled", Json::Num(on_disk as f64)),
                     ("quarantined", Json::Num(quarantined_total as f64)),
                     ("corrupt_snapshots", Json::Num(corrupt_total as f64)),
+                    ("spills", Json::Num(spills_total as f64)),
+                    ("restores", Json::Num(restores_total as f64)),
                     ("backends", backends_json),
                     (
                         "overloaded_rejects",

@@ -607,16 +607,21 @@ pub type ResidentLane<'a> = (&'a mut ResidentScanSession, &'a [f32]);
 
 /// Advance several resident sessions through their pending token blocks
 /// as lane-parallel rounds over their OWN shard [`LaneSet`] — the
-/// resident executor's drain engine. Round r folds token r of every
-/// session that still has one, walking the adjacent accumulator lanes in
-/// place; there is no gather before and no scatter after, which is the
+/// resident executor's drain engine. The units are sorted ONCE per drain
+/// by lane id (an index permutation, so `outs[b]` keeps pairing with
+/// `batch[b]`); round r then folds token r of every session that still
+/// has one via a single ascending [`LaneSet::fold_all`] walk over the
+/// state rows, instead of hopping through the buffer in session-arrival
+/// order. There is no gather before and no scatter after, which is the
 /// whole point of residency. Outputs for unit b are appended to
 /// `outs[b]` as a flat (n_b, channels) block.
 ///
 /// Bitwise identical to calling [`ResidentScanSession::step_many`] per
-/// session (each fold touches only its own lane), and therefore — for
-/// Aaren units — to the PR 3 gather/scatter path [`step_many_batched`]
-/// too.
+/// session (each fold touches only its own lane, so any within-round
+/// order is the same computation), and therefore — for Aaren units — to
+/// the PR 3 gather/scatter path [`step_many_batched`] too. Both claims
+/// are property-tested below, including fragmented lane ids and shuffled
+/// unit order.
 pub fn step_many_resident(
     batch: &mut [ResidentLane<'_>],
     lanes: &mut LaneSet,
@@ -642,19 +647,35 @@ pub fn step_many_resident(
         );
         counts.push(check_token_block(d, xs)?);
     }
+    // Each session owns a distinct lane, so sorting by lane id gives the
+    // strictly ascending entry order fold_all requires.
+    let mut order: Vec<usize> = (0..batch.len()).collect();
+    order.sort_unstable_by_key(|&b| batch[b].0.lane);
     let max_n = counts.iter().copied().max().unwrap_or(0);
+    let mut entries: Vec<(usize, f32, &[f32])> = Vec::with_capacity(batch.len());
     for r in 0..max_n {
-        for (b, (s, xs)) in batch.iter_mut().enumerate() {
+        entries.clear();
+        for &b in order.iter() {
             if counts[b] <= r {
                 continue;
             }
+            // copy the token-block ref out first: it lives for the
+            // caller's lifetime, not the short `&mut` session borrow below
+            let xs: &[f32] = batch[b].1;
             let x = &xs[r * d..(r + 1) * d];
-            lanes.fold(s.lane, s.score(x), x);
+            let s = &mut *batch[b].0;
+            entries.push((s.lane, s.score(x), x));
             s.t += 1;
+        }
+        lanes.fold_all(&entries);
+        for &b in order.iter() {
+            if counts[b] <= r {
+                continue;
+            }
             let out = &mut outs[b];
             let start = out.len();
             out.resize(start + d, 0.0);
-            lanes.output_into(s.lane, &mut out[start..]);
+            lanes.output_into(batch[b].0.lane, &mut out[start..]);
         }
     }
     Ok(())
@@ -1620,6 +1641,92 @@ mod tests {
                 for (x, y) in aw.iter().zip(bw.iter()) {
                     if x.to_bits() != y.to_bits() {
                         return Err(format!("unit {b}: lane w diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sorted_drain_is_bitwise_on_fragmented_lanes_and_shuffled_units() {
+        // the fold_all engine sorts units by lane id once per drain; lane
+        // holes (released pads) and arbitrary unit arrival order must not
+        // change a bit vs the per-session path, for every kernel
+        prop::check("sorted resident drain on fragmented lanes", 24, |rng| {
+            let kind = KernelKind::ALL[rng.below(KernelKind::ALL.len())];
+            let nb = 2 + rng.below(5);
+            let d = 1 + rng.below(6);
+            let mut lanes_a = LaneSet::new_kernel(kind, d);
+            let mut lanes_b = LaneSet::new_kernel(kind, d);
+            let mut batched: Vec<ResidentScanSession> = Vec::new();
+            let mut sequential: Vec<ResidentScanSession> = Vec::new();
+            let mut pads: Vec<ResidentScanSession> = Vec::new();
+            let mut blocks: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..nb {
+                // a pad lane before every live session; releasing the
+                // pads below leaves interior holes in lanes_a only
+                let mut pad_seed = NativeScanSession::new_kernel(kind, d);
+                pads.push(ResidentScanSession::adopt(&mut pad_seed, &mut lanes_a));
+                let x: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                let mut seed_a = NativeScanSession::new_kernel(kind, d);
+                let mut seed_b = NativeScanSession::new_kernel(kind, d);
+                let mut a = ResidentScanSession::adopt(&mut seed_a, &mut lanes_a);
+                let mut b = ResidentScanSession::adopt(&mut seed_b, &mut lanes_b);
+                a.step(&mut lanes_a, &x).map_err(|e| e.to_string())?;
+                b.step(&mut lanes_b, &x).map_err(|e| e.to_string())?;
+                batched.push(a);
+                sequential.push(b);
+                let n = rng.below(9);
+                blocks.push((0..n * d).map(|_| rng.gaussian() as f32).collect());
+            }
+            for pad in pads {
+                pad.release(&mut lanes_a);
+            }
+            if lanes_a.frag() == 0 {
+                return Err("setup failed to fragment the lane set".to_string());
+            }
+            // one shuffle applied to (unit, oracle, block) triples keeps
+            // the pairing while randomizing the drain's unit order
+            let mut triples: Vec<(ResidentScanSession, ResidentScanSession, Vec<f32>)> = batched
+                .into_iter()
+                .zip(sequential)
+                .zip(blocks)
+                .map(|((a, b), xs)| (a, b, xs))
+                .collect();
+            rng.shuffle(&mut triples);
+            let lane_ids: Vec<(usize, usize)> =
+                triples.iter().map(|(a, b, _)| (a.lane(), b.lane())).collect();
+            let mut units: Vec<ResidentLane<'_>> = Vec::with_capacity(nb);
+            let mut oracle: Vec<(&mut ResidentScanSession, &[f32])> = Vec::with_capacity(nb);
+            for (a, b, xs) in triples.iter_mut() {
+                units.push((a, xs.as_slice()));
+                oracle.push((b, xs.as_slice()));
+            }
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); nb];
+            step_many_resident(&mut units, &mut lanes_a, &mut outs)
+                .map_err(|e| e.to_string())?;
+            for (i, (b, xs)) in oracle.iter_mut().enumerate() {
+                let mut want = Vec::new();
+                b.step_many(&mut lanes_b, xs, &mut want).map_err(|e| e.to_string())?;
+                if outs[i].len() != want.len() {
+                    return Err(format!("unit {i}: output length diverged"));
+                }
+                for (ya, yb) in outs[i].iter().zip(want.iter()) {
+                    if ya.to_bits() != yb.to_bits() {
+                        return Err(format!("unit {i}: output diverged"));
+                    }
+                }
+            }
+            drop(units);
+            drop(oracle);
+            for (i, &(la, lb)) in lane_ids.iter().enumerate() {
+                if triples[i].0.tokens_seen() != triples[i].1.tokens_seen() {
+                    return Err(format!("unit {i}: t diverged"));
+                }
+                for (x, y) in lanes_a.state(la).iter().zip(lanes_b.state(lb)) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("unit {i}: lane state diverged"));
                     }
                 }
             }

@@ -137,6 +137,41 @@ pub fn write_records(path: &Path, records: &[BenchRecord]) -> std::io::Result<()
     std::fs::write(path, format!("{arr}\n"))
 }
 
+/// Read a `BENCH_*.json` trail back into records. A missing or
+/// unparseable file reads as empty — the trail is advisory output, not
+/// an input the caller should die on.
+pub fn read_records(path: &Path) -> Vec<BenchRecord> {
+    let Ok(text) = std::fs::read_to_string(path) else { return Vec::new() };
+    let Ok(parsed) = Json::parse(text.trim()) else { return Vec::new() };
+    let Some(arr) = parsed.as_arr() else { return Vec::new() };
+    arr.iter()
+        .filter_map(|r| {
+            Some(BenchRecord {
+                name: r.str_field("name").ok()?.to_string(),
+                n: r.usize_field("n").ok()?,
+                d: r.usize_field("d").ok()?,
+                ns_per_iter: r.get("ns_per_iter")?.as_f64()?,
+                speedup_vs_sequential: r.get("speedup_vs_sequential")?.as_f64()?,
+            })
+        })
+        .collect()
+}
+
+/// Merge `records` into an existing trail file: keep every record whose
+/// name does NOT start with `drop_prefix`, replace the rest. Lets two
+/// producers (e.g. the serve_loopback bench and `aaren load`) share one
+/// `BENCH_serve.json` without clobbering each other's records.
+pub fn merge_records(
+    path: &Path,
+    drop_prefix: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    let mut kept = read_records(path);
+    kept.retain(|r| !r.name.starts_with(drop_prefix));
+    kept.extend(records.iter().cloned());
+    write_records(path, &kept)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +194,47 @@ mod tests {
         assert_eq!(arr[0].usize_field("n").unwrap(), 4096);
         assert!(arr[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn merge_records_replaces_only_the_prefixed_family() {
+        let tmp = std::env::temp_dir().join("aaren_bench_merge_test.json");
+        let old = vec![
+            BenchRecord {
+                name: "batched_steps_b16".into(),
+                n: 1,
+                d: 8,
+                ns_per_iter: 10.0,
+                speedup_vs_sequential: 3.0,
+            },
+            BenchRecord {
+                name: "capacity_population".into(),
+                n: 2,
+                d: 8,
+                ns_per_iter: 20.0,
+                speedup_vs_sequential: 0.0,
+            },
+        ];
+        write_records(&tmp, &old).unwrap();
+        let fresh = vec![BenchRecord {
+            name: "capacity_sheds".into(),
+            n: 9,
+            d: 8,
+            ns_per_iter: 30.0,
+            speedup_vs_sequential: 0.0,
+        }];
+        merge_records(&tmp, "capacity_", &fresh).unwrap();
+        let merged = read_records(&tmp);
+        let names: Vec<&str> = merged.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["batched_steps_b16", "capacity_sheds"]);
+        assert_eq!(merged[0].speedup_vs_sequential, 3.0);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn read_records_tolerates_missing_files() {
+        let gone = std::env::temp_dir().join("aaren_bench_no_such_file.json");
+        assert!(read_records(&gone).is_empty());
     }
 
     #[test]
